@@ -1,0 +1,61 @@
+//! Tensor-sequence-parallel transformer layer (the paper's §II-A
+//! SP+TP motivation): walks the four GEMMs of one llama-2-70b
+//! transformer block at production batch — exactly Table I's g5–g8 —
+//! through the full design space, and shows the end-to-end block time
+//! with serial execution vs heuristic-picked FiCCO schedules.
+//!
+//! Run: `cargo run --release --example tensor_parallel_layer`
+
+use ficco::heuristics;
+use ficco::hw::Machine;
+use ficco::schedule::{exec::ScenarioEval, Kind};
+use ficco::util::table::{x, Align, Table};
+use ficco::workloads;
+
+fn main() {
+    let machine = Machine::mi300x_8();
+    // One llama-2-70b block under SP+TP at 8 GPUs: attention in/out
+    // projections (g5, g6) and MLP up/down (g7, g8).
+    let block = [
+        ("attn qkv proj", "g5"),
+        ("attn out proj", "g6"),
+        ("mlp up proj", "g7"),
+        ("mlp down proj", "g8"),
+    ];
+
+    let mut t = Table::new(vec![
+        "layer GEMM", "scenario", "serial", "pick", "picked speedup", "best ficco",
+    ])
+    .align(0, Align::Left)
+    .align(1, Align::Left)
+    .align(3, Align::Left);
+
+    let mut serial_total = 0.0;
+    let mut ficco_total = 0.0;
+    for (layer, g) in block {
+        let sc = workloads::by_name(g).unwrap();
+        let pick = heuristics::pick(&machine, &sc).pick;
+        let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
+        let picked = ev.speedup(pick);
+        let (_, best) = ev.best_ficco();
+        let picked_time = ev.baseline / picked;
+        serial_total += ev.baseline;
+        ficco_total += picked_time;
+        t.row(vec![
+            layer.to_string(),
+            g.to_string(),
+            ficco::util::human_time(ev.baseline),
+            pick.name().to_string(),
+            x(picked),
+            x(best),
+        ]);
+    }
+    println!("llama-2-70b transformer block, SP+TP on 8x MI300X:\n");
+    print!("{}", t.render());
+    println!(
+        "\nblock total: serial {} -> FiCCO {}  ({} end-to-end)",
+        ficco::util::human_time(serial_total),
+        ficco::util::human_time(ficco_total),
+        x(serial_total / ficco_total)
+    );
+}

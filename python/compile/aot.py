@@ -1,0 +1,194 @@
+"""AOT compile path: lower the L2/L1 computations to HLO **text**
+artifacts the Rust runtime loads via PJRT.
+
+Artifacts produced (see `artifacts/manifest.txt` after `make artifacts`):
+
+- ``init_<preset>``        — uint32[2] PRNG key → flattened (params, opt)
+- ``train_step_<preset>``  — flattened state + tokens/targets → new state + loss
+- ``fwd_<preset>``         — flattened params + tokens → logits (inference)
+- ``pallas_gemm_*``        — the L1 Pallas kernels at the shapes the
+  coordinator's numeric schedule validation uses (plain + accumulate)
+
+Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--presets tiny,small,m100]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ficco_gemm
+
+# Validation GEMM geometry: the default used by `ficco validate`
+# (rust/src/coordinator). Shapes for the full GEMM, the shard-level
+# pieces, the FiCCO pieces, and the 2D K-blocks all derive from it.
+VALIDATE_M, VALIDATE_N, VALIDATE_K, VALIDATE_G = 256, 128, 192, 8
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    """'f32:256x192' — parsed by rust/src/runtime/manifest.rs."""
+    dt = {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(s.dtype)]
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"{dt}:{dims}"
+
+
+class Writer:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.records = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, out_specs):
+        t0 = time.time()
+        text = to_hlo_text(fn, *in_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        ins = ",".join(spec_str(s) for s in in_specs)
+        outs = ",".join(spec_str(s) for s in out_specs)
+        self.records.append(f"{name}\t{fname}\t{ins}\t{outs}")
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("# name\tfile\tinputs\toutputs\n")
+            f.write("\n".join(self.records) + "\n")
+        print(f"wrote {path} ({len(self.records)} artifacts)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_model(w: Writer, preset: str):
+    cfg = model.PRESETS[preset]
+    print(f"preset {preset}: ~{model.param_count(cfg) / 1e6:.1f}M params")
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state_flat = model.state_spec(cfg)
+
+    # init: key -> flat state
+    def init_fn(key_data):
+        key = jax.random.wrap_key_data(key_data)
+        params, opt = model.init_state(key, cfg)
+        return tuple(jax.tree_util.tree_flatten((params, opt))[0])
+
+    w.emit(f"init_{preset}", init_fn, [key_spec], state_flat)
+
+    # train_step: flat state + tokens + targets -> flat state + loss
+    _, treedef = jax.tree_util.tree_flatten(
+        jax.eval_shape(lambda k: model.init_state(k, cfg), key_spec)
+    )
+
+    def step_fn(*args):
+        flat = args[: len(state_flat)]
+        tokens, targets = args[len(state_flat) :]
+        params, opt = jax.tree_util.tree_unflatten(treedef, list(flat))
+        params2, opt2, loss = model.train_step(params, opt, tokens, targets, cfg)
+        return tuple(jax.tree_util.tree_flatten((params2, opt2))[0]) + (loss,)
+
+    tok = i32(cfg.batch, cfg.seq)
+    w.emit(
+        f"train_step_{preset}",
+        step_fn,
+        list(state_flat) + [tok, tok],
+        list(state_flat) + [f32()],
+    )
+
+    # fwd: params + tokens -> logits (serving / eval path)
+    n_params = len(jax.tree_util.tree_flatten(
+        jax.eval_shape(lambda k: model.init_params(k, cfg), key_spec))[0])
+    params_flat = state_flat[:0]  # placeholder; recompute properly below
+    params_shaped = jax.eval_shape(lambda k: model.init_params(k, cfg), key_spec)
+    params_flat, params_treedef = jax.tree_util.tree_flatten(params_shaped)
+    assert len(params_flat) == n_params
+
+    def fwd_fn(*args):
+        flat = args[:-1]
+        tokens = args[-1]
+        params = jax.tree_util.tree_unflatten(params_treedef, list(flat))
+        return (model.forward(params, tokens, cfg),)
+
+    w.emit(
+        f"fwd_{preset}",
+        fwd_fn,
+        list(params_flat) + [tok],
+        [f32(cfg.batch, cfg.seq, cfg.vocab)],
+    )
+
+
+def split(total: int, parts: int, i: int) -> tuple[int, int]:
+    """Balanced split — MUST match rust/src/schedule/generate.rs."""
+    return (i * total // parts, (i + 1) * total // parts)
+
+
+def emit_validation_gemms(w: Writer):
+    """The L1 kernels at every shape the coordinator's numeric
+    validation of the FiCCO schedules needs (DESIGN.md §3)."""
+    m, n, k, g = VALIDATE_M, VALIDATE_N, VALIDATE_K, VALIDATE_G
+    shard = split(m, g, 0)[1] - split(m, g, 0)[0]
+    piece = split(shard, g, 0)[1] - split(shard, g, 0)[0]
+    kblock = split(k, g, 0)[1] - split(k, g, 0)[0]
+    hetero = shard - piece  # (g-1) pieces fused
+
+    plain_shapes = sorted({
+        (m, k),          # baseline full GEMM
+        (shard, k),      # shard-overlap / uniform-fused-1D step
+        (piece, k),      # hetero-unfused-1D piece
+        (hetero, k),     # hetero-fused-1D step
+    })
+    for (mm, kk) in plain_shapes:
+        name = f"pallas_gemm_{mm}x{n}x{kk}"
+        w.emit(
+            name,
+            lambda a, b: (ficco_gemm.matmul(a, b),),
+            [f32(mm, kk), f32(kk, n)],
+            [f32(mm, n)],
+        )
+    # 2D accumulate step: C += A[:, kblock] @ B[kblock, :]
+    w.emit(
+        f"pallas_gemm_acc_{m}x{n}x{kblock}",
+        lambda c, a, b: (ficco_gemm.matmul_accumulate(c, a, b),),
+        [f32(m, n), f32(m, kblock), f32(kblock, n)],
+        [f32(m, n)],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,m100")
+    args = ap.parse_args()
+
+    w = Writer(args.out_dir)
+    emit_validation_gemms(w)
+    for preset in [p for p in args.presets.split(",") if p]:
+        emit_model(w, preset)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

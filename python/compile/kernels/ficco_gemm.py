@@ -1,0 +1,167 @@
+"""L1 — FiCCO's compute primitive as Pallas kernels.
+
+The paper's unit of compute is a (possibly partial, possibly
+accumulating) GEMM over a finer-grain shard: ``C (+)= A_piece @ B``
+(§V). On the paper's GPUs that is a hipblaslt kernel; here it is
+re-expressed for a TPU-like machine (DESIGN.md §2, Hardware
+Adaptation):
+
+- tiles sized for VMEM and the MXU's 128x128 systolic array;
+- the grid's K axis plays the role of FiCCO's column (2D) decomposition:
+  each K-step accumulates into the output block, exactly the dataflow
+  the uniform-fused-2D schedule needs;
+- the grid's M axis corresponds to row (1D) decomposition.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness is what the AOT
+path certifies (real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf from VMEM footprint and MXU utilization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned preferred tile extents, largest first. `_pick_block`
+# returns the largest one that divides the dimension, so awkward shapes
+# stay correct (smaller tiles, as a real kernel's tail handling would).
+_PREFERRED = (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    for b in _PREFERRED:
+        if b <= cap and dim % b == 0:
+            return b
+    return 1
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output block; K-grid accumulation in f32."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 512, bn: int = 512, bk: int = 512):
+    """``a @ b`` via the tiled Pallas kernel (f32 accumulation).
+
+    Block caps (bm, bn, bk) bound VMEM footprint; actual blocks are the
+    largest preferred extents dividing each dimension.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_acc_kernel(c_ref, a_ref, b_ref, o_ref):
+    """Accumulating block: ``o = c + a @ b`` with K-grid accumulation.
+
+    This is the 2D-schedule primitive: the caller holds a partial C
+    (earlier K blocks of the global reduction) and folds in one more
+    decomposed K block.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _seed():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_accumulate(
+    c: jax.Array, a: jax.Array, b: jax.Array, *, bm: int = 512, bn: int = 512, bk: int = 512
+):
+    """``c + a @ b`` (the paper's accumulative GEMM for column sharding)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert c.shape == (m, n), f"accumulator shape {c.shape} != ({m}, {n})"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(c, a, b)
+
+
+@jax.custom_vjp
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable ``x @ w`` whose forward AND backward GEMMs run
+    through the Pallas kernel — so the lowered training step exercises
+    the L1 kernel on every hot matmul of fwd and bwd."""
+    return matmul(x, w)
+
+
+def _linear_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def vmem_footprint(m: int, n: int, k: int, *, bm: int = 512, bn: int = 512, bk: int = 512,
+                   elem_bytes: int = 4) -> dict:
+    """Static VMEM/MXU estimate for EXPERIMENTS.md §Perf: bytes resident
+    per grid step and the MXU utilization bound from tile geometry."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    a = bm * bk * elem_bytes
+    b = bk * bn * elem_bytes
+    c = bm * bn * 4  # f32 accumulator
+    # MXU is a 128x128 systolic array: utilization limited by how the
+    # block tiles map onto it.
+    mxu = min(bm, 128) * min(bn, 128) / (128.0 * 128.0)
+    return {
+        "block": (bm, bn, bk),
+        "vmem_bytes": a + b + c,
+        "mxu_tile_utilization": mxu,
+        "grid": (m // bm, n // bn, k // bk),
+    }

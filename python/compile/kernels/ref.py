@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts allclose between these and `ficco_gemm`)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_accumulate(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def decomposed_row_sharded(a, b, ways: int):
+    """FiCCO 1D semantics: row-shard A, GEMM each piece, concatenate.
+    Must equal the whole GEMM exactly (modulo float reassociation —
+    none here, since row sharding never splits the reduction)."""
+    pieces = jnp.split(a, ways, axis=0)
+    return jnp.concatenate([matmul(p, b) for p in pieces], axis=0)
+
+
+def decomposed_col_sharded(a, b, ways: int):
+    """FiCCO 2D semantics: column-shard A (and row-shard B), accumulate
+    partial GEMMs. Splits the reduction, so comparisons use a float
+    tolerance."""
+    a_pieces = jnp.split(a, ways, axis=1)
+    b_pieces = jnp.split(b, ways, axis=0)
+    c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for ap, bp in zip(a_pieces, b_pieces):
+        c = matmul_accumulate(c, ap, bp)
+    return c

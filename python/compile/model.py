@@ -1,0 +1,206 @@
+"""L2 — decoder-only transformer LM whose hot GEMMs run through the
+L1 Pallas kernel (`kernels.ficco_gemm.linear`, forward and backward).
+
+This is the model the end-to-end driver trains (DESIGN.md §6): RMSNorm,
+multi-head causal self-attention, SwiGLU-free GELU MLP, learned
+positional embeddings, tied LM head, Adam. Everything is a pure
+function of (params, opt state, batch) so `aot.py` can lower
+`train_step` to a single HLO artifact the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ficco_gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS: Dict[str, Config] = {
+    # Fast preset for pytest and smoke runs.
+    "tiny": Config("tiny", vocab=512, d_model=64, n_layers=2, n_heads=4, seq=32, batch=4,
+                   lr=1e-3),
+    # Development-scale model.
+    "small": Config("small", vocab=4096, d_model=256, n_layers=4, n_heads=8, seq=64, batch=8,
+                    lr=6e-4),
+    # The ~100M-parameter end-to-end validation model (DESIGN.md §6).
+    "m100": Config("m100", vocab=16384, d_model=768, n_layers=12, n_heads=12, seq=128, batch=4),
+}
+
+
+def param_count(cfg: Config) -> int:
+    d = cfg.d_model
+    per_layer = 4 * d * d + 2 * d * 4 * d + 2 * d  # attn + mlp + norms
+    return cfg.vocab * d + cfg.seq * d + cfg.n_layers * per_layer + d
+
+
+def init_params(rng: jax.Array, cfg: Config) -> Dict[str, Any]:
+    """Standard scaled-normal init. Pure function of the RNG key so it
+    can be lowered to an `init` artifact."""
+    d = cfg.d_model
+    n = cfg.n_layers
+    k_emb, k_pos, k_layers = jax.random.split(rng, 3)
+    scale = d ** -0.5
+    init = lambda key, shape, s: (jax.random.normal(key, shape, jnp.float32) * s)
+
+    layers = []
+    keys = jax.random.split(k_layers, n)
+    for i in range(n):
+        ks = jax.random.split(keys[i], 4)
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wqkv": init(ks[0], (d, 3 * d), scale),
+            "wo": init(ks[1], (d, d), scale / (2 * n) ** 0.5),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "wup": init(ks[2], (d, 4 * d), scale),
+            "wdown": init(ks[3], (4 * d, d), scale / (2 * n) ** 0.5),
+        })
+    return {
+        # GPT-2-style small embedding init; with the tied LM head this
+        # puts the initial loss near ln(vocab).
+        "embed": init(k_emb, (cfg.vocab, d), 0.02),
+        "pos": init(k_pos, (cfg.seq, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _linear2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(…, d_in) @ (d_in, d_out) through the Pallas kernel."""
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    y = ficco_gemm.linear(flat, w)
+    return y.reshape(lead + (w.shape[1],))
+
+
+def attention(x: jax.Array, layer: Dict[str, Any], cfg: Config) -> jax.Array:
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = _linear2d(x, layer["wqkv"])  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / hd ** 0.5
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return _linear2d(out, layer["wo"])
+
+
+def mlp(x: jax.Array, layer: Dict[str, Any]) -> jax.Array:
+    return _linear2d(jax.nn.gelu(_linear2d(x, layer["wup"])), layer["wdown"])
+
+
+def forward(params: Dict[str, Any], tokens: jax.Array, cfg: Config) -> jax.Array:
+    """tokens (b, t) int32 → logits (b, t, vocab)."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    for layer in params["layers"]:
+        x = x + attention(rmsnorm(x, layer["ln1"]), layer, cfg)
+        x = x + mlp(rmsnorm(x, layer["ln2"]), layer)
+    x = rmsnorm(x, params["ln_f"])
+    # Tied LM head through the Pallas kernel.
+    return _linear2d(x, params["embed"].T)
+
+
+def loss_fn(params, tokens, targets, cfg: Config) -> jax.Array:
+    """Mean next-token cross-entropy (targets already shifted)."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+# ---------------------------------------------------------------- Adam
+
+def init_opt(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, cfg: Config):
+    step = opt["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, m, v):
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        p2 = p - cfg.lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        return p2, m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(opt["m"])[0]
+    flat_v = jax.tree_util.tree_flatten(opt["v"])[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    m2 = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    v2 = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return params2, {"m": m2, "v": v2, "step": step}
+
+
+def train_step(params, opt, tokens, targets, cfg: Config) -> Tuple[Any, Any, jax.Array]:
+    """One fwd+bwd+Adam step. Lowered whole by aot.py."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, targets, cfg))(params)
+    params2, opt2 = adam_update(params, grads, opt, cfg)
+    return params2, opt2, loss
+
+
+# -------------------------------------------------- flattening helpers
+# The Rust runtime passes buffers positionally; the manifest records
+# this exact order (jax tree flatten order: dict keys sorted).
+
+def flatten_state(params, opt):
+    flat, treedef = jax.tree_util.tree_flatten((params, opt))
+    return flat, treedef
+
+
+def state_spec(cfg: Config):
+    """Shapes/dtypes of the flattened (params, opt) state without
+    materializing it."""
+    shaped = jax.eval_shape(
+        lambda key: _init_state(key, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    flat, _ = jax.tree_util.tree_flatten(shaped)
+    return flat
+
+
+def _init_state(key, cfg: Config):
+    params = init_params(key, cfg)
+    return params, init_opt(params)
+
+
+def init_state(key, cfg: Config):
+    return _init_state(key, cfg)

@@ -1,0 +1,91 @@
+"""AOT path: manifest structure, HLO text well-formedness, and the
+split-boundary contract shared with the Rust schedule generators."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.txt")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def parse_manifest():
+    records = {}
+    with open(MANIFEST) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            name, fname, ins, outs = line.split("\t")
+            records[name] = (fname, ins.split(","), outs.split(","))
+    return records
+
+
+def test_manifest_covers_presets():
+    rec = parse_manifest()
+    for preset in ["tiny", "small", "m100"]:
+        for kind in ["init", "train_step", "fwd"]:
+            assert f"{kind}_{preset}" in rec, f"missing {kind}_{preset}"
+
+
+def test_manifest_files_exist_and_are_hlo_text():
+    rec = parse_manifest()
+    for name, (fname, _, _) in rec.items():
+        path = os.path.join(ART, fname)
+        assert os.path.exists(path), path
+        head = open(path).read(4096)
+        assert "HloModule" in head, f"{name}: not HLO text"
+        assert "ENTRY" in open(path).read(), f"{name}: no ENTRY computation"
+
+
+def test_train_step_arity():
+    rec = parse_manifest()
+    cfg = model.PRESETS["tiny"]
+    n_state = len(model.state_spec(cfg))
+    _, ins, outs = rec["train_step_tiny"]
+    assert len(ins) == n_state + 2  # + tokens + targets
+    assert len(outs) == n_state + 1  # + loss
+    assert outs[-1] == "f32:scalar"
+    assert ins[-1] == f"i32:{cfg.batch}x{cfg.seq}"
+
+
+def test_validation_gemm_artifacts_present():
+    rec = parse_manifest()
+    m, n, k, g = aot.VALIDATE_M, aot.VALIDATE_N, aot.VALIDATE_K, aot.VALIDATE_G
+    shard = m // g
+    piece = shard // g
+    for mm in [m, shard, piece, shard - piece]:
+        assert f"pallas_gemm_{mm}x{n}x{k}" in rec
+    assert f"pallas_gemm_acc_{m}x{n}x{k // g}" in rec
+
+
+def test_split_matches_rust_contract():
+    """aot.split must agree with rust/src/schedule/generate.rs::split
+    (balanced floor split) — spot values mirrored from the Rust tests."""
+    assert aot.split(1000, 3, 0) == (0, 333)
+    assert aot.split(1000, 3, 1) == (333, 666)
+    assert aot.split(1000, 3, 2) == (666, 1000)
+    # exact partition for awkward sizes
+    for total in [1, 7, 100, 4097]:
+        for parts in [1, 3, 8]:
+            prev = 0
+            for i in range(parts):
+                lo, hi = aot.split(total, parts, i)
+                assert lo == prev
+                prev = hi
+            assert prev == total
+
+
+def test_spec_str_format():
+    import jax.numpy as jnp
+    import jax
+
+    assert aot.spec_str(jax.ShapeDtypeStruct((2, 3), jnp.float32)) == "f32:2x3"
+    assert aot.spec_str(jax.ShapeDtypeStruct((), jnp.float32)) == "f32:scalar"
+    assert aot.spec_str(jax.ShapeDtypeStruct((5,), jnp.int32)) == "i32:5"

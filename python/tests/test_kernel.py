@@ -1,0 +1,171 @@
+"""L1 correctness: the Pallas kernels vs the pure-jnp oracle.
+
+This is the core build-time correctness signal — hypothesis sweeps
+shapes (including awkward non-power-of-two dims) and dtypes, asserting
+allclose against `ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ficco_gemm, ref
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+TOL16 = dict(rtol=2e-2, atol=2e-2)
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+class TestMatmulBasic:
+    def test_square(self):
+        a, b = rand((64, 64), seed=1), rand((64, 64), seed=2)
+        np.testing.assert_allclose(ficco_gemm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+    def test_rectangular(self):
+        a, b = rand((128, 32), seed=3), rand((32, 256), seed=4)
+        np.testing.assert_allclose(ficco_gemm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+    def test_vector_like(self):
+        a, b = rand((1, 96), seed=5), rand((96, 7), seed=6)
+        np.testing.assert_allclose(ficco_gemm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+    def test_odd_dims(self):
+        a, b = rand((33, 17), seed=7), rand((17, 5), seed=8)
+        np.testing.assert_allclose(ficco_gemm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+    def test_bf16_inputs(self):
+        a = rand((64, 48), jnp.bfloat16, seed=9)
+        b = rand((48, 32), jnp.bfloat16, seed=10)
+        out = ficco_gemm.matmul(a, b)
+        assert out.dtype == jnp.float32  # f32 accumulation
+        np.testing.assert_allclose(out, ref.matmul(a, b), **TOL16)
+
+    def test_block_caps_do_not_change_result(self):
+        a, b = rand((256, 192), seed=11), rand((192, 128), seed=12)
+        full = ficco_gemm.matmul(a, b, bm=512, bn=512, bk=512)
+        tiled = ficco_gemm.matmul(a, b, bm=32, bn=32, bk=16)
+        np.testing.assert_allclose(full, tiled, **TOL)
+
+
+class TestAccumulate:
+    def test_basic(self):
+        c = rand((64, 32), seed=13)
+        a, b = rand((64, 48), seed=14), rand((48, 32), seed=15)
+        np.testing.assert_allclose(
+            ficco_gemm.matmul_accumulate(c, a, b), ref.matmul_accumulate(c, a, b), **TOL
+        )
+
+    def test_chained_accumulation_equals_full_gemm(self):
+        """The 2D schedule invariant: accumulating over K blocks equals
+        the undecomposed GEMM (within reassociation tolerance)."""
+        a, b = rand((96, 128), seed=16), rand((128, 64), seed=17)
+        ways = 8
+        c = jnp.zeros((96, 64), jnp.float32)
+        for ap, bp in zip(jnp.split(a, ways, axis=1), jnp.split(b, ways, axis=0)):
+            c = ficco_gemm.matmul_accumulate(c, ap, bp)
+        np.testing.assert_allclose(c, ref.matmul(a, b), **TOL)
+
+
+class TestLinearVjp:
+    def test_forward(self):
+        a, b = rand((48, 40), seed=18), rand((40, 24), seed=19)
+        np.testing.assert_allclose(ficco_gemm.linear(a, b), ref.matmul(a, b), **TOL)
+
+    def test_gradients_match_jnp(self):
+        a, b = rand((48, 40), seed=20), rand((40, 24), seed=21)
+        g = jax.grad(lambda x, w: (ficco_gemm.linear(x, w) ** 2).sum(), argnums=(0, 1))(a, b)
+        gr = jax.grad(lambda x, w: ((x @ w) ** 2).sum(), argnums=(0, 1))(a, b)
+        np.testing.assert_allclose(g[0], gr[0], **TOL)
+        np.testing.assert_allclose(g[1], gr[1], **TOL)
+
+
+class TestFiccoDecompositionSemantics:
+    """The schedule-level numeric invariants the Rust coordinator also
+    checks, proven at the kernel level here."""
+
+    def test_row_sharding_exact(self):
+        # Mathematically exact (no reduction split), but XLA's dot may
+        # still reblock K differently per shape — float tolerance.
+        a, b = rand((128, 64), seed=22), rand((64, 32), seed=23)
+        np.testing.assert_allclose(
+            ref.decomposed_row_sharded(a, b, 8), ref.matmul(a, b), **TOL
+        )
+
+    def test_col_sharding_close(self):
+        a, b = rand((64, 128), seed=24), rand((128, 32), seed=25)
+        np.testing.assert_allclose(
+            ref.decomposed_col_sharded(a, b, 8), ref.matmul(a, b), **TOL
+        )
+
+
+# ------------------------------------------------------ hypothesis sweeps
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_any_shape(m, k, n, seed):
+    a, b = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+    np.testing.assert_allclose(ficco_gemm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_accumulate_matches_ref_any_shape(m, k, n, seed):
+    c = rand((m, n), seed=seed + 2)
+    a, b = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+    np.testing.assert_allclose(
+        ficco_gemm.matmul_accumulate(c, a, b), ref.matmul_accumulate(c, a, b), **TOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 64),
+    k=dims,
+    n=dims,
+    ways=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_decomposition_invariant(m, k, n, ways, seed):
+    m = m * ways  # divisible
+    a, b = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+    got = jnp.concatenate(
+        [ficco_gemm.matmul(p, b) for p in jnp.split(a, ways, axis=0)], axis=0
+    )
+    np.testing.assert_allclose(got, ref.matmul(a, b), **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    m=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([16, 48, 128]),
+    n=st.sampled_from([8, 32, 96]),
+)
+def test_dtype_sweep(dtype, m, k, n):
+    a, b = rand((m, k), dtype, seed=m), rand((k, n), dtype, seed=n)
+    tol = TOL if dtype == jnp.float32 else TOL16
+    out = ficco_gemm.matmul(a, b)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, ref.matmul(a, b), **tol)
+
+
+def test_vmem_footprint_reporting():
+    info = ficco_gemm.vmem_footprint(512, 512, 1024)
+    bm, bn, bk = info["block"]
+    assert 512 % bm == 0 and 512 % bn == 0 and 1024 % bk == 0
+    assert info["vmem_bytes"] <= 16 << 20, "blocks must fit VMEM"
+    assert 0 < info["mxu_tile_utilization"] <= 1.0
+
+
+def test_footprint_small_dims_low_mxu():
+    info = ficco_gemm.vmem_footprint(4, 512, 512)
+    assert info["mxu_tile_utilization"] < 0.1

@@ -1,0 +1,103 @@
+"""L2 correctness: transformer shapes, differentiability, training
+signal, and optimizer behaviour (all on the tiny preset)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def state():
+    return model.init_state(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(k1, (CFG.batch, CFG.seq), 0, CFG.vocab)
+    targets = jax.random.randint(k2, (CFG.batch, CFG.seq), 0, CFG.vocab)
+    return tokens, targets
+
+
+def test_param_count_matches_structure(state):
+    params, _ = state
+    total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert total == model.param_count(CFG)
+
+
+def test_forward_shapes(state, batch):
+    params, _ = state
+    logits = model.forward(params, batch[0], CFG)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(state, batch):
+    params, _ = state
+    loss = model.loss_fn(params, batch[0], batch[1], CFG)
+    expected = np.log(CFG.vocab)
+    assert abs(float(loss) - expected) < 0.5, f"loss {loss} vs ln(V) {expected}"
+
+
+def test_causality(state):
+    """Changing a future token must not affect earlier logits."""
+    params, _ = state
+    tokens = jnp.zeros((1, CFG.seq), jnp.int32)
+    la = model.forward(params, tokens, CFG)
+    lb = model.forward(params, tokens.at[0, -1].set(5), CFG)
+    np.testing.assert_allclose(la[0, :-1], lb[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(la[0, -1], lb[0, -1])
+
+
+def test_loss_decreases_over_steps(state, batch):
+    params, opt = state
+    tokens, targets = batch
+    step = jax.jit(lambda p, o: model.train_step(p, o, tokens, targets, CFG))
+    losses = []
+    for _ in range(8):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, f"no learning: {losses}"
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_adam_step_counter(state, batch):
+    params, opt = state
+    p2, o2, _ = model.train_step(params, opt, batch[0], batch[1], CFG)
+    assert int(o2["step"]) == int(opt["step"]) + 1
+
+
+def test_grads_flow_to_all_params(state, batch):
+    params, _ = state
+    grads = jax.grad(lambda p: model.loss_fn(p, batch[0], batch[1], CFG))(params)
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        norm = float(jnp.linalg.norm(g))
+        assert norm > 0, f"dead gradient at {jax.tree_util.keystr(path)}"
+
+
+def test_state_spec_matches_real_state(state):
+    flat, _ = jax.tree_util.tree_flatten(state)
+    spec = model.state_spec(CFG)
+    assert len(flat) == len(spec)
+    for got, want in zip(flat, spec):
+        assert got.shape == want.shape, (got.shape, want.shape)
+        assert got.dtype == want.dtype
+
+
+def test_deterministic_init():
+    a = model.init_state(jax.random.PRNGKey(7), CFG)
+    b = model.init_state(jax.random.PRNGKey(7), CFG)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_presets_sane():
+    assert model.param_count(model.PRESETS["m100"]) > 90e6
+    assert model.param_count(model.PRESETS["m100"]) < 120e6
+    for cfg in model.PRESETS.values():
+        assert cfg.d_model % cfg.n_heads == 0

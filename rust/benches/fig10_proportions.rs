@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 10 on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig10_proportions`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig10_proportions(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig10_proportions.csv");
+    println!("[bench] fig10_proportions generated in {dt:?} -> results/fig10_proportions.csv");
+}

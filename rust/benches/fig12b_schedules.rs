@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 12b on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig12b_schedules`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig12b_schedules(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig12b_schedules.csv");
+    println!("[bench] fig12b_schedules generated in {dt:?} -> results/fig12b_schedules.csv");
+}

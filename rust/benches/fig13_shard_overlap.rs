@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 13 on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig13_shard_overlap`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig13_shard_overlap(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig13_shard_overlap.csv");
+    println!("[bench] fig13_shard_overlap generated in {dt:?} -> results/fig13_shard_overlap.csv");
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 14 on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig14_comparison`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig14_comparison(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig14_comparison.csv");
+    println!("[bench] fig14_comparison generated in {dt:?} -> results/fig14_comparison.csv");
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 7 on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig7_gemm_dil`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig7_gemm_dil(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig7_gemm_dil.csv");
+    println!("[bench] fig7_gemm_dil generated in {dt:?} -> results/fig7_gemm_dil.csv");
+}

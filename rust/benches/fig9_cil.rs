@@ -1,0 +1,13 @@
+//! Bench: regenerates the paper's Fig 9 on the modelled 8x MI300X
+//! machine and reports wall time. Run: `cargo bench --bench fig9_cil`.
+use std::time::Instant;
+
+fn main() {
+    let machine = ficco::hw::Machine::mi300x_8();
+    let t0 = Instant::now();
+    let exhibit = ficco::metrics::fig9_cil(&machine);
+    let dt = t0.elapsed();
+    exhibit.print();
+    let _ = exhibit.table.write_csv("results/fig9_cil.csv");
+    println!("[bench] fig9_cil generated in {dt:?} -> results/fig9_cil.csv");
+}

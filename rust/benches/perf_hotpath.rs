@@ -1,0 +1,75 @@
+//! Bench: L3 hot-path microbenchmarks for EXPERIMENTS.md §Perf.
+//!
+//! Measures the simulator engine's event throughput, end-to-end
+//! scenario evaluation latency, and the schedule generator — the three
+//! L3 paths every figure and the heuristic oracle sit on.
+
+use ficco::hw::Machine;
+use ficco::schedule::{exec, generate::generate, Kind, Scenario};
+use ficco::sim::{Engine, TaskSpec};
+use ficco::util::stats::Accum;
+use std::time::Instant;
+
+fn bench<F: FnMut() -> usize>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warm-up.
+    let mut units = 0usize;
+    for _ in 0..2 {
+        units = f();
+    }
+    let mut acc = Accum::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        units = f();
+        acc.push(t0.elapsed().as_secs_f64());
+    }
+    let per_unit = acc.median() / units.max(1) as f64;
+    println!(
+        "{name:<44} median {:>10}  ({} units, {:>12}/unit)",
+        ficco::util::human_time(acc.median()),
+        units,
+        ficco::util::human_time(per_unit),
+    );
+    acc.median()
+}
+
+fn sim_engine_events(n_tasks: usize) -> usize {
+    let mut e = Engine::new();
+    let r = e.add_resource(100.0);
+    let streams: Vec<_> = (0..16).map(|_| e.add_stream()).collect();
+    for i in 0..n_tasks {
+        e.add_task(
+            TaskSpec::new("t", streams[i % 16])
+                .work(1e-4)
+                .demand(r, 10.0),
+        );
+    }
+    e.run().expect("sim").events
+}
+
+fn main() {
+    println!("== perf: L3 hot paths ==");
+    bench("sim engine: 10k contending tasks", 5, || {
+        sim_engine_events(10_000)
+    });
+
+    let sc = Scenario::new("g6-like", 262144, 2048, 8192);
+    bench("schedule generate: all 6 kinds", 20, || {
+        Kind::ALL.iter().map(|&k| generate(k, &sc).nodes.len()).sum()
+    });
+
+    let machine = Machine::mi300x_8();
+    bench("scenario eval: 6 schedules simulated", 5, || {
+        let ev = exec::ScenarioEval::run(&machine, &sc, &Kind::ALL);
+        ev.results.iter().map(|r| r.n_tasks).sum()
+    });
+
+    bench("heuristic pick (static)", 50, || {
+        ficco::workloads::table1()
+            .iter()
+            .map(|r| {
+                ficco::heuristics::pick(&machine, &r.scenario());
+                1
+            })
+            .sum()
+    });
+}

@@ -1,0 +1,172 @@
+//! Command-line argument parsing.
+//!
+//! `clap` is unavailable offline, so this is a purpose-built parser
+//! covering what the `ficco` binary needs: a subcommand, `--flag value`
+//! and `--flag=value` options, boolean switches, and positional args,
+//! with typed accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, switches, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    ///
+    /// `known_switches` lists boolean flags that never take a value;
+    /// every other `--name` consumes the following token as its value
+    /// unless written as `--name=value`.
+    pub fn parse<I, S>(argv: I, known_switches: &[&str]) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let tokens: Vec<String> = argv.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = tokens
+                        .get(i)
+                        .ok_or_else(|| CliError(format!("--{name} expects a value")))?;
+                    if v.starts_with("--") {
+                        return Err(CliError(format!(
+                            "--{name} expects a value, got flag {v}"
+                        )));
+                    }
+                    args.opts.insert(name.to_string(), v.clone());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_switches: &[&str]) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// Reject unknown option names (call after reading all expected ones).
+    pub fn expect_known(&self, known: &[&str]) -> Result<(), CliError> {
+        for k in self.opts.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_opts_switches() {
+        let a = Args::parse(
+            vec!["simulate", "--gpus", "8", "--verbose", "--out=res.csv", "extra"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("gpus"), Some("8"));
+        assert_eq!(a.get("out"), Some("res.csv"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(vec!["run", "--gpus"], &[]).unwrap_err();
+        assert!(e.0.contains("expects a value"));
+    }
+
+    #[test]
+    fn flag_value_confusion_is_error() {
+        let e = Args::parse(vec!["run", "--gpus", "--other"], &[]).unwrap_err();
+        assert!(e.0.contains("expects a value"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(vec!["x", "--n", "12", "--f", "1.5"], &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+        assert!(a.get_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = Args::parse(vec!["x", "--bad", "1"], &[]).unwrap();
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["bad"]).is_ok());
+    }
+}

@@ -1,0 +1,198 @@
+//! Configuration system: a TOML-subset parser with typed accessors.
+//!
+//! `serde`/`toml` are unavailable offline, so we implement the subset
+//! the framework's config files need:
+//!
+//! - `[section]` headers (one level),
+//! - `key = value` with value types: string (`"..."`), integer, float,
+//!   boolean, and homogeneous arrays (`[1, 2, 3]`, `["a", "b"]`),
+//! - `#` comments and blank lines.
+//!
+//! System presets live in `configs/*.toml`; `hw`, `workloads`, and
+//! `train` build their typed structs from a parsed [`Doc`].
+
+mod parse;
+
+pub use parse::{parse, ParseError};
+
+use std::collections::BTreeMap;
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`x = 5` reads as 5.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config document: sections of key→value maps. Keys given
+/// before any `[section]` land in the `""` (root) section.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// Typed access error with the offending `section.key` path.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+impl Doc {
+    /// Load and parse a config file.
+    pub fn load(path: &str) -> Result<Doc, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("reading {path}: {e}")))?;
+        parse(&text).map_err(|e| ConfigError(format!("{path}: {e}")))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| ConfigError(format!("missing or non-string {section}.{key}")))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn i64(&self, section: &str, key: &str) -> Result<i64, ConfigError> {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| ConfigError(format!("missing or non-integer {section}.{key}")))
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64(&self, section: &str, key: &str) -> Result<f64, ConfigError> {
+        self.get(section, key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| ConfigError(format!("missing or non-numeric {section}.{key}")))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Array of i64 (e.g. GEMM dims `[16384, 16384, 131072]`).
+    pub fn i64_array(&self, section: &str, key: &str) -> Result<Vec<i64>, ConfigError> {
+        let arr = self
+            .get(section, key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| ConfigError(format!("missing or non-array {section}.{key}")))?;
+        arr.iter()
+            .map(|v| {
+                v.as_i64()
+                    .ok_or_else(|| ConfigError(format!("non-integer element in {section}.{key}")))
+            })
+            .collect()
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# system preset
+name = "mi300x"
+
+[gpu]
+cus = 304
+peak_bf16_tflops = 1307.4
+hbm_gbps = 5300.0
+dma_engines = 16
+enable_dma = true
+
+[topology]
+kind = "full_mesh"
+link_gbps = 64.0
+
+[workload.g1]
+gemm = [16384, 16384, 131072]
+"#;
+
+    #[test]
+    fn typed_access() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.str("", "name").unwrap(), "mi300x");
+        assert_eq!(d.i64("gpu", "cus").unwrap(), 304);
+        assert!((d.f64("gpu", "peak_bf16_tflops").unwrap() - 1307.4).abs() < 1e-9);
+        // int literal readable as f64
+        assert_eq!(d.f64("gpu", "cus").unwrap(), 304.0);
+        assert!(d.bool_or("gpu", "enable_dma", false));
+        assert_eq!(d.str("topology", "kind").unwrap(), "full_mesh");
+        assert_eq!(
+            d.i64_array("workload.g1", "gemm").unwrap(),
+            vec![16384, 16384, 131072]
+        );
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.i64_or("gpu", "absent", 7), 7);
+        assert!(d.str("gpu", "cus").is_err()); // wrong type
+        assert!(d.i64("nope", "nothing").is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Line-oriented parser for the TOML subset described in [`super`].
+
+use super::{Doc, Value};
+use std::collections::BTreeMap;
+
+/// Parse failure with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.sections.insert(current.clone(), BTreeMap::new());
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let trimmed = strip_comment(raw).trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return err(line, "unterminated section header");
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                return err(line, "empty section name");
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = trimmed.split_once('=') else {
+            return err(line, format!("expected 'key = value', got '{trimmed}'"));
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            return err(line, "empty key");
+        }
+        let value = parse_value(value.trim(), line)?;
+        let section = doc.sections.get_mut(&current).unwrap();
+        if section.insert(key.to_string(), value).is_some() {
+            return err(line, format!("duplicate key '{key}' in section '[{current}]'"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a trailing `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return err(line, "empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return err(line, "unterminated string");
+        };
+        if inner.contains('"') {
+            return err(line, "embedded quote in string (escapes unsupported)");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            return err(line, "unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut out = Vec::new();
+        for elem in split_array_elems(inner) {
+            out.push(parse_value(elem.trim(), line)?);
+        }
+        return Ok(Value::Array(out));
+    }
+    // Numbers: allow underscores for readability (TOML-style).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(line, format!("unparseable value '{s}'"))
+}
+
+/// Split a flat array body on commas outside string literals.
+fn split_array_elems(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let d = parse(
+            "s = \"hi\"\ni = 42\nneg = -3\nf = 1.5\nexp = 1e9\nb = true\narr = [1, 2, 3]\nsarr = [\"a\", \"b,c\"]\nu = 1_000_000\n",
+        )
+        .unwrap();
+        assert_eq!(d.get("", "s"), Some(&Value::Str("hi".into())));
+        assert_eq!(d.get("", "i"), Some(&Value::Int(42)));
+        assert_eq!(d.get("", "neg"), Some(&Value::Int(-3)));
+        assert_eq!(d.get("", "f"), Some(&Value::Float(1.5)));
+        assert_eq!(d.get("", "exp"), Some(&Value::Float(1e9)));
+        assert_eq!(d.get("", "b"), Some(&Value::Bool(true)));
+        assert_eq!(d.get("", "u"), Some(&Value::Int(1_000_000)));
+        assert_eq!(
+            d.get("", "arr"),
+            Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+        assert_eq!(
+            d.get("", "sarr"),
+            Some(&Value::Array(vec![
+                Value::Str("a".into()),
+                Value::Str("b,c".into())
+            ]))
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let d = parse("# header\n\nx = 1 # trailing\ny = \"a # not comment\"\n").unwrap();
+        assert_eq!(d.get("", "x"), Some(&Value::Int(1)));
+        assert_eq!(d.get("", "y"), Some(&Value::Str("a # not comment".into())));
+    }
+
+    #[test]
+    fn sections() {
+        let d = parse("[a]\nx = 1\n[b.c]\nx = 2\n").unwrap();
+        assert_eq!(d.get("a", "x"), Some(&Value::Int(1)));
+        assert_eq!(d.get("b.c", "x"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn error_reporting() {
+        for (text, frag) in [
+            ("[open\n", "unterminated section"),
+            ("novalue\n", "expected 'key = value'"),
+            ("x = \"open\n", "unterminated string"),
+            ("x = [1, 2\n", "unterminated array"),
+            ("x = @@@\n", "unparseable value"),
+            ("x = 1\nx = 2\n", "duplicate key"),
+        ] {
+            let e = parse(text).unwrap_err();
+            assert!(e.msg.contains(frag), "'{text}' → {e}");
+        }
+    }
+
+    #[test]
+    fn duplicate_across_sections_ok() {
+        let d = parse("[a]\nx = 1\n[b]\nx = 2\n").unwrap();
+        assert_eq!(d.get("a", "x"), Some(&Value::Int(1)));
+        assert_eq!(d.get("b", "x"), Some(&Value::Int(2)));
+    }
+}

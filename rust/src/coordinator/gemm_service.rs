@@ -1,0 +1,201 @@
+//! Compute service: a dedicated thread owning the PJRT client.
+//!
+//! `xla` handles wrap raw C++ pointers and are not `Send`, so rank
+//! threads cannot call PJRT directly. Instead they submit plain-`f32`
+//! GEMM requests over a channel; the service thread executes them —
+//! through the Pallas artifact when one matches the shape (the L1
+//! kernel on the L3 request path), otherwise through an
+//! XlaBuilder-built executable — and replies on a per-request channel.
+
+use crate::runtime::{gemm::GemmExecutor, literal_f32, to_f32, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+
+/// One GEMM request: `C (+)= A·B`.
+pub struct GemmRequest {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    /// Accumulator input for `C += A·B`; `None` for plain GEMM.
+    pub c: Option<Vec<f32>>,
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Req(GemmRequest),
+    /// Explicit stop: outstanding `GemmHandle` clones may outlive
+    /// [`GemmService::shutdown`], so channel closure alone cannot end
+    /// the loop.
+    Stop,
+}
+
+/// Cloneable submitter handed to rank threads.
+#[derive(Clone)]
+pub struct GemmHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl GemmHandle {
+    pub fn matmul(&self, a: Vec<f32>, b: Vec<f32>, m: u64, n: u64, k: u64) -> Result<Vec<f32>> {
+        self.submit(a, b, None, m, n, k)
+    }
+
+    pub fn matmul_acc(
+        &self,
+        c: Vec<f32>,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        m: u64,
+        n: u64,
+        k: u64,
+    ) -> Result<Vec<f32>> {
+        self.submit(a, b, Some(c), m, n, k)
+    }
+
+    fn submit(
+        &self,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        c: Option<Vec<f32>>,
+        m: u64,
+        n: u64,
+        k: u64,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(GemmRequest {
+                m,
+                n,
+                k,
+                a,
+                b,
+                c,
+                reply,
+            }))
+            .map_err(|_| anyhow!("gemm service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("gemm service dropped reply"))?
+    }
+}
+
+/// The service thread.
+pub struct GemmService {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GemmService {
+    /// Spawn the service. `artifacts` points at the AOT directory; if
+    /// its manifest is missing, all requests use the builder fallback.
+    pub fn spawn(artifacts: String) -> GemmService {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("gemm-service".into())
+            .spawn(move || service_loop(rx, &artifacts))
+            .expect("spawn gemm service");
+        GemmService {
+            tx,
+            join: Some(join),
+        }
+    }
+
+    pub fn handle(&self) -> GemmHandle {
+        GemmHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_loop(rx: mpsc::Receiver<Msg>, artifacts: &str) {
+    // Artifact runtime when available (runs the L1 Pallas kernels at
+    // their lowered shapes) + builder fallback for arbitrary shapes.
+    let runtime = Runtime::load(artifacts).ok();
+    let exec = GemmExecutor::with_cpu_client().expect("PJRT cpu client");
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Stop => break,
+            Msg::Req(req) => {
+                let result = run_one(&req, runtime.as_ref(), &exec);
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(req: &GemmRequest, runtime: Option<&Runtime>, exec: &GemmExecutor) -> Result<Vec<f32>> {
+    let (m, n, k) = (req.m, req.n, req.k);
+    // Prefer the Pallas artifact at this exact shape.
+    if let Some(rt) = runtime {
+        match &req.c {
+            None => {
+                let name = format!("pallas_gemm_{m}x{n}x{k}");
+                if rt.manifest.get(&name).is_some() {
+                    let la = literal_f32(&req.a, &[m as i64, k as i64])?;
+                    let lb = literal_f32(&req.b, &[k as i64, n as i64])?;
+                    let out = rt.execute(&name, &[la, lb])?;
+                    return to_f32(&out[0]);
+                }
+            }
+            Some(c) => {
+                let name = format!("pallas_gemm_acc_{m}x{n}x{k}");
+                if rt.manifest.get(&name).is_some() {
+                    let lc = literal_f32(c, &[m as i64, n as i64])?;
+                    let la = literal_f32(&req.a, &[m as i64, k as i64])?;
+                    let lb = literal_f32(&req.b, &[k as i64, n as i64])?;
+                    let out = rt.execute(&name, &[lc, la, lb])?;
+                    return to_f32(&out[0]);
+                }
+            }
+        }
+    }
+    match &req.c {
+        None => exec.matmul(&req.a, &req.b, m, n, k),
+        Some(c) => exec.matmul_acc(c, &req.a, &req.b, m, n, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_round_trip() {
+        let svc = GemmService::spawn("artifacts".into());
+        let h = svc.handle();
+        let out = h
+            .matmul(vec![1.0, 2.0, 3.0, 4.0], vec![1.0, 0.0, 0.0, 1.0], 2, 2, 2)
+            .unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_usable_from_many_threads() {
+        let svc = GemmService::spawn("artifacts".into());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    let a = vec![i as f32 + 1.0; 6];
+                    let b = vec![2.0f32; 6];
+                    h.matmul(a, b, 2, 2, 3).unwrap()
+                })
+            })
+            .collect();
+        for (i, t) in handles.into_iter().enumerate() {
+            let out = t.join().unwrap();
+            let want = (i as f32 + 1.0) * 2.0 * 3.0;
+            assert!(out.iter().all(|&x| (x - want).abs() < 1e-5));
+        }
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,178 @@
+//! Closed-form collective communication costs over a topology.
+//!
+//! These formulas serve three purposes: (a) the serial-baseline
+//! communication leg in every figure, (b) communication-DIL
+//! characterization (Fig 8) without running the full simulator, and
+//! (c) cross-checks of the simulator's emergent behaviour
+//! (`rust/tests/sim_vs_closed_form.rs`).
+//!
+//! Conventions: `shard_bytes` is the per-GPU contribution (what each
+//! rank holds before an all-gather / what it must send in total for an
+//! all-to-all). Times are for the whole collective across all ranks,
+//! all ranks starting simultaneously.
+
+use crate::hw::{GpuSpec, Topology};
+use crate::sim::CommMech;
+
+/// Per-transfer fixed overhead for a mechanism (issue + sync).
+pub fn xfer_overhead(gpu: &GpuSpec, topo: &Topology, mech: CommMech) -> f64 {
+    match mech {
+        CommMech::Kernel => topo.latency + gpu.kernel_launch,
+        CommMech::Dma => topo.latency + 0.25 * gpu.kernel_launch,
+    }
+}
+
+/// Sustained rate of one transfer (matches `sim::cluster`'s model).
+pub fn link_rate(gpu: &GpuSpec, topo: &Topology, bytes: f64, mech: CommMech) -> f64 {
+    match mech {
+        CommMech::Kernel => topo.effective_bw(bytes) * gpu.kernel_link_eff,
+        CommMech::Dma => (topo.effective_bw(bytes) * gpu.dma_link_eff).min(gpu.dma_engine_bw),
+    }
+}
+
+/// Single point-to-point transfer time (isolated).
+pub fn p2p_time(gpu: &GpuSpec, topo: &Topology, bytes: f64, mech: CommMech) -> f64 {
+    xfer_overhead(gpu, topo, mech) + bytes / link_rate(gpu, topo, bytes, mech)
+}
+
+/// All-gather via simultaneous direct exchange ("one-shot"): every GPU
+/// sends its full shard to every peer on dedicated links. This is the
+/// bandwidth-optimal algorithm on a full mesh and what the serial
+/// RCCL/DMA baseline achieves.
+pub fn ag_all_to_all_time(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> f64 {
+    match topo.kind {
+        crate::hw::TopologyKind::Switch => {
+            // NIC carries (n-1) shards out of each GPU serially.
+            let total = (topo.ngpus - 1) as f64 * shard_bytes;
+            xfer_overhead(gpu, topo, mech) + total / link_rate(gpu, topo, shard_bytes, mech)
+        }
+        _ => p2p_time(gpu, topo, shard_bytes, mech),
+    }
+}
+
+/// All-gather via a ring of peer-to-peer shard hops — the pattern
+/// shard-based overlap (PyTorch AsyncTP-like) induces: `n-1` serial
+/// steps, each moving one shard over ONE link per GPU. On a full mesh
+/// this leaves `n-2` links idle per GPU (the paper's Fig 13 problem);
+/// on a switch it runs at full NIC rate.
+pub fn ag_ring_time(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> f64 {
+    let steps = (topo.ngpus - 1) as f64;
+    steps * p2p_time(gpu, topo, shard_bytes, mech)
+}
+
+/// FiCCO's finer-grain all-gather: each shard split into `n` pieces;
+/// at each of `n` steps every GPU broadcasts one piece to all peers on
+/// parallel links (steady-state all-to-all, Fig 4c). Returns the total
+/// serial-communication time (the denominator for comm DIL).
+pub fn ag_ficco_time(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> f64 {
+    let n = topo.ngpus as f64;
+    let piece = shard_bytes / n;
+    n * p2p_time(gpu, topo, piece, mech)
+}
+
+/// All-to-all dispersal (expert parallelism): every GPU sends
+/// `shard_bytes/n` to each peer simultaneously on its dedicated links.
+pub fn a2a_time(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> f64 {
+    let n = topo.ngpus as f64;
+    p2p_time(gpu, topo, shard_bytes / n, mech)
+}
+
+/// Communication DIL of FiCCO's decomposition (Fig 8 metric):
+/// finer-grain AG time / baseline one-shot AG time.
+pub fn comm_dil(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> f64 {
+    ag_ficco_time(gpu, topo, shard_bytes, mech) / ag_all_to_all_time(gpu, topo, shard_bytes, mech)
+}
+
+/// Bundle of the collective legs a scenario can need.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveCost {
+    pub serial_baseline: f64,
+    pub shard_overlap_total: f64,
+    pub ficco_total: f64,
+}
+
+impl CollectiveCost {
+    pub fn all_gather(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech) -> Self {
+        CollectiveCost {
+            serial_baseline: ag_all_to_all_time(gpu, topo, shard_bytes, mech),
+            shard_overlap_total: ag_ring_time(gpu, topo, shard_bytes, mech),
+            ficco_total: ag_ficco_time(gpu, topo, shard_bytes, mech),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Machine;
+
+    fn m8() -> Machine {
+        Machine::mi300x_8()
+    }
+
+    #[test]
+    fn ring_is_about_7x_one_shot_on_mesh() {
+        // The paper's observed ~7x communication slowdown for
+        // shard-overlap P2P on the 8-GPU mesh (§VI-B).
+        let m = m8();
+        let shard = 512e6;
+        let ratio = ag_ring_time(&m.gpu, &m.topo, shard, CommMech::Dma)
+            / ag_all_to_all_time(&m.gpu, &m.topo, shard, CommMech::Dma);
+        assert!((6.5..7.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn ring_fine_on_switch() {
+        // Kernel-driven transfers can use the full NIC rate (a single
+        // DMA engine could not — it is engine-capped at 64 GB/s).
+        let m = Machine::switch_8();
+        let shard = 512e6;
+        let ring = ag_ring_time(&m.gpu, &m.topo, shard, CommMech::Kernel);
+        let oneshot = ag_all_to_all_time(&m.gpu, &m.topo, shard, CommMech::Kernel);
+        // On a switch both move (n-1)·shard through the NIC.
+        assert!(ring / oneshot < 1.2, "ring={ring} oneshot={oneshot}");
+    }
+
+    #[test]
+    fn comm_dil_positive_and_shrinks_with_size() {
+        let m = m8();
+        let small = comm_dil(&m.gpu, &m.topo, 16e6, CommMech::Dma);
+        let large = comm_dil(&m.gpu, &m.topo, 1024e6, CommMech::Dma);
+        assert!(small > large, "small={small} large={large}");
+        assert!(large >= 1.0);
+        assert!(small > 1.05, "fine grains of a 16MB shard should pay >5%");
+    }
+
+    #[test]
+    fn comm_dil_geomean_near_paper() {
+        // Fig 8: geomean comm DIL ≈ 1.10 over the studied shard sizes.
+        let m = m8();
+        // Shard sizes (bytes) spanning Table I scenarios' AG inputs.
+        let sizes = [150e6, 235e6, 335e6, 537e6, 537e6, 805e6, 1.74e9, 2.15e9, 3.3e9];
+        let dils: Vec<f64> = sizes
+            .iter()
+            .map(|&s| comm_dil(&m.gpu, &m.topo, s, CommMech::Dma))
+            .collect();
+        let g = crate::util::stats::geomean(&dils);
+        assert!((1.03..1.30).contains(&g), "geomean comm DIL {g}");
+    }
+
+    #[test]
+    fn a2a_faster_than_ag() {
+        let m = m8();
+        let s = 256e6;
+        assert!(
+            a2a_time(&m.gpu, &m.topo, s, CommMech::Dma)
+                < ag_all_to_all_time(&m.gpu, &m.topo, s, CommMech::Dma)
+        );
+    }
+
+    #[test]
+    fn dma_capped_by_engine_rate() {
+        let mut m = m8();
+        m.gpu.dma_engine_bw = 16e9; // slow engines
+        let t_dma = p2p_time(&m.gpu, &m.topo, 64e6, CommMech::Dma);
+        let t_krn = p2p_time(&m.gpu, &m.topo, 64e6, CommMech::Kernel);
+        assert!(t_dma > t_krn);
+    }
+}

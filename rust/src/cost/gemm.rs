@@ -1,0 +1,338 @@
+//! GEMM cost model with decomposition-inefficiency (DIL) effects.
+//!
+//! The paper characterizes DIL as GEMMs are sharded 8-way and 64-way in
+//! the row (M) or column (K) dimension (§IV-C1, Fig 7). Their empirical
+//! observations, which this model reproduces structurally:
+//!
+//! 1. 64-way sharding has higher DIL than 8-way;
+//! 2. row-sharding hurts more when M < K, column-sharding when M > K;
+//! 3. DIL rises as the GEMM's static op-to-byte (OTB) falls.
+//!
+//! Mechanisms modelled (all well documented for GPU GEMM [Osama et al.
+//! PPoPP'23, Triton MAPL'19]): macro-tile/wave quantization over the CU
+//! array, per-tile efficiency shrinking with tile size, short-K
+//! pipeline startup, the extra C-matrix read-modify-write traffic of
+//! accumulating (column-sharded) GEMMs, a fixed kernel overhead, and
+//! the HBM roofline.
+
+use crate::hw::{DType, GpuSpec};
+
+/// Which GEMM input dimension a decomposition shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sharding {
+    /// Shard activations' rows (1D buffers). Output rows partition.
+    Row,
+    /// Shard the inner reduction dimension (2D buffers). Requires an
+    /// accumulating GEMM (`C += A·B`).
+    Col,
+}
+
+impl Sharding {
+    pub fn name(self) -> &'static str {
+        match self {
+            Sharding::Row => "row(M)",
+            Sharding::Col => "col(K)",
+        }
+    }
+}
+
+/// A GEMM problem: `C[M,N] (+)= A[M,K] · B[K,N]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmShape {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub dtype: DType,
+    /// True for `C += A·B` partial-K kernels (adds C read traffic).
+    pub accumulate: bool,
+}
+
+impl GemmShape {
+    pub fn new(m: u64, n: u64, k: u64) -> GemmShape {
+        GemmShape {
+            m,
+            n,
+            k,
+            dtype: DType::Bf16,
+            accumulate: false,
+        }
+    }
+
+    pub fn accumulating(mut self) -> GemmShape {
+        self.accumulate = true;
+        self
+    }
+
+    pub fn with_dtype(mut self, d: DType) -> GemmShape {
+        self.dtype = d;
+        self
+    }
+
+    /// Multiply–add FLOPs (2·M·N·K).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Ideal streaming HBM traffic in bytes: read A and B once, write
+    /// C once; accumulating kernels also read C.
+    pub fn bytes(&self) -> f64 {
+        let e = self.dtype.bytes() as f64;
+        let a = self.m as f64 * self.k as f64 * e;
+        let b = self.k as f64 * self.n as f64 * e;
+        // Output (and accumulator) kept in f32 as standard for bf16.
+        let c_elem = 4.0f64.max(e);
+        let c = self.m as f64 * self.n as f64 * c_elem;
+        a + b + if self.accumulate { 2.0 * c } else { c }
+    }
+
+    /// Static op-to-byte ratio (arithmetic intensity), the paper's OTB
+    /// axis for DIL (§IV-C1).
+    pub fn otb(&self) -> f64 {
+        self.flops() / self.bytes()
+    }
+
+    /// Static memory-traffic metric, the paper's MT axis for CIL
+    /// (§IV-D1): MK + KN + MN elements, in bytes.
+    pub fn mt(&self) -> f64 {
+        let e = self.dtype.bytes() as f64;
+        (self.m as f64 * self.k as f64 + self.k as f64 * self.n as f64
+            + self.m as f64 * self.n as f64)
+            * e
+    }
+
+    /// Shard this GEMM `ways`-way along `dim`, yielding the per-piece
+    /// shape. Row shards divide M; column shards divide K and become
+    /// accumulating. Remainders round up (worst piece governs).
+    pub fn shard(&self, dim: Sharding, ways: u64) -> GemmShape {
+        assert!(ways >= 1);
+        match dim {
+            Sharding::Row => GemmShape {
+                m: div_up(self.m, ways),
+                ..*self
+            },
+            Sharding::Col => GemmShape {
+                k: div_up(self.k, ways),
+                accumulate: ways > 1 || self.accumulate,
+                ..*self
+            },
+        }
+    }
+}
+
+fn div_up(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// GEMM timing model over a [`GpuSpec`].
+#[derive(Debug, Clone)]
+pub struct GemmCost<'a> {
+    pub gpu: &'a GpuSpec,
+    /// Macro-tile palette the library (hipblaslt-like) selects from.
+    /// (tile_m, tile_n, per-tile MFMA efficiency at long K).
+    pub tile_palette: Vec<(u64, u64, f64)>,
+    /// K extent at which the MFMA pipeline reaches half efficiency.
+    pub k_half: f64,
+    /// Fraction of HBM peak a GEMM's streaming accesses achieve.
+    pub hbm_eff: f64,
+}
+
+impl<'a> GemmCost<'a> {
+    pub fn new(gpu: &'a GpuSpec) -> GemmCost<'a> {
+        GemmCost {
+            gpu,
+            tile_palette: vec![
+                (256, 256, 1.00),
+                (256, 128, 0.97),
+                (128, 128, 0.93),
+                (128, 64, 0.85),
+                (64, 64, 0.76),
+                (64, 32, 0.62),
+                (32, 32, 0.48),
+                (16, 16, 0.30),
+            ],
+            k_half: 384.0,
+            hbm_eff: 0.85,
+        }
+    }
+
+    /// Isolated execution time of one GEMM kernel, seconds, including
+    /// fixed launch overhead. This is `max(compute, memory)` with the
+    /// utilization model applied to the compute leg.
+    pub fn time(&self, g: &GemmShape) -> f64 {
+        let (t_compute, _tile) = self.compute_time(g);
+        let t_memory = g.bytes() / (self.hbm_eff * self.gpu.hbm_bw);
+        self.gpu.kernel_launch + t_compute.max(t_memory)
+    }
+
+    /// Compute-leg time and the selected macro tile.
+    pub fn compute_time(&self, g: &GemmShape) -> (f64, (u64, u64)) {
+        let peak = self.gpu.peak_flops(g.dtype);
+        let mut best = f64::INFINITY;
+        let mut best_tile = (0, 0);
+        for &(tm, tn, tile_eff) in &self.tile_palette {
+            let tiles_m = div_up(g.m, tm);
+            let tiles_n = div_up(g.n, tn);
+            let tiles = tiles_m * tiles_n;
+            // Wave quantization: tiles round up to multiples of the CU
+            // count; the last wave is partially filled.
+            let waves = div_up(tiles, self.gpu.cus as u64);
+            let occupancy = tiles as f64 / (waves * self.gpu.cus as u64) as f64;
+            // Partial edge tiles still occupy a full CU-tile of time.
+            let padded_flops =
+                2.0 * (tiles_m * tm) as f64 * (tiles_n * tn) as f64 * g.k as f64;
+            // Short-K startup: the MFMA pipeline + prologue amortizes
+            // over the K loop.
+            let k_eff = g.k as f64 / (g.k as f64 + self.k_half);
+            let eff = tile_eff * occupancy * k_eff;
+            let t = padded_flops / (peak * eff.max(1e-3));
+            if t < best {
+                best = t;
+                best_tile = (tm, tn);
+            }
+        }
+        (best, best_tile)
+    }
+
+    /// Achieved fraction of peak for this shape (diagnostic).
+    pub fn efficiency(&self, g: &GemmShape) -> f64 {
+        let t = self.time(g);
+        g.flops() / (t * self.gpu.peak_flops(g.dtype))
+    }
+
+    /// CUs a GEMM kernel occupies (it fills the machine unless there
+    /// are fewer tiles than CUs — small decomposed GEMMs leave CUs
+    /// idle, which is exactly what lets unfused FiCCO schedules run
+    /// several small GEMMs concurrently).
+    pub fn cus_used(&self, g: &GemmShape) -> usize {
+        let (_, (tm, tn)) = self.compute_time(g);
+        if tm == 0 {
+            return self.gpu.cus;
+        }
+        let tiles = div_up(g.m, tm) * div_up(g.n, tn);
+        (tiles as usize).min(self.gpu.cus)
+    }
+
+    /// Aggregate DIL of decomposing `g` into `ways` shards along `dim`
+    /// and executing them back-to-back on one GPU (the paper's Fig 7
+    /// metric): Σ t(shard) / t(whole).
+    pub fn dil(&self, g: &GemmShape, dim: Sharding, ways: u64) -> f64 {
+        let whole = self.time(g);
+        let piece = g.shard(dim, ways);
+        let pieces_time = ways as f64 * self.time(&piece);
+        pieces_time / whole
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GpuSpec;
+
+    fn cost(gpu: &GpuSpec) -> GemmCost<'_> {
+        GemmCost::new(gpu)
+    }
+
+    #[test]
+    fn flops_bytes_otb() {
+        let g = GemmShape::new(1024, 512, 2048);
+        assert_eq!(g.flops(), 2.0 * 1024.0 * 512.0 * 2048.0);
+        assert!(g.otb() > 0.0);
+        // accumulate adds C read traffic
+        let acc = g.accumulating();
+        assert!(acc.bytes() > g.bytes());
+    }
+
+    #[test]
+    fn shard_row_divides_m() {
+        let g = GemmShape::new(1000, 512, 2048);
+        let s = g.shard(Sharding::Row, 8);
+        assert_eq!(s.m, 125);
+        assert!(!s.accumulate);
+        let s64 = g.shard(Sharding::Row, 64);
+        assert_eq!(s64.m, 16); // ceil(1000/64)
+    }
+
+    #[test]
+    fn shard_col_divides_k_and_accumulates() {
+        let g = GemmShape::new(1024, 512, 2048);
+        let s = g.shard(Sharding::Col, 8);
+        assert_eq!(s.k, 256);
+        assert!(s.accumulate);
+    }
+
+    #[test]
+    fn big_gemm_near_peak() {
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        let g = GemmShape::new(16384, 16384, 16384);
+        let eff = c.efficiency(&g);
+        assert!(eff > 0.75, "large-GEMM efficiency {eff}");
+    }
+
+    #[test]
+    fn tiny_gemm_low_efficiency() {
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        let g = GemmShape::new(256, 256, 512);
+        let eff = c.efficiency(&g);
+        assert!(eff < 0.3, "tiny-GEMM efficiency {eff}");
+    }
+
+    #[test]
+    fn dil_at_least_one_and_grows_with_ways() {
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        // paper's g1
+        let g = GemmShape::new(16384, 16384, 131072);
+        for dim in [Sharding::Row, Sharding::Col] {
+            let d8 = c.dil(&g, dim, 8);
+            let d64 = c.dil(&g, dim, 64);
+            assert!(d8 >= 0.999, "{dim:?} d8={d8}");
+            assert!(d64 >= d8 * 0.999, "{dim:?} d8={d8} d64={d64}");
+        }
+    }
+
+    #[test]
+    fn row_shard_hurts_when_m_lt_k() {
+        // paper observation 2 (Fig 7): g1-like (M << K) row sharding
+        // is worse than col sharding; g2-like (M >> K) the reverse.
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        let g1 = GemmShape::new(16384, 16384, 131072); // M < K
+        assert!(
+            c.dil(&g1, Sharding::Row, 64) > c.dil(&g1, Sharding::Col, 64),
+            "row {} col {}",
+            c.dil(&g1, Sharding::Row, 64),
+            c.dil(&g1, Sharding::Col, 64)
+        );
+        let g2 = GemmShape::new(131072, 16384, 16384); // M > K
+        assert!(
+            c.dil(&g2, Sharding::Col, 64) > c.dil(&g2, Sharding::Row, 64),
+            "row {} col {}",
+            c.dil(&g2, Sharding::Row, 64),
+            c.dil(&g2, Sharding::Col, 64)
+        );
+    }
+
+    #[test]
+    fn memory_bound_gemm_hits_roofline() {
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        // Skinny K → memory bound.
+        let g = GemmShape::new(65536, 128, 128);
+        let t = c.time(&g);
+        let t_mem = g.bytes() / (c.hbm_eff * gpu.hbm_bw);
+        assert!(t >= t_mem);
+        assert!(t < 3.0 * t_mem, "should be near memory roofline");
+    }
+
+    #[test]
+    fn cus_used_small_gemm_partial() {
+        let gpu = GpuSpec::mi300x();
+        let c = cost(&gpu);
+        let small = GemmShape::new(256, 256, 8192);
+        assert!(c.cus_used(&small) < gpu.cus);
+        let big = GemmShape::new(16384, 16384, 8192);
+        assert_eq!(c.cus_used(&big), gpu.cus);
+    }
+}

@@ -1,0 +1,19 @@
+//! Analytical cost models for the operators the paper overlaps.
+//!
+//! - [`gemm`] — GEMM execution time with a utilization model that
+//!   produces the paper's *Decomposition-Inefficiency Loss* (DIL,
+//!   §IV-C1) from static (M, N, K): tile/wave quantization on the CU
+//!   array, short-K pipeline startup, accumulate-GEMM extra traffic,
+//!   and the roofline memory bound.
+//! - [`collective`] — closed-form collective times over a topology
+//!   (ring vs all-to-all all-gather, all-to-all dispersal), kernel- vs
+//!   DMA-driven; produces communication DIL (§IV-C2).
+//! - [`contention`] — closed-form proportional-share CIL estimates
+//!   (§IV-D) used to cross-check the fluid simulator.
+
+pub mod collective;
+pub mod contention;
+pub mod gemm;
+
+pub use collective::{ag_all_to_all_time, ag_ring_time, p2p_time, CollectiveCost};
+pub use gemm::{GemmCost, GemmShape, Sharding};

@@ -1,0 +1,170 @@
+//! Single-GPU specification.
+
+use crate::config::{ConfigError, Doc};
+
+/// Element datatype of a GEMM (determines peak FLOP/s and byte width).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bf16,
+    F16,
+    F32,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::Bf16 | DType::F16 => 2,
+            DType::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// GPU hardware parameters. Defaults model the AMD Instinct MI300X as
+/// described in the paper's §IV-B methodology (public spec numbers).
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Compute units (MI300X: 304). The simulator's compute resource.
+    pub cus: usize,
+    /// Peak dense matrix FLOP/s at bf16/f16.
+    pub peak_bf16: f64,
+    /// Peak dense matrix FLOP/s at f32.
+    pub peak_f32: f64,
+    /// HBM bandwidth, bytes/s (MI300X: 5.3 TB/s).
+    pub hbm_bw: f64,
+    /// Last-level (Infinity) cache capacity in bytes (MI300X: 256 MiB).
+    pub llc_bytes: u64,
+    /// Number of SDMA engines usable for peer copies.
+    pub dma_engines: usize,
+    /// Sustained bandwidth of a single DMA engine, bytes/s. A single
+    /// engine cannot saturate a 64 GB/s IF link by itself on older
+    /// parts; on MI300X-class hardware it can, so default = link rate.
+    pub dma_engine_bw: f64,
+    /// Fixed host-side kernel launch + prologue overhead, seconds
+    /// (the "Other Inefficiency Losses" of §IV-A).
+    pub kernel_launch: f64,
+    /// CUs occupied by a GPU-core-driven (RCCL-style) communication
+    /// kernel — the source of *compute interference* (Fig 3d).
+    pub comm_kernel_cus: usize,
+    /// Extra HBM-traffic multiplier for core-driven communication,
+    /// modelling cache pollution that DMA offload avoids (§II-B: DMA
+    /// eliminates compute interference and *part of* cache
+    /// interference; memory interference remains).
+    pub comm_cache_pollution: f64,
+    /// Per-CU share of HBM bandwidth achievable by a memcpy-like kernel
+    /// is not modelled; local gather/scatter kernels occupy this many
+    /// CUs instead.
+    pub copy_kernel_cus: usize,
+    /// GEMM HBM-demand burstiness: a GEMM's memory accesses arrive in
+    /// bursts at far above its average rate, so its *contention
+    /// pressure* on the memory subsystem exceeds bytes/time. Average
+    /// demand is multiplied by this factor for sharing purposes.
+    pub hbm_burst: f64,
+    /// Memory-subsystem interference amplification of inter-GPU
+    /// traffic: each fabric byte costs more than one byte of HBM
+    /// service (row-buffer conflicts, read/write turnaround, fabric
+    /// stop sharing). Calibrated so overlapped execution reproduces
+    /// the paper's Fig 9 CIL levels (geomean ≈1.11 GEMM / ≈1.12 comm
+    /// under DMA all-to-all).
+    pub comm_hbm_amp: f64,
+    /// Fraction of raw link bandwidth a GPU-core-driven (RCCL-style)
+    /// transfer sustains per link. Collective libraries pay protocol,
+    /// channel-scheduling and SM-copy overheads — this is why the
+    /// serial RCCL baseline leaves the 1.7x overlap opportunity the
+    /// paper targets, and why FiCCO's DMA all-to-all has headroom.
+    pub kernel_link_eff: f64,
+    /// Fraction of raw link bandwidth a single SDMA engine sustains.
+    pub dma_link_eff: f64,
+}
+
+impl GpuSpec {
+    /// AMD Instinct MI300X (public numbers; bf16 peak 1307.4 TFLOP/s,
+    /// 5.3 TB/s HBM3, 304 CUs, 256 MiB Infinity Cache).
+    pub fn mi300x() -> GpuSpec {
+        GpuSpec {
+            name: "mi300x".into(),
+            cus: 304,
+            peak_bf16: 1307.4e12,
+            peak_f32: 163.4e12,
+            hbm_bw: 5.3e12,
+            llc_bytes: 256 << 20,
+            dma_engines: 16,
+            dma_engine_bw: 64e9,
+            kernel_launch: 8e-6,
+            comm_kernel_cus: 12,
+            comm_cache_pollution: 2.5,
+            copy_kernel_cus: 24,
+            hbm_burst: 2.5,
+            comm_hbm_amp: 6.5,
+            kernel_link_eff: 0.35,
+            dma_link_eff: 0.9,
+        }
+    }
+
+    pub fn peak_flops(&self, dtype: DType) -> f64 {
+        match dtype {
+            DType::Bf16 | DType::F16 => self.peak_bf16,
+            DType::F32 => self.peak_f32,
+        }
+    }
+
+    /// Aggregate DMA bandwidth available for peer copies.
+    pub fn dma_total_bw(&self) -> f64 {
+        self.dma_engines as f64 * self.dma_engine_bw
+    }
+
+    /// Build from `[gpu]` section of a config; missing keys fall back
+    /// to the MI300X preset.
+    pub fn from_config(doc: &Doc) -> Result<GpuSpec, ConfigError> {
+        let d = GpuSpec::mi300x();
+        Ok(GpuSpec {
+            name: doc.str_or("gpu", "name", &d.name).to_string(),
+            cus: doc.i64_or("gpu", "cus", d.cus as i64) as usize,
+            peak_bf16: doc.f64_or("gpu", "peak_bf16_tflops", d.peak_bf16 / 1e12) * 1e12,
+            peak_f32: doc.f64_or("gpu", "peak_f32_tflops", d.peak_f32 / 1e12) * 1e12,
+            hbm_bw: doc.f64_or("gpu", "hbm_gbps", d.hbm_bw / 1e9) * 1e9,
+            llc_bytes: (doc.i64_or("gpu", "llc_mib", (d.llc_bytes >> 20) as i64) as u64) << 20,
+            dma_engines: doc.i64_or("gpu", "dma_engines", d.dma_engines as i64) as usize,
+            dma_engine_bw: doc.f64_or("gpu", "dma_engine_gbps", d.dma_engine_bw / 1e9) * 1e9,
+            kernel_launch: doc.f64_or("gpu", "kernel_launch_us", d.kernel_launch * 1e6) * 1e-6,
+            comm_kernel_cus: doc.i64_or("gpu", "comm_kernel_cus", d.comm_kernel_cus as i64)
+                as usize,
+            comm_cache_pollution: doc.f64_or("gpu", "comm_cache_pollution", d.comm_cache_pollution),
+            copy_kernel_cus: doc.i64_or("gpu", "copy_kernel_cus", d.copy_kernel_cus as i64)
+                as usize,
+            hbm_burst: doc.f64_or("gpu", "hbm_burst", d.hbm_burst),
+            comm_hbm_amp: doc.f64_or("gpu", "comm_hbm_amp", d.comm_hbm_amp),
+            kernel_link_eff: doc.f64_or("gpu", "kernel_link_eff", d.kernel_link_eff),
+            dma_link_eff: doc.f64_or("gpu", "dma_link_eff", d.dma_link_eff),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn mi300x_numbers() {
+        let g = GpuSpec::mi300x();
+        assert_eq!(g.cus, 304);
+        assert!((g.peak_flops(DType::Bf16) - 1307.4e12).abs() < 1e6);
+        assert!(g.peak_flops(DType::F32) < g.peak_flops(DType::Bf16));
+        assert_eq!(g.llc_bytes, 256 << 20);
+        assert!(g.dma_total_bw() >= 7.0 * 64e9, "DMA pool must cover all mesh links");
+    }
+}

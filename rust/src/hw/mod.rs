@@ -1,0 +1,105 @@
+//! Hardware model: GPU specification and inter-GPU network topology.
+//!
+//! The paper's testbed (8× AMD Instinct MI300X, fully-connected
+//! Infinity Fabric, 64 GB/s unidirectional per link) is modelled
+//! analytically. All figures in the paper are ratios over this machine,
+//! so what matters is that the model exposes the same *balance points*:
+//! peak matrix FLOP/s vs HBM bandwidth (the roofline knee the heuristic
+//! thresholds on), per-link vs aggregate network bandwidth (the
+//! shard-overlap-vs-FiCCO distinction), and DMA engines as a resource
+//! distinct from compute cores (the contention distinction).
+
+mod gpu;
+mod topology;
+
+pub use gpu::{DType, GpuSpec};
+pub use topology::{Topology, TopologyKind};
+
+use crate::config::Doc;
+
+/// A machine = one GPU spec replicated over a topology.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub gpu: GpuSpec,
+    pub topo: Topology,
+}
+
+impl Machine {
+    /// The paper's testbed: 8× MI300X on a full mesh.
+    pub fn mi300x_8() -> Machine {
+        Machine {
+            gpu: GpuSpec::mi300x(),
+            topo: Topology::full_mesh(8, 64e9, 2.0e-6),
+        }
+    }
+
+    /// NVLink-switch-style machine (for §VIII-A topology discussion and
+    /// the shard-overlap baselines' home turf).
+    pub fn switch_8() -> Machine {
+        Machine {
+            gpu: GpuSpec::mi300x(),
+            topo: Topology::switch(8, 450e9, 2.0e-6),
+        }
+    }
+
+    pub fn ngpus(&self) -> usize {
+        self.topo.ngpus
+    }
+
+    /// Machine balance (FLOP per HBM byte) at a given dtype — the knee
+    /// of the roofline; the heuristic's machine-level threshold unit.
+    pub fn balance(&self, dtype: DType) -> f64 {
+        self.gpu.peak_flops(dtype) / self.gpu.hbm_bw
+    }
+
+    /// Build from a config document (see `configs/mi300x.toml`).
+    pub fn from_config(doc: &Doc) -> Result<Machine, crate::config::ConfigError> {
+        let gpu = GpuSpec::from_config(doc)?;
+        let topo = Topology::from_config(doc)?;
+        Ok(Machine { gpu, topo })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi300x_preset_sane() {
+        let m = Machine::mi300x_8();
+        assert_eq!(m.ngpus(), 8);
+        // MI300X balance point is a few hundred bf16 FLOPs per byte.
+        let b = m.balance(DType::Bf16);
+        assert!(b > 100.0 && b < 500.0, "balance={b}");
+    }
+
+    #[test]
+    fn from_config_roundtrip() {
+        let doc = crate::config::parse(
+            r#"
+[gpu]
+name = "test"
+cus = 100
+peak_bf16_tflops = 1000.0
+peak_f32_tflops = 250.0
+hbm_gbps = 4000.0
+llc_mib = 128
+dma_engines = 8
+dma_engine_gbps = 64.0
+kernel_launch_us = 8.0
+comm_kernel_cus = 32
+
+[topology]
+kind = "full_mesh"
+ngpus = 4
+link_gbps = 50.0
+latency_us = 2.0
+"#,
+        )
+        .unwrap();
+        let m = Machine::from_config(&doc).unwrap();
+        assert_eq!(m.gpu.cus, 100);
+        assert_eq!(m.topo.ngpus, 4);
+        assert!((m.topo.link_bw - 50e9).abs() < 1.0);
+    }
+}

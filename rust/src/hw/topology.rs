@@ -1,0 +1,234 @@
+//! Inter-GPU network topology.
+//!
+//! The distinction the paper turns on (§III, Fig 5, Fig 13): with a
+//! *direct/full-mesh* topology each GPU has a dedicated link per peer,
+//! so a peer-to-peer schedule that talks to one peer at a time leaves
+//! `ngpus-2` links idle; a *switch* topology pools per-GPU bandwidth
+//! and can give a single P2P stream the full NIC rate.
+
+use crate::config::{ConfigError, Doc};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Direct connection GPU↔GPU (MI300X Infinity Fabric mesh):
+    /// a dedicated `link_bw` link per ordered pair.
+    FullMesh,
+    /// Switched (NVSwitch-style): each GPU has one egress and one
+    /// ingress pipe of `link_bw`, flexibly allocated across peers.
+    Switch,
+    /// Unidirectional ring: each GPU has a single link to (r+1)%n.
+    Ring,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s {
+            "full_mesh" | "mesh" => Some(TopologyKind::FullMesh),
+            "switch" => Some(TopologyKind::Switch),
+            "ring" => Some(TopologyKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::FullMesh => "full_mesh",
+            TopologyKind::Switch => "switch",
+            TopologyKind::Ring => "ring",
+        }
+    }
+}
+
+/// Network topology over `ngpus` GPUs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub ngpus: usize,
+    /// Unidirectional bandwidth (bytes/s) of one link (mesh/ring: per
+    /// peer link; switch: per-GPU NIC pipe).
+    pub link_bw: f64,
+    /// Per-message latency (seconds): launch-to-first-byte.
+    pub latency: f64,
+    /// Message size at which a single transfer reaches half of link
+    /// bandwidth (packetization/pipelining ramp). Small transfers—the
+    /// finer grains FiCCO creates—achieve lower effective bandwidth;
+    /// this is the source of communication DIL (§IV-C2, Fig 8).
+    pub msg_half: f64,
+}
+
+impl Topology {
+    pub const DEFAULT_MSG_HALF: f64 = 8.0 * 1024.0 * 1024.0;
+
+    pub fn full_mesh(ngpus: usize, link_bw: f64, latency: f64) -> Topology {
+        Topology {
+            kind: TopologyKind::FullMesh,
+            ngpus,
+            link_bw,
+            latency,
+            msg_half: Self::DEFAULT_MSG_HALF,
+        }
+    }
+
+    pub fn switch(ngpus: usize, nic_bw: f64, latency: f64) -> Topology {
+        Topology {
+            kind: TopologyKind::Switch,
+            ngpus,
+            link_bw: nic_bw,
+            latency,
+            msg_half: Self::DEFAULT_MSG_HALF,
+        }
+    }
+
+    pub fn ring(ngpus: usize, link_bw: f64, latency: f64) -> Topology {
+        Topology {
+            kind: TopologyKind::Ring,
+            ngpus,
+            link_bw,
+            latency,
+            msg_half: Self::DEFAULT_MSG_HALF,
+        }
+    }
+
+    /// Effective bandwidth of a single transfer of `bytes`, accounting
+    /// for the small-message ramp: `link_bw · s/(s + msg_half)`.
+    pub fn effective_bw(&self, bytes: f64) -> f64 {
+        assert!(bytes >= 0.0);
+        if bytes <= 0.0 {
+            return self.link_bw;
+        }
+        self.link_bw * bytes / (bytes + self.msg_half)
+    }
+
+    /// Is (src → dst) directly connected?
+    pub fn connected(&self, src: usize, dst: usize) -> bool {
+        if src == dst {
+            return false;
+        }
+        match self.kind {
+            TopologyKind::FullMesh | TopologyKind::Switch => true,
+            TopologyKind::Ring => dst == (src + 1) % self.ngpus,
+        }
+    }
+
+    /// Aggregate egress bandwidth a single GPU can drive when talking
+    /// to *all* peers simultaneously.
+    pub fn aggregate_egress(&self, _gpu: usize) -> f64 {
+        match self.kind {
+            TopologyKind::FullMesh => (self.ngpus - 1) as f64 * self.link_bw,
+            TopologyKind::Switch => self.link_bw,
+            TopologyKind::Ring => self.link_bw,
+        }
+    }
+
+    /// Bandwidth available to a single peer-to-peer stream src→dst.
+    pub fn p2p_bw(&self, src: usize, dst: usize) -> f64 {
+        assert!(self.connected(src, dst), "no link {src}→{dst}");
+        self.link_bw
+    }
+
+    /// Fraction of a GPU's aggregate egress a single-peer P2P stream
+    /// uses — the paper's shard-overlap link-idling problem. 1.0 on a
+    /// switch; 1/(n-1) on a full mesh.
+    pub fn p2p_utilization(&self) -> f64 {
+        match self.kind {
+            TopologyKind::FullMesh => 1.0 / (self.ngpus - 1) as f64,
+            TopologyKind::Switch => 1.0,
+            TopologyKind::Ring => 1.0,
+        }
+    }
+
+    /// Number of directed links in the fabric (simulator resources).
+    pub fn num_links(&self) -> usize {
+        match self.kind {
+            TopologyKind::FullMesh => self.ngpus * (self.ngpus - 1),
+            // Switch: modelled as one egress + one ingress pipe per GPU.
+            TopologyKind::Switch => 2 * self.ngpus,
+            TopologyKind::Ring => self.ngpus,
+        }
+    }
+
+    /// Simulator resource index for the capacity constraining a
+    /// src→dst transfer. Returns one or two indices into the link
+    /// resource array (switch transfers consume egress *and* ingress).
+    pub fn link_indices(&self, src: usize, dst: usize) -> Vec<usize> {
+        assert!(self.connected(src, dst), "no link {src}→{dst}");
+        match self.kind {
+            TopologyKind::FullMesh => {
+                // Dense index over ordered pairs, skipping the diagonal.
+                let col = if dst > src { dst - 1 } else { dst };
+                vec![src * (self.ngpus - 1) + col]
+            }
+            TopologyKind::Switch => vec![2 * src, 2 * dst + 1],
+            TopologyKind::Ring => vec![src],
+        }
+    }
+
+    pub fn from_config(doc: &Doc) -> Result<Topology, ConfigError> {
+        let kind_s = doc.str_or("topology", "kind", "full_mesh");
+        let kind = TopologyKind::parse(kind_s)
+            .ok_or_else(|| ConfigError(format!("unknown topology.kind '{kind_s}'")))?;
+        Ok(Topology {
+            kind,
+            ngpus: doc.i64_or("topology", "ngpus", 8) as usize,
+            link_bw: doc.f64_or("topology", "link_gbps", 64.0) * 1e9,
+            latency: doc.f64_or("topology", "latency_us", 2.0) * 1e-6,
+            msg_half: doc.f64_or("topology", "msg_half_mib", 8.0) * 1024.0 * 1024.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_links_unique_and_dense() {
+        let t = Topology::full_mesh(8, 64e9, 2e-6);
+        assert_eq!(t.num_links(), 56);
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    let idx = t.link_indices(s, d);
+                    assert_eq!(idx.len(), 1);
+                    assert!(idx[0] < t.num_links());
+                    assert!(seen.insert(idx[0]), "collision at {s}->{d}");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 56);
+    }
+
+    #[test]
+    fn mesh_p2p_wastes_links() {
+        let t = Topology::full_mesh(8, 64e9, 2e-6);
+        assert!((t.p2p_utilization() - 1.0 / 7.0).abs() < 1e-12);
+        assert!((t.aggregate_egress(0) - 7.0 * 64e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn switch_p2p_full_rate() {
+        let t = Topology::switch(8, 450e9, 2e-6);
+        assert_eq!(t.p2p_utilization(), 1.0);
+        assert_eq!(t.aggregate_egress(3), 450e9);
+        // switch transfer consumes egress of src and ingress of dst
+        let idx = t.link_indices(1, 5);
+        assert_eq!(idx, vec![2, 11]);
+    }
+
+    #[test]
+    fn ring_connectivity() {
+        let t = Topology::ring(4, 64e9, 2e-6);
+        assert!(t.connected(0, 1));
+        assert!(!t.connected(0, 2));
+        assert!(t.connected(3, 0));
+        assert_eq!(t.num_links(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn no_self_link() {
+        let t = Topology::full_mesh(8, 64e9, 2e-6);
+        t.link_indices(3, 3);
+    }
+}

@@ -1,0 +1,35 @@
+//! # FiCCO — Finer-Grain Compute-Communication Overlap
+//!
+//! Reproduction of "Design Space Exploration of DMA based Finer-Grain
+//! Compute Communication Overlap" (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — the coordinator and the paper's systems
+//!   contribution: the FiCCO schedule design space ([`schedule`]),
+//!   DIL/CIL characterization ([`cost`], [`sim`]), schedule-selection
+//!   heuristics ([`heuristics`]), DMA communication offload (modelled
+//!   in [`sim::cluster`], exercised by [`coordinator`]).
+//! - **L2/L1 (build-time Python)** — `python/compile/` lowers a JAX
+//!   transformer whose GEMMs are Pallas kernels to HLO text artifacts
+//!   loaded by [`runtime`].
+//!
+//! See `DESIGN.md` for the full inventory and the experiment index.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod heuristics;
+pub mod hw;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod train;
+pub mod util;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,259 @@
+//! `ficco` — the FiCCO coordinator CLI.
+//!
+//! Subcommands:
+//!   workloads                       list the Table I scenario suite
+//!   simulate   --scenario g5 ...    run all schedules for one scenario
+//!   heuristic  [--all|--scenario g] show heuristic decisions
+//!   characterize --what dil|comm-dil|cil
+//!   figures    [--out-dir results]  regenerate every paper exhibit
+//!   synth      --count 16 --seed 7  heuristic accuracy on synthetic suite
+//!   validate   [--artifacts DIR]    numeric equivalence of all schedules
+//!                                   (real data through PJRT)
+//!   train      [--config FILE]      end-to-end training driver
+//!
+//! Global flags: --config FILE (machine preset), --gpus N, --mech dma|rccl.
+
+use ficco::cli::Args;
+use ficco::hw::Machine;
+use ficco::schedule::{exec::ScenarioEval, Kind, Scenario};
+use ficco::sim::CommMech;
+use ficco::util::table::{f, x, Align, Table};
+use ficco::workloads;
+
+fn main() {
+    let args = match Args::from_env(&["all", "verbose", "csv"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn machine_from(args: &Args) -> Result<Machine, Box<dyn std::error::Error>> {
+    let mut m = match args.get("config") {
+        Some(path) => {
+            let doc = ficco::config::Doc::load(path)?;
+            Machine::from_config(&doc)?
+        }
+        None => Machine::mi300x_8(),
+    };
+    if let Some(g) = args.get("gpus") {
+        m.topo.ngpus = g.parse()?;
+    }
+    Ok(m)
+}
+
+fn scenario_from(args: &Args, machine: &Machine) -> Result<Scenario, Box<dyn std::error::Error>> {
+    let mut sc = match args.get("scenario") {
+        Some(name) => workloads::by_name(name)
+            .ok_or_else(|| format!("unknown scenario '{name}' (try g1..g16)"))?,
+        None => {
+            let m = args.get_u64("m", 131072)?;
+            let n = args.get_u64("n", 16384)?;
+            let k = args.get_u64("k", 16384)?;
+            Scenario::new(format!("custom-{m}x{n}x{k}"), m, n, k)
+        }
+    };
+    sc.ngpus = machine.topo.ngpus;
+    if let Some(mech) = args.get("mech") {
+        sc.mech = match mech {
+            "dma" => CommMech::Dma,
+            "rccl" | "kernel" => CommMech::Kernel,
+            other => return Err(format!("unknown --mech '{other}'").into()),
+        };
+    }
+    Ok(sc)
+}
+
+fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    match args.subcommand.as_deref() {
+        Some("workloads") => cmd_workloads(),
+        Some("simulate") => cmd_simulate(args),
+        Some("heuristic") => cmd_heuristic(args),
+        Some("characterize") => cmd_characterize(args),
+        Some("figures") => cmd_figures(args),
+        Some("synth") => cmd_synth(args),
+        Some("validate") => cmd_validate(args),
+        Some("train") => cmd_train(args),
+        Some(other) => Err(format!("unknown subcommand '{other}'").into()),
+        None => {
+            println!("ficco {} — FiCCO: finer-grain compute-communication overlap", ficco::version());
+            println!("subcommands: workloads simulate heuristic characterize figures synth validate train");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_workloads() -> Result<(), Box<dyn std::error::Error>> {
+    let mut t = Table::new(vec!["name", "parallelism", "model", "M", "N", "K", "OTB", "MT GiB"])
+        .align(0, Align::Left)
+        .align(1, Align::Left)
+        .align(2, Align::Left);
+    for r in workloads::table1() {
+        let g = ficco::cost::GemmShape::new(r.m, r.n, r.k);
+        t.row(vec![
+            r.name.to_string(),
+            r.parallelism.name().to_string(),
+            r.model.to_string(),
+            r.m.to_string(),
+            r.n.to_string(),
+            r.k.to_string(),
+            f(g.otb(), 0),
+            f(g.mt() / (1u64 << 30) as f64, 1),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine = machine_from(args)?;
+    let sc = scenario_from(args, &machine)?;
+    println!(
+        "scenario {}: GEMM ({}, {}, {}), {} over {} GPUs, {} comm",
+        sc.name, sc.gemm.m, sc.gemm.n, sc.gemm.k, sc.collective.name(), sc.ngpus,
+        sc.mech.name(),
+    );
+    let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
+    let mut t = Table::new(vec![
+        "schedule", "makespan", "speedup", "gemm leg", "comm leg", "gemm CIL", "comm CIL", "tasks",
+    ])
+    .align(0, Align::Left);
+    for r in &ev.results {
+        t.row(vec![
+            r.kind.name().to_string(),
+            ficco::util::human_time(r.makespan),
+            x(ev.speedup(r.kind)),
+            ficco::util::human_time(r.gemm_leg),
+            ficco::util::human_time(r.comm_leg),
+            x(r.gemm_cil),
+            x(r.comm_cil),
+            r.n_tasks.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("ideal overlap bound: {}", x(ev.ideal_speedup()));
+    let d = ficco::heuristics::pick(&machine, &sc);
+    println!("heuristic pick: {} ({})", d.pick.name(), d.reason);
+    let (oracle, s) = ev.best_ficco();
+    println!("oracle best:    {} ({})", oracle.name(), x(s));
+    Ok(())
+}
+
+fn cmd_heuristic(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine = machine_from(args)?;
+    if args.has("all") || args.get("scenario").is_none() {
+        let mut t = Table::new(vec!["scenario", "M>K", "combined", "pick", "reason"])
+            .align(0, Align::Left)
+            .align(3, Align::Left)
+            .align(4, Align::Left);
+        for r in workloads::table1() {
+            let sc = r.scenario();
+            let d = ficco::heuristics::pick(&machine, &sc);
+            t.row(vec![
+                r.name.to_string(),
+                (r.m > r.k).to_string(),
+                f(d.metrics.combined, 3),
+                d.pick.name().to_string(),
+                d.reason,
+            ]);
+        }
+        print!("{}", t.render());
+    } else {
+        let sc = scenario_from(args, &machine)?;
+        let d = ficco::heuristics::pick(&machine, &sc);
+        println!("{}: pick {} — {}", sc.name, d.pick.name(), d.reason);
+    }
+    Ok(())
+}
+
+fn cmd_characterize(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine = machine_from(args)?;
+    match args.get_or("what", "dil") {
+        "dil" => ficco::metrics::fig7_gemm_dil(&machine).print(),
+        "comm-dil" => ficco::metrics::fig8_comm_dil(&machine).print(),
+        "cil" => ficco::metrics::fig9_cil(&machine).print(),
+        "proportions" => ficco::metrics::fig10_proportions(&machine).print(),
+        other => return Err(format!("unknown --what '{other}'").into()),
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine = machine_from(args)?;
+    let out_dir = args.get_or("out-dir", "results");
+    let exhibits = [
+        ("fig7", ficco::metrics::fig7_gemm_dil(&machine)),
+        ("fig8", ficco::metrics::fig8_comm_dil(&machine)),
+        ("fig9", ficco::metrics::fig9_cil(&machine)),
+        ("fig10", ficco::metrics::fig10_proportions(&machine)),
+        ("fig12b", ficco::metrics::fig12b_schedules(&machine)),
+        ("fig13", ficco::metrics::fig13_shard_overlap(&machine)),
+        ("fig14", ficco::metrics::fig14_comparison(&machine)),
+    ];
+    for (name, e) in exhibits {
+        e.print();
+        if args.has("csv") {
+            let path = format!("{out_dir}/{name}.csv");
+            e.table.write_csv(&path)?;
+            println!("  -> {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine = machine_from(args)?;
+    let count = args.get_usize("count", 16)?;
+    let seed = args.get_u64("seed", 2025)?;
+    let scale = args.get_f64("threshold", ficco::heuristics::DEFAULT_THRESHOLD_SCALE)?;
+    let suite = workloads::synthetic_scenarios(seed, count);
+    let (hit_rate, mean_loss, scored) = ficco::heuristics::accuracy(&machine, &suite, scale);
+    let mut t = Table::new(vec!["scenario", "pick", "oracle", "pick speedup", "oracle speedup", "hit"])
+        .align(0, Align::Left)
+        .align(1, Align::Left)
+        .align(2, Align::Left);
+    for s in &scored {
+        t.row(vec![
+            s.scenario_name.clone(),
+            s.pick.name().to_string(),
+            s.oracle.name().to_string(),
+            x(s.pick_speedup),
+            x(s.oracle_speedup),
+            if s.hit() { "*".to_string() } else { "miss".to_string() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "heuristic accuracy: {:.0}% ({} scenarios); mean loss on miss: {:.1}%",
+        100.0 * hit_rate,
+        count,
+        100.0 * mean_loss
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let m = args.get_u64("m", 256)?;
+    let n = args.get_u64("n", 128)?;
+    let k = args.get_u64("k", 192)?;
+    let ngpus = args.get_usize("gpus", 8)?;
+    ficco::coordinator::validate_all_schedules(dir, m, n, k, ngpus)?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = ficco::train::TrainConfig::from_args(args)?;
+    ficco::train::run(&cfg)?;
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Parser for `artifacts/manifest.txt` — the contract between
+//! `python/compile/aot.py` (writer) and the Rust runtime (reader).
+//!
+//! Format: one record per line, tab-separated:
+//! `name \t file \t in_specs \t out_specs`, where specs are
+//! comma-separated `dtype:shape` items like `f32:256x192`, `i32:4x32`,
+//! or `f32:scalar`.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+    U32,
+}
+
+impl ElemType {
+    fn parse(s: &str) -> Result<ElemType> {
+        match s {
+            "f32" => Ok(ElemType::F32),
+            "i32" => Ok(ElemType::I32),
+            "u32" => Ok(ElemType::U32),
+            other => Err(anyhow!("unknown dtype '{other}'")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::I32 => "i32",
+            ElemType::U32 => "u32",
+        }
+    }
+}
+
+/// A typed shape spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spec {
+    pub dtype: ElemType,
+    pub dims: Vec<i64>,
+}
+
+impl Spec {
+    pub fn parse(s: &str) -> Result<Spec> {
+        let (dt, shape) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad spec '{s}' (want dtype:shape)"))?;
+        let dtype = ElemType::parse(dt)?;
+        let dims = if shape == "scalar" {
+            Vec::new()
+        } else {
+            shape
+                .split('x')
+                .map(|d| d.parse::<i64>().map_err(|_| anyhow!("bad dim in '{s}'")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Spec { dtype, dims })
+    }
+
+    pub fn elements(&self) -> i64 {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact record.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    records: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut records = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 4 {
+                return Err(anyhow!(
+                    "manifest line {}: expected 4 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                ));
+            }
+            let parse_specs = |s: &str| -> Result<Vec<Spec>> {
+                if s.is_empty() {
+                    return Ok(Vec::new());
+                }
+                s.split(',').map(Spec::parse).collect()
+            };
+            let art = Artifact {
+                name: fields[0].to_string(),
+                file: fields[1].to_string(),
+                inputs: parse_specs(fields[2])?,
+                outputs: parse_specs(fields[3])?,
+            };
+            if records.insert(art.name.clone(), art).is_some() {
+                return Err(anyhow!("duplicate artifact '{}'", fields[0]));
+            }
+        }
+        Ok(Manifest { records })
+    }
+
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.records.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.records.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# name\tfile\tinputs\toutputs\n\
+        gemm\tgemm.hlo.txt\tf32:8x4,f32:4x2\tf32:8x2\n\
+        step\tstep.hlo.txt\tf32:2,i32:4x32,f32:scalar\tf32:2,f32:scalar\n";
+
+    #[test]
+    fn parses_records() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("gemm").unwrap();
+        assert_eq!(g.file, "gemm.hlo.txt");
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].dims, vec![8, 4]);
+        assert_eq!(g.inputs[0].dtype, ElemType::F32);
+        assert_eq!(g.outputs[0].dims, vec![8, 2]);
+    }
+
+    #[test]
+    fn scalar_and_int_specs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let s = m.get("step").unwrap();
+        assert_eq!(s.inputs[1].dtype, ElemType::I32);
+        assert!(s.inputs[2].dims.is_empty());
+        assert_eq!(s.inputs[2].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("onlyname\n").is_err());
+        assert!(Manifest::parse("a\tb\tbad-spec\tf32:1\n").is_err());
+        assert!(Manifest::parse("a\tb\tf32:2\tf32:1\na\tb\tf32:2\tf32:1\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        if let Ok(m) = Manifest::load("artifacts/manifest.txt") {
+            assert!(m.get("train_step_tiny").is_some());
+        }
+    }
+}

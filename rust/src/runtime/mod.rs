@@ -1,0 +1,132 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path —
+//! Python is never invoked here (the three-layer contract).
+//!
+//! - [`manifest`] parses `artifacts/manifest.txt` (names, files, typed
+//!   I/O specs).
+//! - [`Runtime`] owns the PJRT client and a compiled-executable cache.
+//! - [`gemm`] provides XlaBuilder-built GEMM executables for arbitrary
+//!   shapes — the coordinator's numeric schedule validation uses these
+//!   for piece shapes that have no dedicated artifact, keeping the
+//!   whole validation in Rust.
+
+pub mod gemm;
+pub mod manifest;
+
+pub use manifest::{Artifact, Manifest, Spec};
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Lazily-compiling executor over an artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: std::path::PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest in `dir`.
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(&format!("{dir}/manifest.txt"))
+            .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.into(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != art.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+// Runtime integration tests (needing artifacts/ and a PJRT client)
+// live in rust/tests/; manifest and gemm units are in their modules.

@@ -1,0 +1,295 @@
+//! Lower a [`Schedule`] onto the fluid cluster simulator and measure
+//! it. This is where DIL (via `cost::gemm` isolated times) and CIL
+//! (via resource sharing in `sim`) combine into end-to-end makespans —
+//! the quantity behind Figs 12b, 13, and 14.
+
+use super::{Kind, OpKind, Scenario, Schedule};
+use crate::cost::gemm::GemmCost;
+use crate::hw::Machine;
+use crate::sim::{ClusterSim, CommMech, TaskId};
+
+/// Measured execution of one schedule.
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    pub kind: Kind,
+    pub makespan: f64,
+    /// Σ isolated GEMM time per GPU (max over GPUs) — the compute leg.
+    pub gemm_leg: f64,
+    /// Serial-communication leg (critical path of transfers, isolated).
+    pub comm_leg: f64,
+    /// Mean slowdown of GEMM tasks vs isolation (measured CIL).
+    pub gemm_cil: f64,
+    /// Mean slowdown of transfer tasks vs isolation (measured CIL).
+    pub comm_cil: f64,
+    pub n_tasks: usize,
+    pub sim_events: usize,
+}
+
+/// Execute `sched` on `machine`; panics on simulator livelock (which
+/// would indicate a malformed schedule — run `validate` first).
+pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
+    let mut sim = ClusterSim::new(machine.clone());
+    let gcost = GemmCost::new(&machine.gpu);
+    // The serial baseline and shard-overlap (AsyncTP) are the
+    // PyTorch-stack reference points: GPU-core-driven (RCCL / SM-copy)
+    // communication. FiCCO schedules use the scenario's mechanism
+    // (DMA by default; Kernel for the FiCCO-rccl ablation).
+    let mech = match sched.kind {
+        Kind::Baseline | Kind::ShardOverlap => CommMech::Kernel,
+        _ => sched.scenario.mech,
+    };
+    let dtype = sched.scenario.dtype();
+
+    let mut task_of: Vec<TaskId> = Vec::with_capacity(sched.nodes.len());
+    let mut gemm_tasks: Vec<TaskId> = Vec::new();
+    let mut xfer_tasks: Vec<TaskId> = Vec::new();
+    let mut gemm_iso_per_gpu = vec![0.0f64; machine.ngpus()];
+
+    for node in &sched.nodes {
+        let deps: Vec<TaskId> = node.deps.iter().map(|&d| task_of[d]).collect();
+        let tid = match &node.kind {
+            OpKind::Gemm { shape, .. } => {
+                let t = gcost.time(shape);
+                gemm_iso_per_gpu[node.gpu] += t;
+                let id = sim.gemm_task(
+                    node.gpu,
+                    node.label.clone(),
+                    t,
+                    shape.bytes(),
+                    gcost.cus_used(shape),
+                    &deps,
+                );
+                gemm_tasks.push(id);
+                id
+            }
+            OpKind::Xfer { src, region } => {
+                let id = sim.transfer_task(
+                    *src,
+                    node.gpu,
+                    node.slot,
+                    node.label.clone(),
+                    region.bytes(dtype),
+                    mech,
+                    &deps,
+                );
+                xfer_tasks.push(id);
+                id
+            }
+            OpKind::Gather { bytes } => sim.local_copy_task(
+                node.gpu,
+                node.label.clone(),
+                *bytes,
+                CommMech::Kernel,
+                &deps,
+            ),
+            OpKind::Scatter { bytes } => sim.local_copy_task(
+                node.gpu,
+                node.label.clone(),
+                *bytes,
+                CommMech::Kernel,
+                &deps,
+            ),
+        };
+        task_of.push(tid);
+    }
+
+    let n_tasks = sched.nodes.len();
+    let report = sim.run().unwrap_or_else(|e| {
+        panic!("simulating {} for {}: {e}", sched.kind.name(), sched.scenario.name)
+    });
+
+    let gemm_cil = mean_slowdown(&report, &gemm_tasks);
+    let comm_cil = mean_slowdown(&report, &xfer_tasks);
+    let gemm_leg = gemm_iso_per_gpu.iter().cloned().fold(0.0, f64::max);
+    let comm_leg = comm_leg_isolated(machine, &sched.scenario, sched.kind);
+
+    ExecResult {
+        kind: sched.kind,
+        makespan: report.makespan,
+        gemm_leg,
+        comm_leg,
+        gemm_cil,
+        comm_cil,
+        n_tasks,
+        sim_events: report.events,
+    }
+}
+
+fn mean_slowdown(report: &crate::sim::Report, tasks: &[TaskId]) -> f64 {
+    if tasks.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = tasks.iter().map(|&t| report.slowdown(t)).sum();
+    s / tasks.len() as f64
+}
+
+/// Isolated communication leg of a schedule kind (closed form).
+fn comm_leg_isolated(machine: &Machine, sc: &Scenario, kind: Kind) -> f64 {
+    use crate::cost::collective as cc;
+    let shard = sc.shard_bytes();
+    match kind {
+        Kind::Baseline => {
+            cc::ag_all_to_all_time(&machine.gpu, &machine.topo, shard, CommMech::Kernel)
+        }
+        Kind::ShardOverlap => {
+            cc::ag_ring_time(&machine.gpu, &machine.topo, shard, CommMech::Kernel)
+        }
+        _ => cc::ag_ficco_time(&machine.gpu, &machine.topo, shard, sc.mech),
+    }
+}
+
+/// Evaluate one scenario under one schedule kind (generate → validate
+/// → simulate).
+pub fn evaluate(machine: &Machine, sc: &Scenario, kind: Kind) -> ExecResult {
+    let sched = super::generate::generate(kind, sc);
+    super::validate::validate(&sched)
+        .unwrap_or_else(|e| panic!("{} for {}: {e}", kind.name(), sc.name));
+    execute(machine, &sched)
+}
+
+/// Scenario-level summary across all schedule kinds (the per-row data
+/// behind Figs 12b/13/14).
+#[derive(Debug, Clone)]
+pub struct ScenarioEval {
+    pub scenario: Scenario,
+    pub results: Vec<ExecResult>,
+    /// Serial reference (baseline makespan).
+    pub baseline: f64,
+    /// Perfect-overlap bound: max(compute leg, baseline comm leg).
+    pub ideal: f64,
+}
+
+impl ScenarioEval {
+    pub fn run(machine: &Machine, sc: &Scenario, kinds: &[Kind]) -> ScenarioEval {
+        let mut results = Vec::new();
+        let mut baseline = f64::NAN;
+        let mut ideal = f64::NAN;
+        for &k in kinds {
+            let r = evaluate(machine, sc, k);
+            if k == Kind::Baseline {
+                baseline = r.makespan;
+                ideal = r.gemm_leg.max(r.comm_leg);
+            }
+            results.push(r);
+        }
+        assert!(
+            !baseline.is_nan(),
+            "ScenarioEval requires Kind::Baseline among kinds"
+        );
+        ScenarioEval {
+            scenario: sc.clone(),
+            results,
+            baseline,
+            ideal,
+        }
+    }
+
+    pub fn speedup(&self, kind: Kind) -> f64 {
+        let r = self
+            .results
+            .iter()
+            .find(|r| r.kind == kind)
+            .unwrap_or_else(|| panic!("{} not evaluated", kind.name()));
+        self.baseline / r.makespan
+    }
+
+    pub fn ideal_speedup(&self) -> f64 {
+        self.baseline / self.ideal
+    }
+
+    /// Best FiCCO schedule by measured makespan (the oracle the
+    /// heuristic is scored against in §VI-D).
+    pub fn best_ficco(&self) -> (Kind, f64) {
+        self.results
+            .iter()
+            .filter(|r| r.kind.is_ficco())
+            .map(|r| (r.kind, self.baseline / r.makespan))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("no FiCCO kinds evaluated")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Scenario;
+
+    fn machine() -> Machine {
+        Machine::mi300x_8()
+    }
+
+    /// A comm-heavy Table-I-like scenario (g6 with N scaled down to
+    /// keep unit tests fast; comm/compute balance preserved and shard
+    /// sizes realistic so pieces stay off the small-message ramp).
+    fn sc_comm_heavy() -> Scenario {
+        Scenario::new("g6-like", 262144, 2048, 8192)
+    }
+
+    #[test]
+    fn baseline_is_serial_sum() {
+        let m = machine();
+        let sc = sc_comm_heavy();
+        let r = evaluate(&m, &sc, Kind::Baseline);
+        // Serial: makespan ≈ comm leg + gemm leg (within overheads).
+        let serial = r.comm_leg + r.gemm_leg;
+        assert!(
+            (r.makespan - serial).abs() / serial < 0.15,
+            "makespan={} vs serial={}",
+            r.makespan,
+            serial
+        );
+    }
+
+    #[test]
+    fn shard_overlap_loses_on_mesh() {
+        // Fig 13: P2P shard overlap under-utilizes mesh links and
+        // fails to beat serial for comm-heavy scenarios.
+        let m = machine();
+        let ev = ScenarioEval::run(
+            &m,
+            &sc_comm_heavy(),
+            &[Kind::Baseline, Kind::ShardOverlap],
+        );
+        assert!(
+            ev.speedup(Kind::ShardOverlap) < 1.0,
+            "shard-overlap speedup {}",
+            ev.speedup(Kind::ShardOverlap)
+        );
+    }
+
+    #[test]
+    fn ficco_beats_baseline_on_balanced_scenario() {
+        let m = machine();
+        let ev = ScenarioEval::run(
+            &m,
+            &sc_comm_heavy(),
+            &[Kind::Baseline, Kind::UniformFused1D],
+        );
+        let s = ev.speedup(Kind::UniformFused1D);
+        assert!(s > 1.0, "uniform-fused-1D speedup {s}");
+        // Hard lower bound: the compute leg (with its DIL) must still
+        // execute serially on each GPU.
+        let r = ev
+            .results
+            .iter()
+            .find(|r| r.kind == Kind::UniformFused1D)
+            .unwrap();
+        assert!(
+            r.makespan >= 0.95 * r.gemm_leg,
+            "makespan {} below compute leg {}",
+            r.makespan,
+            r.gemm_leg
+        );
+    }
+
+    #[test]
+    fn all_kinds_execute() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        for kind in Kind::ALL {
+            let r = evaluate(&m, &sc, kind);
+            assert!(r.makespan > 0.0, "{kind:?}");
+            assert!(r.gemm_cil >= 0.999, "{kind:?} gemm cil {}", r.gemm_cil);
+        }
+    }
+}

@@ -1,0 +1,500 @@
+//! Schedule generators: the serial baseline, shard-based overlap, and
+//! the four FiCCO schedules of Fig 11b.
+//!
+//! All generators handle non-divisible dimensions via balanced integer
+//! splits, so the coverage invariants hold exactly for any (M, N, K,
+//! ngpus) — the property tests exploit this.
+
+use super::{Collective, Kind, Node, OpKind, Region, Scenario, Schedule};
+use crate::cost::gemm::GemmShape;
+
+/// Balanced split of `[0, total)` into `parts`: piece `i` gets
+/// `[i·total/parts, (i+1)·total/parts)` (floor arithmetic — exact
+/// partition, sizes differing by at most one).
+pub fn split(total: u64, parts: u64, i: u64) -> (u64, u64) {
+    assert!(i < parts);
+    (i * total / parts, (i + 1) * total / parts)
+}
+
+/// Row range of GPU `q`'s input shard.
+fn shard_rows(sc: &Scenario, q: usize) -> (u64, u64) {
+    split(sc.gemm.m, sc.ngpus as u64, q as u64)
+}
+
+/// Row range of piece `p` within GPU `q`'s shard (1D decomposition).
+fn piece_rows(sc: &Scenario, q: usize, p: usize) -> (u64, u64) {
+    let (lo, hi) = shard_rows(sc, q);
+    let (plo, phi) = split(hi - lo, sc.ngpus as u64, p as u64);
+    (lo + plo, lo + phi)
+}
+
+/// K range of block `b` (2D decomposition).
+fn k_block(sc: &Scenario, b: usize) -> (u64, u64) {
+    split(sc.gemm.k, sc.ngpus as u64, b as u64)
+}
+
+/// Sender-side lane index for a (src → dst) transfer so that one
+/// GPU's simultaneous sends to distinct peers ride distinct streams.
+fn lane(src: usize, dst: usize, n: usize) -> usize {
+    (dst + n - src - 1) % n
+}
+
+/// Generate the schedule of `kind` for `scenario`.
+pub fn generate(kind: Kind, scenario: &Scenario) -> Schedule {
+    match kind {
+        Kind::Baseline => baseline(scenario),
+        Kind::ShardOverlap => shard_overlap(scenario),
+        Kind::UniformFused1D => uniform_fused_1d(scenario),
+        Kind::HeteroFused1D => hetero_1d(scenario, true),
+        Kind::HeteroUnfused1D => hetero_1d(scenario, false),
+        Kind::UniformFused2D => uniform_fused_2d(scenario),
+    }
+}
+
+struct Builder {
+    nodes: Vec<Node>,
+}
+
+impl Builder {
+    fn new() -> Builder {
+        Builder { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, n: Node) -> usize {
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    fn xfer(
+        &mut self,
+        dst: usize,
+        src: usize,
+        region: Region,
+        step: usize,
+        slot: usize,
+        deps: Vec<usize>,
+    ) -> usize {
+        self.push(Node {
+            gpu: dst,
+            kind: OpKind::Xfer { src, region },
+            deps,
+            step,
+            slot,
+            label: format!("xfer[s{step}] g{src}->g{dst}"),
+        })
+    }
+
+    fn gemm(
+        &mut self,
+        gpu: usize,
+        shape: GemmShape,
+        covers: Vec<Region>,
+        step: usize,
+        deps: Vec<usize>,
+    ) -> usize {
+        self.push(Node {
+            gpu,
+            kind: OpKind::Gemm { shape, covers },
+            deps,
+            step,
+            slot: 0,
+            label: format!("gemm[s{step}] g{gpu}"),
+        })
+    }
+
+    fn gather(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+        self.push(Node {
+            gpu,
+            kind: OpKind::Gather { bytes },
+            deps,
+            step,
+            slot: 0,
+            label: format!("gather[s{step}] g{gpu}"),
+        })
+    }
+
+    fn scatter(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+        self.push(Node {
+            gpu,
+            kind: OpKind::Scatter { bytes },
+            deps,
+            step,
+            slot: 0,
+            label: format!("scatter[s{step}] g{gpu}"),
+        })
+    }
+}
+
+fn region(rows: (u64, u64), ks: (u64, u64)) -> Region {
+    Region {
+        row_lo: rows.0,
+        row_hi: rows.1,
+        k_lo: ks.0,
+        k_hi: ks.1,
+    }
+}
+
+/// Serial baseline (Fig 3b): one-shot all-gather (every GPU sends its
+/// whole shard to every peer on parallel lanes), then the full GEMM.
+fn baseline(sc: &Scenario) -> Schedule {
+    let n = sc.ngpus;
+    let g = &sc.gemm;
+    let mut b = Builder::new();
+    for dst in 0..n {
+        let mut xfers = Vec::new();
+        for src in 0..n {
+            if src == dst {
+                continue;
+            }
+            let r = region(shard_rows(sc, src), (0, g.k));
+            xfers.push(b.xfer(dst, src, r, 0, lane(src, dst, n), vec![]));
+        }
+        b.gemm(
+            dst,
+            *g,
+            vec![Region::rows(0, g.m, g.k)],
+            0,
+            xfers,
+        );
+    }
+    Schedule {
+        kind: Kind::Baseline,
+        scenario: sc.clone(),
+        nodes: b.nodes,
+    }
+}
+
+/// Shard-based overlap (Fig 3c, PyTorch-AsyncTP-like): GEMM on the
+/// local shard immediately; at step `s` GPU `r` fetches the shard of
+/// peer `(r+s) mod n` over a single P2P lane (one link at a time — the
+/// full-mesh under-utilization the paper measures) and GEMMs it when
+/// it lands.
+fn shard_overlap(sc: &Scenario) -> Schedule {
+    let n = sc.ngpus;
+    let g = &sc.gemm;
+    let mut b = Builder::new();
+    // Local shard first (free head start) on every GPU.
+    for r in 0..n {
+        let (lo, hi) = shard_rows(sc, r);
+        b.gemm(
+            r,
+            GemmShape { m: hi - lo, ..*g },
+            vec![region((lo, hi), (0, g.k))],
+            0,
+            vec![],
+        );
+    }
+    // Steps are emitted step-major so each sender's single P2P lane
+    // (slot 0 — "one peer at a time", the technique's defining
+    // constraint) is queued in step order: at step s, GPU q sends its
+    // shard to receiver (q-s) mod n — a perfect matching per step.
+    let mut prev_xfer: Vec<Option<usize>> = vec![None; n];
+    for s in 1..n {
+        for r in 0..n {
+            let src = (r + s) % n;
+            let rows = shard_rows(sc, src);
+            let deps = prev_xfer[r].map(|x| vec![x]).unwrap_or_default();
+            let x = b.xfer(r, src, region(rows, (0, g.k)), s, 0, deps);
+            prev_xfer[r] = Some(x);
+            b.gemm(
+                r,
+                GemmShape {
+                    m: rows.1 - rows.0,
+                    ..*g
+                },
+                vec![region(rows, (0, g.k))],
+                s,
+                vec![x],
+            );
+        }
+    }
+    Schedule {
+        kind: Kind::ShardOverlap,
+        scenario: sc.clone(),
+        nodes: b.nodes,
+    }
+}
+
+/// FiCCO uniform-fused-1D: shards split into `n` row pieces; at step
+/// `s` every GPU broadcasts its piece `s` to all peers (steady-state
+/// all-to-all, Fig 4c), gathers the `n` same-index pieces into a
+/// contiguous buffer, runs ONE shard-sized GEMM, and scatters the
+/// output rows. Low DIL (shard-sized GEMM), high CIL (comm + gather +
+/// GEMM + scatter concurrent).
+fn uniform_fused_1d(sc: &Scenario) -> Schedule {
+    let n = sc.ngpus;
+    let g = &sc.gemm;
+    let e = g.dtype.bytes() as f64;
+    let mut b = Builder::new();
+    for r in 0..n {
+        for s in 0..n {
+            let mut xfers = Vec::new();
+            let mut covers = Vec::new();
+            let mut rows_total = 0u64;
+            for q in 0..n {
+                let rows = piece_rows(sc, q, s);
+                rows_total += rows.1 - rows.0;
+                covers.push(region(rows, (0, g.k)));
+                if q != r {
+                    xfers.push(b.xfer(r, q, region(rows, (0, g.k)), s, lane(q, r, n), vec![]));
+                }
+            }
+            let gather_bytes = rows_total as f64 * g.k as f64 * e;
+            let gather = b.gather(r, gather_bytes, s, xfers);
+            let gemm = b.gemm(
+                r,
+                GemmShape { m: rows_total, ..*g },
+                covers,
+                s,
+                vec![gather],
+            );
+            let scatter_bytes = rows_total as f64 * g.n as f64 * e;
+            b.scatter(r, scatter_bytes, s, vec![gemm]);
+        }
+    }
+    Schedule {
+        kind: Kind::UniformFused1D,
+        scenario: sc.clone(),
+        nodes: b.nodes,
+    }
+}
+
+/// FiCCO hetero-{fused,unfused}-1D: GEMM on the local shard starts
+/// immediately (heterogeneous first step) while pieces are exchanged
+/// all-to-all; step `s ≥ 1` processes the `n-1` remote pieces of
+/// comm-step `s-1` — fused as one gathered GEMM (+scatter), or
+/// unfused as `n-1` piece-sized GEMMs writing their contiguous output
+/// rows directly (no gather/scatter, at the cost of small GEMMs).
+fn hetero_1d(sc: &Scenario, fused: bool) -> Schedule {
+    let n = sc.ngpus;
+    let g = &sc.gemm;
+    let e = g.dtype.bytes() as f64;
+    let mut b = Builder::new();
+    for r in 0..n {
+        // Step 0: local shard, contiguous rows — single fused GEMM,
+        // no gather/scatter in either variant.
+        let (lo, hi) = shard_rows(sc, r);
+        b.gemm(
+            r,
+            GemmShape { m: hi - lo, ..*g },
+            vec![region((lo, hi), (0, g.k))],
+            0,
+            vec![],
+        );
+        for s in 0..n {
+            // Comm step s: receive piece s of every remote shard.
+            let mut xfers = Vec::new();
+            let mut pieces = Vec::new();
+            for q in 0..n {
+                if q == r {
+                    continue;
+                }
+                let rows = piece_rows(sc, q, s);
+                let reg = region(rows, (0, g.k));
+                let x = b.xfer(r, q, reg, s, lane(q, r, n), vec![]);
+                xfers.push(x);
+                pieces.push((x, reg));
+            }
+            let step = s + 1; // consumed by compute step s+1
+            if fused {
+                let rows_total: u64 = pieces.iter().map(|(_, p)| p.row_hi - p.row_lo).sum();
+                let covers = pieces.iter().map(|&(_, p)| p).collect();
+                let gather_bytes = rows_total as f64 * g.k as f64 * e;
+                let gather = b.gather(r, gather_bytes, step, xfers);
+                let gemm = b.gemm(
+                    r,
+                    GemmShape { m: rows_total, ..*g },
+                    covers,
+                    step,
+                    vec![gather],
+                );
+                let scatter_bytes = rows_total as f64 * g.n as f64 * e;
+                b.scatter(r, scatter_bytes, step, vec![gemm]);
+            } else {
+                for (x, reg) in pieces {
+                    b.gemm(
+                        r,
+                        GemmShape {
+                            m: reg.row_hi - reg.row_lo,
+                            ..*g
+                        },
+                        vec![reg],
+                        step,
+                        vec![x],
+                    );
+                }
+            }
+        }
+    }
+    Schedule {
+        kind: if fused {
+            Kind::HeteroFused1D
+        } else {
+            Kind::HeteroUnfused1D
+        },
+        scenario: sc.clone(),
+        nodes: b.nodes,
+    }
+}
+
+/// FiCCO uniform-fused-2D: shards split along K; at step `s` every GPU
+/// broadcasts its K-block `s`, gathers the full-M K-block, and runs an
+/// accumulating GEMM `C += I[:, ks]·W[ks, :]`. Keeps M whole (the
+/// right choice when M ≤ K, per the heuristic), no scatter, but pays
+/// accumulator read-modify-write traffic.
+///
+/// 2D DMA copies are emulated with equal-sized 1D copies as in §VI-C.
+fn uniform_fused_2d(sc: &Scenario) -> Schedule {
+    let n = sc.ngpus;
+    let g = &sc.gemm;
+    let e = g.dtype.bytes() as f64;
+    let mut b = Builder::new();
+    for r in 0..n {
+        for s in 0..n {
+            let ks = k_block(sc, s);
+            let mut xfers = Vec::new();
+            let mut covers = Vec::new();
+            for q in 0..n {
+                let rows = shard_rows(sc, q);
+                let reg = region(rows, ks);
+                covers.push(reg);
+                if q != r {
+                    xfers.push(b.xfer(r, q, reg, s, lane(q, r, n), vec![]));
+                }
+            }
+            let gather_bytes = g.m as f64 * (ks.1 - ks.0) as f64 * e;
+            let gather = b.gather(r, gather_bytes, s, xfers);
+            b.gemm(
+                r,
+                GemmShape {
+                    m: g.m,
+                    k: ks.1 - ks.0,
+                    accumulate: s > 0,
+                    ..*g
+                },
+                covers,
+                s,
+                vec![gather],
+            );
+        }
+    }
+    Schedule {
+        kind: Kind::UniformFused2D,
+        scenario: sc.clone(),
+        nodes: b.nodes,
+    }
+}
+
+/// The paper's decomposition degree for a schedule (communication
+/// pieces per shard): shard-level techniques = 1, FiCCO = ngpus.
+pub fn comm_decomposition(kind: Kind, ngpus: usize) -> usize {
+    match kind {
+        Kind::Baseline | Kind::ShardOverlap => 1,
+        _ => ngpus,
+    }
+}
+
+/// EP/MoE scenarios are volume-equivalent to the AG structure (each
+/// GPU keeps ~1/n of its tokens and receives (n-1)/n); this helper
+/// tags the scenario but reuses the same generators.
+pub fn for_scenario(kind: Kind, sc: &Scenario) -> Schedule {
+    let _ = Collective::AllToAll; // structural equivalence documented in DESIGN.md §1
+    generate(kind, sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> Scenario {
+        Scenario::new("t", 4096, 1024, 2048)
+    }
+
+    #[test]
+    fn split_is_exact_partition() {
+        for total in [1u64, 7, 100, 4097] {
+            for parts in [1u64, 3, 8] {
+                let mut covered = 0;
+                let mut prev_hi = 0;
+                for i in 0..parts {
+                    let (lo, hi) = split(total, parts, i);
+                    assert_eq!(lo, prev_hi);
+                    covered += hi - lo;
+                    prev_hi = hi;
+                }
+                assert_eq!(covered, total);
+                assert_eq!(prev_hi, total);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_counts() {
+        let s = baseline(&sc());
+        assert_eq!(s.n_xfers(), 8 * 7);
+        assert_eq!(s.n_gemms(), 8);
+    }
+
+    #[test]
+    fn shard_overlap_counts() {
+        let s = shard_overlap(&sc());
+        assert_eq!(s.n_xfers(), 8 * 7);
+        assert_eq!(s.n_gemms(), 8 * 8);
+    }
+
+    #[test]
+    fn ficco_comm_is_finer() {
+        let base = baseline(&sc());
+        let uf = uniform_fused_1d(&sc());
+        // Same total bytes, 8x the transfer count.
+        assert!((uf.comm_bytes() - base.comm_bytes()).abs() < 1.0);
+        assert_eq!(uf.n_xfers(), 8 * base.n_xfers());
+    }
+
+    #[test]
+    fn hetero_unfused_has_no_copies() {
+        let s = hetero_1d(&sc(), false);
+        assert!(!s
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, OpKind::Gather { .. } | OpKind::Scatter { .. })));
+        // 1 local + 8 steps × 7 pieces per GPU
+        assert_eq!(s.n_gemms(), 8 * (1 + 8 * 7));
+    }
+
+    #[test]
+    fn uniform_2d_accumulates() {
+        let s = uniform_fused_2d(&sc());
+        let mut accums = 0;
+        for n in &s.nodes {
+            if let OpKind::Gemm { shape, .. } = &n.kind {
+                assert_eq!(shape.m, 4096, "2D keeps M whole");
+                if shape.accumulate {
+                    accums += 1;
+                }
+            }
+        }
+        assert_eq!(accums, 8 * 7, "all but the first step accumulate");
+    }
+
+    #[test]
+    fn deps_are_topologically_ordered() {
+        for kind in Kind::ALL {
+            let s = generate(kind, &sc());
+            for (i, node) in s.nodes.iter().enumerate() {
+                for &d in &node.deps {
+                    assert!(d < i, "{:?}: node {i} deps on later node {d}", kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn works_with_non_divisible_dims() {
+        let s = Scenario::new("odd", 1000, 300, 777).with_ngpus(3);
+        for kind in Kind::ALL {
+            let sched = generate(kind, &s);
+            assert!(sched.nodes.len() > 3, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! The FiCCO schedule design space (§V) as an explicit IR.
+//!
+//! A [`Schedule`] is a DAG of per-GPU operations (GEMM pieces,
+//! point-to-point transfers, gather/scatter copies) annotated with the
+//! *region of the global computation* each op covers. Generators
+//! ([`generate`]) produce the serial baseline, shard-based overlap
+//! (PyTorch-AsyncTP-style, §II-B), and the four FiCCO schedules of
+//! Fig 11b. The executor ([`exec`]) lowers a schedule onto the fluid
+//! cluster simulator; the validator ([`validate`]) proves coverage
+//! invariants (every output element computed exactly once, every
+//! remote byte delivered exactly once) for *any* generated schedule —
+//! the property tests fuzz scenario shapes through it.
+//!
+//! Semantics of a scenario (Fig 3a): the global activation matrix `I`
+//! (`M×K`) is row-sharded over `n` GPUs (shard `r` = rows
+//! `[r·M/n, (r+1)·M/n)`); each GPU holds a private weight block `W_r`
+//! (`K×N`) and must compute `C_r = I · W_r` (`M×N`). The collective
+//! (all-gather, or the volume-equivalent expert all-to-all) moves every
+//! remote shard to every GPU; the schedules differ in decomposition
+//! granularity and overlap structure.
+
+pub mod exec;
+pub mod generate;
+pub mod validate;
+
+use crate::cost::gemm::GemmShape;
+use crate::hw::DType;
+use crate::sim::CommMech;
+
+/// Which collective feeds the GEMM (volume-equivalent structures;
+/// kept distinct for reporting and for the MoE asymmetry knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Tensor-sequence parallel all-gather of activations (SP+TP).
+    AllGather,
+    /// Expert-parallel all-to-all token dispersal (EP/MoE).
+    AllToAll,
+}
+
+impl Collective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Collective::AllGather => "all-gather",
+            Collective::AllToAll => "all-to-all",
+        }
+    }
+}
+
+/// A data-dependent compute/communication scenario (one Table I row).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// The full per-GPU GEMM executed after the collective (Table I's
+    /// (M, N, K)).
+    pub gemm: GemmShape,
+    pub collective: Collective,
+    /// Communication mechanism (DMA offload is the paper's default).
+    pub mech: CommMech,
+    pub ngpus: usize,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, m: u64, n: u64, k: u64) -> Scenario {
+        Scenario {
+            name: name.into(),
+            gemm: GemmShape::new(m, n, k),
+            collective: Collective::AllGather,
+            mech: CommMech::Dma,
+            ngpus: 8,
+        }
+    }
+
+    pub fn with_collective(mut self, c: Collective) -> Self {
+        self.collective = c;
+        self
+    }
+
+    pub fn with_mech(mut self, m: CommMech) -> Self {
+        self.mech = m;
+        self
+    }
+
+    pub fn with_ngpus(mut self, n: usize) -> Self {
+        self.ngpus = n;
+        self
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.gemm.dtype
+    }
+
+    /// Bytes of one GPU's input shard (`M/n × K` activations).
+    pub fn shard_bytes(&self) -> f64 {
+        (self.gemm.m as f64 / self.ngpus as f64)
+            * self.gemm.k as f64
+            * self.gemm.dtype.bytes() as f64
+    }
+
+    /// Total bytes each GPU must receive.
+    pub fn rx_bytes_per_gpu(&self) -> f64 {
+        (self.ngpus - 1) as f64 * self.shard_bytes()
+    }
+}
+
+/// The execution schedules studied (Fig 11b plus baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Serial: full collective, then the full GEMM (Fig 3b).
+    Baseline,
+    /// Shard-granular P2P overlap (PyTorch AsyncTP-like, Fig 3c).
+    ShardOverlap,
+    /// FiCCO: uniform steps, fused GEMM, row-sharded (1D) comm.
+    UniformFused1D,
+    /// FiCCO: local-shard head start, fused per-step GEMM, 1D comm.
+    HeteroFused1D,
+    /// FiCCO: head start, one GEMM per piece (no gather/scatter).
+    HeteroUnfused1D,
+    /// FiCCO: uniform steps, fused accumulating GEMM, column (2D) comm.
+    UniformFused2D,
+}
+
+impl Kind {
+    pub const FICCO: [Kind; 4] = [
+        Kind::UniformFused1D,
+        Kind::HeteroFused1D,
+        Kind::HeteroUnfused1D,
+        Kind::UniformFused2D,
+    ];
+
+    pub const ALL: [Kind; 6] = [
+        Kind::Baseline,
+        Kind::ShardOverlap,
+        Kind::UniformFused1D,
+        Kind::HeteroFused1D,
+        Kind::HeteroUnfused1D,
+        Kind::UniformFused2D,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Baseline => "baseline",
+            Kind::ShardOverlap => "shard-overlap",
+            Kind::UniformFused1D => "uniform-fused-1D",
+            Kind::HeteroFused1D => "hetero-fused-1D",
+            Kind::HeteroUnfused1D => "hetero-unfused-1D",
+            Kind::UniformFused2D => "uniform-fused-2D",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        Kind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    pub fn is_ficco(self) -> bool {
+        matches!(
+            self,
+            Kind::UniformFused1D
+                | Kind::HeteroFused1D
+                | Kind::HeteroUnfused1D
+                | Kind::UniformFused2D
+        )
+    }
+}
+
+/// A rectangular region of the global input `I` (`M×K`): rows
+/// `[row_lo, row_hi)` × reduction columns `[k_lo, k_hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub row_lo: u64,
+    pub row_hi: u64,
+    pub k_lo: u64,
+    pub k_hi: u64,
+}
+
+impl Region {
+    pub fn rows(row_lo: u64, row_hi: u64, k: u64) -> Region {
+        Region {
+            row_lo,
+            row_hi,
+            k_lo: 0,
+            k_hi: k,
+        }
+    }
+
+    pub fn area(&self) -> u64 {
+        (self.row_hi - self.row_lo) * (self.k_hi - self.k_lo)
+    }
+
+    pub fn bytes(&self, dtype: DType) -> f64 {
+        self.area() as f64 * dtype.bytes() as f64
+    }
+
+    pub fn intersects(&self, o: &Region) -> bool {
+        self.row_lo < o.row_hi && o.row_lo < self.row_hi && self.k_lo < o.k_hi && o.k_lo < self.k_hi
+    }
+}
+
+/// One operation in a schedule.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// A GEMM piece on this GPU consuming `covers` of the global input
+    /// against the local weight block. Fused FiCCO GEMMs consume
+    /// pieces from several source shards at once, so coverage is a
+    /// set of regions.
+    Gemm {
+        shape: GemmShape,
+        covers: Vec<Region>,
+    },
+    /// Transfer of `region` of the global input from `src` (its owner)
+    /// into this node's GPU.
+    Xfer { src: usize, region: Region },
+    /// Local assembly of received pieces into a contiguous GEMM input.
+    Gather { bytes: f64 },
+    /// Local placement of a GEMM output into the final output layout.
+    Scatter { bytes: f64 },
+}
+
+/// A schedule node: an op on a GPU, with DAG dependencies (indices
+/// into [`Schedule::nodes`]) and a step tag for reporting.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub gpu: usize,
+    pub kind: OpKind,
+    pub deps: Vec<usize>,
+    pub step: usize,
+    /// Comm slot (peer lane) for Xfer ops — transfers on different
+    /// slots of one GPU proceed in parallel.
+    pub slot: usize,
+    pub label: String,
+}
+
+/// A complete schedule for a scenario.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: Kind,
+    pub scenario: Scenario,
+    pub nodes: Vec<Node>,
+}
+
+impl Schedule {
+    pub fn n_gemms(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm { .. }))
+            .count()
+    }
+
+    pub fn n_xfers(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Xfer { .. }))
+            .count()
+    }
+
+    /// Total bytes moved between GPUs.
+    pub fn comm_bytes(&self) -> f64 {
+        let d = self.scenario.dtype();
+        self.nodes
+            .iter()
+            .map(|n| match &n.kind {
+                OpKind::Xfer { region, .. } => region.bytes(d),
+                _ => 0.0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_geometry() {
+        let r = Region::rows(0, 10, 4);
+        assert_eq!(r.area(), 40);
+        let s = Region {
+            row_lo: 5,
+            row_hi: 15,
+            k_lo: 0,
+            k_hi: 4,
+        };
+        assert!(r.intersects(&s));
+        let t = Region {
+            row_lo: 10,
+            row_hi: 15,
+            k_lo: 0,
+            k_hi: 4,
+        };
+        assert!(!r.intersects(&t), "touching edges do not intersect");
+    }
+
+    #[test]
+    fn scenario_bytes() {
+        let s = Scenario::new("t", 1024, 512, 256);
+        // shard = 128 rows × 256 k × 2B
+        assert_eq!(s.shard_bytes(), 128.0 * 256.0 * 2.0);
+        assert_eq!(s.rx_bytes_per_gpu(), 7.0 * 128.0 * 256.0 * 2.0);
+    }
+
+    #[test]
+    fn kind_tables() {
+        assert_eq!(Kind::ALL.len(), 6);
+        assert!(Kind::FICCO.iter().all(|k| k.is_ficco()));
+        assert!(!Kind::Baseline.is_ficco());
+        assert_eq!(Kind::parse("uniform-fused-2D"), Some(Kind::UniformFused2D));
+        assert_eq!(Kind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,662 @@
+//! Generic fluid discrete-event engine.
+//!
+//! Tasks form a DAG and are additionally serialized by *streams*
+//! (in-order queues, modelling GPU streams/DMA queues). A task that is
+//! dependency-ready waits out its fixed `setup` latency (kernel launch,
+//! link latency), then progresses at a rate in `[0, 1]` determined by
+//! max–min fair sharing of the resources it demands. `work` is the
+//! task's duration at rate 1 (its isolated execution time).
+
+/// Index of a resource (capacity-limited, e.g. a link or a CU pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub usize);
+
+/// Index of a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// Index of a stream (in-order issue queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub usize);
+
+/// Task description handed to [`Engine::add_task`].
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub label: String,
+    pub stream: StreamId,
+    pub deps: Vec<TaskId>,
+    /// Seconds of execution at rate 1.0 (isolated time, DIL included).
+    pub work: f64,
+    /// Fixed pre-work latency once ready (launch overhead, wire latency).
+    pub setup: f64,
+    /// Resource consumption per unit rate: at rate ρ the task uses
+    /// `ρ·demand` of each listed resource.
+    pub demands: Vec<(ResourceId, f64)>,
+}
+
+impl TaskSpec {
+    pub fn new(label: impl Into<String>, stream: StreamId) -> TaskSpec {
+        TaskSpec {
+            label: label.into(),
+            stream,
+            deps: Vec::new(),
+            work: 0.0,
+            setup: 0.0,
+            demands: Vec::new(),
+        }
+    }
+    pub fn dep(mut self, t: TaskId) -> Self {
+        self.deps.push(t);
+        self
+    }
+    pub fn deps(mut self, ts: &[TaskId]) -> Self {
+        self.deps.extend_from_slice(ts);
+        self
+    }
+    pub fn work(mut self, w: f64) -> Self {
+        self.work = w;
+        self
+    }
+    pub fn setup(mut self, s: f64) -> Self {
+        self.setup = s;
+        self
+    }
+    pub fn demand(mut self, r: ResourceId, d: f64) -> Self {
+        assert!(d >= 0.0);
+        self.demands.push((r, d));
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Waiting on deps / stream order.
+    Blocked,
+    /// Deps met; absorbing fixed setup latency until the given time.
+    Setup(f64),
+    /// Progressing under fair-shared rates.
+    Running,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Task {
+    spec: TaskSpec,
+    phase: Phase,
+    remaining: f64,
+    start: f64,
+    run_start: f64,
+    finish: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Total simulated time until the last task completes.
+    pub makespan: f64,
+    /// Per-task (ready/queue-exit time, finish time).
+    pub task_spans: Vec<(f64, f64)>,
+    /// Per-task time actually spent in Running phase.
+    pub task_run_time: Vec<f64>,
+    /// Per-resource integral of consumption (capacity-units × seconds).
+    pub resource_busy: Vec<f64>,
+    /// Number of scheduling events processed.
+    pub events: usize,
+    /// Isolated work per task (copied from specs for slowdown calc).
+    pub ideal_work: Vec<f64>,
+}
+
+impl Report {
+    /// Contention slowdown of one task: running time / isolated work.
+    /// 1.0 means the task never shared a bottleneck resource.
+    pub fn slowdown(&self, t: TaskId) -> f64 {
+        let i = t.0;
+        let work = self.task_run_time[i];
+        if work <= 0.0 {
+            1.0
+        } else {
+            work / self.ideal_work[i].max(1e-30)
+        }
+    }
+
+    /// Average utilization of a resource over the makespan.
+    pub fn utilization(&self, r: ResourceId, capacity: f64) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.resource_busy[r.0] / (capacity * self.makespan)
+    }
+}
+
+/// The engine. Build tasks, then [`Engine::run`].
+#[derive(Debug, Clone)]
+pub struct Engine {
+    capacities: Vec<f64>,
+    tasks: Vec<Task>,
+    streams: Vec<Vec<TaskId>>,
+    trace: bool,
+}
+
+#[derive(Debug)]
+pub struct SimError(pub String);
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sim error: {}", self.0)
+    }
+}
+impl std::error::Error for SimError {}
+
+const EPS: f64 = 1e-12;
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine {
+            capacities: Vec::new(),
+            tasks: Vec::new(),
+            streams: Vec::new(),
+            trace: std::env::var("FICCO_SIM_TRACE").is_ok(),
+        }
+    }
+
+    /// Register a resource with the given capacity; returns its id.
+    pub fn add_resource(&mut self, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource capacity must be positive");
+        self.capacities.push(capacity);
+        ResourceId(self.capacities.len() - 1)
+    }
+
+    /// Register a stream (in-order issue queue); returns its id.
+    pub fn add_stream(&mut self) -> StreamId {
+        self.streams.push(Vec::new());
+        StreamId(self.streams.len() - 1)
+    }
+
+    pub fn capacity(&self, r: ResourceId) -> f64 {
+        self.capacities[r.0]
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Add a task. Demands must reference registered resources; the
+    /// stream must be registered; deps must be earlier task ids.
+    pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        assert!(spec.stream.0 < self.streams.len(), "unknown stream");
+        for &(r, _) in &spec.demands {
+            assert!(r.0 < self.capacities.len(), "unknown resource");
+        }
+        for &d in &spec.deps {
+            assert!(d.0 < id.0, "dep {:?} not earlier than task {:?}", d, id);
+        }
+        assert!(spec.work >= 0.0 && spec.setup >= 0.0);
+        self.streams[spec.stream.0].push(id);
+        self.tasks.push(Task {
+            remaining: spec.work,
+            spec,
+            phase: Phase::Blocked,
+            start: f64::NAN,
+            run_start: f64::NAN,
+            finish: f64::NAN,
+        });
+        id
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> Result<Report, SimError> {
+        let n = self.tasks.len();
+        let mut done_count = 0usize;
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+        let mut resource_busy = vec![0.0f64; self.capacities.len()];
+        // Per-stream cursor: next task index in the stream not yet done.
+        let mut stream_cursor = vec![0usize; self.streams.len()];
+        // Dep completion counting.
+        let mut deps_left: Vec<usize> = self.tasks.iter().map(|t| t.spec.deps.len()).collect();
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.spec.deps {
+                dependents[d.0].push(TaskId(i));
+            }
+        }
+
+        // Promote Blocked → Setup for every task whose deps and stream
+        // predecessor are satisfied.
+        let promote = |tasks: &mut Vec<Task>,
+                           deps_left: &Vec<usize>,
+                           stream_cursor: &Vec<usize>,
+                           streams: &Vec<Vec<TaskId>>,
+                           now: f64,
+                           trace: bool| {
+            for s in 0..streams.len() {
+                let c = stream_cursor[s];
+                if c >= streams[s].len() {
+                    continue;
+                }
+                let tid = streams[s][c];
+                let t = &mut tasks[tid.0];
+                if t.phase == Phase::Blocked && deps_left[tid.0] == 0 {
+                    t.start = now;
+                    t.phase = Phase::Setup(now + t.spec.setup);
+                    if trace {
+                        eprintln!("[{now:.9}] ready  {}", t.spec.label);
+                    }
+                }
+            }
+        };
+
+        promote(
+            &mut self.tasks,
+            &deps_left,
+            &stream_cursor,
+            &self.streams,
+            now,
+            self.trace,
+        );
+
+        while done_count < n {
+            events += 1;
+            if events > 200 * n + 1000 {
+                return Err(SimError(format!(
+                    "event budget exceeded ({} events for {} tasks) — livelock?",
+                    events, n
+                )));
+            }
+
+            // Move Setup tasks whose latency elapsed into Running.
+            for t in self.tasks.iter_mut() {
+                if let Phase::Setup(until) = t.phase {
+                    if until <= now + EPS {
+                        t.phase = Phase::Running;
+                        t.run_start = now;
+                    }
+                }
+            }
+
+            // Collect running tasks and compute fair-share rates.
+            let running: Vec<usize> = (0..n)
+                .filter(|&i| self.tasks[i].phase == Phase::Running)
+                .collect();
+            let rates = self.fair_rates(&running);
+
+            // Next event: earliest of (a) a running task finishing at
+            // its current rate, (b) a setup deadline expiring.
+            let mut dt = f64::INFINITY;
+            for (j, &i) in running.iter().enumerate() {
+                let t = &self.tasks[i];
+                if t.remaining <= EPS {
+                    dt = 0.0;
+                    break;
+                }
+                if rates[j] > EPS {
+                    dt = dt.min(t.remaining / rates[j]);
+                }
+            }
+            for t in &self.tasks {
+                if let Phase::Setup(until) = t.phase {
+                    dt = dt.min((until - now).max(0.0));
+                }
+            }
+            if !dt.is_finite() {
+                let stuck: Vec<&str> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.phase != Phase::Done)
+                    .map(|t| t.spec.label.as_str())
+                    .take(8)
+                    .collect();
+                return Err(SimError(format!(
+                    "no runnable progress at t={now}; blocked tasks (cycle or zero-rate): {stuck:?}"
+                )));
+            }
+
+            // Integrate progress and resource usage over dt.
+            if dt > 0.0 {
+                for (j, &i) in running.iter().enumerate() {
+                    let rate = rates[j];
+                    self.tasks[i].remaining -= rate * dt;
+                    for &(r, d) in &self.tasks[i].spec.demands {
+                        resource_busy[r.0] += rate * d * dt;
+                    }
+                }
+                now += dt;
+            }
+
+            // Complete tasks that hit zero remaining.
+            let mut completed: Vec<TaskId> = Vec::new();
+            for &i in &running {
+                if self.tasks[i].remaining <= EPS {
+                    self.tasks[i].phase = Phase::Done;
+                    self.tasks[i].finish = now;
+                    completed.push(TaskId(i));
+                    done_count += 1;
+                    if self.trace {
+                        eprintln!("[{now:.9}] done   {}", self.tasks[i].spec.label);
+                    }
+                }
+            }
+            // Also complete zero-work tasks sitting in Setup with
+            // elapsed deadline and no work (they became Running above).
+
+            for c in &completed {
+                for &dep in &dependents[c.0] {
+                    deps_left[dep.0] -= 1;
+                }
+                let s = self.tasks[c.0].spec.stream.0;
+                // Advance the stream cursor past completed prefix.
+                while stream_cursor[s] < self.streams[s].len()
+                    && self.tasks[self.streams[s][stream_cursor[s]].0].phase == Phase::Done
+                {
+                    stream_cursor[s] += 1;
+                }
+            }
+            promote(
+                &mut self.tasks,
+                &deps_left,
+                &stream_cursor,
+                &self.streams,
+                now,
+                self.trace,
+            );
+        }
+
+        let task_spans = self.tasks.iter().map(|t| (t.start, t.finish)).collect();
+        let task_run_time = self
+            .tasks
+            .iter()
+            .map(|t| {
+                if t.run_start.is_nan() {
+                    0.0
+                } else {
+                    t.finish - t.run_start
+                }
+            })
+            .collect();
+        let ideal_work = self.tasks.iter().map(|t| t.spec.work).collect();
+        Ok(Report {
+            makespan: now,
+            task_spans,
+            task_run_time,
+            resource_busy,
+            events,
+            ideal_work,
+        })
+    }
+
+    /// Progressive-filling max–min fair rates for the running set.
+    /// All rates grow uniformly until a resource saturates (its tasks
+    /// freeze) or a task reaches rate 1.0; repeats on the remainder.
+    fn fair_rates(&self, running: &[usize]) -> Vec<f64> {
+        let m = running.len();
+        let mut rates = vec![0.0f64; m];
+        if m == 0 {
+            return rates;
+        }
+        let mut frozen = vec![false; m];
+        let mut rem: Vec<f64> = self.capacities.clone();
+
+        loop {
+            // Aggregate unfrozen demand per resource.
+            let mut sum = vec![0.0f64; rem.len()];
+            let mut any_unfrozen = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                any_unfrozen = true;
+                for &(r, d) in &self.tasks[i].spec.demands {
+                    sum[r.0] += d;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            // Max uniform rate increment.
+            let mut delta = f64::INFINITY;
+            for j in 0..m {
+                if !frozen[j] {
+                    delta = delta.min(1.0 - rates[j]);
+                }
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    delta = delta.min(rem[r] / sum[r]);
+                }
+            }
+            if !delta.is_finite() || delta < 0.0 {
+                break;
+            }
+            // Apply increment.
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                rates[j] += delta;
+                let _ = i;
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    rem[r] -= delta * sum[r];
+                }
+            }
+            // Freeze saturated tasks.
+            let mut progressed = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                if rates[j] >= 1.0 - EPS {
+                    frozen[j] = true;
+                    progressed = true;
+                    continue;
+                }
+                let saturated = self.tasks[i]
+                    .spec
+                    .demands
+                    .iter()
+                    .any(|&(r, d)| d > EPS && rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
+                if saturated {
+                    frozen[j] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // delta was limited by the 1.0 cap of a task that was
+                // just frozen, or nothing changed: avoid spinning.
+                break;
+            }
+        }
+        rates
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(engine: Engine) -> Report {
+        engine.run().expect("sim should complete")
+    }
+
+    #[test]
+    fn single_task_runs_isolated() {
+        let mut e = Engine::new();
+        let r = e.add_resource(100.0);
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("t", s).work(2.0).demand(r, 100.0));
+        let rep = quick(e);
+        assert!((rep.makespan - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn setup_latency_adds() {
+        let mut e = Engine::new();
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("t", s).work(1.0).setup(0.5));
+        let rep = quick(e);
+        assert!((rep.makespan - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_tasks_share_resource_proportionally() {
+        // Both demand the full resource: each runs at 0.5 → both take 2s.
+        let mut e = Engine::new();
+        let r = e.add_resource(10.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        e.add_task(TaskSpec::new("a", s1).work(1.0).demand(r, 10.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).demand(r, 10.0));
+        let rep = quick(e);
+        assert!((rep.makespan - 2.0).abs() < 1e-9, "makespan={}", rep.makespan);
+    }
+
+    #[test]
+    fn unequal_demands_share_proportionally() {
+        // a demands 8, b demands 2 of cap 5: uniform rate λ: 10λ=5 → 0.5
+        // both at 0.5; b is NOT capped (its demand at rate 1 would be 2
+        // ≤ spare? after freeze of a at 0.5... a frozen on saturation,
+        // b also uses the saturated resource → frozen too at 0.5.
+        let mut e = Engine::new();
+        let r = e.add_resource(5.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        e.add_task(TaskSpec::new("a", s1).work(1.0).demand(r, 8.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).demand(r, 2.0));
+        let rep = quick(e);
+        assert!((rep.makespan - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_bottlenecked_task_runs_full_rate() {
+        // Tasks on disjoint resources do not interfere.
+        let mut e = Engine::new();
+        let r1 = e.add_resource(1.0);
+        let r2 = e.add_resource(1.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        e.add_task(TaskSpec::new("a", s1).work(3.0).demand(r1, 1.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).demand(r2, 1.0));
+        let rep = quick(e);
+        assert!((rep.makespan - 3.0).abs() < 1e-9);
+        assert!((rep.task_spans[1].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_redistributes_leftover() {
+        // a: needs r1 (cap 1, demand 1) and r2 (cap 10, demand 1).
+        // b: needs r2 only, demand 10.
+        // Uniform growth to λ where r2: λ(1+10)=10 → λ=0.909…? but r1
+        // caps a at rate 1.0 first (λ=0.909 < 1) — r2 saturates first;
+        // both end at 0.909.
+        let mut e = Engine::new();
+        let r1 = e.add_resource(1.0);
+        let r2 = e.add_resource(10.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        e.add_task(TaskSpec::new("a", s1).work(1.0).demand(r1, 1.0).demand(r2, 1.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).demand(r2, 10.0));
+        let rep = quick(e);
+        let expected = 1.0 / (10.0 / 11.0);
+        assert!(
+            (rep.makespan - expected).abs() < 1e-6,
+            "makespan={} expected={}",
+            rep.makespan,
+            expected
+        );
+    }
+
+    #[test]
+    fn stream_serializes() {
+        let mut e = Engine::new();
+        let r = e.add_resource(1.0);
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("a", s).work(1.0).demand(r, 1.0));
+        e.add_task(TaskSpec::new("b", s).work(1.0).demand(r, 1.0));
+        let rep = quick(e);
+        // Same stream → serial even though the resource could only fit
+        // one at a time anyway; check b starts after a ends.
+        assert!((rep.makespan - 2.0).abs() < 1e-9);
+        assert!(rep.task_spans[1].0 >= rep.task_spans[0].1 - 1e-9);
+    }
+
+    #[test]
+    fn deps_respected_across_streams() {
+        let mut e = Engine::new();
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        let a = e.add_task(TaskSpec::new("a", s1).work(1.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).dep(a));
+        let rep = quick(e);
+        assert!((rep.makespan - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_work_task_completes() {
+        let mut e = Engine::new();
+        let s = e.add_stream();
+        let a = e.add_task(TaskSpec::new("sync", s).work(0.0));
+        e.add_task(TaskSpec::new("b", s).work(1.0).dep(a));
+        let rep = quick(e);
+        assert!((rep.makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut e = Engine::new();
+        let r = e.add_resource(4.0);
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("t", s).work(2.0).demand(r, 2.0));
+        let rep = quick(e);
+        // Uses 2 of 4 for 2 s → 50% utilization.
+        assert!((rep.utilization(ResourceId(0), 4.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_slowdown_reported() {
+        let mut e = Engine::new();
+        let r = e.add_resource(1.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        let a = e.add_task(TaskSpec::new("a", s1).work(1.0).demand(r, 1.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).demand(r, 1.0));
+        let rep = quick(e);
+        assert!((rep.slowdown(a) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn diamond_dag() {
+        let mut e = Engine::new();
+        let s: Vec<StreamId> = (0..4).map(|_| e.add_stream()).collect();
+        let a = e.add_task(TaskSpec::new("a", s[0]).work(1.0));
+        let b = e.add_task(TaskSpec::new("b", s[1]).work(2.0).dep(a));
+        let c = e.add_task(TaskSpec::new("c", s[2]).work(1.0).dep(a));
+        e.add_task(TaskSpec::new("d", s[3]).work(1.0).deps(&[b, c]));
+        let rep = quick(e);
+        assert!((rep.makespan - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn many_tasks_throughput() {
+        // Sanity: engine handles thousands of tasks quickly.
+        let mut e = Engine::new();
+        let r = e.add_resource(100.0);
+        let streams: Vec<StreamId> = (0..8).map(|_| e.add_stream()).collect();
+        for i in 0..4000 {
+            e.add_task(
+                TaskSpec::new(format!("t{i}"), streams[i % 8])
+                    .work(0.001)
+                    .demand(r, 20.0),
+            );
+        }
+        let rep = quick(e);
+        assert!(rep.makespan > 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Fluid discrete-event simulation of a multi-GPU node.
+//!
+//! The paper measures concurrent GPU kernels contending for compute
+//! units, HBM bandwidth, network links and DMA engines (§IV, Fig 3d).
+//! We model each of those as a capacity-limited *resource* and each
+//! kernel/copy as a *task* that demands a vector of resources per unit
+//! of progress. Between events, rates are constant and set by
+//! progressive-filling max–min fair sharing — the standard fluid
+//! approximation of hardware arbitration. Contention losses (CIL)
+//! *emerge* from this sharing; decomposition losses (DIL) enter
+//! through each task's isolated-time `work`, computed by `cost`.
+//!
+//! [`engine`] is the generic simulator; [`cluster`] instantiates the
+//! resource set for a [`crate::hw::Machine`] and provides typed task
+//! builders for GEMMs, core-driven comm, DMA copies and local
+//! gather/scatter kernels.
+
+pub mod cluster;
+pub mod engine;
+
+pub use cluster::{ClusterSim, CommMech};
+pub use engine::{Engine, Report, ResourceId, StreamId, TaskId, TaskSpec};

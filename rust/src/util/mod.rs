@@ -1,0 +1,62 @@
+//! Small self-contained utilities used across the workspace.
+//!
+//! The offline crate set available to this build has no `rand`,
+//! `serde`, or `prettytable`, so the substrates live here: a
+//! deterministic PRNG ([`rng`]), summary statistics ([`stats`]),
+//! table/CSV rendering ([`table`]), and a miniature property-based
+//! testing driver ([`prop`]).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count with binary units (KiB/MiB/GiB).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{:.0} {}", v, UNITS[u])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an auto-selected unit.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+        assert!(human_bytes(1e13).ends_with("TiB"));
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500 s");
+        assert_eq!(human_time(0.0025), "2.500 ms");
+        assert_eq!(human_time(2.5e-6), "2.500 us");
+        assert!(human_time(5e-9).ends_with("ns"));
+    }
+}

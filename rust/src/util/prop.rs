@@ -1,0 +1,157 @@
+//! Miniature property-based testing driver.
+//!
+//! `proptest` is not in the offline crate set, so this provides the
+//! small subset the test suite needs: run a property over `n` random
+//! cases drawn from a caller-supplied generator, and on failure report
+//! the seed + a greedily shrunk counterexample.
+
+use super::rng::Rng;
+
+/// Outcome of a property check over one case.
+pub type CaseResult = Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max shrink attempts on failure.
+    pub shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            // Allow overriding for CI reproduction: FICCO_PROP_SEED=...
+            seed: std::env::var("FICCO_PROP_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xF1CC0),
+            shrink_iters: 200,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` values drawn by `gen`; panic with the
+/// seed, case index, and (optionally shrunk) counterexample on failure.
+///
+/// `shrink` proposes a simpler candidate from a failing one (return
+/// `None` when no simpler candidate exists). Shrinking is greedy: a
+/// candidate is kept only if it still fails the property.
+pub fn check<T, G, P, S>(name: &str, cfg: &Config, mut gen: G, mut prop: P, mut shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CaseResult,
+    S: FnMut(&T, &mut Rng) -> Option<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut srng = Rng::new(cfg.seed ^ 0x5111);
+            for _ in 0..cfg.shrink_iters {
+                match shrink(&best, &mut srng) {
+                    Some(candidate) => {
+                        if let Err(m) = prop(&candidate) {
+                            best = candidate;
+                            best_msg = m;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, case={case}):\n  input: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: property check with no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CaseResult,
+{
+    check(name, cfg, gen, prop, |_, _| None);
+}
+
+/// Assert an approximate equality inside a property.
+pub fn approx_eq(a: f64, b: f64, rtol: f64, what: &str) -> CaseResult {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    if ((a - b) / denom).abs() <= rtol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} !~ {b} (rtol {rtol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_no_shrink(
+            "add-commutes",
+            &Config::default(),
+            |r| (r.range(0, 100) as i64, r.range(0, 100) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("non-commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check_no_shrink(
+            "always-fails",
+            &Config {
+                cases: 1,
+                ..Config::default()
+            },
+            |r| r.range(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_reduces_counterexample() {
+        // Property: x < 50. Failing inputs are 50..100; shrink by
+        // halving toward 50 should land at exactly 50.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "lt-50",
+                &Config {
+                    cases: 500,
+                    seed: 3,
+                    shrink_iters: 500,
+                },
+                |r| r.range(0, 100),
+                |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+                |&x, _| if x > 0 { Some(x - 1) } else { None },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("input: 50"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn approx_eq_tolerates() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(approx_eq(1.0, 1.1, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! Workloads: the paper's Table I scenario suite and the synthetic
+//! scenario generator used for heuristic evaluation (§VI-D).
+
+pub mod synthetic;
+pub mod table1;
+
+pub use synthetic::synthetic_scenarios;
+pub use table1::{table1, Table1Row};
+
+use crate::schedule::{Collective, Scenario};
+
+/// Parallelization technique a scenario comes from (Table I column 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Tensor + sequence parallel (all-gather of activations).
+    SpTp,
+    /// Expert parallel (all-to-all token dispersal).
+    Ep,
+}
+
+impl Parallelism {
+    pub fn name(self) -> &'static str {
+        match self {
+            Parallelism::SpTp => "SP+TP",
+            Parallelism::Ep => "EP",
+        }
+    }
+
+    pub fn collective(self) -> Collective {
+        match self {
+            Parallelism::SpTp => Collective::AllGather,
+            Parallelism::Ep => Collective::AllToAll,
+        }
+    }
+}
+
+/// Find a Table I scenario by name ("g1".."g16").
+pub fn by_name(name: &str) -> Option<Scenario> {
+    table1()
+        .into_iter()
+        .find(|r| r.name == name)
+        .map(|r| r.scenario())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        let g1 = by_name("g1").unwrap();
+        assert_eq!(g1.gemm.m, 16384);
+        assert_eq!(g1.gemm.k, 131072);
+        assert!(by_name("g99").is_none());
+    }
+}

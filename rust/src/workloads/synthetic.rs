@@ -1,0 +1,104 @@
+//! Synthetic scenario generation for heuristic evaluation.
+//!
+//! §VI-D scores the heuristic on sixteen synthetic scenarios "with
+//! diverse OTB and MT combinations". We reproduce that protocol:
+//! sample (M, N, K) log-uniformly over the ranges Table I spans,
+//! stratified so the suite covers the OTB×MT plane (low/low, low/high,
+//! high/low, high/high quadrants), which is what exercises all three
+//! 1D heuristic outcomes plus the 2D branch.
+
+use crate::cost::gemm::GemmShape;
+use crate::schedule::Scenario;
+use crate::util::rng::Rng;
+
+/// Sampling space (powers of two, like real transformer dims).
+const M_RANGE: (f64, f64) = (8192.0, 2_097_152.0);
+const N_RANGE: (f64, f64) = (1024.0, 65536.0);
+const K_RANGE: (f64, f64) = (1024.0, 262144.0);
+
+fn round_pow2ish(x: f64) -> u64 {
+    // Round to the nearest multiple of 1024 (transformer dims are
+    // 1024-aligned in practice; also keeps shards divisible).
+    let q = (x / 1024.0).round().max(1.0);
+    (q as u64) * 1024
+}
+
+/// Draw one synthetic scenario.
+pub fn sample(rng: &mut Rng, idx: usize) -> Scenario {
+    // Stratify across the four OTB/MT quadrants by index.
+    let quadrant = idx % 4;
+    let (m_rng, k_rng) = match quadrant {
+        // low OTB, low MT: modest dims, skinny K
+        0 => ((M_RANGE.0, 131072.0), (K_RANGE.0, 16384.0)),
+        // low OTB, high MT: huge M, skinny K
+        1 => ((262144.0, M_RANGE.1), (K_RANGE.0, 8192.0)),
+        // high OTB, low MT: modest M, deep K
+        2 => ((M_RANGE.0, 65536.0), (32768.0, K_RANGE.1)),
+        // high OTB, high MT: large everything
+        _ => ((131072.0, M_RANGE.1), (16384.0, 131072.0)),
+    };
+    let m = round_pow2ish(rng.log_uniform(m_rng.0, m_rng.1));
+    let n = round_pow2ish(rng.log_uniform(N_RANGE.0, N_RANGE.1));
+    let k = round_pow2ish(rng.log_uniform(k_rng.0, k_rng.1));
+    Scenario::new(format!("syn{idx}"), m, n, k)
+}
+
+/// The sixteen-scenario synthetic suite (seeded, reproducible).
+pub fn synthetic_scenarios(seed: u64, count: usize) -> Vec<Scenario> {
+    let mut rng = Rng::new(seed);
+    (0..count).map(|i| sample(&mut rng, i)).collect()
+}
+
+/// Diversity diagnostic: (min, max) of log10(OTB) and log10(MT bytes)
+/// across a suite.
+pub fn diversity(scenarios: &[Scenario]) -> ((f64, f64), (f64, f64)) {
+    let mut otb = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut mt = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in scenarios {
+        let g: &GemmShape = &s.gemm;
+        let o = g.otb().log10();
+        let m = g.mt().log10();
+        otb = (otb.0.min(o), otb.1.max(o));
+        mt = (mt.0.min(m), mt.1.max(m));
+    }
+    (otb, mt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible() {
+        let a = synthetic_scenarios(7, 16);
+        let b = synthetic_scenarios(7, 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gemm, y.gemm);
+        }
+    }
+
+    #[test]
+    fn dims_in_range_and_aligned() {
+        for s in synthetic_scenarios(42, 32) {
+            assert!(s.gemm.m % 1024 == 0 && s.gemm.n % 1024 == 0 && s.gemm.k % 1024 == 0);
+            assert!(s.gemm.m >= 8192);
+            assert!(s.gemm.n >= 1024);
+        }
+    }
+
+    #[test]
+    fn suite_is_diverse() {
+        let suite = synthetic_scenarios(1, 16);
+        let ((otb_lo, otb_hi), (mt_lo, mt_hi)) = diversity(&suite);
+        assert!(otb_hi - otb_lo > 0.8, "OTB span {otb_lo}..{otb_hi}");
+        assert!(mt_hi - mt_lo > 0.8, "MT span {mt_lo}..{mt_hi}");
+    }
+
+    #[test]
+    fn both_heuristic_branches_present() {
+        let suite = synthetic_scenarios(1, 16);
+        let gt = suite.iter().filter(|s| s.gemm.m > s.gemm.k).count();
+        assert!(gt >= 4, "M>K scenarios: {gt}");
+        assert!(gt <= 14, "M<=K scenarios: {}", 16 - gt);
+    }
+}

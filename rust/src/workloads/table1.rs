@@ -1,0 +1,117 @@
+//! Table I: the 16 GEMM/communication scenarios from real ML
+//! deployments the paper studies (SP+TP on llama-2-70b/llama-3-405b,
+//! EP on DeepSeek/Mixtral), verbatim (M, N, K).
+
+use super::Parallelism;
+use crate::schedule::Scenario;
+
+/// One row of the paper's Table I.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub name: &'static str,
+    pub parallelism: Parallelism,
+    pub model: &'static str,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Table1Row {
+    pub fn scenario(&self) -> Scenario {
+        Scenario::new(self.name, self.m, self.n, self.k)
+            .with_collective(self.parallelism.collective())
+    }
+}
+
+/// The 16 rows of Table I.
+pub fn table1() -> Vec<Table1Row> {
+    use Parallelism::*;
+    let rows = [
+        ("g1", SpTp, "llama-3-405b", 16384u64, 16384u64, 131072u64),
+        ("g2", SpTp, "llama-3-405b", 131072, 16384, 16384),
+        ("g3", SpTp, "llama-3-405b", 53248, 16384, 131072),
+        ("g4", SpTp, "llama-3-405b", 131072, 53248, 16384),
+        ("g5", SpTp, "llama-2-70b", 8192, 8192, 262144),
+        ("g6", SpTp, "llama-2-70b", 262144, 8192, 8192),
+        ("g7", SpTp, "llama-2-70b", 28672, 8192, 262144),
+        ("g8", SpTp, "llama-2-70b", 262144, 28672, 8192),
+        ("g9", SpTp, "llama-3-405b", 196608, 18432, 16384),
+        ("g10", SpTp, "llama-3-405b", 196608, 106496, 16384),
+        ("g11", SpTp, "llama-2-70b", 1048576, 10240, 8192),
+        ("g12", SpTp, "llama-2-70b", 1048576, 57344, 8192),
+        ("g13", Ep, "DeepSeek", 1607680, 57344, 8192),
+        ("g14", Ep, "Mixtral", 147456, 28672, 4096),
+        ("g15", Ep, "Mixtral", 327680, 28672, 4096),
+        ("g16", Ep, "Mixtral", 229376, 28672, 4096),
+    ];
+    rows.iter()
+        .map(|&(name, parallelism, model, m, n, k)| Table1Row {
+            name,
+            parallelism,
+            model,
+            m,
+            n,
+            k,
+        })
+        .collect()
+}
+
+/// The subset with M > K (the heuristic's 1D branch) — useful for
+/// focused characterization runs.
+pub fn m_gt_k() -> Vec<Table1Row> {
+    table1().into_iter().filter(|r| r.m > r.k).collect()
+}
+
+/// The subset with M ≤ K (the heuristic's 2D branch).
+pub fn m_le_k() -> Vec<Table1Row> {
+    table1().into_iter().filter(|r| r.m <= r.k).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_rows() {
+        let t = table1();
+        assert_eq!(t.len(), 16);
+        assert_eq!(t[0].name, "g1");
+        assert_eq!(t[15].name, "g16");
+    }
+
+    #[test]
+    fn verbatim_paper_dims() {
+        let t = table1();
+        // Spot-check against the paper's Table I.
+        assert_eq!((t[4].m, t[4].n, t[4].k), (8192, 8192, 262144)); // g5
+        assert_eq!((t[12].m, t[12].n, t[12].k), (1607680, 57344, 8192)); // g13
+        assert_eq!(t[12].model, "DeepSeek");
+        assert_eq!(t[13].model, "Mixtral");
+    }
+
+    #[test]
+    fn split_covers_table() {
+        assert_eq!(m_gt_k().len() + m_le_k().len(), 16);
+        // The paper notes g1, g3, g5, g7 have M < K (row-sharding
+        // unfavourable): all land in the 2D branch.
+        let le: Vec<&str> = m_le_k().iter().map(|r| r.name).collect();
+        for g in ["g1", "g3", "g5", "g7"] {
+            assert!(le.contains(&g), "{g} should have M<=K");
+        }
+    }
+
+    #[test]
+    fn ep_rows_use_all_to_all() {
+        for r in table1() {
+            let sc = r.scenario();
+            match r.parallelism {
+                Parallelism::Ep => {
+                    assert_eq!(sc.collective, crate::schedule::Collective::AllToAll)
+                }
+                Parallelism::SpTp => {
+                    assert_eq!(sc.collective, crate::schedule::Collective::AllGather)
+                }
+            }
+        }
+    }
+}

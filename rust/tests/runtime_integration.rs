@@ -1,0 +1,103 @@
+//! Integration: the AOT artifact pipeline end-to-end — manifest,
+//! compilation, Pallas-kernel execution, and a short real training run
+//! through the tiny preset (skipped gracefully if `make artifacts`
+//! hasn't been run).
+
+use ficco::runtime::{literal_f32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    Runtime::load("artifacts").ok()
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "init_tiny",
+        "train_step_tiny",
+        "fwd_tiny",
+        "pallas_gemm_256x128x192",
+        "pallas_gemm_acc_256x128x24",
+    ] {
+        assert!(rt.manifest.get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn pallas_gemm_artifact_matches_builder_gemm() {
+    // L1 (Pallas, via jax AOT) against the runtime's XlaBuilder GEMM:
+    // two completely different lowering paths must agree numerically.
+    let Some(rt) = runtime() else { return };
+    let (m, n, k) = (32usize, 128usize, 192usize);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 % 101) as f32) * 0.01 - 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 97) as f32) * 0.02 - 1.0).collect();
+    let la = literal_f32(&a, &[m as i64, k as i64]).unwrap();
+    let lb = literal_f32(&b, &[k as i64, n as i64]).unwrap();
+    let out = rt.execute("pallas_gemm_32x128x192", &[la, lb]).unwrap();
+    let pallas = out[0].to_vec::<f32>().unwrap();
+
+    let ex = ficco::runtime::gemm::GemmExecutor::new(std::sync::Arc::new(
+        xla::PjRtClient::cpu().unwrap(),
+    ));
+    let builder = ex.matmul(&a, &b, m as u64, n as u64, k as u64).unwrap();
+    let maxd = pallas
+        .iter()
+        .zip(&builder)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxd < 1e-3, "pallas vs builder max diff {maxd}");
+}
+
+#[test]
+fn accumulating_artifact_accumulates() {
+    let Some(rt) = runtime() else { return };
+    let (m, n, kb) = (256usize, 128usize, 24usize);
+    let c0 = vec![1.5f32; m * n];
+    let a = vec![0.5f32; m * kb];
+    let b = vec![2.0f32; kb * n];
+    let lc = literal_f32(&c0, &[m as i64, n as i64]).unwrap();
+    let la = literal_f32(&a, &[m as i64, kb as i64]).unwrap();
+    let lb = literal_f32(&b, &[kb as i64, n as i64]).unwrap();
+    let out = rt
+        .execute("pallas_gemm_acc_256x128x24", &[lc, la, lb])
+        .unwrap();
+    let c = out[0].to_vec::<f32>().unwrap();
+    let want = 1.5 + (kb as f32) * 0.5 * 2.0;
+    for v in c {
+        assert!((v - want).abs() < 1e-3, "{v} vs {want}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses() {
+    let Some(rt) = runtime() else { return };
+    rt.executable("pallas_gemm_4x128x192").unwrap();
+    rt.executable("pallas_gemm_4x128x192").unwrap();
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn tiny_training_learns_through_pjrt() {
+    // Full L3 training loop over the AOT artifacts; 40 steps of the
+    // tiny model must reduce loss measurably on the Markov corpus.
+    if runtime().is_none() {
+        return;
+    }
+    let cfg = ficco::train::TrainConfig {
+        preset: "tiny".into(),
+        steps: 40,
+        seed: 7,
+        artifacts: "artifacts".into(),
+        log_every: 1000,
+        loss_csv: None,
+        overlap_report: false,
+    };
+    let rep = ficco::train::run(&cfg).expect("train");
+    let first = rep.losses[0];
+    let last = *rep.losses.last().unwrap();
+    assert!(last.is_finite());
+    assert!(
+        last < first - 0.05,
+        "no learning over 40 steps: {first} -> {last}"
+    );
+}

@@ -1,0 +1,165 @@
+//! Property-based tests over the schedule design space: for random
+//! scenario geometries, every generated schedule must satisfy the
+//! structural invariants (coverage, conservation, ownership,
+//! data-before-compute, topological order) and the simulator must
+//! execute it with physically sensible results.
+
+use ficco::hw::Machine;
+use ficco::schedule::{exec, generate::generate, validate::validate, Kind, Scenario};
+use ficco::util::prop::{self, Config};
+use ficco::util::rng::Rng;
+
+fn gen_scenario(r: &mut Rng) -> (u64, u64, u64, usize) {
+    let g = *r.choose(&[2usize, 3, 4, 8]);
+    // From tiny/awkward to Table-I-scale.
+    let m = r.range_u64(g as u64, 4096) * r.range_u64(1, 64);
+    let n = r.range_u64(1, 2048);
+    let k = r.range_u64(1, 4096);
+    (m, n, k, g)
+}
+
+#[test]
+fn all_schedules_validate_on_random_geometries() {
+    prop::check_no_shrink(
+        "schedule-invariants",
+        &Config {
+            cases: 120,
+            ..Config::default()
+        },
+        gen_scenario,
+        |&(m, n, k, g)| {
+            let sc = Scenario::new("prop", m, n, k).with_ngpus(g);
+            for kind in Kind::ALL {
+                let sched = generate(kind, &sc);
+                validate(&sched).map_err(|e| format!("{kind:?}: {e}"))?;
+                // Conservation in the IR itself.
+                let remote_cells = (g as u64 - 1) as f64 * 0.0; // placeholder not used
+                let _ = remote_cells;
+                let want = ((g as f64 - 1.0) / g as f64 * m as f64).round();
+                let rows_moved = sched.comm_bytes() / (k as f64 * 2.0) / g as f64;
+                // per-GPU received rows ≈ (g-1)/g·m (balanced splits
+                // may deviate by < g rows)
+                if (rows_moved - want).abs() > g as f64 {
+                    return Err(format!(
+                        "{kind:?}: rows moved/gpu {rows_moved} vs want {want}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simulated_makespans_respect_bounds() {
+    let machine = Machine::mi300x_8();
+    prop::check_no_shrink(
+        "makespan-bounds",
+        &Config {
+            cases: 12,
+            ..Config::default()
+        },
+        |r| {
+            // Realistic-ish sizes so the sim stays fast.
+            let m = r.range_u64(8, 128) * 1024;
+            let n = r.range_u64(1, 32) * 512;
+            let k = r.range_u64(1, 32) * 512;
+            (m, n, k)
+        },
+        |&(m, n, k)| {
+            let sc = Scenario::new("prop", m, n, k);
+            let ev = exec::ScenarioEval::run(&machine, &sc, &Kind::ALL);
+            for res in &ev.results {
+                if !(res.makespan.is_finite() && res.makespan > 0.0) {
+                    return Err(format!("{:?}: bad makespan {}", res.kind, res.makespan));
+                }
+                // No schedule can beat its own compute leg.
+                if res.makespan < 0.95 * res.gemm_leg {
+                    return Err(format!(
+                        "{:?}: makespan {} < compute leg {}",
+                        res.kind, res.makespan, res.gemm_leg
+                    ));
+                }
+                // Contention can only slow things down.
+                if res.gemm_cil < 0.999 || res.comm_cil < 0.999 {
+                    return Err(format!(
+                        "{:?}: CIL below 1 ({}, {})",
+                        res.kind, res.gemm_cil, res.comm_cil
+                    ));
+                }
+            }
+            // Baseline is serial: it must cost at least both legs.
+            let base = &ev.results[0];
+            if base.makespan < 0.95 * (base.gemm_leg + base.comm_leg) {
+                return Err(format!(
+                    "baseline {} below serial sum {}",
+                    base.makespan,
+                    base.gemm_leg + base.comm_leg
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn heuristic_always_returns_a_ficco_schedule() {
+    let machine = Machine::mi300x_8();
+    prop::check_no_shrink(
+        "heuristic-total",
+        &Config {
+            cases: 300,
+            ..Config::default()
+        },
+        |r| {
+            let m = r.range_u64(1, 1 << 21);
+            let n = r.range_u64(1, 1 << 17);
+            let k = r.range_u64(1, 1 << 18);
+            (m, n, k)
+        },
+        |&(m, n, k)| {
+            let sc = Scenario::new("prop", m, n, k);
+            let d = ficco::heuristics::pick(&machine, &sc);
+            if !d.pick.is_ficco() {
+                return Err(format!("picked non-FiCCO {:?}", d.pick));
+            }
+            if m <= k && d.pick != Kind::UniformFused2D {
+                return Err("M<=K must pick 2D".into());
+            }
+            if m > k && d.pick == Kind::UniformFused2D {
+                return Err("M>K must pick a 1D schedule".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dil_never_below_one_modulo_launch() {
+    use ficco::cost::gemm::{GemmCost, Sharding};
+    let machine = Machine::mi300x_8();
+    let cost = GemmCost::new(&machine.gpu);
+    prop::check_no_shrink(
+        "dil-lower-bound",
+        &Config {
+            cases: 400,
+            ..Config::default()
+        },
+        |r| {
+            let m = r.range_u64(64, 1 << 20);
+            let n = r.range_u64(64, 1 << 16);
+            let k = r.range_u64(64, 1 << 18);
+            let dim = if r.bool(0.5) { Sharding::Row } else { Sharding::Col };
+            let ways = *r.choose(&[2u64, 8, 64]);
+            (m, n, k, dim, ways)
+        },
+        |&(m, n, k, dim, ways)| {
+            let g = ficco::cost::GemmShape::new(m, n, k);
+            let d = cost.dil(&g, dim, ways);
+            if d < 0.98 {
+                return Err(format!("DIL {d} < 1 for {m}x{n}x{k} {dim:?}/{ways}"));
+            }
+            Ok(())
+        },
+    );
+}

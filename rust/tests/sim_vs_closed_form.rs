@@ -1,0 +1,102 @@
+//! Cross-validation: the fluid simulator's emergent timings against
+//! the closed-form cost models (`cost::collective`, `cost::contention`)
+//! — the two must agree on isolated operations and directionally on
+//! contended ones.
+
+use ficco::cost::collective as cc;
+use ficco::hw::Machine;
+use ficco::sim::{ClusterSim, CommMech};
+
+#[test]
+fn isolated_transfer_matches_closed_form() {
+    let m = Machine::mi300x_8();
+    for bytes in [64e6, 256e6, 1024e6] {
+        for mech in [CommMech::Dma, CommMech::Kernel] {
+            let want = cc::p2p_time(&m.gpu, &m.topo, bytes, mech);
+            let mut sim = ClusterSim::new(m.clone());
+            sim.transfer_task(0, 1, 0, "x", bytes, mech, &[]);
+            let got = sim.run().unwrap().makespan;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "{mech:?} {bytes}: sim {got} vs closed {want}");
+        }
+    }
+}
+
+#[test]
+fn one_shot_all_gather_matches_closed_form() {
+    let m = Machine::mi300x_8();
+    let shard = 512e6;
+    let want = cc::ag_all_to_all_time(&m.gpu, &m.topo, shard, CommMech::Dma);
+    let mut sim = ClusterSim::new(m.clone());
+    for src in 0..8 {
+        for (slot, dst) in (0..8).filter(|&d| d != src).enumerate() {
+            sim.transfer_task(src, dst, slot, "ag", shard, CommMech::Dma, &[]);
+        }
+    }
+    let got = sim.run().unwrap().makespan;
+    // The sim adds HBM contention between 14 concurrent streams per
+    // GPU, so it may run somewhat slower than the uncontended closed
+    // form — never faster.
+    assert!(got >= 0.99 * want, "sim {got} < closed form {want}");
+    assert!(got <= 1.6 * want, "sim {got} >> closed form {want}");
+}
+
+#[test]
+fn ring_ag_is_7x_one_shot_in_sim() {
+    // The Fig 13 "7x communication slowdown": serial P2P ring vs
+    // parallel one-shot, both simulated.
+    let m = Machine::mi300x_8();
+    let shard = 256e6;
+    let one_shot = {
+        let mut sim = ClusterSim::new(m.clone());
+        for src in 0..8usize {
+            for (slot, dst) in (0..8).filter(|&d| d != src).enumerate() {
+                sim.transfer_task(src, dst, slot, "ag", shard, CommMech::Kernel, &[]);
+            }
+        }
+        sim.run().unwrap().makespan
+    };
+    let ring = {
+        // Step-major emission: sender lanes queue in step order (the
+        // per-step perfect matching of AsyncTP-style P2P).
+        let mut sim = ClusterSim::new(m.clone());
+        let mut prev: Vec<Option<ficco::sim::TaskId>> = vec![None; 8];
+        for s in 1..8 {
+            for r in 0..8usize {
+                let src = (r + s) % 8;
+                let dep: Vec<_> = prev[r].into_iter().collect();
+                prev[r] =
+                    Some(sim.transfer_task(src, r, 0, "hop", shard, CommMech::Kernel, &dep));
+            }
+        }
+        sim.run().unwrap().makespan
+    };
+    let ratio = ring / one_shot;
+    assert!(
+        (5.5..8.0).contains(&ratio),
+        "ring/one-shot = {ratio} (paper observes ~7x)"
+    );
+}
+
+#[test]
+fn closed_form_cil_brackets_sim_cil() {
+    use ficco::cost::contention::gemm_cil_under_a2a;
+    use ficco::cost::GemmShape;
+    let machine = Machine::mi300x_8();
+    // The Fig 9 protocol via metrics, vs the closed form.
+    for row in ficco::workloads::table1().into_iter().take(6) {
+        let (sim_gemm, _) = ficco::metrics::cil_point(&machine, &row, CommMech::Dma);
+        let shape = GemmShape::new(row.m, row.n, row.k)
+            .shard(ficco::cost::Sharding::Row, 8);
+        let (cf_gemm, _) = gemm_cil_under_a2a(&machine.gpu, &machine.topo, &shape, CommMech::Dma);
+        // Same order of magnitude of excess slowdown; both ≥ 1.
+        assert!(sim_gemm >= 1.0 && cf_gemm >= 1.0);
+        let excess_sim = sim_gemm - 1.0;
+        let excess_cf = cf_gemm - 1.0;
+        assert!(
+            (excess_sim - excess_cf).abs() < 0.25,
+            "{}: sim {sim_gemm} vs closed form {cf_gemm}",
+            row.name
+        );
+    }
+}
