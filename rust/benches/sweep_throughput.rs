@@ -1,0 +1,61 @@
+//! Bench: sweep-engine throughput and parallel scaling.
+//!
+//! Runs a fixed synthetic design-space sweep (Table-I-spanning
+//! scenario shapes × three machine presets × both mechanisms) at
+//! increasing `--jobs`-style worker counts and reports wall time,
+//! speedup over the single-worker run, and parallel efficiency. The
+//! fluid simulator is pure and cells are independent, so scaling
+//! should stay near-linear until the host runs out of cores.
+//!
+//! Run: `cargo bench --bench sweep_throughput`
+
+use ficco::explore::{run, SweepSpec};
+use ficco::hw::Machine;
+use ficco::schedule::Kind;
+use ficco::sim::CommMech;
+use ficco::workloads;
+
+fn spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: workloads::synthetic_scenarios(2025, 8),
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![
+            ("mi300x-8".into(), Machine::mi300x_8()),
+            ("h100-dgx-8".into(), Machine::h100_dgx_8()),
+            ("pcie-gen4-4".into(), Machine::pcie_gen4_4()),
+        ],
+        mechs: vec![CommMech::Dma, CommMech::Kernel],
+        gpu_counts: Vec::new(),
+    }
+}
+
+fn main() {
+    let spec = spec();
+    let cells = spec.cells().len();
+    let points = spec.n_points();
+    let host = ficco::cli::default_jobs();
+    println!("== perf: sweep engine ({cells} cells, {points} points, host parallelism {host}) ==");
+
+    // Warm-up pass (first run pays allocator/page-fault noise).
+    let _ = run(&spec, host, |_| true);
+
+    let mut jobs_axis = vec![1usize, 2, 4];
+    if host > 4 {
+        jobs_axis.push(host);
+    }
+    let mut base = f64::NAN;
+    for &jobs in &jobs_axis {
+        let report = run(&spec, jobs, |_| true);
+        if jobs == 1 {
+            base = report.wall_seconds;
+        }
+        let speedup = base / report.wall_seconds;
+        println!(
+            "jobs {jobs:>3}: {:>8.3}s wall  {:>8.3}s cpu  speedup {speedup:>5.2}x  efficiency {:>5.1}%  ({:.1} points/s)",
+            report.wall_seconds,
+            report.cpu_seconds(),
+            100.0 * speedup / jobs as f64,
+            points as f64 / report.wall_seconds.max(1e-9),
+        );
+    }
+}

@@ -44,6 +44,13 @@ impl Args {
             let t = &tokens[i];
             if let Some(name) = t.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
+                    if known_switches.contains(&k) {
+                        // Silently storing `--verbose=1` as an option
+                        // would make `has("verbose")` false and strict
+                        // subcommands report a misleading "unknown
+                        // option" — reject it outright.
+                        return Err(CliError(format!("switch --{k} does not take a value")));
+                    }
                     args.opts.insert(k.to_string(), v.to_string());
                 } else if known_switches.contains(&name) {
                     args.switches.push(name.to_string());
@@ -113,6 +120,22 @@ impl Args {
         }
     }
 
+    /// Parse a worker-count option (`--jobs`-style): a positive
+    /// integer, with `auto` or absence meaning the host's available
+    /// parallelism.
+    pub fn get_jobs(&self, name: &str) -> Result<usize, CliError> {
+        match self.get(name) {
+            None | Some("auto") => Ok(default_jobs()),
+            Some(v) => match v.parse::<usize>() {
+                Ok(0) => Err(CliError(format!("--{name}: must be >= 1"))),
+                Ok(n) => Ok(n),
+                Err(_) => Err(CliError(format!(
+                    "--{name}: expected a worker count or 'auto', got '{v}'"
+                ))),
+            },
+        }
+    }
+
     /// Reject unknown option names (call after reading all expected ones).
     pub fn expect_known(&self, known: &[&str]) -> Result<(), CliError> {
         for k in self.opts.keys() {
@@ -122,6 +145,26 @@ impl Args {
         }
         Ok(())
     }
+
+    /// Reject switches a subcommand does not honor. Switch names are
+    /// registered globally at parse time, so a strict subcommand must
+    /// also reject the ones it would otherwise silently ignore.
+    pub fn expect_switches(&self, known: &[&str]) -> Result<(), CliError> {
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                return Err(CliError(format!("switch --{s} is not valid here")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The host's available parallelism (fallback 1), the default for
+/// `--jobs`-style options.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 #[cfg(test)]
@@ -164,9 +207,41 @@ mod tests {
     }
 
     #[test]
+    fn jobs_option() {
+        let a = Args::parse(vec!["sweep", "--jobs", "4"], &[]).unwrap();
+        assert_eq!(a.get_jobs("jobs").unwrap(), 4);
+        let auto = Args::parse(vec!["sweep", "--jobs", "auto"], &[]).unwrap();
+        assert_eq!(auto.get_jobs("jobs").unwrap(), default_jobs());
+        assert!(default_jobs() >= 1);
+        let absent = Args::parse(vec!["sweep"], &[]).unwrap();
+        assert_eq!(absent.get_jobs("jobs").unwrap(), default_jobs());
+        let zero = Args::parse(vec!["sweep", "--jobs", "0"], &[]).unwrap();
+        assert!(zero.get_jobs("jobs").is_err());
+        let bad = Args::parse(vec!["sweep", "--jobs", "many"], &[]).unwrap();
+        assert!(bad.get_jobs("jobs").is_err());
+    }
+
+    #[test]
     fn unknown_option_detected() {
         let a = Args::parse(vec!["x", "--bad", "1"], &[]).unwrap();
         assert!(a.expect_known(&["good"]).is_err());
         assert!(a.expect_known(&["bad"]).is_ok());
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        let e = Args::parse(vec!["x", "--verbose=1"], &["verbose"]).unwrap_err();
+        assert!(e.0.contains("does not take a value"), "{}", e.0);
+        // Non-switch options still accept the = form.
+        let a = Args::parse(vec!["x", "--out=res.csv"], &["verbose"]).unwrap();
+        assert_eq!(a.get("out"), Some("res.csv"));
+    }
+
+    #[test]
+    fn inapplicable_switch_detected() {
+        let a = Args::parse(vec!["x", "--all", "--verbose"], &["all", "verbose"]).unwrap();
+        assert!(a.expect_switches(&["verbose"]).is_err());
+        assert!(a.expect_switches(&["all", "verbose"]).is_ok());
+        assert!(a.expect_switches(&[]).is_err());
     }
 }

@@ -1,0 +1,340 @@
+//! Deterministic sweep-result emitters.
+//!
+//! [`CsvEmitter`] and [`JsonEmitter`] stream [`CellResult`]s as they
+//! are delivered (the sweep runner already reorders completions into
+//! cell order), producing byte-identical artifacts for any `--jobs`
+//! value: per-cell wall times are deliberately not emitted, and every
+//! number is formatted with Rust's deterministic shortest-round-trip
+//! `Display`. [`summary`] condenses a finished sweep into a
+//! [`metrics::Exhibit`] (geomean speedup per machine × schedule kind)
+//! so sweep output plugs into the same table/CSV tooling as the paper
+//! figures.
+
+use std::io::{self, Write};
+
+use super::CellResult;
+use crate::metrics::Exhibit;
+use crate::schedule::Kind;
+use crate::util::stats;
+use crate::util::table::{f, x, Align, Table};
+
+/// Column header shared by the CSV emitter and its tests.
+pub const CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,m,n,k,kind,\
+makespan,speedup,gemm_leg,comm_leg,gemm_cil,comm_cil,n_tasks,is_pick,is_oracle";
+
+/// RFC-4180-ish quoting for the free-form name fields (CLI-produced
+/// names are comma-free, but `Scenario::new` is public API).
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// CSV rows (one per schedule kind) for a single cell.
+pub fn csv_rows(c: &CellResult) -> String {
+    let mut out = String::new();
+    for r in &c.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            csv_escape(&c.scenario),
+            csv_escape(&c.machine_name),
+            c.topology,
+            c.ngpus,
+            c.mech,
+            c.collective,
+            c.m,
+            c.n,
+            c.k,
+            r.kind.name(),
+            r.makespan,
+            r.speedup,
+            r.gemm_leg,
+            r.comm_leg,
+            r.gemm_cil,
+            r.comm_cil,
+            r.n_tasks,
+            r.is_pick,
+            r.is_oracle,
+        ));
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One cell as a JSON object (rows nested under `"schedules"`).
+pub fn json_cell(c: &CellResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
+         \"mech\":\"{}\",\"collective\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\
+         \"heuristic_pick\":\"{}\",\"oracle\":{},\"ideal_speedup\":{},\"schedules\":[",
+        json_escape(&c.scenario),
+        json_escape(&c.machine_name),
+        c.topology,
+        c.ngpus,
+        c.mech,
+        c.collective,
+        c.m,
+        c.n,
+        c.k,
+        c.pick.name(),
+        match c.oracle {
+            Some(k) => format!("\"{}\"", k.name()),
+            None => "null".to_string(),
+        },
+        c.ideal_speedup,
+    ));
+    for (i, r) in c.rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"kind\":\"{}\",\"makespan\":{},\"speedup\":{},\"gemm_leg\":{},\
+             \"comm_leg\":{},\"gemm_cil\":{},\"comm_cil\":{},\"n_tasks\":{},\
+             \"is_pick\":{},\"is_oracle\":{}}}",
+            r.kind.name(),
+            r.makespan,
+            r.speedup,
+            r.gemm_leg,
+            r.comm_leg,
+            r.gemm_cil,
+            r.comm_cil,
+            r.n_tasks,
+            r.is_pick,
+            r.is_oracle,
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Streams CSV rows cell by cell (header written on construction).
+pub struct CsvEmitter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> CsvEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<CsvEmitter<W>> {
+        writeln!(w, "{CSV_HEADER}")?;
+        Ok(CsvEmitter { w })
+    }
+
+    pub fn cell(&mut self, c: &CellResult) -> io::Result<()> {
+        self.w.write_all(csv_rows(c).as_bytes())
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Streams a JSON array of cell objects, one per delivered cell.
+pub struct JsonEmitter<W: Write> {
+    w: W,
+    count: usize,
+}
+
+impl<W: Write> JsonEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<JsonEmitter<W>> {
+        w.write_all(b"[")?;
+        Ok(JsonEmitter { w, count: 0 })
+    }
+
+    pub fn cell(&mut self, c: &CellResult) -> io::Result<()> {
+        if self.count > 0 {
+            self.w.write_all(b",")?;
+        }
+        self.w.write_all(b"\n")?;
+        self.w.write_all(json_cell(c).as_bytes())?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.write_all(b"\n]\n")?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Condense a finished sweep into an exhibit: geomean speedup per
+/// machine × schedule kind, plus heuristic hit rates per machine.
+pub fn summary(cells: &[CellResult]) -> Exhibit {
+    let mut machines: Vec<String> = Vec::new();
+    for c in cells {
+        if !machines.contains(&c.machine_name) {
+            machines.push(c.machine_name.clone());
+        }
+    }
+    let kinds: Vec<Kind> = match cells.first() {
+        Some(c) => c.rows.iter().map(|r| r.kind).collect(),
+        None => Vec::new(),
+    };
+
+    let mut table = {
+        let mut headers = vec!["machine".to_string(), "cells".to_string()];
+        headers.extend(kinds.iter().map(|k| k.name().to_string()));
+        headers.push("hit rate".to_string());
+        Table::new(headers).align(0, Align::Left)
+    };
+    let mut summaries = Vec::new();
+    for mach in &machines {
+        let group: Vec<&CellResult> = cells.iter().filter(|c| &c.machine_name == mach).collect();
+        let mut row = vec![mach.clone(), group.len().to_string()];
+        for &kind in &kinds {
+            let speedups: Vec<f64> = group
+                .iter()
+                .filter_map(|c| c.rows.iter().find(|r| r.kind == kind))
+                .map(|r| r.speedup)
+                .collect();
+            let g = stats::geomean(&speedups);
+            row.push(x(g));
+            if kind.is_ficco() {
+                summaries.push((format!("geomean_{}_{}", mach, kind.name()), g));
+            }
+        }
+        // A cell is scoreable only when the oracle is meaningful: the
+        // oracle is argmin over *evaluated* FiCCO kinds, so comparing
+        // it against the pick requires the full FiCCO family to have
+        // run (a one-kind `--kinds` filter would make every surviving
+        // cell a trivial hit) and the pick itself to be among the
+        // evaluated kinds.
+        fn scoreable(c: &CellResult) -> bool {
+            c.oracle.is_some()
+                && Kind::FICCO
+                    .iter()
+                    .all(|k| c.rows.iter().any(|r| r.kind == *k))
+                && c.rows.iter().any(|r| r.kind == c.pick)
+        }
+        let hits = group
+            .iter()
+            .filter(|c| scoreable(c) && c.oracle == Some(c.pick))
+            .count();
+        let scored = group.iter().filter(|c| scoreable(c)).count();
+        // No scoreable cells (pick filtered out everywhere) is "no
+        // data", not a 0% hit rate — print n/a and omit the summary.
+        if scored == 0 {
+            row.push("n/a".to_string());
+        } else {
+            let rate = hits as f64 / scored as f64;
+            row.push(f(100.0 * rate, 0));
+            summaries.push((format!("hit_rate_{mach}"), rate));
+        }
+        table.row(row);
+    }
+    Exhibit {
+        title: "Sweep summary: geomean speedup over serial baseline",
+        table,
+        summaries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{eval_cell, SweepSpec};
+    use crate::hw::Machine;
+    use crate::schedule::Scenario;
+    use crate::sim::CommMech;
+
+    fn results() -> Vec<CellResult> {
+        let spec = SweepSpec {
+            scenarios: vec![Scenario::new("t", 8192, 512, 1024)],
+            kinds: vec![Kind::UniformFused1D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+        };
+        spec.cells().iter().map(eval_cell).collect()
+    }
+
+    #[test]
+    fn csv_shape_matches_header() {
+        let rs = results();
+        let ncols = CSV_HEADER.split(',').count();
+        for line in csv_rows(&rs[0]).lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+    }
+
+    #[test]
+    fn emitters_stream_and_terminate() {
+        let rs = results();
+        let mut csv = CsvEmitter::new(Vec::new()).unwrap();
+        let mut json = JsonEmitter::new(Vec::new()).unwrap();
+        for c in &rs {
+            csv.cell(c).unwrap();
+            json.cell(c).unwrap();
+        }
+        let csv = String::from_utf8(csv.finish().unwrap()).unwrap();
+        let json = String::from_utf8(json.finish().unwrap()).unwrap();
+        assert!(csv.starts_with("scenario,machine"));
+        assert_eq!(csv.lines().count(), 1 + rs[0].rows.len());
+        assert!(json.starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"heuristic_pick\""));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
+    }
+
+    #[test]
+    fn csv_escapes_awkward_names() {
+        assert_eq!(csv_escape("g1"), "g1");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("q\"q"), "\"q\"\"q\"");
+        // A comma-bearing scenario name keeps the column count stable.
+        let spec = SweepSpec {
+            scenarios: vec![Scenario::new("odd,name", 8192, 512, 1024)],
+            kinds: vec![Kind::UniformFused1D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+        };
+        let r = eval_cell(&spec.cells()[0]);
+        let ncols = CSV_HEADER.split(',').count();
+        for line in csv_rows(&r).lines() {
+            // Count columns respecting quotes.
+            let mut cols = 1;
+            let mut in_quotes = false;
+            for ch in line.chars() {
+                match ch {
+                    '"' => in_quotes = !in_quotes,
+                    ',' if !in_quotes => cols += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(cols, ncols, "{line}");
+        }
+    }
+
+    #[test]
+    fn summary_has_machine_rows_and_geomeans() {
+        let rs = results();
+        let e = summary(&rs);
+        assert_eq!(e.table.n_rows(), 1);
+        let g = e.summary("geomean_mi300x-8_uniform-fused-1D");
+        assert!(g > 0.0);
+    }
+}

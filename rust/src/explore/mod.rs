@@ -1,0 +1,639 @@
+//! Parallel design-space sweep engine.
+//!
+//! The paper's thesis is that FiCCO "opens up a wider design space of
+//! execution schedules than possible at shard-level alone" — which
+//! only shows when the scenario × schedule × machine × mechanism ×
+//! GPU-count space is swept *jointly*. This module turns that product
+//! into an explicit work list and evaluates it concurrently:
+//!
+//! - [`SweepSpec`] names the axes: scenarios (Table I rows, synthetic
+//!   suites, or custom shapes), schedule [`Kind`]s, machine presets
+//!   (see [`Machine::preset_names`]), communication mechanisms, and
+//!   GPU counts.
+//! - [`SweepSpec::cells`] flattens the product into ordered
+//!   [`Cell`]s; each cell is one (scenario, machine, mech, ngpus)
+//!   point evaluated across every requested schedule kind (the serial
+//!   baseline is always included as the speedup reference).
+//! - [`run`] evaluates cells on a worker pool (std threads; results
+//!   return over an mpsc channel). The fluid simulator is pure, so
+//!   cells are embarrassingly parallel; a reorder buffer delivers
+//!   results to the caller in deterministic cell order regardless of
+//!   `jobs`, which is what makes the CSV/JSON emitters ([`emit`])
+//!   byte-stable under any parallelism.
+//!
+//! Per-cell wall time is measured ([`CellResult::eval_seconds`]) but
+//! deliberately excluded from the emitted artifacts so output files
+//! are reproducible.
+
+pub mod emit;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::hw::Machine;
+use crate::schedule::exec::ScenarioEval;
+use crate::schedule::{Kind, Scenario};
+use crate::sim::CommMech;
+use crate::workloads;
+
+/// The axes of one sweep: the cartesian product of everything listed.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Base scenarios (name, GEMM shape, collective). The mechanism
+    /// and GPU count fields are overridden per cell.
+    pub scenarios: Vec<Scenario>,
+    /// Schedule kinds to evaluate. [`Kind::Baseline`] is implied.
+    pub kinds: Vec<Kind>,
+    /// Named machine presets.
+    pub machines: Vec<(String, Machine)>,
+    pub mechs: Vec<CommMech>,
+    /// GPU-count overrides; empty means each machine's native count.
+    pub gpu_counts: Vec<usize>,
+}
+
+impl SweepSpec {
+    /// The full paper suite: all Table I scenarios × every schedule
+    /// kind × every machine preset × both mechanisms at native GPU
+    /// counts.
+    pub fn full_paper_suite() -> SweepSpec {
+        SweepSpec {
+            scenarios: workloads::table1().iter().map(|r| r.scenario()).collect(),
+            kinds: Kind::ALL.to_vec(),
+            machines: Machine::preset_names()
+                .iter()
+                .map(|&n| (n.to_string(), Machine::preset(n).unwrap()))
+                .collect(),
+            mechs: vec![CommMech::Dma, CommMech::Kernel],
+            gpu_counts: Vec::new(),
+        }
+    }
+
+    /// Build a spec from CLI-style comma-separated filters. Accepted:
+    /// - scenarios: `table1`, `g1,g5,g13`, `synth:COUNT:SEED`
+    /// - kinds: `all` or schedule names (`uniform-fused-1D`, ...)
+    /// - machines: `all` or preset names (`mi300x-8`, ...)
+    /// - mechs: `dma`, `rccl` (alias `kernel`), or `dma,rccl`
+    /// - gpus: `native` or counts like `4,8`
+    pub fn from_filters(
+        scenarios: &str,
+        kinds: &str,
+        machines: &str,
+        mechs: &str,
+        gpus: &str,
+    ) -> Result<SweepSpec, String> {
+        let mut spec = SweepSpec {
+            scenarios: Vec::new(),
+            kinds: Vec::new(),
+            machines: Vec::new(),
+            mechs: Vec::new(),
+            gpu_counts: Vec::new(),
+        };
+
+        for part in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if part == "table1" {
+                spec.scenarios
+                    .extend(workloads::table1().iter().map(|r| r.scenario()));
+            } else if let Some(rest) = part.strip_prefix("synth:") {
+                let (count, seed) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad synth filter '{part}' (want synth:COUNT:SEED)"))?;
+                let count: usize = count
+                    .parse()
+                    .map_err(|_| format!("bad synth count in '{part}'"))?;
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("bad synth seed in '{part}'"))?;
+                spec.scenarios
+                    .extend(workloads::synthetic_scenarios(seed, count));
+            } else if let Some(sc) = workloads::by_name(part) {
+                spec.scenarios.push(sc);
+            } else {
+                return Err(format!(
+                    "unknown scenario '{part}' (try one of {}, table1, synth:N:SEED)",
+                    workloads::names().join("/")
+                ));
+            }
+        }
+        // Drop exact duplicates (e.g. `--scenarios table1,g1`) so no
+        // scenario is double-weighted in the emitted rows and
+        // summary geomeans. Identity is (name, shape, collective):
+        // same-named synthetic scenarios from different seeds differ
+        // in shape and are kept.
+        let mut uniq: Vec<Scenario> = Vec::with_capacity(spec.scenarios.len());
+        for sc in spec.scenarios {
+            let dup = uniq
+                .iter()
+                .any(|u| u.name == sc.name && u.gemm == sc.gemm && u.collective == sc.collective);
+            if !dup {
+                uniq.push(sc);
+            }
+        }
+        spec.scenarios = uniq;
+
+        for part in kinds.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if part == "all" {
+                spec.kinds.extend(Kind::ALL);
+            } else if part == "ficco" {
+                spec.kinds.extend(Kind::FICCO);
+            } else {
+                spec.kinds.push(
+                    Kind::parse(part).ok_or_else(|| format!("unknown schedule kind '{part}'"))?,
+                );
+            }
+        }
+
+        for part in machines.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if part == "all" {
+                for &n in Machine::preset_names() {
+                    if !spec.machines.iter().any(|(have, _)| have == n) {
+                        spec.machines
+                            .push((n.to_string(), Machine::preset(n).unwrap()));
+                    }
+                }
+            } else {
+                let m = Machine::preset(part).ok_or_else(|| {
+                    format!(
+                        "unknown machine '{part}' (presets: {})",
+                        Machine::preset_names().join(", ")
+                    )
+                })?;
+                if !spec.machines.iter().any(|(have, _)| have == part) {
+                    spec.machines.push((part.to_string(), m));
+                }
+            }
+        }
+
+        for part in mechs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let mech =
+                CommMech::parse(part).ok_or_else(|| format!("unknown mechanism '{part}'"))?;
+            if !spec.mechs.contains(&mech) {
+                spec.mechs.push(mech);
+            }
+        }
+
+        let mut saw_native = false;
+        for part in gpus.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if part == "native" {
+                saw_native = true;
+                continue;
+            }
+            let n: usize = part
+                .parse()
+                .map_err(|_| format!("bad GPU count '{part}'"))?;
+            if n < 2 {
+                return Err(format!("GPU count must be >= 2, got {n}"));
+            }
+            if !spec.gpu_counts.contains(&n) {
+                spec.gpu_counts.push(n);
+            }
+        }
+        if saw_native && !spec.gpu_counts.is_empty() {
+            return Err(
+                "cannot mix 'native' with explicit GPU counts in --gpus (native varies per \
+                 machine; list the counts you want instead)"
+                    .into(),
+            );
+        }
+
+        if spec.scenarios.is_empty() {
+            return Err("no scenarios selected".into());
+        }
+        if spec.kinds.is_empty() {
+            return Err("no schedule kinds selected".into());
+        }
+        if spec.machines.is_empty() {
+            return Err("no machines selected".into());
+        }
+        if spec.mechs.is_empty() {
+            return Err("no mechanisms selected".into());
+        }
+        Ok(spec)
+    }
+
+    /// Requested kinds with the serial baseline first and duplicates
+    /// removed (evaluation order within a cell).
+    fn eval_kinds(&self) -> Vec<Kind> {
+        let mut kinds = vec![Kind::Baseline];
+        for &k in &self.kinds {
+            if !kinds.contains(&k) {
+                kinds.push(k);
+            }
+        }
+        kinds
+    }
+
+    /// Flatten the product into ordered evaluation cells:
+    /// machine-major, then GPU count, then mechanism, then scenario.
+    pub fn cells(&self) -> Vec<Cell> {
+        let kinds = self.eval_kinds();
+        let mut cells = Vec::new();
+        for (machine_name, machine) in &self.machines {
+            let counts: Vec<usize> = if self.gpu_counts.is_empty() {
+                vec![machine.ngpus()]
+            } else {
+                self.gpu_counts.clone()
+            };
+            for &ngpus in &counts {
+                for &mech in &self.mechs {
+                    for base in &self.scenarios {
+                        let mut machine = machine.clone();
+                        machine.topo.ngpus = ngpus;
+                        let mut scenario = base.clone();
+                        scenario.ngpus = ngpus;
+                        scenario.mech = mech;
+                        cells.push(Cell {
+                            index: cells.len(),
+                            machine_name: machine_name.clone(),
+                            machine,
+                            scenario,
+                            kinds: kinds.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Number of evaluation cells, without materializing them.
+    pub fn n_cells(&self) -> usize {
+        let counts_per_machine = if self.gpu_counts.is_empty() {
+            1
+        } else {
+            self.gpu_counts.len()
+        };
+        self.machines.len() * counts_per_machine * self.mechs.len() * self.scenarios.len()
+    }
+
+    /// Number of (cell × kind) points the sweep will evaluate.
+    pub fn n_points(&self) -> usize {
+        self.n_cells() * self.eval_kinds().len()
+    }
+}
+
+/// One evaluation unit: a scenario pinned to a machine, mechanism and
+/// GPU count, measured across `kinds`.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub index: usize,
+    pub machine_name: String,
+    pub machine: Machine,
+    pub scenario: Scenario,
+    pub kinds: Vec<Kind>,
+}
+
+/// One schedule kind's measurements within a cell.
+#[derive(Debug, Clone)]
+pub struct KindRow {
+    pub kind: Kind,
+    pub makespan: f64,
+    /// Baseline makespan / this makespan.
+    pub speedup: f64,
+    pub gemm_leg: f64,
+    pub comm_leg: f64,
+    pub gemm_cil: f64,
+    pub comm_cil: f64,
+    pub n_tasks: usize,
+    /// This kind is the heuristic's static pick for the cell.
+    pub is_pick: bool,
+    /// This kind is the simulated-best FiCCO schedule for the cell.
+    pub is_oracle: bool,
+}
+
+/// Deterministic result of one cell (plus its non-deterministic wall
+/// time, which the emitters exclude).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub index: usize,
+    pub machine_name: String,
+    pub topology: String,
+    pub ngpus: usize,
+    pub scenario: String,
+    pub collective: String,
+    pub mech: String,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Heuristic pick (recorded even when not among evaluated kinds).
+    pub pick: Kind,
+    /// Simulated-best FiCCO kind, when any FiCCO kind was evaluated.
+    pub oracle: Option<Kind>,
+    pub ideal_speedup: f64,
+    pub rows: Vec<KindRow>,
+    pub eval_seconds: f64,
+}
+
+/// Evaluate one cell (generate → validate → simulate each kind).
+pub fn eval_cell(cell: &Cell) -> CellResult {
+    let t0 = Instant::now();
+    let machine = &cell.machine;
+    let sc = &cell.scenario;
+    let pick = crate::heuristics::pick(machine, sc).pick;
+    let ev = ScenarioEval::run(machine, sc, &cell.kinds);
+    let oracle = if cell.kinds.iter().any(|k| k.is_ficco()) {
+        Some(ev.best_ficco().0)
+    } else {
+        None
+    };
+    let rows = ev
+        .results
+        .iter()
+        .map(|r| KindRow {
+            kind: r.kind,
+            makespan: r.makespan,
+            speedup: ev.baseline / r.makespan,
+            gemm_leg: r.gemm_leg,
+            comm_leg: r.comm_leg,
+            gemm_cil: r.gemm_cil,
+            comm_cil: r.comm_cil,
+            n_tasks: r.n_tasks,
+            is_pick: r.kind == pick,
+            is_oracle: oracle == Some(r.kind),
+        })
+        .collect();
+    CellResult {
+        index: cell.index,
+        machine_name: cell.machine_name.clone(),
+        topology: machine.topo.kind.name().to_string(),
+        ngpus: sc.ngpus,
+        scenario: sc.name.clone(),
+        collective: sc.collective.name().to_string(),
+        mech: sc.mech.name().to_string(),
+        m: sc.gemm.m,
+        n: sc.gemm.n,
+        k: sc.gemm.k,
+        pick,
+        oracle,
+        ideal_speedup: ev.ideal_speedup(),
+        rows,
+        eval_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Timing and results of one sweep run.
+#[derive(Debug)]
+pub struct SweepReport {
+    pub jobs: usize,
+    /// Cell results in deterministic cell order.
+    pub cells: Vec<CellResult>,
+    pub wall_seconds: f64,
+}
+
+impl SweepReport {
+    pub fn n_points(&self) -> usize {
+        self.cells.iter().map(|c| c.rows.len()).sum()
+    }
+
+    /// Sum of per-cell evaluation times (the serial-work proxy the
+    /// `sweep_throughput` bench compares wall time against).
+    pub fn cpu_seconds(&self) -> f64 {
+        self.cells.iter().map(|c| c.eval_seconds).sum()
+    }
+}
+
+/// Hard ceiling on sweep worker threads: far above any useful host
+/// parallelism, low enough that a huge `--jobs` cannot exhaust OS
+/// thread limits (each worker is a real `std::thread`).
+pub const MAX_JOBS: usize = 256;
+
+/// Worker count actually used for a sweep of `n_cells` cells: at
+/// least one thread, never more threads than cells, capped at
+/// [`MAX_JOBS`]. Shared by [`run`] and the CLI's progress header so
+/// they can't disagree.
+pub fn clamp_jobs(jobs: usize, n_cells: usize) -> usize {
+    jobs.max(1).min(n_cells.max(1)).min(MAX_JOBS)
+}
+
+/// Run the sweep on `jobs` worker threads. `on_cell` is invoked once
+/// per cell *in deterministic cell order* as soon as the ordered
+/// prefix is complete — out-of-order completions are buffered — so
+/// incremental emitters produce identical bytes for any `jobs`.
+///
+/// `on_cell` returns whether to continue: `false` cancels the sweep
+/// (e.g. an emitter hit ENOSPC) — dispatch stops, in-flight cells
+/// are allowed to finish but are discarded, and the report carries
+/// exactly the cells that were delivered to `on_cell` (so a
+/// cancelled report is as deterministic as a completed one).
+pub fn run<F: FnMut(&CellResult) -> bool>(
+    spec: &SweepSpec,
+    jobs: usize,
+    mut on_cell: F,
+) -> SweepReport {
+    let cells = spec.cells();
+    let n = cells.len();
+    let jobs = clamp_jobs(jobs, n);
+    let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+
+    let mut slots: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
+    let mut cancelled = false;
+    let mut next = 0usize;
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<CellResult>();
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cells = &cells;
+            let cursor = &cursor;
+            let stop = &stop;
+            s.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send(eval_cell(&cells[i])).is_err() {
+                    // Receiver bailed: the sweep was cancelled.
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        'recv: for result in rx {
+            let idx = result.index;
+            slots[idx] = Some(result);
+            while next < n {
+                // Borrow rather than take: the slot stays filled for
+                // the final ordered collection below.
+                match &slots[next] {
+                    Some(ready) => {
+                        let keep_going = on_cell(ready);
+                        next += 1;
+                        if !keep_going {
+                            cancelled = true;
+                            // Stop workers before they dispatch
+                            // another (discarded) cell; dropping the
+                            // receiver below backstops the in-flight
+                            // sends.
+                            stop.store(true, Ordering::Relaxed);
+                            break 'recv;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Leaving the loop drops the receiver; workers stop taking
+        // new cells on their next send. The scope joins them.
+    });
+
+    let cells: Vec<CellResult> = if cancelled {
+        // Exactly the delivered prefix: completed-but-undelivered
+        // stragglers are discarded so the cancelled report does not
+        // depend on worker timing.
+        slots.into_iter().take(next).flatten().collect()
+    } else {
+        slots
+            .into_iter()
+            .map(|s| s.expect("every sweep cell completes"))
+            .collect()
+    };
+    SweepReport {
+        jobs,
+        cells,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            scenarios: vec![
+                Scenario::new("a", 8192, 512, 1024),
+                Scenario::new("b", 4096, 256, 8192),
+            ],
+            kinds: vec![Kind::UniformFused1D, Kind::UniformFused2D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma, CommMech::Kernel],
+            gpu_counts: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn cells_enumerate_the_product_in_order() {
+        let spec = tiny_spec();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            // Baseline implied and always first.
+            assert_eq!(c.kinds[0], Kind::Baseline);
+            assert_eq!(c.kinds.len(), 3);
+        }
+        // Mechanism-major over scenarios.
+        assert_eq!(cells[0].scenario.mech, CommMech::Dma);
+        assert_eq!(cells[2].scenario.mech, CommMech::Kernel);
+        assert_eq!(spec.n_cells(), cells.len());
+        assert_eq!(spec.n_points(), 12);
+    }
+
+    #[test]
+    fn gpu_count_override_resizes_machine_and_scenario() {
+        let mut spec = tiny_spec();
+        spec.gpu_counts = vec![4];
+        for c in spec.cells() {
+            assert_eq!(c.machine.ngpus(), 4);
+            assert_eq!(c.scenario.ngpus, 4);
+        }
+    }
+
+    #[test]
+    fn eval_cell_marks_pick_and_oracle() {
+        let spec = tiny_spec();
+        let r = eval_cell(&spec.cells()[0]);
+        assert_eq!(r.rows.len(), 3);
+        assert!((r.rows[0].speedup - 1.0).abs() < 1e-12, "baseline speedup");
+        assert_eq!(r.rows.iter().filter(|row| row.is_oracle).count(), 1);
+        assert!(r.oracle.is_some());
+        assert!(r.rows.iter().all(|row| row.makespan > 0.0));
+    }
+
+    #[test]
+    fn run_delivers_cells_in_order() {
+        let spec = tiny_spec();
+        let mut seen = Vec::new();
+        let report = run(&spec, 3, |c| {
+            seen.push(c.index);
+            true
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(report.cells.len(), 4);
+        for (i, c) in report.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn callback_false_cancels_the_sweep() {
+        let spec = tiny_spec();
+        let mut delivered = 0usize;
+        let report = run(&spec, 2, |_| {
+            delivered += 1;
+            false
+        });
+        assert_eq!(delivered, 1, "no deliveries after cancellation");
+        // The cancelled report carries exactly the delivered prefix —
+        // completed-but-undelivered stragglers must not leak in, or
+        // the report would depend on worker timing.
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.cells[0].index, 0);
+    }
+
+    #[test]
+    fn filters_build_specs() {
+        let spec = SweepSpec::from_filters("g1,g5", "ficco", "mi300x-8,pcie-gen4-4", "dma", "")
+            .unwrap();
+        assert_eq!(spec.scenarios.len(), 2);
+        assert_eq!(spec.kinds.len(), 4);
+        assert_eq!(spec.machines.len(), 2);
+        // Native counts: 8 for the mesh, 4 for the PCIe box.
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].scenario.ngpus, 8);
+        assert_eq!(cells[2].scenario.ngpus, 4);
+
+        assert!(SweepSpec::from_filters("gX", "all", "all", "dma", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "all", "warp", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "nope", "dma", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "all", "dma", "1").is_err());
+        assert!(
+            SweepSpec::from_filters("g1", "all", "all", "dma", "native,4").is_err(),
+            "mixing native with explicit counts must be rejected"
+        );
+        let synth = SweepSpec::from_filters("synth:3:7", "all", "mi300x-8", "dma", "8").unwrap();
+        assert_eq!(synth.scenarios.len(), 3);
+    }
+
+    #[test]
+    fn filters_drop_duplicates_on_every_axis() {
+        let spec =
+            SweepSpec::from_filters("table1,g1", "all", "all,mi300x-8", "dma,dma", "8,8").unwrap();
+        assert_eq!(spec.scenarios.len(), 16, "g1 must not be double-counted");
+        assert_eq!(spec.machines.len(), Machine::preset_names().len());
+        assert_eq!(spec.mechs.len(), 1);
+        assert_eq!(spec.gpu_counts.len(), 1);
+        // Distinct synthetic suites share names but differ in shape:
+        // both survive.
+        let two_suites =
+            SweepSpec::from_filters("synth:2:1,synth:2:2", "all", "mi300x-8", "dma", "").unwrap();
+        assert_eq!(two_suites.scenarios.len(), 4);
+    }
+
+    #[test]
+    fn full_paper_suite_covers_acceptance_axes() {
+        let spec = SweepSpec::full_paper_suite();
+        assert_eq!(spec.scenarios.len(), 16);
+        assert_eq!(spec.kinds.len(), 6);
+        assert!(spec.machines.len() >= 3);
+        assert_eq!(spec.mechs.len(), 2);
+        // 16 scenarios x >=4 machines x 2 mechs x 6 kinds.
+        assert!(spec.n_points() >= 16 * 3 * 2 * 6);
+    }
+}

@@ -109,6 +109,58 @@ impl GpuSpec {
         }
     }
 
+    /// NVIDIA H100 SXM (public numbers; bf16 dense tensor peak
+    /// 989.4 TFLOP/s, 3.35 TB/s HBM3, 132 SMs modelled as CUs, 50 MiB
+    /// L2). Copy engines stand in for SDMA; a single engine cannot
+    /// saturate the 450 GB/s NVLink pipe, so DMA transfers are
+    /// engine-capped — the switch-topology counterpoint to the MI300X
+    /// mesh in §VIII-A.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "h100".into(),
+            cus: 132,
+            peak_bf16: 989.4e12,
+            peak_f32: 66.9e12,
+            hbm_bw: 3.35e12,
+            llc_bytes: 50 << 20,
+            dma_engines: 7,
+            dma_engine_bw: 64e9,
+            kernel_launch: 6e-6,
+            comm_kernel_cus: 16,
+            comm_cache_pollution: 2.5,
+            copy_kernel_cus: 24,
+            hbm_burst: 2.5,
+            comm_hbm_amp: 6.0,
+            kernel_link_eff: 0.6,
+            dma_link_eff: 0.9,
+        }
+    }
+
+    /// AMD Instinct MI210-class part for the PCIe-attached box (bf16
+    /// peak 181 TFLOP/s, 1.6 TB/s HBM2e, 104 CUs, 8 MiB L2): a
+    /// low-bandwidth machine whose balance point sits far below the
+    /// MI300X's, moving the heuristic threshold the sweep explores.
+    pub fn mi210() -> GpuSpec {
+        GpuSpec {
+            name: "mi210".into(),
+            cus: 104,
+            peak_bf16: 181.0e12,
+            peak_f32: 22.6e12,
+            hbm_bw: 1.6e12,
+            llc_bytes: 8 << 20,
+            dma_engines: 8,
+            dma_engine_bw: 25e9,
+            kernel_launch: 10e-6,
+            comm_kernel_cus: 8,
+            comm_cache_pollution: 2.5,
+            copy_kernel_cus: 16,
+            hbm_burst: 2.5,
+            comm_hbm_amp: 6.5,
+            kernel_link_eff: 0.35,
+            dma_link_eff: 0.9,
+        }
+    }
+
     pub fn peak_flops(&self, dtype: DType) -> f64 {
         match dtype {
             DType::Bf16 | DType::F16 => self.peak_bf16,
@@ -156,6 +208,19 @@ mod tests {
     fn dtype_bytes() {
         assert_eq!(DType::Bf16.bytes(), 2);
         assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn preset_gpus_have_distinct_balance_points() {
+        // The sweep relies on the presets spanning the balance axis
+        // the heuristic thresholds on (FLOP per HBM byte at bf16).
+        let balance = |g: &GpuSpec| g.peak_flops(DType::Bf16) / g.hbm_bw;
+        let mi300x = balance(&GpuSpec::mi300x());
+        let h100 = balance(&GpuSpec::h100());
+        let mi210 = balance(&GpuSpec::mi210());
+        assert!(mi210 < mi300x, "mi210 {mi210} vs mi300x {mi300x}");
+        assert!((100.0..500.0).contains(&h100), "h100 balance {h100}");
+        assert!(GpuSpec::mi210().llc_bytes < GpuSpec::h100().llc_bytes);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! thresholds on), per-link vs aggregate network bandwidth (the
 //! shard-overlap-vs-FiCCO distinction), and DMA engines as a resource
 //! distinct from compute cores (the contention distinction).
+//!
+//! Beyond the paper's MI300X-8 testbed, the preset registry
+//! ([`Machine::preset`]/[`Machine::preset_names`]) exposes an
+//! H100-DGX-like switched machine and a PCIe-Gen4-class box, so the
+//! `ficco sweep` design-space exploration exercises the topology and
+//! machine-balance axes the schedule-selection heuristic derives its
+//! threshold from.
 
 mod gpu;
 mod topology;
@@ -42,6 +49,43 @@ impl Machine {
         }
     }
 
+    /// H100-DGX-like machine: 8 GPUs behind an NVSwitch-style fabric
+    /// (450 GB/s per-GPU pipe). A single P2P stream gets the full NIC
+    /// rate, but DMA transfers are copy-engine-capped — the opposite
+    /// trade-off to the MI300X mesh.
+    pub fn h100_dgx_8() -> Machine {
+        Machine {
+            gpu: GpuSpec::h100(),
+            topo: Topology::switch(8, 450e9, 1.5e-6),
+        }
+    }
+
+    /// Low-bandwidth PCIe-Gen4-class box: 4 MI210-class GPUs peering
+    /// through the root complex at ~25 GB/s with high latency. Comm
+    /// legs dominate here, stressing the DIL-tolerant schedules.
+    pub fn pcie_gen4_4() -> Machine {
+        Machine {
+            gpu: GpuSpec::mi210(),
+            topo: Topology::switch(4, 25e9, 5.0e-6),
+        }
+    }
+
+    /// Names accepted by [`Machine::preset`], in sweep order.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["mi300x-8", "h100-dgx-8", "pcie-gen4-4", "switch-8"]
+    }
+
+    /// Look up a machine preset by name (see [`Machine::preset_names`]).
+    pub fn preset(name: &str) -> Option<Machine> {
+        match name {
+            "mi300x-8" => Some(Machine::mi300x_8()),
+            "h100-dgx-8" => Some(Machine::h100_dgx_8()),
+            "pcie-gen4-4" => Some(Machine::pcie_gen4_4()),
+            "switch-8" => Some(Machine::switch_8()),
+            _ => None,
+        }
+    }
+
     pub fn ngpus(&self) -> usize {
         self.topo.ngpus
     }
@@ -71,6 +115,32 @@ mod tests {
         // MI300X balance point is a few hundred bf16 FLOPs per byte.
         let b = m.balance(DType::Bf16);
         assert!(b > 100.0 && b < 500.0, "balance={b}");
+    }
+
+    #[test]
+    fn preset_registry_resolves_all_names() {
+        for name in Machine::preset_names() {
+            let m = Machine::preset(name).unwrap_or_else(|| panic!("preset {name}"));
+            assert!(m.ngpus() >= 2, "{name}");
+            let b = m.balance(DType::Bf16);
+            assert!(b > 50.0 && b < 1000.0, "{name} balance {b}");
+        }
+        assert!(Machine::preset("nope").is_none());
+    }
+
+    #[test]
+    fn new_presets_span_the_design_axes() {
+        let mesh = Machine::mi300x_8();
+        let dgx = Machine::h100_dgx_8();
+        let pcie = Machine::pcie_gen4_4();
+        // Topology axis: mesh P2P idles links, switch does not.
+        assert!(mesh.topo.p2p_utilization() < 1.0);
+        assert!((dgx.topo.p2p_utilization() - 1.0).abs() < 1e-12);
+        // Bandwidth axis: the PCIe box is an order of magnitude slower.
+        assert!(pcie.topo.link_bw < mesh.topo.link_bw);
+        assert_eq!(pcie.ngpus(), 4);
+        // Balance axis: the PCIe part's knee sits below the MI300X's.
+        assert!(pcie.balance(DType::Bf16) < mesh.balance(DType::Bf16));
     }
 
     #[test]

@@ -14,12 +14,21 @@
 //!   transformer whose GEMMs are Pallas kernels to HLO text artifacts
 //!   loaded by [`runtime`].
 //!
+//! The design-space *exploration* the paper's title promises lives in
+//! [`explore`]: a parallel sweep engine that evaluates the scenario ×
+//! schedule × machine × mechanism × GPU-count product on a worker
+//! pool with deterministic, byte-stable CSV/JSON output (the `ficco
+//! sweep` subcommand). Machine presets beyond the paper's MI300X-8
+//! testbed — an H100-DGX-like switched node and a PCIe-Gen4-class
+//! box — are registered in [`hw`].
+//!
 //! See `DESIGN.md` for the full inventory and the experiment index.
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod explore;
 pub mod heuristics;
 pub mod hw;
 pub mod metrics;

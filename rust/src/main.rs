@@ -3,6 +3,16 @@
 //! Subcommands:
 //!   workloads                       list the Table I scenario suite
 //!   simulate   --scenario g5 ...    run all schedules for one scenario
+//!   sweep      [--jobs N] ...       parallel design-space sweep over
+//!                                   scenario x schedule x machine x
+//!                                   mech x GPU count, with
+//!                                   deterministic CSV/JSON output
+//!                                   (filters: --scenarios --kinds
+//!                                   --machines --mechs --gpus;
+//!                                   --out-dir results/sweep;
+//!                                   switches: --verbose prints
+//!                                   per-cell progress, --csv also
+//!                                   writes <out-dir>/summary.csv)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
 //!   characterize --what dil|comm-dil|cil
 //!   figures    [--out-dir results]  regenerate every paper exhibit
@@ -11,7 +21,10 @@
 //!                                   (real data through PJRT)
 //!   train      [--config FILE]      end-to-end training driver
 //!
-//! Global flags: --config FILE (machine preset), --gpus N, --mech dma|rccl.
+//! Global flags (single-scenario subcommands): --config FILE (machine
+//! preset), --gpus N, --mech dma|rccl. `sweep` instead takes the list
+//! filters above (--machines/--mechs/--gpus accept comma lists).
+//! Machine presets for sweeps: mi300x-8, h100-dgx-8, pcie-gen4-4, switch-8.
 
 use ficco::cli::Args;
 use ficco::hw::Machine;
@@ -65,11 +78,7 @@ fn scenario_from(args: &Args, machine: &Machine) -> Result<Scenario, Box<dyn std
     };
     sc.ngpus = machine.topo.ngpus;
     if let Some(mech) = args.get("mech") {
-        sc.mech = match mech {
-            "dma" => CommMech::Dma,
-            "rccl" | "kernel" => CommMech::Kernel,
-            other => return Err(format!("unknown --mech '{other}'").into()),
-        };
+        sc.mech = CommMech::parse(mech).ok_or_else(|| format!("unknown --mech '{mech}'"))?;
     }
     Ok(sc)
 }
@@ -78,6 +87,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     match args.subcommand.as_deref() {
         Some("workloads") => cmd_workloads(),
         Some("simulate") => cmd_simulate(args),
+        Some("sweep") => cmd_sweep(args),
         Some("heuristic") => cmd_heuristic(args),
         Some("characterize") => cmd_characterize(args),
         Some("figures") => cmd_figures(args),
@@ -87,7 +97,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         Some(other) => Err(format!("unknown subcommand '{other}'").into()),
         None => {
             println!("ficco {} — FiCCO: finer-grain compute-communication overlap", ficco::version());
-            println!("subcommands: workloads simulate heuristic characterize figures synth validate train");
+            println!("subcommands: workloads simulate sweep heuristic characterize figures synth validate train");
             Ok(())
         }
     }
@@ -149,6 +159,106 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// `ficco sweep`: evaluate the scenario × schedule × machine ×
+/// mechanism × GPU-count design space on a worker pool, streaming
+/// deterministic CSV/JSON to `--out-dir` and printing a geomean
+/// summary per machine. Defaults cover the full Table I suite on
+/// every machine preset with both mechanisms. Switches: `--verbose`
+/// prints per-cell progress with timings; `--csv` also writes the
+/// summary exhibit to `<out-dir>/summary.csv`.
+fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    args.expect_known(&[
+        "scenarios", "kinds", "machines", "mechs", "gpus", "jobs", "out-dir",
+    ])?;
+    args.expect_switches(&["verbose", "csv"])?;
+    if let Some(stray) = args.positional.first() {
+        // A bare token is always a mistake here (e.g. `--csv out.csv`
+        // where --csv is a switch, or a typo'd filter value).
+        return Err(format!("unexpected argument '{stray}' (sweep takes only --options)").into());
+    }
+    let spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("scenarios", "table1"),
+        args.get_or("kinds", "all"),
+        args.get_or("machines", "all"),
+        args.get_or("mechs", "dma,rccl"),
+        args.get_or("gpus", "native"),
+    )?;
+    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
+    let out_dir = args.get_or("out-dir", "results/sweep");
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = format!("{out_dir}/sweep.csv");
+    let json_path = format!("{out_dir}/sweep.json");
+
+    println!(
+        "sweep: {} cells / {} schedule points on {} worker thread{}",
+        spec.n_cells(),
+        spec.n_points(),
+        jobs,
+        if jobs == 1 { "" } else { "s" },
+    );
+
+    let mut csv = ficco::explore::emit::CsvEmitter::new(std::io::BufWriter::new(
+        std::fs::File::create(&csv_path)?,
+    ))?;
+    let mut json = ficco::explore::emit::JsonEmitter::new(std::io::BufWriter::new(
+        std::fs::File::create(&json_path)?,
+    ))?;
+    let verbose = args.has("verbose");
+    // Emitter I/O failures (e.g. ENOSPC) cancel the sweep — no point
+    // evaluating cells whose results cannot be written — and are
+    // reported through the normal CLI error path.
+    let mut write_err: Option<std::io::Error> = None;
+    let report = ficco::explore::run(&spec, jobs, |c| {
+        if let Err(e) = csv.cell(c).and_then(|()| json.cell(c)) {
+            write_err = Some(e);
+            return false;
+        }
+        if verbose {
+            let best = c
+                .rows
+                .iter()
+                .map(|r| r.speedup)
+                .fold(f64::NEG_INFINITY, f64::max);
+            println!(
+                "  [{:>4}] {:<8} {:<12} {:<5} {}g: best {} pick {} ({})",
+                c.index,
+                c.scenario,
+                c.machine_name,
+                c.mech,
+                c.ngpus,
+                x(best),
+                c.pick.name(),
+                ficco::util::human_time(c.eval_seconds),
+            );
+        }
+        true
+    });
+    if let Some(e) = write_err {
+        return Err(format!("writing sweep artifacts under {out_dir}: {e}").into());
+    }
+    csv.finish()?;
+    json.finish()?;
+
+    let exhibit = ficco::explore::emit::summary(&report.cells);
+    exhibit.print();
+    if args.has("csv") {
+        let summary_path = format!("{out_dir}/summary.csv");
+        exhibit.write_csv(&summary_path)?;
+        println!("  -> {summary_path}");
+    }
+    println!(
+        "{} points in {:.2}s wall ({:.2}s of evaluation across {} workers, {:.1} points/s)",
+        report.n_points(),
+        report.wall_seconds,
+        report.cpu_seconds(),
+        report.jobs,
+        report.n_points() as f64 / report.wall_seconds.max(1e-9),
+    );
+    println!("  -> {csv_path}");
+    println!("  -> {json_path}");
+    Ok(())
+}
+
 fn cmd_heuristic(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let machine = machine_from(args)?;
     if args.has("all") || args.get("scenario").is_none() {
@@ -204,7 +314,7 @@ fn cmd_figures(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         e.print();
         if args.has("csv") {
             let path = format!("{out_dir}/{name}.csv");
-            e.table.write_csv(&path)?;
+            e.write_csv(&path)?;
             println!("  -> {path}");
         }
     }

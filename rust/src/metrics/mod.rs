@@ -40,6 +40,12 @@ impl Exhibit {
         }
         println!();
     }
+
+    /// Write the exhibit's table as CSV (used by `figures --csv` and
+    /// the sweep summary).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        self.table.write_csv(path)
+    }
 }
 
 /// Fig 7 — GEMM DIL under 8-way / 64-way row- and column-sharding.

@@ -184,11 +184,17 @@ impl ScenarioEval {
         }
     }
 
+    /// The measured result for one kind, or `None` when that kind was
+    /// not among the evaluated set — the fallible companion to the
+    /// panicking [`ScenarioEval::speedup`] for callers that evaluate
+    /// a filtered subset of [`Kind`]s.
+    pub fn result(&self, kind: Kind) -> Option<&ExecResult> {
+        self.results.iter().find(|r| r.kind == kind)
+    }
+
     pub fn speedup(&self, kind: Kind) -> f64 {
         let r = self
-            .results
-            .iter()
-            .find(|r| r.kind == kind)
+            .result(kind)
             .unwrap_or_else(|| panic!("{} not evaluated", kind.name()));
         self.baseline / r.makespan
     }

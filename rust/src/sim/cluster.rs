@@ -25,6 +25,16 @@ impl CommMech {
             CommMech::Dma => "dma",
         }
     }
+
+    /// Parse a mechanism name as accepted by the CLI (`dma`, `rccl`,
+    /// alias `kernel`).
+    pub fn parse(s: &str) -> Option<CommMech> {
+        match s {
+            "dma" => Some(CommMech::Dma),
+            "rccl" | "kernel" => Some(CommMech::Kernel),
+            _ => None,
+        }
+    }
 }
 
 /// Simulator instantiated over a machine: resource ids, stream ids,

@@ -42,6 +42,12 @@ pub fn by_name(name: &str) -> Option<Scenario> {
         .map(|r| r.scenario())
 }
 
+/// All Table I scenario names, in table order (sweep filters and
+/// error messages).
+pub fn names() -> Vec<&'static str> {
+    table1().iter().map(|r| r.name).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,5 +58,13 @@ mod tests {
         assert_eq!(g1.gemm.m, 16384);
         assert_eq!(g1.gemm.k, 131072);
         assert!(by_name("g99").is_none());
+    }
+
+    #[test]
+    fn names_cover_table() {
+        let ns = names();
+        assert_eq!(ns.len(), 16);
+        assert_eq!(ns[0], "g1");
+        assert!(ns.iter().all(|n| by_name(n).is_some()));
     }
 }

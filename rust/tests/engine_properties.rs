@@ -1,0 +1,236 @@
+//! Property tests for the fluid discrete-event engine over random
+//! task DAGs: physical conservation laws and ordering invariants that
+//! must hold for *any* workload the schedule executor lowers onto it.
+//!
+//! - **Work conservation** — each resource's busy integral equals
+//!   Σ demand × work over the tasks that use it (rates integrate to
+//!   exactly the declared work, shared or not).
+//! - **Makespan ≥ critical path** — rates never exceed 1, so the
+//!   longest dependency/stream chain of (setup + work) lower-bounds
+//!   the makespan; so does each resource's total work / capacity.
+//! - **Ordering** — no task becomes ready before its dependencies
+//!   finish, stream order serializes, and every task's span covers
+//!   its setup latency plus its work.
+
+use ficco::sim::{Engine, Report, ResourceId, StreamId, TaskSpec};
+use ficco::util::prop::{self, Config};
+use ficco::util::rng::Rng;
+
+/// A randomly generated engine workload (indices, not handles, so the
+/// case is printable by the property driver on failure).
+#[derive(Debug, Clone)]
+struct DagCase {
+    caps: Vec<f64>,
+    n_streams: usize,
+    tasks: Vec<TaskCase>,
+}
+
+#[derive(Debug, Clone)]
+struct TaskCase {
+    stream: usize,
+    deps: Vec<usize>,
+    work: f64,
+    setup: f64,
+    demands: Vec<(usize, f64)>,
+}
+
+fn gen_dag(r: &mut Rng) -> DagCase {
+    let n_res = r.range(1, 4);
+    let caps: Vec<f64> = (0..n_res).map(|_| r.range_f64(1.0, 100.0)).collect();
+    let n_streams = r.range(1, 6);
+    let n_tasks = r.range(1, 31);
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for i in 0..n_tasks {
+        let mut deps = Vec::new();
+        if i > 0 {
+            for d in 0..i {
+                if r.bool(2.0 / (i as f64 + 1.0)) {
+                    deps.push(d);
+                }
+            }
+        }
+        let work = if r.bool(0.1) { 0.0 } else { r.range_f64(1e-5, 0.01) };
+        let setup = if r.bool(0.3) { 0.0 } else { r.range_f64(0.0, 1e-4) };
+        let mut demands = Vec::new();
+        for (res, &cap) in caps.iter().enumerate() {
+            if r.bool(0.6) {
+                demands.push((res, r.range_f64(0.1, 1.5 * cap)));
+            }
+        }
+        tasks.push(TaskCase {
+            stream: r.range(0, n_streams),
+            deps,
+            work,
+            setup,
+            demands,
+        });
+    }
+    DagCase {
+        caps,
+        n_streams,
+        tasks,
+    }
+}
+
+fn simulate(case: &DagCase) -> Result<Report, String> {
+    let mut e = Engine::new();
+    let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
+    let streams: Vec<StreamId> = (0..case.n_streams).map(|_| e.add_stream()).collect();
+    let mut ids = Vec::with_capacity(case.tasks.len());
+    for (i, t) in case.tasks.iter().enumerate() {
+        let mut spec = TaskSpec::new(format!("t{i}"), streams[t.stream])
+            .work(t.work)
+            .setup(t.setup);
+        for &d in &t.deps {
+            spec = spec.dep(ids[d]);
+        }
+        for &(res, demand) in &t.demands {
+            spec = spec.demand(resources[res], demand);
+        }
+        ids.push(e.add_task(spec));
+    }
+    e.run().map_err(|e| format!("sim failed: {e}"))
+}
+
+const RTOL: f64 = 1e-6;
+const ATOL: f64 = 1e-9;
+
+#[test]
+fn resource_busy_equals_demand_times_work() {
+    prop::check_no_shrink(
+        "engine-work-conservation",
+        &Config {
+            cases: 150,
+            ..Config::default()
+        },
+        gen_dag,
+        |case| {
+            let rep = simulate(case)?;
+            for (res, &cap) in case.caps.iter().enumerate() {
+                let want: f64 = case
+                    .tasks
+                    .iter()
+                    .flat_map(|t| t.demands.iter().filter(|(r, _)| *r == res).map(|&(_, d)| d * t.work))
+                    .sum();
+                let got = rep.resource_busy[res];
+                if (got - want).abs() > RTOL * want.abs() + ATOL {
+                    return Err(format!("resource {res}: busy {got} != sum(d*w) {want}"));
+                }
+                // Capacity is never exceeded on average.
+                if got > cap * rep.makespan * (1.0 + RTOL) + ATOL {
+                    return Err(format!(
+                        "resource {res}: busy {got} exceeds cap*makespan {}",
+                        cap * rep.makespan
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn makespan_bounded_below_by_critical_path_and_resources() {
+    prop::check_no_shrink(
+        "engine-critical-path",
+        &Config {
+            cases: 150,
+            ..Config::default()
+        },
+        gen_dag,
+        |case| {
+            let rep = simulate(case)?;
+            // Earliest possible finish per task at rate 1: after all
+            // dep finishes and the same-stream predecessor's finish.
+            let n = case.tasks.len();
+            let mut ef = vec![0.0f64; n];
+            let mut stream_last: Vec<Option<usize>> = vec![None; case.n_streams];
+            for (i, t) in case.tasks.iter().enumerate() {
+                let mut ready = 0.0f64;
+                for &d in &t.deps {
+                    ready = ready.max(ef[d]);
+                }
+                if let Some(p) = stream_last[t.stream] {
+                    ready = ready.max(ef[p]);
+                }
+                ef[i] = ready + t.setup + t.work;
+                stream_last[t.stream] = Some(i);
+            }
+            let critical = ef.iter().cloned().fold(0.0, f64::max);
+            if rep.makespan < critical * (1.0 - RTOL) - ATOL {
+                return Err(format!(
+                    "makespan {} below critical path {critical}",
+                    rep.makespan
+                ));
+            }
+            for (res, &cap) in case.caps.iter().enumerate() {
+                let lower = rep.resource_busy[res] / cap;
+                if rep.makespan < lower * (1.0 - RTOL) - ATOL {
+                    return Err(format!(
+                        "makespan {} below resource {res} bound {lower}",
+                        rep.makespan
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ordering_invariants_hold() {
+    prop::check_no_shrink(
+        "engine-ordering",
+        &Config {
+            cases: 150,
+            ..Config::default()
+        },
+        gen_dag,
+        |case| {
+            let rep = simulate(case)?;
+            let spans = &rep.task_spans;
+            let mut stream_last: Vec<Option<usize>> = vec![None; case.n_streams];
+            for (i, t) in case.tasks.iter().enumerate() {
+                let (start, finish) = spans[i];
+                if !(start.is_finite() && finish.is_finite()) {
+                    return Err(format!("task {i}: non-finite span {start}..{finish}"));
+                }
+                // No task becomes ready before its dependencies finish.
+                for &d in &t.deps {
+                    if start < spans[d].1 - ATOL {
+                        return Err(format!(
+                            "task {i} ready at {start} before dep {d} finished at {}",
+                            spans[d].1
+                        ));
+                    }
+                }
+                // Stream order serializes.
+                if let Some(p) = stream_last[t.stream] {
+                    if start < spans[p].1 - ATOL {
+                        return Err(format!(
+                            "task {i} ready at {start} before stream predecessor {p} at {}",
+                            spans[p].1
+                        ));
+                    }
+                }
+                stream_last[t.stream] = Some(i);
+                // The span covers setup + work (rate never exceeds 1),
+                // and the run phase alone covers the work.
+                let min_span = t.setup + t.work;
+                if finish - start < min_span * (1.0 - RTOL) - ATOL {
+                    return Err(format!(
+                        "task {i}: span {} below setup+work {min_span}",
+                        finish - start
+                    ));
+                }
+                if rep.task_run_time[i] < t.work * (1.0 - RTOL) - ATOL {
+                    return Err(format!(
+                        "task {i}: ran {} below its work {}",
+                        rep.task_run_time[i], t.work
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

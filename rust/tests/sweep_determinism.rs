@@ -1,0 +1,107 @@
+//! Integration: the sweep engine must produce byte-identical ordered
+//! CSV/JSON artifacts regardless of worker count — a 2-scenario ×
+//! 2-schedule × 2-mechanism sweep run with 1 and with 4 jobs (the
+//! acceptance criterion for determinism under parallelism).
+
+use ficco::explore::emit::{CsvEmitter, JsonEmitter, CSV_HEADER};
+use ficco::explore::{run, SweepSpec};
+use ficco::hw::Machine;
+use ficco::schedule::{Kind, Scenario};
+use ficco::sim::CommMech;
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: vec![
+            Scenario::new("tiny-a", 8192, 512, 1024),
+            Scenario::new("tiny-b", 4096, 256, 2048),
+        ],
+        kinds: vec![Kind::UniformFused1D, Kind::HeteroUnfused1D],
+        machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+        mechs: vec![CommMech::Dma, CommMech::Kernel],
+        gpu_counts: Vec::new(),
+    }
+}
+
+/// Run the sweep at the given parallelism, streaming through the real
+/// emitters into memory.
+fn render(jobs: usize) -> (String, String, Vec<usize>) {
+    let spec = small_spec();
+    let mut csv = CsvEmitter::new(Vec::new()).unwrap();
+    let mut json = JsonEmitter::new(Vec::new()).unwrap();
+    let mut order = Vec::new();
+    let report = run(&spec, jobs, |c| {
+        order.push(c.index);
+        csv.cell(c).unwrap();
+        json.cell(c).unwrap();
+        true
+    });
+    assert_eq!(report.jobs, jobs.min(spec.cells().len()));
+    assert_eq!(report.cells.len(), 4);
+    (
+        String::from_utf8(csv.finish().unwrap()).unwrap(),
+        String::from_utf8(json.finish().unwrap()).unwrap(),
+        order,
+    )
+}
+
+#[test]
+fn serial_and_parallel_sweeps_emit_identical_bytes() {
+    let (csv1, json1, order1) = render(1);
+    let (csv4, json4, order4) = render(4);
+    assert_eq!(order1, vec![0, 1, 2, 3]);
+    assert_eq!(order4, vec![0, 1, 2, 3], "parallel delivery must be reordered");
+    assert_eq!(csv1, csv4, "CSV must be byte-identical across job counts");
+    assert_eq!(json1, json4, "JSON must be byte-identical across job counts");
+}
+
+#[test]
+fn repeated_runs_are_reproducible() {
+    let (csv_a, json_a, _) = render(4);
+    let (csv_b, json_b, _) = render(4);
+    assert_eq!(csv_a, csv_b);
+    assert_eq!(json_a, json_b);
+}
+
+#[test]
+fn emitted_artifacts_are_well_formed() {
+    let (csv, json, _) = render(2);
+
+    // CSV: header + (baseline + 2 kinds) per cell × 4 cells.
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines[0], CSV_HEADER);
+    assert_eq!(lines.len(), 1 + 4 * 3);
+    let ncols = CSV_HEADER.split(',').count();
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), ncols, "{line}");
+    }
+    // Both mechanisms and both scenarios appear.
+    assert!(csv.contains(",dma,"));
+    assert!(csv.contains(",rccl,"));
+    assert!(csv.contains("tiny-a,"));
+    assert!(csv.contains("tiny-b,"));
+
+    // JSON: an array of 4 objects with nested schedule rows.
+    assert!(json.trim_start().starts_with('['));
+    assert!(json.trim_end().ends_with(']'));
+    assert_eq!(json.matches("\"schedules\":[").count(), 4);
+    assert_eq!(json.matches("\"kind\":\"baseline\"").count(), 4);
+    assert_eq!(json.matches("\"kind\":\"uniform-fused-1D\"").count(), 4);
+}
+
+#[test]
+fn sweep_results_are_physically_sensible() {
+    let spec = small_spec();
+    let report = run(&spec, 4, |_| true);
+    for cell in &report.cells {
+        assert_eq!(cell.rows[0].kind, Kind::Baseline);
+        assert!((cell.rows[0].speedup - 1.0).abs() < 1e-12, "{}", cell.scenario);
+        for row in &cell.rows {
+            assert!(row.makespan > 0.0);
+            assert!(row.speedup > 0.0);
+            assert!(row.gemm_cil >= 0.999 && row.comm_cil >= 0.999);
+        }
+        assert!(cell.oracle.is_some());
+        assert!(cell.eval_seconds >= 0.0);
+        assert!(cell.ideal_speedup >= 1.0 - 1e-9, "{}", cell.ideal_speedup);
+    }
+}

@@ -1,0 +1,105 @@
+//! Golden tests pinning the Table I scenario suite and the heuristic
+//! decision for every row by name, so a drifting workload table or a
+//! heuristic regression is caught with the scenario's name in the
+//! failure message rather than as a silent accuracy change.
+
+use ficco::heuristics;
+use ficco::hw::Machine;
+use ficco::schedule::Collective;
+use ficco::workloads::table1;
+
+/// (name, parallelism, model, M, N, K) — the paper's Table I verbatim.
+const GOLDEN_ROWS: [(&str, &str, &str, u64, u64, u64); 16] = [
+    ("g1", "SP+TP", "llama-3-405b", 16384, 16384, 131072),
+    ("g2", "SP+TP", "llama-3-405b", 131072, 16384, 16384),
+    ("g3", "SP+TP", "llama-3-405b", 53248, 16384, 131072),
+    ("g4", "SP+TP", "llama-3-405b", 131072, 53248, 16384),
+    ("g5", "SP+TP", "llama-2-70b", 8192, 8192, 262144),
+    ("g6", "SP+TP", "llama-2-70b", 262144, 8192, 8192),
+    ("g7", "SP+TP", "llama-2-70b", 28672, 8192, 262144),
+    ("g8", "SP+TP", "llama-2-70b", 262144, 28672, 8192),
+    ("g9", "SP+TP", "llama-3-405b", 196608, 18432, 16384),
+    ("g10", "SP+TP", "llama-3-405b", 196608, 106496, 16384),
+    ("g11", "SP+TP", "llama-2-70b", 1048576, 10240, 8192),
+    ("g12", "SP+TP", "llama-2-70b", 1048576, 57344, 8192),
+    ("g13", "EP", "DeepSeek", 1607680, 57344, 8192),
+    ("g14", "EP", "Mixtral", 147456, 28672, 4096),
+    ("g15", "EP", "Mixtral", 327680, 28672, 4096),
+    ("g16", "EP", "Mixtral", 229376, 28672, 4096),
+];
+
+/// Heuristic pick per row on the paper's MI300X-8 testbed at the
+/// default threshold. The four M ≤ K rows take the 2D branch; every
+/// M > K Table I row has a combined OTB·MT metric far above 5× the
+/// machine threshold, landing in the CIL-sensitive unfused regime.
+const GOLDEN_PICKS: [(&str, &str); 16] = [
+    ("g1", "uniform-fused-2D"),
+    ("g2", "hetero-unfused-1D"),
+    ("g3", "uniform-fused-2D"),
+    ("g4", "hetero-unfused-1D"),
+    ("g5", "uniform-fused-2D"),
+    ("g6", "hetero-unfused-1D"),
+    ("g7", "uniform-fused-2D"),
+    ("g8", "hetero-unfused-1D"),
+    ("g9", "hetero-unfused-1D"),
+    ("g10", "hetero-unfused-1D"),
+    ("g11", "hetero-unfused-1D"),
+    ("g12", "hetero-unfused-1D"),
+    ("g13", "hetero-unfused-1D"),
+    ("g14", "hetero-unfused-1D"),
+    ("g15", "hetero-unfused-1D"),
+    ("g16", "hetero-unfused-1D"),
+];
+
+#[test]
+fn table1_rows_match_golden() {
+    let rows = table1();
+    assert_eq!(rows.len(), GOLDEN_ROWS.len());
+    for (row, &(name, par, model, m, n, k)) in rows.iter().zip(&GOLDEN_ROWS) {
+        assert_eq!(row.name, name);
+        assert_eq!(row.parallelism.name(), par, "{name} parallelism");
+        assert_eq!(row.model, model, "{name} model");
+        assert_eq!((row.m, row.n, row.k), (m, n, k), "{name} dims");
+    }
+}
+
+#[test]
+fn table1_scenarios_carry_the_right_collective() {
+    for row in table1() {
+        let sc = row.scenario();
+        let want = match row.parallelism.name() {
+            "EP" => Collective::AllToAll,
+            _ => Collective::AllGather,
+        };
+        assert_eq!(sc.collective, want, "{}", row.name);
+        assert_eq!(sc.name, row.name);
+        assert_eq!(sc.ngpus, 8, "{} default gpus", row.name);
+    }
+}
+
+#[test]
+fn heuristic_picks_match_golden_per_row() {
+    let machine = Machine::mi300x_8();
+    for (row, &(name, pick)) in table1().iter().zip(&GOLDEN_PICKS) {
+        assert_eq!(row.name, name, "golden table order");
+        let d = heuristics::pick(&machine, &row.scenario());
+        assert_eq!(
+            d.pick.name(),
+            pick,
+            "{name}: heuristic regressed (reason: {})",
+            d.reason
+        );
+        assert!(!d.reason.is_empty(), "{name}");
+        assert!(d.metrics.combined > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn m_le_k_rows_are_exactly_the_2d_picks() {
+    // Cross-check the two golden tables against each other: the 2D
+    // branch fires iff M <= K.
+    for (&(name, _, _, m, _, k), &(pick_name, pick)) in GOLDEN_ROWS.iter().zip(&GOLDEN_PICKS) {
+        assert_eq!(name, pick_name);
+        assert_eq!(pick == "uniform-fused-2D", m <= k, "{name}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds without network access, so this crate provides
+//! exactly the subset of the anyhow API the FiCCO runtime/coordinator/
+//! train layers use: a string-backed [`Error`], the [`anyhow!`] macro,
+//! the `Result<T>` alias, and a [`Context`] extension for the two
+//! error types the codebase attaches context to.
+//!
+//! Unlike the real crate, [`Error`] implements `std::error::Error`, so
+//! `?` conversion into `Box<dyn std::error::Error>` comes from the
+//! standard blanket impl.
+
+use std::fmt;
+
+/// A string-backed error with optional context prefixes.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string())
+    }
+
+    /// Prefix the error with a context line.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error(format!("{context}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, std::io::Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("base {}", 42))
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "base 42");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = fails().with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: base 42");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn boxes_as_std_error() {
+        fn outer() -> std::result::Result<(), Box<dyn std::error::Error>> {
+            fails()?;
+            Ok(())
+        }
+        assert!(outer().is_err());
+    }
+}

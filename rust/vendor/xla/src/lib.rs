@@ -1,0 +1,533 @@
+//! Minimal offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The real crate links libpjrt; this workspace must build and test
+//! with no native libraries, so this crate re-implements the small API
+//! surface the FiCCO runtime uses:
+//!
+//! - [`Literal`] — typed dense host tensors (f32/i32/u32 + tuples);
+//! - [`XlaBuilder`]/[`XlaOp`] — builds tiny expression graphs
+//!   (`parameter`, `dot_general`, `+`);
+//! - [`PjRtClient`]/[`PjRtLoadedExecutable`] — "compiles" a builder
+//!   graph into an interpreted executable evaluated on the CPU, so
+//!   GEMM (`C = A·B`) and accumulating GEMM (`C += A·B`) produce real
+//!   numbers;
+//! - [`HloModuleProto`]/[`XlaComputation::from_proto`] — accepted but
+//!   not interpretable: compiling an HLO-text artifact reports a clear
+//!   error (the AOT-artifact path needs the real PJRT build).
+//!
+//! Matmul is a straightforward ikj loop — fast enough for the numeric
+//! validation geometries the test suite exercises.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Error type mirroring the bindings' debug-printable errors.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(XlaError(msg.into()))
+}
+
+/// Element types the builder accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Backing storage of a [`Literal`]. Public only because
+/// [`NativeType`]'s methods name it; not part of the mirrored API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A dense host tensor (or tuple of tensors).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(data: Vec<u32>) -> Data {
+        Data::U32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<u32>> {
+        match data {
+            Data::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    fn elements(&self) -> i64 {
+        match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+            Data::U32(v) => v.len() as i64,
+            Data::Tuple(_) => -1,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.elements() {
+            return err(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.elements()
+            ));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a flat vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| XlaError("literal dtype mismatch in to_vec".into()))
+    }
+
+    /// Flatten a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(parts) => Ok(parts.clone()),
+            _ => err("to_tuple on a non-tuple literal"),
+        }
+    }
+
+    fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => err("expected an f32 literal"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Parameter { index: i64, dims: Vec<i64> },
+    DotGeneral { lhs: usize, rhs: usize },
+    Add { lhs: usize, rhs: usize },
+}
+
+/// Builds an expression graph node by node.
+pub struct XlaBuilder {
+    nodes: Rc<RefCell<Vec<Node>>>,
+    #[allow(dead_code)]
+    name: String,
+}
+
+/// A handle to one node of a builder's graph.
+#[derive(Clone)]
+pub struct XlaOp {
+    nodes: Rc<RefCell<Vec<Node>>>,
+    id: usize,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder {
+            nodes: Rc::new(RefCell::new(Vec::new())),
+            name: name.to_string(),
+        }
+    }
+
+    /// Declare parameter `index` with the given element type and dims.
+    pub fn parameter(
+        &self,
+        index: i64,
+        ty: ElementType,
+        dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        if ty != ElementType::F32 {
+            return err("the bundled xla stand-in interprets f32 graphs only");
+        }
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(Node::Parameter {
+            index,
+            dims: dims.to_vec(),
+        });
+        Ok(XlaOp {
+            nodes: self.nodes.clone(),
+            id: nodes.len() - 1,
+        })
+    }
+}
+
+impl XlaOp {
+    /// General dot product. Only the plain 2-D matmul form
+    /// (contract lhs dim 1 with rhs dim 0, no batch dims) is supported.
+    pub fn dot_general(
+        &self,
+        rhs: &XlaOp,
+        lhs_contracting: &[i64],
+        rhs_contracting: &[i64],
+        lhs_batch: &[i64],
+        rhs_batch: &[i64],
+    ) -> Result<XlaOp> {
+        if lhs_contracting != [1_i64].as_slice() || rhs_contracting != [0_i64].as_slice() {
+            return err("dot_general: only ([1], [0]) contraction is supported");
+        }
+        if !lhs_batch.is_empty() || !rhs_batch.is_empty() {
+            return err("dot_general: batch dims are not supported");
+        }
+        if !Rc::ptr_eq(&self.nodes, &rhs.nodes) {
+            return err("dot_general: operands from different builders");
+        }
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(Node::DotGeneral {
+            lhs: self.id,
+            rhs: rhs.id,
+        });
+        Ok(XlaOp {
+            nodes: self.nodes.clone(),
+            id: nodes.len() - 1,
+        })
+    }
+
+    /// Freeze the graph rooted at this op into a computation.
+    pub fn build(&self) -> Result<XlaComputation> {
+        Ok(XlaComputation {
+            kind: CompKind::Graph {
+                nodes: self.nodes.borrow().clone(),
+                root: self.id,
+            },
+        })
+    }
+}
+
+impl std::ops::Add for XlaOp {
+    type Output = Result<XlaOp>;
+
+    fn add(self, rhs: XlaOp) -> Result<XlaOp> {
+        if !Rc::ptr_eq(&self.nodes, &rhs.nodes) {
+            return err("add: operands from different builders");
+        }
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(Node::Add {
+            lhs: self.id,
+            rhs: rhs.id,
+        });
+        Ok(XlaOp {
+            nodes: self.nodes.clone(),
+            id: nodes.len() - 1,
+        })
+    }
+}
+
+/// An HLO module loaded from text. Kept opaque: the stand-in cannot
+/// interpret HLO, so compiling one reports a clear error.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+enum CompKind {
+    Graph { nodes: Vec<Node>, root: usize },
+    Hlo,
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    kind: CompKind,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { kind: CompKind::Hlo }
+    }
+}
+
+/// CPU "client". The stand-in has no device state.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.kind {
+            CompKind::Graph { nodes, root } => Ok(PjRtLoadedExecutable {
+                nodes: nodes.clone(),
+                root: *root,
+            }),
+            CompKind::Hlo => err(
+                "the bundled xla stand-in cannot execute HLO-text artifacts; \
+                 build against the real PJRT bindings to run them",
+            ),
+        }
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// An interpreted executable: evaluates its graph over input literals.
+pub struct PjRtLoadedExecutable {
+    nodes: Vec<Node>,
+    root: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; mirrors the bindings' return
+    /// shape (`[replica][output]` buffers).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let mut cache: Vec<Option<Literal>> = vec![None; self.nodes.len()];
+        let out = self.eval(self.root, args, &mut cache)?;
+        Ok(vec![vec![PjRtBuffer { literal: out }]])
+    }
+
+    fn eval<L: std::borrow::Borrow<Literal>>(
+        &self,
+        id: usize,
+        args: &[L],
+        cache: &mut Vec<Option<Literal>>,
+    ) -> Result<Literal> {
+        if let Some(lit) = &cache[id] {
+            return Ok(lit.clone());
+        }
+        let lit = match &self.nodes[id] {
+            Node::Parameter { index, dims } => {
+                let arg = args
+                    .get(*index as usize)
+                    .ok_or_else(|| XlaError(format!("missing argument {index}")))?
+                    .borrow();
+                let want: i64 = dims.iter().product();
+                if arg.elements() != want {
+                    return err(format!(
+                        "argument {index}: {} elements, parameter wants {dims:?}",
+                        arg.elements()
+                    ));
+                }
+                arg.reshape(dims)?
+            }
+            Node::DotGeneral { lhs, rhs } => {
+                let a = self.eval(*lhs, args, cache)?;
+                let b = self.eval(*rhs, args, cache)?;
+                matmul(&a, &b)?
+            }
+            Node::Add { lhs, rhs } => {
+                let a = self.eval(*lhs, args, cache)?;
+                let b = self.eval(*rhs, args, cache)?;
+                add(&a, &b)?
+            }
+        };
+        cache[id] = Some(lit.clone());
+        Ok(lit)
+    }
+}
+
+/// Row-major f32 matmul: `[m,k] · [k,n] -> [m,n]` (ikj loop order).
+fn matmul(a: &Literal, b: &Literal) -> Result<Literal> {
+    if a.dims.len() != 2 || b.dims.len() != 2 || a.dims[1] != b.dims[0] {
+        return err(format!(
+            "matmul shape mismatch: {:?} x {:?}",
+            a.dims, b.dims
+        ));
+    }
+    let (m, k, n) = (a.dims[0] as usize, a.dims[1] as usize, b.dims[1] as usize);
+    let av = a.f32s()?;
+    let bv = b.f32s()?;
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for l in 0..k {
+            let aval = av[i * k + l];
+            if aval == 0.0 {
+                continue;
+            }
+            let brow = &bv[l * n..(l + 1) * n];
+            for j in 0..n {
+                crow[j] += aval * brow[j];
+            }
+        }
+    }
+    Ok(Literal {
+        dims: vec![m as i64, n as i64],
+        data: Data::F32(c),
+    })
+}
+
+/// Elementwise f32 add of equal-shaped literals.
+fn add(a: &Literal, b: &Literal) -> Result<Literal> {
+    if a.dims != b.dims {
+        return err(format!("add shape mismatch: {:?} + {:?}", a.dims, b.dims));
+    }
+    let av = a.f32s()?;
+    let bv = b.f32s()?;
+    let sum: Vec<f32> = av.iter().zip(bv).map(|(x, y)| x + y).collect();
+    Ok(Literal {
+        dims: a.dims.clone(),
+        data: Data::F32(sum),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_exe(m: i64, n: i64, k: i64) -> PjRtLoadedExecutable {
+        let b = XlaBuilder::new("gemm");
+        let a_p = b.parameter(0, ElementType::F32, &[m, k], "a").unwrap();
+        let b_p = b.parameter(1, ElementType::F32, &[k, n], "b").unwrap();
+        let c = a_p.dot_general(&b_p, &[1], &[0], &[], &[]).unwrap();
+        let comp = c.build().unwrap();
+        PjRtClient::cpu().unwrap().compile(&comp).unwrap()
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 1]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let exe = gemm_exe(2, 2, 2);
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let eye = Literal::vec1(&[1.0f32, 0.0, 0.0, 1.0]).reshape(&[2, 2]).unwrap();
+        let out = exe.execute::<Literal>(&[a, eye]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // [1,3] x [3,2]: row [1,2,3] against columns.
+        let exe = gemm_exe(1, 2, 3);
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0]).reshape(&[1, 3]).unwrap();
+        let b = Literal::vec1(&[1.0f32, 4.0, 2.0, 5.0, 3.0, 6.0])
+            .reshape(&[3, 2])
+            .unwrap();
+        let out = exe.execute::<Literal>(&[a, b]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn accumulating_graph() {
+        let b = XlaBuilder::new("acc");
+        let c_p = b.parameter(0, ElementType::F32, &[2, 2], "c").unwrap();
+        let a_p = b.parameter(1, ElementType::F32, &[2, 2], "a").unwrap();
+        let b_p = b.parameter(2, ElementType::F32, &[2, 2], "b").unwrap();
+        let prod = a_p.dot_general(&b_p, &[1], &[0], &[], &[]).unwrap();
+        let sum = (c_p + prod).unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&sum.build().unwrap())
+            .unwrap();
+        let c0 = Literal::vec1(&[10.0f32; 4]).reshape(&[2, 2]).unwrap();
+        let a = Literal::vec1(&[1.0f32, 0.0, 0.0, 1.0]).reshape(&[2, 2]).unwrap();
+        let bb = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let out = exe.execute::<Literal>(&[c0, a, bb]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn hlo_compile_reports_clear_error() {
+        let comp = XlaComputation { kind: CompKind::Hlo };
+        let e = PjRtClient::cpu().unwrap().compile(&comp).unwrap_err();
+        assert!(format!("{e:?}").contains("HLO"));
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal {
+            dims: Vec::new(),
+            data: Data::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]),
+        };
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+}
