@@ -1,0 +1,116 @@
+//! Bench: plan-space search throughput — parallel scaling of `ficco
+//! tune` cells and the effectiveness of beam search + lower-bound
+//! pruning against exhaustive enumeration.
+//!
+//! Two exhibits:
+//! 1. wall time of a fixed tune (synthetic scenarios × two machine
+//!    presets) at increasing worker counts, with speedup/efficiency —
+//!    cells are independent searches, so scaling should track the
+//!    sweep engine's;
+//! 2. evaluated/pruned plan counts for exhaustive-no-prune vs
+//!    exhaustive-pruned vs beam search on one cell, showing what the
+//!    bound and the beam each buy.
+//!
+//! Run: `cargo bench --bench search_throughput`
+
+use ficco::explore::SweepSpec;
+use ficco::hw::Machine;
+use ficco::schedule::Kind;
+use ficco::search::{search, tune, EvalCache, SearchCfg, SpaceOverrides, SpaceSpec};
+use ficco::sim::CommMech;
+use ficco::workloads;
+
+fn spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: workloads::synthetic_scenarios(2025, 6),
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![
+            ("mi300x-8".into(), Machine::mi300x_8()),
+            ("pcie-gen4-4".into(), Machine::pcie_gen4_4()),
+        ],
+        mechs: vec![CommMech::Dma],
+        gpu_counts: Vec::new(),
+        search: None,
+    }
+}
+
+fn main() {
+    let spec = spec();
+    let n_cells = spec.n_cells();
+    let host = ficco::cli::default_jobs();
+    let cfg = SearchCfg {
+        beam: 4,
+        prune: true,
+    };
+    let ov = SpaceOverrides::default();
+    println!("== perf: plan-space search ({n_cells} cells, beam 4, host parallelism {host}) ==");
+
+    // Warm-up pass (allocator/page-fault noise).
+    let _ = tune(&spec, &ov, &cfg, host, |_| true);
+
+    let mut jobs_axis = vec![1usize, 2, 4];
+    if host > 4 {
+        jobs_axis.push(host);
+    }
+    let mut base = f64::NAN;
+    for &jobs in &jobs_axis {
+        let report = tune(&spec, &ov, &cfg, jobs, |_| true);
+        if jobs == 1 {
+            base = report.wall_seconds;
+        }
+        let speedup = base / report.wall_seconds;
+        println!(
+            "jobs {jobs:>3}: {:>8.3}s wall  {:>8.3}s search  speedup {speedup:>5.2}x  efficiency {:>5.1}%  ({} evals, {} pruned)",
+            report.wall_seconds,
+            report.cpu_seconds(),
+            100.0 * speedup / jobs as f64,
+            report.evaluations(),
+            report.pruned(),
+        );
+    }
+
+    // Strategy comparison on one representative cell.
+    let machine = Machine::mi300x_8();
+    let sc = workloads::by_name("g6").expect("g6");
+    let space = SpaceSpec::default_for(&sc);
+    println!(
+        "\n== strategy comparison (g6 on mi300x-8, space {} plans) ==",
+        space.plans(&sc).len()
+    );
+    for (label, cfg) in [
+        (
+            "exhaustive",
+            SearchCfg {
+                beam: 0,
+                prune: false,
+            },
+        ),
+        (
+            "exhaustive+prune",
+            SearchCfg {
+                beam: 0,
+                prune: true,
+            },
+        ),
+        (
+            "beam 4",
+            SearchCfg {
+                beam: 4,
+                prune: true,
+            },
+        ),
+    ] {
+        let t0 = std::time::Instant::now();
+        let out = search("mi300x-8", &machine, &sc, &space, &cfg, &EvalCache::new());
+        println!(
+            "{label:>18}: best {} ({:.3}x over baseline, gain {:.3}x over {})  {} evals, {} pruned, {:.3}s",
+            out.best.plan.id(),
+            out.best_speedup(),
+            out.plan_gain(),
+            out.best_legacy.0.name(),
+            out.evaluated,
+            out.pruned,
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+}

@@ -26,6 +26,7 @@ fn spec() -> SweepSpec {
         ],
         mechs: vec![CommMech::Dma, CommMech::Kernel],
         gpu_counts: Vec::new(),
+        search: None,
     }
 }
 

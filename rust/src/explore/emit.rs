@@ -18,13 +18,17 @@ use crate::schedule::Kind;
 use crate::util::stats;
 use crate::util::table::{f, x, Align, Table};
 
-/// Column header shared by the CSV emitter and its tests.
+/// Column header shared by the CSV emitter and its tests. The
+/// best-plan columns are filled only when the sweep ran with a
+/// plan-space search (`--search`); they stay empty otherwise so the
+/// artifact shape is stable.
 pub const CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,m,n,k,kind,\
-makespan,speedup,gemm_leg,comm_leg,gemm_cil,comm_cil,n_tasks,is_pick,is_oracle";
+makespan,speedup,gemm_leg,comm_leg,gemm_cil,comm_cil,n_tasks,is_pick,is_oracle,\
+best_plan,best_plan_speedup";
 
 /// RFC-4180-ish quoting for the free-form name fields (CLI-produced
 /// names are comma-free, but `Scenario::new` is public API).
-fn csv_escape(s: &str) -> String {
+pub(crate) fn csv_escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
@@ -34,10 +38,14 @@ fn csv_escape(s: &str) -> String {
 
 /// CSV rows (one per schedule kind) for a single cell.
 pub fn csv_rows(c: &CellResult) -> String {
+    let (best_plan, best_plan_speedup) = match &c.best_plan {
+        Some(b) => (b.id.clone(), b.speedup.to_string()),
+        None => (String::new(), String::new()),
+    };
     let mut out = String::new();
     for r in &c.rows {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_escape(&c.scenario),
             csv_escape(&c.machine_name),
             c.topology,
@@ -57,12 +65,14 @@ pub fn csv_rows(c: &CellResult) -> String {
             r.n_tasks,
             r.is_pick,
             r.is_oracle,
+            best_plan,
+            best_plan_speedup,
         ));
     }
     out
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for ch in s.chars() {
         match ch {
@@ -83,7 +93,8 @@ pub fn json_cell(c: &CellResult) -> String {
     out.push_str(&format!(
         "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
          \"mech\":\"{}\",\"collective\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\
-         \"heuristic_pick\":\"{}\",\"oracle\":{},\"ideal_speedup\":{},\"schedules\":[",
+         \"heuristic_pick\":\"{}\",\"oracle\":{},\"ideal_speedup\":{},\
+         \"best_plan\":{},\"schedules\":[",
         json_escape(&c.scenario),
         json_escape(&c.machine_name),
         c.topology,
@@ -99,6 +110,14 @@ pub fn json_cell(c: &CellResult) -> String {
             None => "null".to_string(),
         },
         c.ideal_speedup,
+        match &c.best_plan {
+            Some(b) => format!(
+                "{{\"id\":\"{}\",\"speedup\":{}}}",
+                json_escape(&b.id),
+                b.speedup
+            ),
+            None => "null".to_string(),
+        },
     ));
     for (i, r) in c.rows.iter().enumerate() {
         if i > 0 {
@@ -261,6 +280,7 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma],
             gpu_counts: Vec::new(),
+            search: None,
         };
         spec.cells().iter().map(eval_cell).collect()
     }
@@ -311,6 +331,7 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma],
             gpu_counts: Vec::new(),
+            search: None,
         };
         let r = eval_cell(&spec.cells()[0]);
         let ncols = CSV_HEADER.split(',').count();

@@ -14,12 +14,15 @@
 //!   [`Cell`]s; each cell is one (scenario, machine, mech, ngpus)
 //!   point evaluated across every requested schedule kind (the serial
 //!   baseline is always included as the speedup reference).
-//! - [`run`] evaluates cells on a worker pool (std threads; results
-//!   return over an mpsc channel). The fluid simulator is pure, so
-//!   cells are embarrassingly parallel; a reorder buffer delivers
+//! - [`run`] evaluates cells on the deterministic ordered worker pool
+//!   ([`crate::util::pool`]). The fluid simulator is pure, so cells
+//!   are embarrassingly parallel; the pool's reorder buffer delivers
 //!   results to the caller in deterministic cell order regardless of
 //!   `jobs`, which is what makes the CSV/JSON emitters ([`emit`])
 //!   byte-stable under any parallelism.
+//! - With [`SweepSpec::search`] set, each cell additionally searches
+//!   the parameterized plan space ([`crate::search`]) and reports the
+//!   best-found plan next to the fixed-kind rows.
 //!
 //! Per-cell wall time is measured ([`CellResult::eval_seconds`]) but
 //! deliberately excluded from the emitted artifacts so output files
@@ -27,8 +30,6 @@
 
 pub mod emit;
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::hw::Machine;
@@ -36,6 +37,8 @@ use crate::schedule::exec::ScenarioEval;
 use crate::schedule::{Kind, Scenario};
 use crate::sim::CommMech;
 use crate::workloads;
+
+pub use crate::util::pool::{clamp_jobs, MAX_JOBS};
 
 /// The axes of one sweep: the cartesian product of everything listed.
 #[derive(Debug, Clone)]
@@ -50,6 +53,9 @@ pub struct SweepSpec {
     pub mechs: Vec<CommMech>,
     /// GPU-count overrides; empty means each machine's native count.
     pub gpu_counts: Vec<usize>,
+    /// When set, each cell also searches the parameterized plan space
+    /// and the emitters fill the best-plan columns.
+    pub search: Option<crate::search::SearchCfg>,
 }
 
 impl SweepSpec {
@@ -66,6 +72,7 @@ impl SweepSpec {
                 .collect(),
             mechs: vec![CommMech::Dma, CommMech::Kernel],
             gpu_counts: Vec::new(),
+            search: None,
         }
     }
 
@@ -88,6 +95,7 @@ impl SweepSpec {
             machines: Vec::new(),
             mechs: Vec::new(),
             gpu_counts: Vec::new(),
+            search: None,
         };
 
         for part in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -248,6 +256,7 @@ impl SweepSpec {
                             machine,
                             scenario,
                             kinds: kinds.clone(),
+                            search: self.search,
                         });
                     }
                 }
@@ -281,6 +290,8 @@ pub struct Cell {
     pub machine: Machine,
     pub scenario: Scenario,
     pub kinds: Vec<Kind>,
+    /// Plan-space search configuration (None = fixed kinds only).
+    pub search: Option<crate::search::SearchCfg>,
 }
 
 /// One schedule kind's measurements within a cell.
@@ -321,7 +332,19 @@ pub struct CellResult {
     pub oracle: Option<Kind>,
     pub ideal_speedup: f64,
     pub rows: Vec<KindRow>,
+    /// Best plan found by searching the parameterized plan space
+    /// (None when the sweep ran without `--search`).
+    pub best_plan: Option<BestPlan>,
     pub eval_seconds: f64,
+}
+
+/// The best-found plan-space point of one cell.
+#[derive(Debug, Clone)]
+pub struct BestPlan {
+    /// Stable plan identifier (see [`crate::plan::Plan::id`]).
+    pub id: String,
+    /// Speedup over the cell's serial baseline.
+    pub speedup: f64,
 }
 
 /// Evaluate one cell (generate → validate → simulate each kind).
@@ -336,6 +359,24 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
     } else {
         None
     };
+    // Optional plan-space search. The cache is per-cell (the emitted
+    // best-plan values are cache-independent either way) but seeded
+    // with the fixed-kind rows just measured: preset plans lower to
+    // the exact schedules `ScenarioEval` simulated, so the search
+    // never re-simulates them.
+    let best_plan = cell.search.as_ref().map(|cfg| {
+        let space = crate::search::SpaceSpec::default_for(sc);
+        let cache = crate::search::EvalCache::new();
+        for r in &ev.results {
+            let preset = crate::plan::Plan::preset(r.kind, sc);
+            cache.insert(&cell.machine_name, sc, &preset, r.makespan);
+        }
+        let out = crate::search::search(&cell.machine_name, machine, sc, &space, cfg, &cache);
+        BestPlan {
+            id: out.best.plan.id(),
+            speedup: out.best_speedup(),
+        }
+    });
     let rows = ev
         .results
         .iter()
@@ -367,6 +408,7 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
         oracle,
         ideal_speedup: ev.ideal_speedup(),
         rows,
+        best_plan,
         eval_seconds: t0.elapsed().as_secs_f64(),
     }
 }
@@ -392,20 +434,8 @@ impl SweepReport {
     }
 }
 
-/// Hard ceiling on sweep worker threads: far above any useful host
-/// parallelism, low enough that a huge `--jobs` cannot exhaust OS
-/// thread limits (each worker is a real `std::thread`).
-pub const MAX_JOBS: usize = 256;
-
-/// Worker count actually used for a sweep of `n_cells` cells: at
-/// least one thread, never more threads than cells, capped at
-/// [`MAX_JOBS`]. Shared by [`run`] and the CLI's progress header so
-/// they can't disagree.
-pub fn clamp_jobs(jobs: usize, n_cells: usize) -> usize {
-    jobs.max(1).min(n_cells.max(1)).min(MAX_JOBS)
-}
-
-/// Run the sweep on `jobs` worker threads. `on_cell` is invoked once
+/// Run the sweep on `jobs` worker threads of the ordered pool
+/// ([`crate::util::pool::run_ordered`]). `on_cell` is invoked once
 /// per cell *in deterministic cell order* as soon as the ordered
 /// prefix is complete — out-of-order completions are buffered — so
 /// incremental emitters produce identical bytes for any `jobs`.
@@ -421,80 +451,16 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
     mut on_cell: F,
 ) -> SweepReport {
     let cells = spec.cells();
-    let n = cells.len();
-    let jobs = clamp_jobs(jobs, n);
-    let cursor = AtomicUsize::new(0);
-    let stop = AtomicBool::new(false);
     let t0 = Instant::now();
-
-    let mut slots: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
-    let mut cancelled = false;
-    let mut next = 0usize;
-    std::thread::scope(|s| {
-        let (tx, rx) = mpsc::channel::<CellResult>();
-        for _ in 0..jobs {
-            let tx = tx.clone();
-            let cells = &cells;
-            let cursor = &cursor;
-            let stop = &stop;
-            s.spawn(move || loop {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                if tx.send(eval_cell(&cells[i])).is_err() {
-                    // Receiver bailed: the sweep was cancelled.
-                    break;
-                }
-            });
-        }
-        drop(tx);
-
-        'recv: for result in rx {
-            let idx = result.index;
-            slots[idx] = Some(result);
-            while next < n {
-                // Borrow rather than take: the slot stays filled for
-                // the final ordered collection below.
-                match &slots[next] {
-                    Some(ready) => {
-                        let keep_going = on_cell(ready);
-                        next += 1;
-                        if !keep_going {
-                            cancelled = true;
-                            // Stop workers before they dispatch
-                            // another (discarded) cell; dropping the
-                            // receiver below backstops the in-flight
-                            // sends.
-                            stop.store(true, Ordering::Relaxed);
-                            break 'recv;
-                        }
-                    }
-                    None => break,
-                }
-            }
-        }
-        // Leaving the loop drops the receiver; workers stop taking
-        // new cells on their next send. The scope joins them.
-    });
-
-    let cells: Vec<CellResult> = if cancelled {
-        // Exactly the delivered prefix: completed-but-undelivered
-        // stragglers are discarded so the cancelled report does not
-        // depend on worker timing.
-        slots.into_iter().take(next).flatten().collect()
-    } else {
-        slots
-            .into_iter()
-            .map(|s| s.expect("every sweep cell completes"))
-            .collect()
-    };
-    SweepReport {
+    let pool_run = crate::util::pool::run_ordered(
+        &cells,
         jobs,
-        cells,
+        |_, cell| eval_cell(cell),
+        |_, result| on_cell(result),
+    );
+    SweepReport {
+        jobs: pool_run.jobs,
+        cells: pool_run.results,
         wall_seconds: t0.elapsed().as_secs_f64(),
     }
 }
@@ -513,6 +479,7 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma, CommMech::Kernel],
             gpu_counts: Vec::new(),
+            search: None,
         }
     }
 

@@ -118,6 +118,22 @@ pub struct Scored {
     pub oracle: Kind,
     pub pick_speedup: f64,
     pub oracle_speedup: f64,
+    /// Best speedup found by searching the parameterized plan space
+    /// (`None` when the scenario was scored against the 6-kind oracle
+    /// only — see [`score_searched`]).
+    pub searched_speedup: Option<f64>,
+    /// Plan id of the searched optimum, when searched.
+    pub searched_plan: Option<String>,
+}
+
+/// Fraction of `reference` speedup lost by `pick_speedup`, guarded:
+/// a non-finite or non-positive reference yields 0 loss rather than
+/// NaN/∞ (a reference that cannot be computed cannot be lost to).
+fn safe_loss(pick_speedup: f64, reference: f64) -> f64 {
+    if !(reference.is_finite() && reference > 0.0) || !pick_speedup.is_finite() {
+        return 0.0;
+    }
+    (1.0 - pick_speedup / reference).max(0.0)
 }
 
 impl Scored {
@@ -126,9 +142,18 @@ impl Scored {
     }
 
     /// Fraction of the oracle speedup lost by the heuristic pick
-    /// (the paper reports ≈14% on mispredictions).
+    /// (the paper reports ≈14% on mispredictions). Guarded against a
+    /// degenerate zero/non-finite oracle speedup.
     pub fn loss(&self) -> f64 {
-        1.0 - self.pick_speedup / self.oracle_speedup
+        safe_loss(self.pick_speedup, self.oracle_speedup)
+    }
+
+    /// Fraction of the *searched* optimum's speedup lost by the
+    /// static pick — the honest accuracy number once the design space
+    /// is wider than the six kinds. `None` when no search was run.
+    pub fn searched_loss(&self) -> Option<f64> {
+        self.searched_speedup
+            .map(|s| safe_loss(self.pick_speedup, s))
     }
 }
 
@@ -145,12 +170,43 @@ pub fn score(machine: &Machine, sc: &Scenario, threshold_scale: f64) -> Scored {
         oracle,
         pick_speedup: ev.speedup(decision.pick),
         oracle_speedup,
+        searched_speedup: None,
+        searched_plan: None,
     }
 }
 
+/// As [`score`], additionally searching the parameterized plan space
+/// ([`crate::search`]) so the heuristic is measured against the
+/// searched optimum, not just the 6-kind argmin. `cache` memoizes
+/// plan evaluations — pass one shared [`crate::search::EvalCache`]
+/// when scoring a whole suite so repeated (machine, shape, plan)
+/// points are simulated once.
+pub fn score_searched(
+    machine: &Machine,
+    sc: &Scenario,
+    threshold_scale: f64,
+    cfg: &crate::search::SearchCfg,
+    cache: &crate::search::EvalCache,
+) -> Scored {
+    let mut scored = score(machine, sc, threshold_scale);
+    let space = crate::search::SpaceSpec::default_for(sc);
+    // Key by a machine fingerprint, not a constant: a cache shared
+    // across machines must never serve one machine's makespans for
+    // another's.
+    let machine_name = crate::search::machine_key(machine);
+    let out = crate::search::search(&machine_name, machine, sc, &space, cfg, cache);
+    scored.searched_speedup = Some(out.best_speedup());
+    scored.searched_plan = Some(out.best.plan.id());
+    scored
+}
+
 /// Accuracy of the heuristic over a suite: (hit-rate, mean loss on
-/// misses) — the two numbers §VI-D reports (81%, ~14%).
+/// misses) — the two numbers §VI-D reports (81%, ~14%). An empty
+/// suite is vacuously accurate: (1.0, 0.0, []) rather than NaN.
 pub fn accuracy(machine: &Machine, suite: &[Scenario], threshold_scale: f64) -> (f64, f64, Vec<Scored>) {
+    if suite.is_empty() {
+        return (1.0, 0.0, Vec::new());
+    }
     let scored: Vec<Scored> = suite
         .iter()
         .map(|sc| score(machine, sc, threshold_scale))
@@ -163,6 +219,39 @@ pub fn accuracy(machine: &Machine, suite: &[Scenario], threshold_scale: f64) -> 
         losses.iter().sum::<f64>() / losses.len() as f64
     };
     (hits as f64 / suite.len() as f64, mean_loss, scored)
+}
+
+/// Accuracy of the heuristic over a suite, scored against the
+/// searched plan-space optimum: (kind-level hit rate, mean searched
+/// loss over the whole suite, per-scenario details). Empty suites are
+/// vacuously accurate, as in [`accuracy`].
+pub fn searched_accuracy(
+    machine: &Machine,
+    suite: &[Scenario],
+    threshold_scale: f64,
+    cfg: &crate::search::SearchCfg,
+) -> (f64, f64, Vec<Scored>) {
+    if suite.is_empty() {
+        return (1.0, 0.0, Vec::new());
+    }
+    // One cache across the whole suite: synthetic suites repeat GEMM
+    // shapes often enough that cross-scenario memoization pays.
+    let cache = crate::search::EvalCache::new();
+    let scored: Vec<Scored> = suite
+        .iter()
+        .map(|sc| score_searched(machine, sc, threshold_scale, cfg, &cache))
+        .collect();
+    let hits = scored.iter().filter(|s| s.hit()).count();
+    let mean_searched_loss = scored
+        .iter()
+        .filter_map(Scored::searched_loss)
+        .sum::<f64>()
+        / scored.len() as f64;
+    (
+        hits as f64 / suite.len() as f64,
+        mean_searched_loss,
+        scored,
+    )
 }
 
 #[cfg(test)]
@@ -219,5 +308,74 @@ mod tests {
         let m = machine();
         let d = pick(&m, &workloads::by_name("g1").unwrap());
         assert!(!d.reason.is_empty());
+    }
+
+    #[test]
+    fn accuracy_on_empty_suite_has_no_nan() {
+        // Regression: hit-rate used to be 0/0 = NaN on an empty suite.
+        let m = machine();
+        let (hit_rate, mean_loss, scored) = accuracy(&m, &[], 1.0);
+        assert!(hit_rate.is_finite() && mean_loss.is_finite());
+        assert_eq!(hit_rate, 1.0, "vacuously accurate");
+        assert_eq!(mean_loss, 0.0);
+        assert!(scored.is_empty());
+        let (h2, l2, s2) = searched_accuracy(&m, &[], 1.0, &crate::search::SearchCfg::default());
+        assert_eq!((h2, l2, s2.len()), (1.0, 0.0, 0));
+    }
+
+    #[test]
+    fn loss_guards_degenerate_oracle_speedup() {
+        // Regression: a zero/non-finite oracle speedup used to yield
+        // ±∞ or NaN loss.
+        let base = Scored {
+            scenario_name: "t".into(),
+            pick: Kind::UniformFused1D,
+            oracle: Kind::HeteroFused1D,
+            pick_speedup: 1.2,
+            oracle_speedup: 0.0,
+            searched_speedup: None,
+            searched_plan: None,
+        };
+        assert_eq!(base.loss(), 0.0);
+        let nan = Scored {
+            oracle_speedup: f64::NAN,
+            ..base.clone()
+        };
+        assert_eq!(nan.loss(), 0.0);
+        let normal = Scored {
+            oracle_speedup: 1.5,
+            ..base.clone()
+        };
+        assert!((normal.loss() - 0.2).abs() < 1e-12);
+        // A pick beating the reference clamps to zero loss rather
+        // than going negative.
+        let beaten = Scored {
+            oracle_speedup: 1.0,
+            ..base
+        };
+        assert_eq!(beaten.loss(), 0.0);
+        assert_eq!(beaten.searched_loss(), None);
+    }
+
+    #[test]
+    fn searched_score_is_at_least_the_oracle() {
+        // The plan space contains every legacy kind as a preset, so
+        // the searched optimum can never fall below the 6-kind oracle.
+        let m = machine();
+        let sc = Scenario::new("t", 65536, 1024, 4096);
+        let cfg = crate::search::SearchCfg {
+            beam: 2,
+            prune: true,
+        };
+        let s = score_searched(&m, &sc, 1.0, &cfg, &crate::search::EvalCache::new());
+        let searched = s.searched_speedup.expect("searched");
+        assert!(
+            searched >= s.oracle_speedup * (1.0 - 1e-12),
+            "searched {searched} < oracle {}",
+            s.oracle_speedup
+        );
+        assert!(s.searched_plan.is_some());
+        let loss = s.searched_loss().expect("searched loss");
+        assert!((0.0..=1.0).contains(&loss));
     }
 }

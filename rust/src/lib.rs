@@ -15,12 +15,27 @@
 //!   loaded by [`runtime`].
 //!
 //! The design-space *exploration* the paper's title promises lives in
-//! [`explore`]: a parallel sweep engine that evaluates the scenario ×
-//! schedule × machine × mechanism × GPU-count product on a worker
-//! pool with deterministic, byte-stable CSV/JSON output (the `ficco
-//! sweep` subcommand). Machine presets beyond the paper's MI300X-8
-//! testbed — an H100-DGX-like switched node and a PCIe-Gen4-class
-//! box — are registered in [`hw`].
+//! three layers:
+//!
+//! - [`plan`] — the parameterized schedule-plan space: a
+//!   [`plan::Plan`] names the axes (decomposition degree, fused vs
+//!   unfused compute, 1D-row vs 2D-column shape, head start, comm
+//!   mechanism, comm-slot width) and one generator
+//!   ([`plan::lower`]) subsumes the six legacy schedule kinds as
+//!   named presets;
+//! - [`search`] — plan-space search against the fluid simulator:
+//!   exhaustive enumeration or beam local search, cost-model
+//!   lower-bound pruning, a memoized evaluation cache, and a
+//!   deterministic parallel tune driver (the `ficco tune`
+//!   subcommand);
+//! - [`explore`] — the parallel sweep engine evaluating the scenario
+//!   × schedule × machine × mechanism × GPU-count product on an
+//!   ordered worker pool ([`util::pool`]) with deterministic,
+//!   byte-stable CSV/JSON output (the `ficco sweep` subcommand).
+//!
+//! Machine presets beyond the paper's MI300X-8 testbed — an
+//! H100-DGX-like switched node and a PCIe-Gen4-class box — are
+//! registered in [`hw`].
 //!
 //! See `DESIGN.md` for the full inventory and the experiment index.
 
@@ -32,8 +47,10 @@ pub mod explore;
 pub mod heuristics;
 pub mod hw;
 pub mod metrics;
+pub mod plan;
 pub mod runtime;
 pub mod schedule;
+pub mod search;
 pub mod sim;
 pub mod train;
 pub mod util;

@@ -10,20 +10,36 @@
 //!                                   (filters: --scenarios --kinds
 //!                                   --machines --mechs --gpus;
 //!                                   --out-dir results/sweep;
+//!                                   --search off|exhaustive|beam:N
+//!                                   fills the best-plan columns;
 //!                                   switches: --verbose prints
 //!                                   per-cell progress, --csv also
 //!                                   writes <out-dir>/summary.csv)
+//!   tune       [--beam N] ...       search the parameterized plan
+//!                                   space per (machine x mech x GPU
+//!                                   count x scenario) cell: legacy
+//!                                   presets seed the search, beam or
+//!                                   exhaustive (--beam 0) expansion,
+//!                                   lower-bound pruning, deterministic
+//!                                   CSV/JSON artifacts (filters:
+//!                                   --scenarios --machines --mechs
+//!                                   --gpus; space: --pieces --slots;
+//!                                   --jobs, --out-dir results/tune,
+//!                                   --verbose, --csv)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
 //!   characterize --what dil|comm-dil|cil
 //!   figures    [--out-dir results]  regenerate every paper exhibit
-//!   synth      --count 16 --seed 7  heuristic accuracy on synthetic suite
+//!   synth      --count 16 --seed 7  heuristic accuracy on synthetic
+//!                                   suite (--against plans scores the
+//!                                   heuristic against the searched
+//!                                   plan-space optimum)
 //!   validate   [--artifacts DIR]    numeric equivalence of all schedules
 //!                                   (real data through PJRT)
 //!   train      [--config FILE]      end-to-end training driver
 //!
 //! Global flags (single-scenario subcommands): --config FILE (machine
-//! preset), --gpus N, --mech dma|rccl. `sweep` instead takes the list
-//! filters above (--machines/--mechs/--gpus accept comma lists).
+//! preset), --gpus N, --mech dma|rccl. `sweep`/`tune` instead take the
+//! list filters above (--machines/--mechs/--gpus accept comma lists).
 //! Machine presets for sweeps: mi300x-8, h100-dgx-8, pcie-gen4-4, switch-8.
 
 use ficco::cli::Args;
@@ -62,6 +78,12 @@ fn machine_from(args: &Args) -> Result<Machine, Box<dyn std::error::Error>> {
     if let Some(g) = args.get("gpus") {
         m.topo.ngpus = g.parse()?;
     }
+    // Schedules need at least two ranks (there is nothing to overlap
+    // on one GPU); catching it here turns a would-be panic deep in
+    // plan lowering into a clean CLI error for every subcommand.
+    if m.topo.ngpus < 2 {
+        return Err(format!("--gpus must be >= 2, got {}", m.topo.ngpus).into());
+    }
     Ok(m)
 }
 
@@ -88,6 +110,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         Some("workloads") => cmd_workloads(),
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
+        Some("tune") => cmd_tune(args),
         Some("heuristic") => cmd_heuristic(args),
         Some("characterize") => cmd_characterize(args),
         Some("figures") => cmd_figures(args),
@@ -97,7 +120,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         Some(other) => Err(format!("unknown subcommand '{other}'").into()),
         None => {
             println!("ficco {} — FiCCO: finer-grain compute-communication overlap", ficco::version());
-            println!("subcommands: workloads simulate sweep heuristic characterize figures synth validate train");
+            println!("subcommands: workloads simulate sweep tune heuristic characterize figures synth validate train");
             Ok(())
         }
     }
@@ -168,7 +191,7 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 /// summary exhibit to `<out-dir>/summary.csv`.
 fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     args.expect_known(&[
-        "scenarios", "kinds", "machines", "mechs", "gpus", "jobs", "out-dir",
+        "scenarios", "kinds", "machines", "mechs", "gpus", "jobs", "out-dir", "search",
     ])?;
     args.expect_switches(&["verbose", "csv"])?;
     if let Some(stray) = args.positional.first() {
@@ -176,13 +199,14 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         // where --csv is a switch, or a typo'd filter value).
         return Err(format!("unexpected argument '{stray}' (sweep takes only --options)").into());
     }
-    let spec = ficco::explore::SweepSpec::from_filters(
+    let mut spec = ficco::explore::SweepSpec::from_filters(
         args.get_or("scenarios", "table1"),
         args.get_or("kinds", "all"),
         args.get_or("machines", "all"),
         args.get_or("mechs", "dma,rccl"),
         args.get_or("gpus", "native"),
     )?;
+    spec.search = parse_search(args.get_or("search", "off"))?;
     let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/sweep");
     std::fs::create_dir_all(out_dir)?;
@@ -259,6 +283,180 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// Parse `--search off|exhaustive|beam:N` into a search config.
+fn parse_search(s: &str) -> Result<Option<ficco::search::SearchCfg>, Box<dyn std::error::Error>> {
+    match s {
+        "off" => Ok(None),
+        "exhaustive" => Ok(Some(ficco::search::SearchCfg {
+            beam: 0,
+            prune: true,
+        })),
+        other => match other.strip_prefix("beam:") {
+            Some(b) => {
+                let beam: usize = b
+                    .parse()
+                    .map_err(|_| format!("bad beam width in --search '{other}'"))?;
+                if beam == 0 {
+                    return Err("--search beam:N needs N >= 1 (use 'exhaustive' for 0)".into());
+                }
+                Ok(Some(ficco::search::SearchCfg { beam, prune: true }))
+            }
+            None => Err(format!("unknown --search '{other}' (off|exhaustive|beam:N)").into()),
+        },
+    }
+}
+
+/// Parse a comma-separated list of positive integers (e.g. `--pieces
+/// 1,2,8`).
+fn parse_usize_list(name: &str, s: &str) -> Result<Vec<usize>, Box<dyn std::error::Error>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let v: usize = part
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{part}'"))?;
+        if v == 0 {
+            return Err(format!("--{name}: values must be >= 1").into());
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        return Err(format!("--{name}: empty list").into());
+    }
+    Ok(out)
+}
+
+/// `ficco tune`: search the parameterized plan space per (machine ×
+/// mech × GPU count × scenario) cell on a worker pool, streaming
+/// deterministic CSV/JSON to `--out-dir` and printing a summary per
+/// machine. `--beam 0` (default) enumerates the space exhaustively
+/// with lower-bound pruning; `--beam N` runs a beam local search
+/// seeded by the six legacy presets. `--pieces`/`--slots` override the
+/// default space axes.
+fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    args.expect_known(&[
+        "scenarios", "machines", "mechs", "gpus", "jobs", "out-dir", "beam", "pieces", "slots",
+    ])?;
+    args.expect_switches(&["verbose", "csv"])?;
+    if let Some(stray) = args.positional.first() {
+        return Err(format!("unexpected argument '{stray}' (tune takes only --options)").into());
+    }
+    let spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("scenarios", "table1"),
+        "all", // kinds are irrelevant to tune; presets are always searched
+        args.get_or("machines", "all"),
+        args.get_or("mechs", "dma"),
+        args.get_or("gpus", "native"),
+    )?;
+    let cfg = ficco::search::SearchCfg {
+        beam: args.get_usize("beam", 0)?,
+        prune: true,
+    };
+    let mut ov = ficco::search::SpaceOverrides::default();
+    if let Some(pieces) = args.get("pieces") {
+        let pieces = parse_usize_list("pieces", pieces)?;
+        if let Some(&bad) = pieces.iter().find(|&&p| p > ficco::plan::Plan::MAX_PIECES) {
+            return Err(format!(
+                "--pieces {bad} exceeds the decomposition cap {}",
+                ficco::plan::Plan::MAX_PIECES
+            )
+            .into());
+        }
+        ov.pieces = Some(pieces);
+    }
+    if let Some(slots) = args.get("slots") {
+        ov.slots = Some(parse_usize_list("slots", slots)?);
+    }
+    // Out-of-range values for *some* machines are filtered per cell
+    // (e.g. --slots 7 is valid on an 8-GPU mesh but not a 4-GPU box);
+    // a space left empty on any swept cell would silently "search"
+    // nothing there, so reject it up front like any other bad filter.
+    for cell in spec.cells() {
+        let space = ficco::search::space_for(&cell.scenario, &ov);
+        if space.plans(&cell.scenario).is_empty() {
+            return Err(format!(
+                "empty plan space on machine {} ({} GPUs): no --pieces/--slots value is \
+                 valid there (slots must be 1..={})",
+                cell.machine_name,
+                cell.scenario.ngpus,
+                cell.scenario.ngpus - 1
+            )
+            .into());
+        }
+    }
+    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
+    let out_dir = args.get_or("out-dir", "results/tune");
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = format!("{out_dir}/tune.csv");
+    let json_path = format!("{out_dir}/tune.json");
+
+    println!(
+        "tune: {} cells ({}) on {} worker thread{}",
+        spec.n_cells(),
+        if cfg.beam == 0 {
+            "exhaustive + pruning".to_string()
+        } else {
+            format!("beam {}", cfg.beam)
+        },
+        jobs,
+        if jobs == 1 { "" } else { "s" },
+    );
+
+    let mut csv = ficco::search::emit::TuneCsvEmitter::new(std::io::BufWriter::new(
+        std::fs::File::create(&csv_path)?,
+    ))?;
+    let mut json = ficco::search::emit::TuneJsonEmitter::new(std::io::BufWriter::new(
+        std::fs::File::create(&json_path)?,
+    ))?;
+    let verbose = args.has("verbose");
+    let mut write_err: Option<std::io::Error> = None;
+    let report = ficco::search::tune(&spec, &ov, &cfg, jobs, |r| {
+        if let Err(e) = csv.result(r).and_then(|()| json.result(r)) {
+            write_err = Some(e);
+            return false;
+        }
+        if verbose {
+            println!(
+                "  [{:>4}] {:<8} {:<12} {:<5} best {} ({}) gain {} over {} ({})",
+                r.index,
+                r.scenario,
+                r.machine_name,
+                r.mech,
+                r.best_plan,
+                x(r.best_speedup),
+                x(r.plan_gain),
+                r.best_legacy_kind.name(),
+                ficco::util::human_time(r.eval_seconds),
+            );
+        }
+        true
+    });
+    if let Some(e) = write_err {
+        return Err(format!("writing tune artifacts under {out_dir}: {e}").into());
+    }
+    csv.finish()?;
+    json.finish()?;
+
+    let exhibit = ficco::search::emit::summary(&report.results);
+    exhibit.print();
+    if args.has("csv") {
+        let summary_path = format!("{out_dir}/summary.csv");
+        exhibit.write_csv(&summary_path)?;
+        println!("  -> {summary_path}");
+    }
+    println!(
+        "{} plan evaluations ({} pruned) across {} cells in {:.2}s wall ({:.2}s of search on {} workers)",
+        report.evaluations(),
+        report.pruned(),
+        report.results.len(),
+        report.wall_seconds,
+        report.cpu_seconds(),
+        report.jobs,
+    );
+    println!("  -> {csv_path}");
+    println!("  -> {json_path}");
+    Ok(())
+}
+
 fn cmd_heuristic(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let machine = machine_from(args)?;
     if args.has("all") || args.get("scenario").is_none() {
@@ -327,28 +525,66 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let seed = args.get_u64("seed", 2025)?;
     let scale = args.get_f64("threshold", ficco::heuristics::DEFAULT_THRESHOLD_SCALE)?;
     let suite = workloads::synthetic_scenarios(seed, count);
-    let (hit_rate, mean_loss, scored) = ficco::heuristics::accuracy(&machine, &suite, scale);
-    let mut t = Table::new(vec!["scenario", "pick", "oracle", "pick speedup", "oracle speedup", "hit"])
+    let against = args.get_or("against", "kinds");
+    let (hit_rate, mean_loss, scored) = match against {
+        "kinds" => ficco::heuristics::accuracy(&machine, &suite, scale),
+        "plans" => {
+            let cfg = ficco::search::SearchCfg {
+                beam: args.get_usize("beam", 4)?,
+                prune: true,
+            };
+            ficco::heuristics::searched_accuracy(&machine, &suite, scale, &cfg)
+        }
+        other => return Err(format!("unknown --against '{other}' (kinds|plans)").into()),
+    };
+    let searched = against == "plans";
+    let mut headers = vec!["scenario", "pick", "oracle", "pick speedup", "oracle speedup"];
+    if searched {
+        headers.push("searched best");
+        headers.push("searched loss %");
+    }
+    headers.push("hit");
+    let mut t = Table::new(headers)
         .align(0, Align::Left)
         .align(1, Align::Left)
         .align(2, Align::Left);
     for s in &scored {
-        t.row(vec![
+        let mut row = vec![
             s.scenario_name.clone(),
             s.pick.name().to_string(),
             s.oracle.name().to_string(),
             x(s.pick_speedup),
             x(s.oracle_speedup),
-            if s.hit() { "*".to_string() } else { "miss".to_string() },
-        ]);
+        ];
+        if searched {
+            row.push(match s.searched_speedup {
+                Some(v) => x(v),
+                None => "-".to_string(),
+            });
+            row.push(match s.searched_loss() {
+                Some(v) => ficco::util::table::f(100.0 * v, 1),
+                None => "-".to_string(),
+            });
+        }
+        row.push(if s.hit() { "*".to_string() } else { "miss".to_string() });
+        t.row(row);
     }
     print!("{}", t.render());
-    println!(
-        "heuristic accuracy: {:.0}% ({} scenarios); mean loss on miss: {:.1}%",
-        100.0 * hit_rate,
-        count,
-        100.0 * mean_loss
-    );
+    if searched {
+        println!(
+            "heuristic accuracy vs 6-kind oracle: {:.0}% ({} scenarios); mean loss vs searched plan-space optimum: {:.1}%",
+            100.0 * hit_rate,
+            count,
+            100.0 * mean_loss
+        );
+    } else {
+        println!(
+            "heuristic accuracy: {:.0}% ({} scenarios); mean loss on miss: {:.1}%",
+            100.0 * hit_rate,
+            count,
+            100.0 * mean_loss
+        );
+    }
     Ok(())
 }
 

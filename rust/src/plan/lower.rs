@@ -1,0 +1,392 @@
+//! Lowering: one generator from any [`Plan`] point to a [`Schedule`].
+//!
+//! Two emission modes, selected by the comm-slot width:
+//!
+//! - **full-width** (`slots == ngpus-1`): every (src, dst) pair rides
+//!   its own lane, so transfers to distinct peers are unordered and
+//!   emission is receiver-major — this specializes to the legacy
+//!   baseline, uniform-fused-1D/2D and hetero generators bit-for-bit
+//!   (same node structure, stream assignment and insertion order, so
+//!   the fluid simulator reproduces their makespans exactly);
+//! - **chained** (`slots < ngpus-1`): transfers share lanes, so each
+//!   (receiver, lane) chain is serialized by explicit deps and
+//!   emission is round-major (receiver `r` takes piece `p` from peer
+//!   `(r+s) mod n` at round `s` — a perfect matching per round). With
+//!   `slots == 1`, `pieces == 1`, unfused and head-start this is
+//!   exactly the legacy shard-overlap (AsyncTP-style) generator.
+//!
+//! Stream insertion order matters: the simulator serializes each
+//! stream FIFO, so the emission orders above are part of the plan's
+//! semantics, not cosmetics.
+
+use super::{CommShape, Plan};
+use crate::cost::gemm::GemmShape;
+use crate::schedule::generate::{lane, region, split, Builder};
+use crate::schedule::{Region, Scenario, Schedule};
+
+/// Region of piece `p` (of `d`) of GPU `q`'s shard under `shape`.
+fn piece_region(sc: &Scenario, shape: CommShape, q: usize, p: usize, d: usize) -> Region {
+    let (lo, hi) = split(sc.gemm.m, sc.ngpus as u64, q as u64);
+    match shape {
+        CommShape::Row => {
+            let (plo, phi) = split(hi - lo, d as u64, p as u64);
+            region((lo + plo, lo + phi), (0, sc.gemm.k))
+        }
+        CommShape::Col => {
+            let ks = split(sc.gemm.k, d as u64, p as u64);
+            region((lo, hi), ks)
+        }
+    }
+}
+
+/// Generate the schedule for `plan` on `scenario`. Panics on an
+/// invalid plan (see [`Plan::check`]); search-side callers enumerate
+/// only checked plans.
+pub fn lower(plan: &Plan, sc: &Scenario) -> Schedule {
+    plan.check(sc.ngpus)
+        .unwrap_or_else(|e| panic!("invalid plan {} for {}: {e}", plan.id(), sc.name));
+    let n = sc.ngpus;
+    let mut b = Builder::new();
+    if plan.slots >= n - 1 {
+        lower_full(plan, sc, &mut b);
+    } else {
+        lower_chained(plan, sc, &mut b);
+    }
+    Schedule {
+        kind: plan.kind(),
+        scenario: sc.clone(),
+        plan: Some(*plan),
+        nodes: b.nodes,
+    }
+}
+
+/// Emit the head-start GEMM: the whole local shard, full K, computed
+/// immediately with no dependencies.
+fn head_start_gemm(sc: &Scenario, b: &mut Builder, r: usize) {
+    let g = &sc.gemm;
+    let (lo, hi) = split(g.m, sc.ngpus as u64, r as u64);
+    b.gemm(
+        r,
+        GemmShape { m: hi - lo, ..*g },
+        vec![region((lo, hi), (0, g.k))],
+        0,
+        vec![],
+    );
+}
+
+/// Per-piece GEMM shape (unfused compute) for one region.
+fn piece_shape(plan: &Plan, sc: &Scenario, reg: &Region, p: usize) -> GemmShape {
+    let g = &sc.gemm;
+    match plan.shape {
+        CommShape::Row => GemmShape {
+            m: reg.row_hi - reg.row_lo,
+            ..*g
+        },
+        CommShape::Col => GemmShape {
+            m: reg.row_hi - reg.row_lo,
+            k: reg.k_hi - reg.k_lo,
+            accumulate: p > 0,
+            ..*g
+        },
+    }
+}
+
+/// Emit the fused compute for one (receiver, piece-step): gather the
+/// arrivals (and, for uniform plans, the local piece) into one GEMM,
+/// scattering row-sharded outputs back. The shard-level uniform point
+/// (`pieces == 1`, no head start) degenerates to the serial baseline:
+/// a one-shot exchange lands every shard in its final layout, so no
+/// gather/scatter copies are needed and a single GEMM consumes the
+/// whole input.
+fn emit_fused(
+    plan: &Plan,
+    sc: &Scenario,
+    b: &mut Builder,
+    r: usize,
+    p: usize,
+    covers: Vec<Region>,
+    xfers: Vec<usize>,
+) {
+    let g = &sc.gemm;
+    let e = g.dtype.bytes() as f64;
+    let step = p + if plan.head_start { 1 } else { 0 };
+    let rows_total: u64 = covers.iter().map(|c| c.row_hi - c.row_lo).sum();
+    let k_len = match covers.first() {
+        Some(c) => c.k_hi - c.k_lo,
+        None => g.k,
+    };
+    let shape = GemmShape {
+        m: rows_total,
+        k: k_len,
+        accumulate: plan.shape == CommShape::Col && p > 0,
+        ..*g
+    };
+    if plan.pieces == 1 && !plan.head_start {
+        b.gemm(r, shape, covers, step, xfers);
+        return;
+    }
+    let gather_bytes = rows_total as f64 * k_len as f64 * e;
+    let gather = b.gather(r, gather_bytes, step, xfers);
+    let gemm = b.gemm(r, shape, covers, step, vec![gather]);
+    if plan.shape == CommShape::Row {
+        let scatter_bytes = rows_total as f64 * g.n as f64 * e;
+        b.scatter(r, scatter_bytes, step, vec![gemm]);
+    }
+}
+
+/// Full-width lowering: receiver-major emission, a dedicated lane per
+/// (src, dst) pair, no transfer chaining (stream FIFO orders repeats
+/// of the same pair across piece steps).
+fn lower_full(plan: &Plan, sc: &Scenario, b: &mut Builder) {
+    let n = sc.ngpus;
+    let d = plan.pieces;
+    for r in 0..n {
+        if plan.head_start {
+            head_start_gemm(sc, b, r);
+        }
+        for p in 0..d {
+            let mut xfers: Vec<usize> = Vec::new();
+            let mut covers: Vec<Region> = Vec::new();
+            // (dep, region) per piece consumed this step; local pieces
+            // (uniform plans only) carry no dependency.
+            let mut pieces: Vec<(Option<usize>, Region)> = Vec::new();
+            for q in 0..n {
+                let reg = piece_region(sc, plan.shape, q, p, d);
+                if q == r {
+                    if !plan.head_start {
+                        covers.push(reg);
+                        pieces.push((None, reg));
+                    }
+                    continue;
+                }
+                let x = b.xfer(r, q, reg, p, lane(q, r, n), vec![]);
+                xfers.push(x);
+                covers.push(reg);
+                pieces.push((Some(x), reg));
+            }
+            if plan.fused {
+                emit_fused(plan, sc, b, r, p, covers, xfers);
+            } else {
+                let step = p + if plan.head_start { 1 } else { 0 };
+                for (dep, reg) in pieces {
+                    let deps = match dep {
+                        Some(x) => vec![x],
+                        None => vec![],
+                    };
+                    b.gemm(r, piece_shape(plan, sc, &reg, p), vec![reg], step, deps);
+                }
+            }
+        }
+    }
+}
+
+/// Narrow-slot lowering: round-major emission with per-(receiver,
+/// lane) dependency chains serializing transfers that share a lane.
+fn lower_chained(plan: &Plan, sc: &Scenario, b: &mut Builder) {
+    let n = sc.ngpus;
+    let d = plan.pieces;
+    let w = plan.slots;
+    if plan.head_start {
+        for r in 0..n {
+            head_start_gemm(sc, b, r);
+        }
+    }
+    // Last transfer per (receiver, lane): the chain tails.
+    let mut chain: Vec<Vec<Option<usize>>> = vec![vec![None; w]; n];
+    for p in 0..d {
+        let step = p + if plan.head_start { 1 } else { 0 };
+        // Arrivals per receiver this piece step (fused plans compute
+        // them together once the step's rounds are emitted).
+        let mut got: Vec<Vec<(usize, Region)>> = vec![Vec::new(); n];
+        for s_off in 1..n {
+            for r in 0..n {
+                let q = (r + s_off) % n;
+                let reg = piece_region(sc, plan.shape, q, p, d);
+                let lane_i = (n - 1 - s_off) % w;
+                let deps = match chain[r][lane_i] {
+                    Some(x) => vec![x],
+                    None => vec![],
+                };
+                let x = b.xfer(r, q, reg, p, lane_i, deps);
+                chain[r][lane_i] = Some(x);
+                if plan.fused {
+                    got[r].push((x, reg));
+                } else {
+                    b.gemm(r, piece_shape(plan, sc, &reg, p), vec![reg], step, vec![x]);
+                }
+            }
+        }
+        if plan.fused {
+            for (r, arrivals) in got.into_iter().enumerate() {
+                let mut covers: Vec<Region> = Vec::new();
+                let mut xfers: Vec<usize> = Vec::new();
+                if !plan.head_start {
+                    covers.push(piece_region(sc, plan.shape, r, p, d));
+                }
+                for (x, reg) in arrivals {
+                    xfers.push(x);
+                    covers.push(reg);
+                }
+                emit_fused(plan, sc, b, r, p, covers, xfers);
+            }
+        } else if !plan.head_start {
+            // Uniform unfused: the local piece of this step still
+            // needs computing (no transfer, no dependency).
+            for r in 0..n {
+                let reg = piece_region(sc, plan.shape, r, p, d);
+                b.gemm(r, piece_shape(plan, sc, &reg, p), vec![reg], step, vec![]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{validate::validate, Kind, OpKind};
+    use crate::sim::CommMech;
+
+    fn sc() -> Scenario {
+        Scenario::new("t", 4096, 1024, 2048)
+    }
+
+    #[test]
+    fn presets_lower_to_legacy_structure() {
+        let sc = sc();
+        // Baseline: 56 whole-shard transfers, 8 GEMMs, no copies.
+        let base = Plan::preset(Kind::Baseline, &sc).lower(&sc);
+        assert_eq!(base.n_xfers(), 8 * 7);
+        assert_eq!(base.n_gemms(), 8);
+        // Shard overlap: 8 local + 56 per-shard GEMMs, chained lanes.
+        let so = Plan::preset(Kind::ShardOverlap, &sc).lower(&sc);
+        assert_eq!(so.n_xfers(), 8 * 7);
+        assert_eq!(so.n_gemms(), 8 * 8);
+        // Uniform fused 1D: 8x the transfer count, same bytes.
+        let uf = Plan::preset(Kind::UniformFused1D, &sc).lower(&sc);
+        assert_eq!(uf.n_xfers(), 8 * base.n_xfers());
+        assert!((uf.comm_bytes() - base.comm_bytes()).abs() < 1.0);
+        // Hetero unfused: no gather/scatter nodes at all.
+        let hu = Plan::preset(Kind::HeteroUnfused1D, &sc).lower(&sc);
+        assert!(!hu
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, OpKind::Gather { .. } | OpKind::Scatter { .. })));
+        assert_eq!(hu.n_gemms(), 8 * (1 + 8 * 7));
+    }
+
+    #[test]
+    fn every_preset_validates_everywhere() {
+        for (m, n, k, g) in [(4096, 1024, 2048, 8), (1009, 37, 977, 8), (17, 3, 1031, 3)] {
+            let sc = Scenario::new("t", m, n, k).with_ngpus(g);
+            for kind in Kind::ALL {
+                let sched = Plan::preset(kind, &sc).lower(&sc);
+                validate(&sched).unwrap_or_else(|e| panic!("{kind:?} {m}x{n}x{k}/{g}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn novel_points_validate() {
+        let sc = sc();
+        let novel = [
+            // Half-degree uniform fused.
+            Plan {
+                pieces: 4,
+                shape: CommShape::Row,
+                fused: true,
+                head_start: false,
+                mech: CommMech::Dma,
+                slots: 7,
+            },
+            // Narrow-lane FiCCO (2 lanes, 8 pieces, head start).
+            Plan {
+                pieces: 8,
+                shape: CommShape::Row,
+                fused: true,
+                head_start: true,
+                mech: CommMech::Dma,
+                slots: 2,
+            },
+            // Column-sharded with head start (not in the legacy six).
+            Plan {
+                pieces: 8,
+                shape: CommShape::Col,
+                fused: true,
+                head_start: true,
+                mech: CommMech::Dma,
+                slots: 7,
+            },
+            // Unfused column decomposition.
+            Plan {
+                pieces: 4,
+                shape: CommShape::Col,
+                fused: false,
+                head_start: false,
+                mech: CommMech::Kernel,
+                slots: 3,
+            },
+            // Over-decomposed: more pieces than shard rows.
+            Plan {
+                pieces: 16,
+                shape: CommShape::Row,
+                fused: false,
+                head_start: true,
+                mech: CommMech::Dma,
+                slots: 1,
+            },
+        ];
+        for plan in novel {
+            let sched = plan.lower(&sc);
+            validate(&sched).unwrap_or_else(|e| panic!("{}: {e}", plan.id()));
+            assert!(sched.plan == Some(plan));
+        }
+    }
+
+    #[test]
+    fn deps_are_topologically_ordered_for_novel_points() {
+        let sc = sc();
+        let plan = Plan {
+            pieces: 3,
+            shape: CommShape::Row,
+            fused: true,
+            head_start: true,
+            mech: CommMech::Dma,
+            slots: 2,
+        };
+        let s = plan.lower(&sc);
+        for (i, node) in s.nodes.iter().enumerate() {
+            for &dep in &node.deps {
+                assert!(dep < i, "node {i} deps on later node {dep}");
+            }
+        }
+    }
+
+    #[test]
+    fn chained_lanes_serialize_transfers() {
+        let sc = sc();
+        let plan = Plan {
+            pieces: 2,
+            shape: CommShape::Row,
+            fused: true,
+            head_start: false,
+            mech: CommMech::Dma,
+            slots: 1,
+        };
+        let s = plan.lower(&sc);
+        // Single lane: on each receiver, every transfer after the
+        // first depends on the previous one.
+        for gpu in 0..sc.ngpus {
+            let xfer_ids: Vec<usize> = s
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.gpu == gpu && matches!(n.kind, OpKind::Xfer { .. }))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(xfer_ids.len(), 2 * 7);
+            for pair in xfer_ids.windows(2) {
+                assert_eq!(s.nodes[pair[1]].deps, vec![pair[0]], "gpu {gpu}");
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! The parameterized FiCCO schedule-plan space.
+//!
+//! The six hard-coded [`Kind`]s materialize six points of the design
+//! space the paper argues FiCCO opens up. A [`Plan`] names the axes of
+//! that space explicitly:
+//!
+//! - **`pieces`** — decomposition degree: how many communication
+//!   pieces each GPU's shard is split into (1 = shard-level, the
+//!   paper's FiCCO schedules use `ngpus`, but nothing forces that);
+//! - **`shape`** — 1D row-sharded ([`CommShape::Row`]) vs 2D
+//!   column/K-sharded ([`CommShape::Col`]) communication;
+//! - **`fused`** — whether each step's arrivals are gathered into one
+//!   shard-sized GEMM (low DIL, pays gather/scatter copies) or each
+//!   piece gets its own small GEMM (no copies, higher DIL);
+//! - **`head_start`** — whether the local shard is computed
+//!   immediately while remote pieces are still in flight;
+//! - **`mech`** — communication mechanism (DMA offload vs
+//!   GPU-core/RCCL-style copy kernels);
+//! - **`slots`** — comm-slot width: how many per-peer transfer lanes
+//!   each GPU drives concurrently (1 = single P2P stream, the
+//!   AsyncTP-style constraint; `ngpus-1` = full-mesh lane per peer).
+//!
+//! [`lower`] turns any valid `Plan` into a [`Schedule`] through one
+//! generator; each legacy `Kind` is a named preset point
+//! ([`Plan::preset`]) whose lowering reproduces the legacy generator's
+//! simulated makespan exactly (see `rust/tests/plan_parity.rs`). The
+//! search subsystem ([`crate::search`]) evaluates this space against
+//! the fluid simulator. See `DESIGN.md` §2 for the space's semantics
+//! and invariants.
+
+mod lower;
+
+pub use lower::lower;
+
+use crate::schedule::{Kind, Scenario, Schedule};
+use crate::sim::CommMech;
+
+/// Communication decomposition shape: which input dimension the
+/// per-shard pieces split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommShape {
+    /// Split shard rows (1D buffers; outputs partition by row).
+    Row,
+    /// Split the reduction dimension K (2D buffers; accumulating
+    /// GEMMs, no output scatter).
+    Col,
+}
+
+impl CommShape {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommShape::Row => "row",
+            CommShape::Col => "col",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CommShape> {
+        match s {
+            "row" => Some(CommShape::Row),
+            "col" => Some(CommShape::Col),
+            _ => None,
+        }
+    }
+}
+
+/// One point of the FiCCO schedule-plan space. Small, `Copy`, and
+/// hashable so it can key evaluation caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Plan {
+    /// Communication pieces per shard (decomposition degree, ≥ 1).
+    pub pieces: usize,
+    /// 1D row vs 2D column communication shape.
+    pub shape: CommShape,
+    /// Fused per-step GEMM (with gather/scatter) vs per-piece GEMMs.
+    pub fused: bool,
+    /// Compute the local shard immediately at step 0.
+    pub head_start: bool,
+    /// Mechanism moving the pieces (DMA engines vs copy kernels).
+    pub mech: CommMech,
+    /// Concurrent transfer lanes per GPU (1..=ngpus-1).
+    pub slots: usize,
+}
+
+impl Plan {
+    /// The preset plan reproducing a legacy [`Kind`] on `sc` (the
+    /// scenario supplies `ngpus` and the FiCCO mechanism; the
+    /// PyTorch-stack baselines are pinned to core-driven comm exactly
+    /// as the legacy executor pinned them).
+    pub fn preset(kind: Kind, sc: &Scenario) -> Plan {
+        let n = sc.ngpus;
+        let full = n.saturating_sub(1).max(1);
+        match kind {
+            Kind::Baseline => Plan {
+                pieces: 1,
+                shape: CommShape::Row,
+                fused: true,
+                head_start: false,
+                mech: CommMech::Kernel,
+                slots: full,
+            },
+            Kind::ShardOverlap => Plan {
+                pieces: 1,
+                shape: CommShape::Row,
+                fused: false,
+                head_start: true,
+                mech: CommMech::Kernel,
+                slots: 1,
+            },
+            Kind::UniformFused1D => Plan {
+                pieces: n,
+                shape: CommShape::Row,
+                fused: true,
+                head_start: false,
+                mech: sc.mech,
+                slots: full,
+            },
+            Kind::HeteroFused1D => Plan {
+                pieces: n,
+                shape: CommShape::Row,
+                fused: true,
+                head_start: true,
+                mech: sc.mech,
+                slots: full,
+            },
+            Kind::HeteroUnfused1D => Plan {
+                pieces: n,
+                shape: CommShape::Row,
+                fused: false,
+                head_start: true,
+                mech: sc.mech,
+                slots: full,
+            },
+            Kind::UniformFused2D => Plan {
+                pieces: n,
+                shape: CommShape::Col,
+                fused: true,
+                head_start: false,
+                mech: sc.mech,
+                slots: full,
+            },
+        }
+    }
+
+    /// All six legacy presets for `sc`, in [`Kind::ALL`] order.
+    pub fn presets(sc: &Scenario) -> Vec<Plan> {
+        Kind::ALL.iter().map(|&k| Plan::preset(k, sc)).collect()
+    }
+
+    /// Structural validity of the plan for a machine of `ngpus` GPUs.
+    pub fn check(&self, ngpus: usize) -> Result<(), String> {
+        if ngpus < 2 {
+            return Err(format!("plans need >= 2 GPUs, got {ngpus}"));
+        }
+        if self.pieces == 0 {
+            return Err("pieces must be >= 1".into());
+        }
+        if self.pieces > Plan::MAX_PIECES {
+            return Err(format!(
+                "pieces {} exceeds the sanity cap {}",
+                self.pieces,
+                Plan::MAX_PIECES
+            ));
+        }
+        let full = ngpus - 1;
+        if self.slots == 0 || self.slots > full {
+            return Err(format!("slots must be in 1..={full}, got {}", self.slots));
+        }
+        Ok(())
+    }
+
+    /// Sanity cap on the decomposition degree (a schedule has
+    /// `O(ngpus² · pieces)` nodes; beyond this the simulation cost is
+    /// absurd and the small-message ramp makes the plan hopeless).
+    pub const MAX_PIECES: usize = 256;
+
+    /// The legacy [`Kind`] this plan is classified as, used for
+    /// reporting and for the isolated comm-leg closed form. Exact for
+    /// the six presets; nearest-neighbour for the rest of the space.
+    pub fn kind(&self) -> Kind {
+        match (self.shape, self.pieces, self.head_start, self.fused) {
+            (CommShape::Col, _, _, _) => Kind::UniformFused2D,
+            (CommShape::Row, 1, false, true) => Kind::Baseline,
+            (CommShape::Row, 1, true, false) if self.slots == 1 => Kind::ShardOverlap,
+            (CommShape::Row, _, true, true) => Kind::HeteroFused1D,
+            (CommShape::Row, _, true, false) => Kind::HeteroUnfused1D,
+            (CommShape::Row, _, false, _) => Kind::UniformFused1D,
+        }
+    }
+
+    /// Compact stable identifier, e.g. `row-d8-fused-hs-s7-dma`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}-d{}-{}-{}-s{}-{}",
+            self.shape.name(),
+            self.pieces,
+            if self.fused { "fused" } else { "unfused" },
+            if self.head_start { "hs" } else { "uni" },
+            self.slots,
+            self.mech.name(),
+        )
+    }
+
+    /// Parse an [`Plan::id`]-formatted string back into a plan.
+    pub fn parse_id(s: &str) -> Option<Plan> {
+        let parts: Vec<&str> = s.split('-').collect();
+        if parts.len() != 6 {
+            return None;
+        }
+        let shape = CommShape::parse(parts[0])?;
+        let pieces: usize = parts[1].strip_prefix('d')?.parse().ok()?;
+        let fused = match parts[2] {
+            "fused" => true,
+            "unfused" => false,
+            _ => return None,
+        };
+        let head_start = match parts[3] {
+            "hs" => true,
+            "uni" => false,
+            _ => return None,
+        };
+        let slots: usize = parts[4].strip_prefix('s')?.parse().ok()?;
+        let mech = CommMech::parse(parts[5])?;
+        Some(Plan {
+            pieces,
+            shape,
+            fused,
+            head_start,
+            mech,
+            slots,
+        })
+    }
+
+    /// Lower this plan for a scenario (see [`lower`]).
+    pub fn lower(&self, sc: &Scenario) -> Schedule {
+        lower(self, sc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> Scenario {
+        Scenario::new("t", 4096, 1024, 2048)
+    }
+
+    #[test]
+    fn presets_classify_back_to_their_kind() {
+        let sc = sc();
+        for kind in Kind::ALL {
+            let p = Plan::preset(kind, &sc);
+            assert_eq!(p.kind(), kind, "{kind:?}");
+            assert!(p.check(sc.ngpus).is_ok(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn preset_mech_pins_pytorch_baselines_to_kernel() {
+        let mut s = sc();
+        s.mech = CommMech::Dma;
+        assert_eq!(Plan::preset(Kind::Baseline, &s).mech, CommMech::Kernel);
+        assert_eq!(Plan::preset(Kind::ShardOverlap, &s).mech, CommMech::Kernel);
+        assert_eq!(Plan::preset(Kind::UniformFused1D, &s).mech, CommMech::Dma);
+    }
+
+    #[test]
+    fn id_round_trips() {
+        let sc = sc();
+        for kind in Kind::ALL {
+            let p = Plan::preset(kind, &sc);
+            assert_eq!(Plan::parse_id(&p.id()), Some(p), "{}", p.id());
+        }
+        let q = Plan {
+            pieces: 3,
+            shape: CommShape::Col,
+            fused: false,
+            head_start: true,
+            mech: CommMech::Dma,
+            slots: 2,
+        };
+        assert_eq!(q.id(), "col-d3-unfused-hs-s2-dma");
+        assert_eq!(Plan::parse_id(&q.id()), Some(q));
+        assert_eq!(Plan::parse_id("nonsense"), None);
+        assert_eq!(Plan::parse_id("row-dx-fused-hs-s1-dma"), None);
+    }
+
+    #[test]
+    fn check_rejects_degenerate_knobs() {
+        let p = Plan::preset(Kind::UniformFused1D, &sc());
+        assert!(p.check(1).is_err(), "single GPU");
+        assert!(Plan { pieces: 0, ..p }.check(8).is_err());
+        assert!(Plan { slots: 0, ..p }.check(8).is_err());
+        assert!(Plan { slots: 8, ..p }.check(8).is_err(), "slots > n-1");
+        assert!(Plan { pieces: 100_000, ..p }.check(8).is_err());
+        assert!(Plan { slots: 3, pieces: 2, ..p }.check(8).is_ok());
+    }
+}

@@ -25,19 +25,37 @@ pub struct ExecResult {
     pub sim_events: usize,
 }
 
-/// Execute `sched` on `machine`; panics on simulator livelock (which
-/// would indicate a malformed schedule — run `validate` first).
-pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
+/// The communication mechanism a schedule's transfers ride: the plan
+/// knob when the schedule was lowered from a plan; otherwise the
+/// legacy rule — the serial baseline and shard-overlap (AsyncTP) are
+/// the PyTorch-stack reference points with GPU-core-driven (RCCL /
+/// SM-copy) communication, FiCCO schedules use the scenario's
+/// mechanism (DMA by default; Kernel for the FiCCO-rccl ablation).
+fn sched_mech(sched: &Schedule) -> CommMech {
+    match sched.plan {
+        Some(p) => p.mech,
+        None => match sched.kind {
+            Kind::Baseline | Kind::ShardOverlap => CommMech::Kernel,
+            _ => sched.scenario.mech,
+        },
+    }
+}
+
+/// Simulator tasks of one schedule plus the bookkeeping the metrics
+/// need (which tasks are GEMMs/transfers, isolated GEMM time per GPU).
+struct Loaded {
+    sim: ClusterSim,
+    gemm_tasks: Vec<TaskId>,
+    xfer_tasks: Vec<TaskId>,
+    gemm_iso_per_gpu: Vec<f64>,
+}
+
+/// Build the simulator task graph for `sched` without running it —
+/// shared by [`execute`] and the analytic [`makespan_lower_bound`].
+fn load(machine: &Machine, sched: &Schedule) -> Loaded {
     let mut sim = ClusterSim::new(machine.clone());
     let gcost = GemmCost::new(&machine.gpu);
-    // The serial baseline and shard-overlap (AsyncTP) are the
-    // PyTorch-stack reference points: GPU-core-driven (RCCL / SM-copy)
-    // communication. FiCCO schedules use the scenario's mechanism
-    // (DMA by default; Kernel for the FiCCO-rccl ablation).
-    let mech = match sched.kind {
-        Kind::Baseline | Kind::ShardOverlap => CommMech::Kernel,
-        _ => sched.scenario.mech,
-    };
+    let mech = sched_mech(sched);
     let dtype = sched.scenario.dtype();
 
     let mut task_of: Vec<TaskId> = Vec::with_capacity(sched.nodes.len());
@@ -93,15 +111,25 @@ pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
         task_of.push(tid);
     }
 
+    Loaded {
+        sim,
+        gemm_tasks,
+        xfer_tasks,
+        gemm_iso_per_gpu,
+    }
+}
+
+/// Run an already-loaded task graph and assemble the metrics.
+fn measure(machine: &Machine, sched: &Schedule, loaded: Loaded) -> ExecResult {
     let n_tasks = sched.nodes.len();
-    let report = sim.run().unwrap_or_else(|e| {
+    let report = loaded.sim.run().unwrap_or_else(|e| {
         panic!("simulating {} for {}: {e}", sched.kind.name(), sched.scenario.name)
     });
 
-    let gemm_cil = mean_slowdown(&report, &gemm_tasks);
-    let comm_cil = mean_slowdown(&report, &xfer_tasks);
-    let gemm_leg = gemm_iso_per_gpu.iter().cloned().fold(0.0, f64::max);
-    let comm_leg = comm_leg_isolated(machine, &sched.scenario, sched.kind);
+    let gemm_cil = mean_slowdown(&report, &loaded.gemm_tasks);
+    let comm_cil = mean_slowdown(&report, &loaded.xfer_tasks);
+    let gemm_leg = loaded.gemm_iso_per_gpu.iter().cloned().fold(0.0, f64::max);
+    let comm_leg = comm_leg_isolated(machine, &sched.scenario, sched.kind, sched_mech(sched));
 
     ExecResult {
         kind: sched.kind,
@@ -115,6 +143,23 @@ pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
     }
 }
 
+/// Execute `sched` on `machine`; panics on simulator livelock (which
+/// would indicate a malformed schedule — run `validate` first).
+pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
+    let loaded = load(machine, sched);
+    measure(machine, sched, loaded)
+}
+
+/// Analytic lower bound on the simulated makespan of `sched`: the
+/// maximum over per-stream serial work and per-resource total demand
+/// of the task graph as built (see [`crate::sim::Engine::lower_bound`]).
+/// Orders of magnitude cheaper than running the simulation — the
+/// search subsystem uses it to prune plans whose bound already
+/// exceeds the incumbent.
+pub fn makespan_lower_bound(machine: &Machine, sched: &Schedule) -> f64 {
+    load(machine, sched).sim.engine.lower_bound()
+}
+
 fn mean_slowdown(report: &crate::sim::Report, tasks: &[TaskId]) -> f64 {
     if tasks.is_empty() {
         return 1.0;
@@ -123,18 +168,15 @@ fn mean_slowdown(report: &crate::sim::Report, tasks: &[TaskId]) -> f64 {
     s / tasks.len() as f64
 }
 
-/// Isolated communication leg of a schedule kind (closed form).
-fn comm_leg_isolated(machine: &Machine, sc: &Scenario, kind: Kind) -> f64 {
+/// Isolated communication leg of a schedule kind (closed form), with
+/// the mechanism its transfers actually ride.
+fn comm_leg_isolated(machine: &Machine, sc: &Scenario, kind: Kind, mech: CommMech) -> f64 {
     use crate::cost::collective as cc;
     let shard = sc.shard_bytes();
     match kind {
-        Kind::Baseline => {
-            cc::ag_all_to_all_time(&machine.gpu, &machine.topo, shard, CommMech::Kernel)
-        }
-        Kind::ShardOverlap => {
-            cc::ag_ring_time(&machine.gpu, &machine.topo, shard, CommMech::Kernel)
-        }
-        _ => cc::ag_ficco_time(&machine.gpu, &machine.topo, shard, sc.mech),
+        Kind::Baseline => cc::ag_all_to_all_time(&machine.gpu, &machine.topo, shard, mech),
+        Kind::ShardOverlap => cc::ag_ring_time(&machine.gpu, &machine.topo, shard, mech),
+        _ => cc::ag_ficco_time(&machine.gpu, &machine.topo, shard, mech),
     }
 }
 
@@ -145,6 +187,53 @@ pub fn evaluate(machine: &Machine, sc: &Scenario, kind: Kind) -> ExecResult {
     super::validate::validate(&sched)
         .unwrap_or_else(|e| panic!("{} for {}: {e}", kind.name(), sc.name));
     execute(machine, &sched)
+}
+
+/// Evaluate one scenario under an arbitrary plan-space point (lower →
+/// validate → simulate).
+pub fn evaluate_plan(machine: &Machine, sc: &Scenario, plan: &crate::plan::Plan) -> ExecResult {
+    prepare_plan(machine, sc, plan).run()
+}
+
+/// A lowered, validated, loaded-but-not-yet-simulated plan evaluation:
+/// the task graph is built exactly once and serves both the analytic
+/// lower bound (cheap) and, if the bound does not rule the plan out,
+/// the full simulation — so search pruning never constructs the graph
+/// twice.
+pub struct PreparedEval<'m> {
+    machine: &'m Machine,
+    sched: Schedule,
+    loaded: Loaded,
+}
+
+impl<'m> PreparedEval<'m> {
+    /// Analytic lower bound of the prepared graph (no simulation).
+    pub fn lower_bound(&self) -> f64 {
+        self.loaded.sim.engine.lower_bound()
+    }
+
+    /// Simulate the prepared graph.
+    pub fn run(self) -> ExecResult {
+        measure(self.machine, &self.sched, self.loaded)
+    }
+}
+
+/// Lower → validate → load a plan's task graph, returning the
+/// two-phase handle ([`PreparedEval`]).
+pub fn prepare_plan<'m>(
+    machine: &'m Machine,
+    sc: &Scenario,
+    plan: &crate::plan::Plan,
+) -> PreparedEval<'m> {
+    let sched = crate::plan::lower(plan, sc);
+    super::validate::validate(&sched)
+        .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
+    let loaded = load(machine, &sched);
+    PreparedEval {
+        machine,
+        sched,
+        loaded,
+    }
 }
 
 /// Scenario-level summary across all schedule kinds (the per-row data

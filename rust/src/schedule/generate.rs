@@ -1,6 +1,14 @@
 //! Schedule generators: the serial baseline, shard-based overlap, and
 //! the four FiCCO schedules of Fig 11b.
 //!
+//! [`generate`] lowers each [`Kind`] through the parameterized plan
+//! space ([`crate::plan`]): every legacy kind is a named preset
+//! [`crate::plan::Plan`] and one generator ([`crate::plan::lower`])
+//! subsumes all six. The original per-kind generators are kept below,
+//! frozen, as the reference implementations ([`legacy`]) that the
+//! makespan-parity tests (`rust/tests/plan_parity.rs`) compare the
+//! plan lowering against.
+//!
 //! All generators handle non-divisible dimensions via balanced integer
 //! splits, so the coverage invariants hold exactly for any (M, N, K,
 //! ngpus) — the property tests exploit this.
@@ -35,12 +43,21 @@ fn k_block(sc: &Scenario, b: usize) -> (u64, u64) {
 
 /// Sender-side lane index for a (src → dst) transfer so that one
 /// GPU's simultaneous sends to distinct peers ride distinct streams.
-fn lane(src: usize, dst: usize, n: usize) -> usize {
+pub(crate) fn lane(src: usize, dst: usize, n: usize) -> usize {
     (dst + n - src - 1) % n
 }
 
-/// Generate the schedule of `kind` for `scenario`.
+/// Generate the schedule of `kind` for `scenario` by lowering the
+/// kind's preset point of the parameterized plan space.
 pub fn generate(kind: Kind, scenario: &Scenario) -> Schedule {
+    crate::plan::lower(&crate::plan::Plan::preset(kind, scenario), scenario)
+}
+
+/// The frozen legacy generator for `kind` — the original hand-written
+/// per-kind implementation, kept verbatim as the reference the
+/// plan-lowering parity tests compare against. Production paths use
+/// [`generate`].
+pub fn legacy(kind: Kind, scenario: &Scenario) -> Schedule {
     match kind {
         Kind::Baseline => baseline(scenario),
         Kind::ShardOverlap => shard_overlap(scenario),
@@ -51,12 +68,12 @@ pub fn generate(kind: Kind, scenario: &Scenario) -> Schedule {
     }
 }
 
-struct Builder {
-    nodes: Vec<Node>,
+pub(crate) struct Builder {
+    pub(crate) nodes: Vec<Node>,
 }
 
 impl Builder {
-    fn new() -> Builder {
+    pub(crate) fn new() -> Builder {
         Builder { nodes: Vec::new() }
     }
 
@@ -65,7 +82,7 @@ impl Builder {
         self.nodes.len() - 1
     }
 
-    fn xfer(
+    pub(crate) fn xfer(
         &mut self,
         dst: usize,
         src: usize,
@@ -84,7 +101,7 @@ impl Builder {
         })
     }
 
-    fn gemm(
+    pub(crate) fn gemm(
         &mut self,
         gpu: usize,
         shape: GemmShape,
@@ -102,7 +119,7 @@ impl Builder {
         })
     }
 
-    fn gather(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+    pub(crate) fn gather(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
         self.push(Node {
             gpu,
             kind: OpKind::Gather { bytes },
@@ -113,7 +130,7 @@ impl Builder {
         })
     }
 
-    fn scatter(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+    pub(crate) fn scatter(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
         self.push(Node {
             gpu,
             kind: OpKind::Scatter { bytes },
@@ -125,7 +142,7 @@ impl Builder {
     }
 }
 
-fn region(rows: (u64, u64), ks: (u64, u64)) -> Region {
+pub(crate) fn region(rows: (u64, u64), ks: (u64, u64)) -> Region {
     Region {
         row_lo: rows.0,
         row_hi: rows.1,
@@ -160,6 +177,7 @@ fn baseline(sc: &Scenario) -> Schedule {
     Schedule {
         kind: Kind::Baseline,
         scenario: sc.clone(),
+        plan: None,
         nodes: b.nodes,
     }
 }
@@ -211,6 +229,7 @@ fn shard_overlap(sc: &Scenario) -> Schedule {
     Schedule {
         kind: Kind::ShardOverlap,
         scenario: sc.clone(),
+        plan: None,
         nodes: b.nodes,
     }
 }
@@ -255,6 +274,7 @@ fn uniform_fused_1d(sc: &Scenario) -> Schedule {
     Schedule {
         kind: Kind::UniformFused1D,
         scenario: sc.clone(),
+        plan: None,
         nodes: b.nodes,
     }
 }
@@ -333,6 +353,7 @@ fn hetero_1d(sc: &Scenario, fused: bool) -> Schedule {
             Kind::HeteroUnfused1D
         },
         scenario: sc.clone(),
+        plan: None,
         nodes: b.nodes,
     }
 }
@@ -381,6 +402,7 @@ fn uniform_fused_2d(sc: &Scenario) -> Schedule {
     Schedule {
         kind: Kind::UniformFused2D,
         scenario: sc.clone(),
+        plan: None,
         nodes: b.nodes,
     }
 }
@@ -396,9 +418,11 @@ pub fn comm_decomposition(kind: Kind, ngpus: usize) -> usize {
 
 /// EP/MoE scenarios are volume-equivalent to the AG structure (each
 /// GPU keeps ~1/n of its tokens and receives (n-1)/n); this helper
-/// tags the scenario but reuses the same generators.
+/// tags the scenario but reuses the same generators. The structural
+/// AG ↔ A2A equivalence is documented in `DESIGN.md` §1 (repository
+/// root).
 pub fn for_scenario(kind: Kind, sc: &Scenario) -> Schedule {
-    let _ = Collective::AllToAll; // structural equivalence documented in DESIGN.md §1
+    let _ = Collective::AllToAll;
     generate(kind, sc)
 }
 

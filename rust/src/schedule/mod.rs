@@ -232,8 +232,17 @@ pub struct Node {
 /// A complete schedule for a scenario.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Legacy kind classification (exact for preset plans, nearest
+    /// point for the rest of the plan space) — used for reporting and
+    /// the isolated comm-leg closed form.
     pub kind: Kind,
     pub scenario: Scenario,
+    /// The plan-space point this schedule was lowered from. All
+    /// generator paths now run through [`crate::plan::lower`], so this
+    /// is `Some` for generated schedules; `None` only for schedules
+    /// built by the frozen legacy reference generators
+    /// ([`generate::legacy`]) the parity tests compare against.
+    pub plan: Option<crate::plan::Plan>,
     pub nodes: Vec<Node>,
 }
 

@@ -1,0 +1,249 @@
+//! Deterministic tune-result emitters, mirroring the sweep emitters
+//! ([`crate::explore::emit`]): one CSV row / JSON object per searched
+//! cell, streamed in cell order, per-cell wall times excluded, every
+//! number in Rust's shortest-round-trip `Display` — byte-identical
+//! artifacts for any `--jobs` value.
+
+use std::io::{self, Write};
+
+use super::TuneResult;
+use crate::explore::emit::{csv_escape, json_escape};
+use crate::metrics::Exhibit;
+use crate::util::stats;
+use crate::util::table::{f, x, Align, Table};
+
+/// Column header shared by the tune CSV emitter and its tests.
+pub const TUNE_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,m,n,k,\
+space,evaluated,pruned,baseline_makespan,best_plan,best_makespan,best_speedup,\
+best_legacy_kind,best_legacy_speedup,plan_gain,heuristic_pick,heuristic_speedup,heuristic_loss";
+
+/// One tune result as a CSV row.
+pub fn tune_csv_row(r: &TuneResult) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+        csv_escape(&r.scenario),
+        csv_escape(&r.machine_name),
+        r.topology,
+        r.ngpus,
+        r.mech,
+        r.collective,
+        r.m,
+        r.n,
+        r.k,
+        r.space_size,
+        r.evaluated,
+        r.pruned,
+        r.baseline_makespan,
+        r.best_plan,
+        r.best_makespan,
+        r.best_speedup,
+        r.best_legacy_kind.name(),
+        r.best_legacy_speedup,
+        r.plan_gain,
+        r.pick.name(),
+        r.pick_speedup,
+        r.pick_loss,
+    )
+}
+
+/// One tune result as a JSON object.
+pub fn tune_json(r: &TuneResult) -> String {
+    format!(
+        "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
+         \"mech\":\"{}\",\"collective\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\
+         \"space\":{},\"evaluated\":{},\"pruned\":{},\"baseline_makespan\":{},\
+         \"best_plan\":\"{}\",\"best_makespan\":{},\"best_speedup\":{},\
+         \"best_legacy_kind\":\"{}\",\"best_legacy_speedup\":{},\"plan_gain\":{},\
+         \"heuristic_pick\":\"{}\",\"heuristic_speedup\":{},\"heuristic_loss\":{}}}",
+        json_escape(&r.scenario),
+        json_escape(&r.machine_name),
+        r.topology,
+        r.ngpus,
+        r.mech,
+        r.collective,
+        r.m,
+        r.n,
+        r.k,
+        r.space_size,
+        r.evaluated,
+        r.pruned,
+        r.baseline_makespan,
+        json_escape(&r.best_plan),
+        r.best_makespan,
+        r.best_speedup,
+        r.best_legacy_kind.name(),
+        r.best_legacy_speedup,
+        r.plan_gain,
+        r.pick.name(),
+        r.pick_speedup,
+        r.pick_loss,
+    )
+}
+
+/// Streams tune CSV rows cell by cell (header on construction).
+pub struct TuneCsvEmitter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> TuneCsvEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<TuneCsvEmitter<W>> {
+        writeln!(w, "{TUNE_CSV_HEADER}")?;
+        Ok(TuneCsvEmitter { w })
+    }
+
+    pub fn result(&mut self, r: &TuneResult) -> io::Result<()> {
+        self.w.write_all(tune_csv_row(r).as_bytes())
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Streams a JSON array of tune-result objects.
+pub struct TuneJsonEmitter<W: Write> {
+    w: W,
+    count: usize,
+}
+
+impl<W: Write> TuneJsonEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<TuneJsonEmitter<W>> {
+        w.write_all(b"[")?;
+        Ok(TuneJsonEmitter { w, count: 0 })
+    }
+
+    pub fn result(&mut self, r: &TuneResult) -> io::Result<()> {
+        if self.count > 0 {
+            self.w.write_all(b",")?;
+        }
+        self.w.write_all(b"\n")?;
+        self.w.write_all(tune_json(r).as_bytes())?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.write_all(b"\n]\n")?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Condense a finished tune into an exhibit: per machine, geomean
+/// searched-best and best-legacy speedups, the geomean plan gain
+/// (searched over legacy), and the mean heuristic loss against the
+/// searched optimum.
+pub fn summary(results: &[TuneResult]) -> Exhibit {
+    let mut machines: Vec<String> = Vec::new();
+    for r in results {
+        if !machines.contains(&r.machine_name) {
+            machines.push(r.machine_name.clone());
+        }
+    }
+    let mut table = Table::new(vec![
+        "machine".to_string(),
+        "cells".to_string(),
+        "best plan".to_string(),
+        "best legacy".to_string(),
+        "plan gain".to_string(),
+        "pick loss %".to_string(),
+    ])
+    .align(0, Align::Left);
+    let mut summaries = Vec::new();
+    for mach in &machines {
+        let group: Vec<&TuneResult> = results.iter().filter(|r| &r.machine_name == mach).collect();
+        let best: Vec<f64> = group.iter().map(|r| r.best_speedup).collect();
+        let legacy: Vec<f64> = group.iter().map(|r| r.best_legacy_speedup).collect();
+        let gain: Vec<f64> = group.iter().map(|r| r.plan_gain).collect();
+        let loss = group.iter().map(|r| r.pick_loss).sum::<f64>() / group.len().max(1) as f64;
+        let g_best = stats::geomean(&best);
+        let g_gain = stats::geomean(&gain);
+        table.row(vec![
+            mach.clone(),
+            group.len().to_string(),
+            x(g_best),
+            x(stats::geomean(&legacy)),
+            x(g_gain),
+            f(100.0 * loss, 1),
+        ]);
+        summaries.push((format!("geomean_best_{mach}"), g_best));
+        summaries.push((format!("geomean_gain_{mach}"), g_gain));
+        summaries.push((format!("mean_pick_loss_{mach}"), loss));
+    }
+    Exhibit {
+        title: "Tune summary: searched plan space vs legacy kinds",
+        table,
+        summaries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::SweepSpec;
+    use crate::hw::Machine;
+    use crate::schedule::{Kind, Scenario};
+    use crate::search::{tune, SearchCfg, SpaceOverrides};
+    use crate::sim::CommMech;
+
+    fn tiny_results() -> Vec<TuneResult> {
+        let spec = SweepSpec {
+            scenarios: vec![Scenario::new("t", 8192, 512, 1024)],
+            kinds: vec![Kind::UniformFused1D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+            search: None,
+        };
+        // Narrow space so the test stays fast.
+        let ov = SpaceOverrides {
+            pieces: Some(vec![1, 8]),
+            slots: Some(vec![1, 7]),
+            mechs: None,
+        };
+        let cfg = SearchCfg {
+            beam: 2,
+            prune: true,
+        };
+        tune(&spec, &ov, &cfg, 1, |_| true).results
+    }
+
+    #[test]
+    fn csv_shape_matches_header() {
+        let rs = tiny_results();
+        assert_eq!(rs.len(), 1);
+        let ncols = TUNE_CSV_HEADER.split(',').count();
+        for line in tune_csv_row(&rs[0]).lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+    }
+
+    #[test]
+    fn emitters_stream_and_terminate() {
+        let rs = tiny_results();
+        let mut csv = TuneCsvEmitter::new(Vec::new()).unwrap();
+        let mut json = TuneJsonEmitter::new(Vec::new()).unwrap();
+        for r in &rs {
+            csv.result(r).unwrap();
+            json.result(r).unwrap();
+        }
+        let csv = String::from_utf8(csv.finish().unwrap()).unwrap();
+        let json = String::from_utf8(json.finish().unwrap()).unwrap();
+        assert!(csv.starts_with("scenario,machine"));
+        assert_eq!(csv.lines().count(), 1 + rs.len());
+        assert!(json.starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"best_plan\""));
+        assert!(json.contains("\"plan_gain\""));
+    }
+
+    #[test]
+    fn summary_reports_gain_at_least_one() {
+        let rs = tiny_results();
+        let e = summary(&rs);
+        assert_eq!(e.table.n_rows(), 1);
+        assert!(e.summary("geomean_gain_mi300x-8") >= 1.0 - 1e-12);
+        assert!(e.summary("geomean_best_mi300x-8") > 0.0);
+    }
+}

@@ -1,0 +1,849 @@
+//! Plan-space search: evaluate the parameterized FiCCO schedule space
+//! ([`crate::plan`]) against the fluid simulator and find the best
+//! plan per (machine, scenario) cell.
+//!
+//! Components:
+//!
+//! - [`SpaceSpec`] — the candidate axes (decomposition degrees, slot
+//!   widths, shapes, fused/unfused, head start, mechanisms);
+//!   [`SpaceSpec::plans`] enumerates the valid cartesian product for
+//!   a scenario in deterministic order.
+//! - [`search`] — evaluates a cell: the six legacy presets are always
+//!   evaluated first (so the result is never worse than the best
+//!   legacy kind and the serial baseline is measured as a reference),
+//!   then either the whole space (exhaustive, `beam == 0`) or a beam
+//!   local search over single-knob mutations. Candidates whose
+//!   analytic lower bound ([`crate::schedule::exec::makespan_lower_bound`])
+//!   already exceeds the incumbent makespan are pruned without
+//!   simulating.
+//! - [`EvalCache`] — memoized plan evaluations keyed by
+//!   (machine, scenario shape, plan). The simulated makespan is a
+//!   pure function of that key, so sharing a cache across cells (or
+//!   runs) never changes results, only skips work.
+//! - [`tune`] — the `ficco tune` driver: (machine × mech × GPU-count
+//!   × scenario) cells searched concurrently on the deterministic
+//!   ordered worker pool ([`crate::util::pool`]), with byte-stable
+//!   artifacts via [`emit`].
+//!
+//! See `DESIGN.md` §2–3 for the space semantics and search contract.
+
+pub mod emit;
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::explore::{Cell, SweepSpec};
+use crate::hw::{DType, Machine};
+use crate::plan::{CommShape, Plan};
+use crate::schedule::{exec, Kind, Scenario};
+use crate::sim::CommMech;
+
+/// Search strategy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchCfg {
+    /// Beam width for the local search; 0 = exhaustive enumeration.
+    pub beam: usize,
+    /// Skip candidates whose analytic lower bound already exceeds the
+    /// incumbent makespan.
+    pub prune: bool,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg {
+            beam: 0,
+            prune: true,
+        }
+    }
+}
+
+/// Candidate axes of one search. The per-scenario valid product is
+/// what [`SpaceSpec::plans`] enumerates.
+#[derive(Debug, Clone)]
+pub struct SpaceSpec {
+    pub pieces: Vec<usize>,
+    pub slots: Vec<usize>,
+    pub shapes: Vec<CommShape>,
+    pub fused: Vec<bool>,
+    pub head_start: Vec<bool>,
+    pub mechs: Vec<CommMech>,
+}
+
+impl SpaceSpec {
+    /// The default space for a scenario: decomposition degrees around
+    /// the paper's `ngpus` point (shard-level, halves, `n`, `2n`),
+    /// single-lane vs two-lane vs full-width slots, both shapes, both
+    /// fusion modes, both head-start modes, the scenario's mechanism.
+    pub fn default_for(sc: &Scenario) -> SpaceSpec {
+        let n = sc.ngpus;
+        let pieces = dedup_sorted(vec![1, 2, 4, n, 2 * n]);
+        let full = n.saturating_sub(1).max(1);
+        let slots = dedup_sorted(
+            [1usize, 2, full]
+                .iter()
+                .copied()
+                .filter(|&w| w >= 1 && w <= full)
+                .collect(),
+        );
+        SpaceSpec {
+            pieces,
+            slots,
+            shapes: vec![CommShape::Row, CommShape::Col],
+            fused: vec![true, false],
+            head_start: vec![false, true],
+            mechs: vec![sc.mech],
+        }
+    }
+
+    /// All valid plans of this space for `sc`, deterministic order,
+    /// duplicates removed.
+    pub fn plans(&self, sc: &Scenario) -> Vec<Plan> {
+        let n = sc.ngpus;
+        let mut out: Vec<Plan> = Vec::new();
+        for &shape in &self.shapes {
+            for &pieces in &self.pieces {
+                for &fused in &self.fused {
+                    for &head_start in &self.head_start {
+                        for &slots in &self.slots {
+                            for &mech in &self.mechs {
+                                let p = Plan {
+                                    pieces,
+                                    shape,
+                                    fused,
+                                    head_start,
+                                    mech,
+                                    slots,
+                                };
+                                if p.check(n).is_ok() && !out.contains(&p) {
+                                    out.push(p);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn dedup_sorted(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Optional CLI-driven overrides narrowing/widening the default space.
+#[derive(Debug, Clone, Default)]
+pub struct SpaceOverrides {
+    pub pieces: Option<Vec<usize>>,
+    pub slots: Option<Vec<usize>>,
+    pub mechs: Option<Vec<CommMech>>,
+}
+
+/// The search space for `sc` with `ov` applied over the default axes.
+pub fn space_for(sc: &Scenario, ov: &SpaceOverrides) -> SpaceSpec {
+    let mut space = SpaceSpec::default_for(sc);
+    if let Some(pieces) = &ov.pieces {
+        space.pieces = dedup_sorted(pieces.clone());
+    }
+    if let Some(slots) = &ov.slots {
+        space.slots = dedup_sorted(slots.clone());
+    }
+    if let Some(mechs) = &ov.mechs {
+        space.mechs = mechs.clone();
+    }
+    space
+}
+
+/// Cache key: everything the simulated makespan of a plan depends on.
+/// The collective tag is volume-equivalent (AG ↔ A2A, `DESIGN.md` §1)
+/// and deliberately not part of the key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    pub machine: String,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub dtype: DType,
+    pub ngpus: usize,
+    pub plan: Plan,
+}
+
+/// A machine identity string for [`EvalKey`]s when no preset name is
+/// at hand: the GPU part, topology shape/scale and the bandwidth/
+/// latency figures the cost models read. Callers with a preset
+/// registry name should prefer that (shorter, guaranteed unique);
+/// this fingerprint keeps a shared cache safe across machines that
+/// were never given names.
+pub fn machine_key(machine: &Machine) -> String {
+    format!(
+        "{}-{}-{}x-l{:.3e}-h{:.3e}-d{:.3e}-u{:.3e}",
+        machine.gpu.name,
+        machine.topo.kind.name(),
+        machine.ngpus(),
+        machine.topo.link_bw,
+        machine.gpu.hbm_bw,
+        machine.gpu.dma_engine_bw,
+        machine.topo.latency,
+    )
+}
+
+/// Memoized plan evaluations keyed by (machine, scenario, plan).
+/// Thread-safe; sharing across concurrently searched cells never
+/// changes any result (both the makespan and the analytic bound are
+/// pure functions of the key), it only skips repeated work.
+pub struct EvalCache {
+    map: Mutex<HashMap<EvalKey, f64>>,
+    /// Memoized analytic lower bounds (see [`EvalCache::makespan_bounded`]).
+    bounds: Mutex<HashMap<EvalKey, f64>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache {
+            map: Mutex::new(HashMap::new()),
+            bounds: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache-hit count (diagnostic only — not emitted into artifacts,
+    /// since hit/miss splits depend on cross-cell timing).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn key(&self, machine_name: &str, sc: &Scenario, plan: &Plan) -> EvalKey {
+        EvalKey {
+            machine: machine_name.to_string(),
+            m: sc.gemm.m,
+            n: sc.gemm.n,
+            k: sc.gemm.k,
+            dtype: sc.gemm.dtype,
+            ngpus: sc.ngpus,
+            plan: *plan,
+        }
+    }
+
+    fn lookup(&self, key: &EvalKey) -> Option<f64> {
+        self.map.lock().unwrap().get(key).copied()
+    }
+
+    /// Pre-load a known makespan (e.g. a preset the caller already
+    /// simulated through `ScenarioEval`) so the search will not
+    /// re-simulate it. The value must be the plan's true simulated
+    /// makespan on that machine/scenario.
+    pub fn insert(&self, machine_name: &str, sc: &Scenario, plan: &Plan, makespan: f64) {
+        let key = self.key(machine_name, sc, plan);
+        self.map.lock().unwrap().insert(key, makespan);
+    }
+
+    /// Simulated makespan of `plan` on (machine, scenario), memoized.
+    pub fn makespan(
+        &self,
+        machine_name: &str,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+    ) -> f64 {
+        let key = self.key(machine_name, sc, plan);
+        if let Some(v) = self.lookup(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        // Evaluate outside the lock; a racing duplicate evaluation
+        // computes the identical value.
+        let makespan = exec::evaluate_plan(machine, sc, plan).makespan;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key, makespan);
+        makespan
+    }
+
+    /// As [`EvalCache::makespan`], but with lower-bound pruning:
+    /// `Err(bound)` when the plan's analytic bound exceeds `cutoff`.
+    ///
+    /// On a cold key the task graph is built once and shared between
+    /// the bound and the simulation ([`exec::prepare_plan`]); both
+    /// results are memoized, so a repeated key pays neither a graph
+    /// build nor a simulation. The pruning decision depends only on
+    /// the memoized-or-recomputed bound — a pure function of the key
+    /// — so a search's evaluated/pruned counts are a pure function of
+    /// its inputs and cross-cell cache sharing can only skip work,
+    /// never change what a cell reports.
+    pub fn makespan_bounded(
+        &self,
+        machine_name: &str,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+        cutoff: Option<f64>,
+    ) -> Result<f64, f64> {
+        let key = self.key(machine_name, sc, plan);
+        let c = match cutoff {
+            None => return Ok(self.makespan(machine_name, machine, sc, plan)),
+            Some(c) => c,
+        };
+        let cached_bound = self.bounds.lock().unwrap().get(&key).copied();
+        match cached_bound {
+            Some(bound) => {
+                if bound > c {
+                    return Err(bound);
+                }
+                if let Some(v) = self.lookup(&key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(v);
+                }
+                let makespan = exec::evaluate_plan(machine, sc, plan).makespan;
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.map.lock().unwrap().insert(key, makespan);
+                Ok(makespan)
+            }
+            None => {
+                let prepared = exec::prepare_plan(machine, sc, plan);
+                let bound = prepared.lower_bound();
+                self.bounds.lock().unwrap().insert(key.clone(), bound);
+                if bound > c {
+                    return Err(bound);
+                }
+                if let Some(v) = self.lookup(&key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(v);
+                }
+                let makespan = prepared.run().makespan;
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.map.lock().unwrap().insert(key, makespan);
+                Ok(makespan)
+            }
+        }
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new()
+    }
+}
+
+/// Analytic lower bound on a plan's simulated makespan (lower the
+/// plan, bound the task graph — no simulation).
+pub fn plan_lower_bound(machine: &Machine, sc: &Scenario, plan: &Plan) -> f64 {
+    exec::prepare_plan(machine, sc, plan).lower_bound()
+}
+
+/// One evaluated plan-space point.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanEval {
+    pub plan: Plan,
+    pub makespan: f64,
+}
+
+/// Result of searching one (machine, scenario) cell.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Serial baseline makespan (the speedup reference).
+    pub baseline: f64,
+    /// Best plan found (never worse than the best legacy preset).
+    pub best: PlanEval,
+    /// Best of the six legacy presets, by simulated makespan.
+    pub best_legacy: (Kind, f64),
+    /// Plans actually simulated (cache hits included).
+    pub evaluated: usize,
+    /// Candidates skipped by lower-bound pruning.
+    pub pruned: usize,
+}
+
+impl SearchOutcome {
+    pub fn best_speedup(&self) -> f64 {
+        self.baseline / self.best.makespan
+    }
+
+    pub fn best_legacy_speedup(&self) -> f64 {
+        self.baseline / self.best_legacy.1
+    }
+
+    /// How much faster the searched best is than the best legacy kind
+    /// (≥ 1 by construction — presets seed the search).
+    pub fn plan_gain(&self) -> f64 {
+        self.best_legacy.1 / self.best.makespan
+    }
+}
+
+/// Single-knob mutations of `plan` within `space`, deterministic
+/// order, invalid points dropped.
+fn neighbors(plan: &Plan, space: &SpaceSpec, ngpus: usize) -> Vec<Plan> {
+    let mut out: Vec<Plan> = Vec::new();
+    for &pieces in &space.pieces {
+        if pieces != plan.pieces {
+            out.push(Plan { pieces, ..*plan });
+        }
+    }
+    for &slots in &space.slots {
+        if slots != plan.slots {
+            out.push(Plan { slots, ..*plan });
+        }
+    }
+    for &shape in &space.shapes {
+        if shape != plan.shape {
+            out.push(Plan { shape, ..*plan });
+        }
+    }
+    for &fused in &space.fused {
+        if fused != plan.fused {
+            out.push(Plan { fused, ..*plan });
+        }
+    }
+    for &head_start in &space.head_start {
+        if head_start != plan.head_start {
+            out.push(Plan { head_start, ..*plan });
+        }
+    }
+    for &mech in &space.mechs {
+        if mech != plan.mech {
+            out.push(Plan { mech, ..*plan });
+        }
+    }
+    out.retain(|p| p.check(ngpus).is_ok());
+    out
+}
+
+/// Search the plan space for one (machine, scenario) cell.
+///
+/// The six legacy presets are evaluated unconditionally: they seed the
+/// incumbent (so the result is at least as good as the best legacy
+/// kind), measure the serial baseline, and — under beam search — form
+/// the initial frontier. Exhaustive mode then walks every remaining
+/// space candidate; beam mode repeatedly expands single-knob
+/// neighborhoods of the current best `beam` plans until no unseen
+/// neighbor remains. Fully deterministic for a given input.
+pub fn search(
+    machine_name: &str,
+    machine: &Machine,
+    sc: &Scenario,
+    space: &SpaceSpec,
+    cfg: &SearchCfg,
+    cache: &EvalCache,
+) -> SearchOutcome {
+    let n = sc.ngpus;
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut seen: HashSet<Plan> = HashSet::new();
+    let mut evals: Vec<PlanEval> = Vec::new();
+    let mut baseline = f64::NAN;
+    let mut best_legacy: Option<(Kind, f64)> = None;
+
+    for kind in Kind::ALL {
+        let plan = Plan::preset(kind, sc);
+        let makespan = cache.makespan(machine_name, machine, sc, &plan);
+        evaluated += 1;
+        seen.insert(plan);
+        evals.push(PlanEval { plan, makespan });
+        if kind == Kind::Baseline {
+            baseline = makespan;
+        }
+        let better = match best_legacy {
+            Some((_, b)) => makespan < b,
+            None => true,
+        };
+        if better {
+            best_legacy = Some((kind, makespan));
+        }
+    }
+    let best_legacy = best_legacy.expect("six presets evaluated");
+    // Incumbent: best preset so far (first minimum wins ties —
+    // deterministic).
+    let mut incumbent = evals[0];
+    for e in &evals[1..] {
+        if e.makespan < incumbent.makespan {
+            incumbent = *e;
+        }
+    }
+
+    // Evaluate one unseen candidate against the incumbent, with
+    // optional lower-bound pruning. The strict `1 + 1e-9` margin on
+    // the cutoff absorbs ulp drift between the analytic bound and the
+    // event-driven simulation (they accumulate the same sums in
+    // different orders), so a mathematically tight bound can never
+    // prune the true optimum.
+    let consider = |plan: Plan,
+                    incumbent: &mut PlanEval,
+                    evals: &mut Vec<PlanEval>,
+                    evaluated: &mut usize,
+                    pruned: &mut usize|
+     -> bool {
+        let cutoff = if cfg.prune {
+            Some(incumbent.makespan * (1.0 + 1e-9))
+        } else {
+            None
+        };
+        match cache.makespan_bounded(machine_name, machine, sc, &plan, cutoff) {
+            Err(_bound) => {
+                *pruned += 1;
+                false
+            }
+            Ok(makespan) => {
+                *evaluated += 1;
+                evals.push(PlanEval { plan, makespan });
+                if makespan < incumbent.makespan {
+                    *incumbent = PlanEval { plan, makespan };
+                }
+                true
+            }
+        }
+    };
+
+    if cfg.beam == 0 {
+        for plan in space.plans(sc) {
+            if !seen.insert(plan) {
+                continue;
+            }
+            consider(plan, &mut incumbent, &mut evals, &mut evaluated, &mut pruned);
+        }
+    } else {
+        // Beam local search: expand single-knob neighborhoods of the
+        // best `beam` plans until nothing unseen remains (finite space
+        // + seen-set ⇒ termination; cap as a backstop).
+        for _round in 0..64 {
+            let mut order: Vec<usize> = (0..evals.len()).collect();
+            order.sort_by(|&a, &b| {
+                evals[a]
+                    .makespan
+                    .partial_cmp(&evals[b].makespan)
+                    .expect("finite makespans")
+                    .then(a.cmp(&b))
+            });
+            let frontier: Vec<Plan> = order
+                .iter()
+                .take(cfg.beam)
+                .map(|&i| evals[i].plan)
+                .collect();
+            let mut new_any = false;
+            for plan in &frontier {
+                for nb in neighbors(plan, space, n) {
+                    if !seen.insert(nb) {
+                        continue;
+                    }
+                    new_any = true;
+                    consider(nb, &mut incumbent, &mut evals, &mut evaluated, &mut pruned);
+                }
+            }
+            if !new_any {
+                break;
+            }
+        }
+    }
+
+    SearchOutcome {
+        baseline,
+        best: incumbent,
+        best_legacy,
+        evaluated,
+        pruned,
+    }
+}
+
+/// Deterministic per-cell outcome of a `ficco tune` run (wall time is
+/// measured but excluded from the emitted artifacts).
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub index: usize,
+    pub machine_name: String,
+    pub topology: String,
+    pub ngpus: usize,
+    pub scenario: String,
+    pub collective: String,
+    pub mech: String,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Size of the enumerated candidate space (before search/pruning).
+    pub space_size: usize,
+    pub evaluated: usize,
+    pub pruned: usize,
+    pub baseline_makespan: f64,
+    pub best_plan: String,
+    pub best_makespan: f64,
+    pub best_speedup: f64,
+    pub best_legacy_kind: Kind,
+    pub best_legacy_speedup: f64,
+    /// Best legacy makespan / best plan makespan (≥ 1).
+    pub plan_gain: f64,
+    /// The static heuristic's pick and how it fares against the
+    /// searched optimum.
+    pub pick: Kind,
+    pub pick_speedup: f64,
+    /// Fraction of the searched-best speedup the static pick loses.
+    pub pick_loss: f64,
+    pub eval_seconds: f64,
+}
+
+/// Search one sweep cell of the plan space.
+pub fn tune_cell(cell: &Cell, ov: &SpaceOverrides, cfg: &SearchCfg, cache: &EvalCache) -> TuneResult {
+    let t0 = Instant::now();
+    let sc = &cell.scenario;
+    let machine = &cell.machine;
+    let space = space_for(sc, ov);
+    let space_size = space.plans(sc).len();
+    let out = search(&cell.machine_name, machine, sc, &space, cfg, cache);
+    let pick = crate::heuristics::pick(machine, sc).pick;
+    let pick_makespan = cache.makespan(
+        &cell.machine_name,
+        machine,
+        sc,
+        &Plan::preset(pick, sc),
+    );
+    let pick_speedup = out.baseline / pick_makespan;
+    TuneResult {
+        index: cell.index,
+        machine_name: cell.machine_name.clone(),
+        topology: machine.topo.kind.name().to_string(),
+        ngpus: sc.ngpus,
+        scenario: sc.name.clone(),
+        collective: sc.collective.name().to_string(),
+        mech: sc.mech.name().to_string(),
+        m: sc.gemm.m,
+        n: sc.gemm.n,
+        k: sc.gemm.k,
+        space_size,
+        evaluated: out.evaluated,
+        pruned: out.pruned,
+        baseline_makespan: out.baseline,
+        best_plan: out.best.plan.id(),
+        best_makespan: out.best.makespan,
+        best_speedup: out.best_speedup(),
+        best_legacy_kind: out.best_legacy.0,
+        best_legacy_speedup: out.best_legacy_speedup(),
+        plan_gain: out.plan_gain(),
+        pick,
+        pick_speedup,
+        pick_loss: (1.0 - out.best.makespan / pick_makespan).max(0.0),
+        eval_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Timing and results of one tune run.
+#[derive(Debug)]
+pub struct TuneReport {
+    pub jobs: usize,
+    /// Results in deterministic cell order.
+    pub results: Vec<TuneResult>,
+    pub wall_seconds: f64,
+}
+
+impl TuneReport {
+    /// Sum of per-cell search times (serial-work proxy for the
+    /// `search_throughput` bench).
+    pub fn cpu_seconds(&self) -> f64 {
+        self.results.iter().map(|r| r.eval_seconds).sum()
+    }
+
+    pub fn evaluations(&self) -> usize {
+        self.results.iter().map(|r| r.evaluated).sum()
+    }
+
+    pub fn pruned(&self) -> usize {
+        self.results.iter().map(|r| r.pruned).sum()
+    }
+}
+
+/// Run a tune over the sweep spec's (machine × mech × GPU-count ×
+/// scenario) cells on `jobs` workers of the ordered pool. `on_result`
+/// is invoked in deterministic cell order (reorder-buffered), so the
+/// tune emitters are byte-stable for any `jobs`; returning `false`
+/// cancels the run, keeping exactly the delivered prefix. One
+/// [`EvalCache`] is shared across cells — it memoizes duplicate
+/// (machine, scenario, plan) evaluations (e.g. kernel-mech presets
+/// re-appearing across mechanism cells) without affecting any
+/// reported number.
+pub fn tune<F: FnMut(&TuneResult) -> bool>(
+    spec: &SweepSpec,
+    ov: &SpaceOverrides,
+    cfg: &SearchCfg,
+    jobs: usize,
+    mut on_result: F,
+) -> TuneReport {
+    let cells = spec.cells();
+    let cache = EvalCache::new();
+    let t0 = Instant::now();
+    let pool_run = crate::util::pool::run_ordered(
+        &cells,
+        jobs,
+        |_, cell| tune_cell(cell, ov, cfg, &cache),
+        |_, result| on_result(result),
+    );
+    TuneReport {
+        jobs: pool_run.jobs,
+        results: pool_run.results,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> Machine {
+        Machine::mi300x_8()
+    }
+
+    fn sc() -> Scenario {
+        Scenario::new("t", 65536, 1024, 4096)
+    }
+
+    /// Narrowed space so unit tests stay fast in debug builds (the
+    /// full default space is exercised by the integration tests and
+    /// the CI tune smoke).
+    fn small_space(sc: &Scenario) -> SpaceSpec {
+        space_for(
+            sc,
+            &SpaceOverrides {
+                pieces: Some(vec![1, 4, 8]),
+                slots: Some(vec![1, 7]),
+                mechs: None,
+            },
+        )
+    }
+
+    #[test]
+    fn default_space_is_valid_and_contains_shard_level() {
+        let sc = sc();
+        let space = SpaceSpec::default_for(&sc);
+        let plans = space.plans(&sc);
+        assert!(plans.len() > 10, "space too small: {}", plans.len());
+        assert!(plans.iter().all(|p| p.check(sc.ngpus).is_ok()));
+        assert!(plans.iter().any(|p| p.pieces == 1));
+        assert!(plans.iter().any(|p| p.pieces == sc.ngpus));
+        assert!(plans.iter().any(|p| p.slots == 1));
+        // No duplicates.
+        for (i, a) in plans.iter().enumerate() {
+            assert!(!plans[i + 1..].contains(a), "dup {}", a.id());
+        }
+    }
+
+    #[test]
+    fn exhaustive_search_is_at_least_as_good_as_every_preset() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let cache = EvalCache::new();
+        let out = search("mi300x-8", &m, &sc, &space, &SearchCfg::default(), &cache);
+        assert!(out.baseline > 0.0);
+        assert!(out.best.makespan <= out.best_legacy.1, "search regressed below legacy");
+        assert!(out.plan_gain() >= 1.0);
+        for kind in Kind::ALL {
+            let p = Plan::preset(kind, &sc);
+            let ms = cache.makespan("mi300x-8", &m, &sc, &p);
+            assert!(
+                out.best.makespan <= ms * (1.0 + 1e-12),
+                "{kind:?} beats searched best"
+            );
+        }
+    }
+
+    #[test]
+    fn beam_search_never_loses_to_legacy_and_is_deterministic() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let cfg = SearchCfg {
+            beam: 3,
+            prune: true,
+        };
+        let a = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        let b = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        assert!(a.best.makespan <= a.best_legacy.1);
+        assert_eq!(a.best.plan, b.best.plan);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.pruned, b.pruned);
+        assert!(a.best.makespan == b.best.makespan);
+    }
+
+    #[test]
+    fn pruning_never_changes_the_best() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let pruned_run = search(
+            "mi300x-8",
+            &m,
+            &sc,
+            &space,
+            &SearchCfg {
+                beam: 0,
+                prune: true,
+            },
+            &EvalCache::new(),
+        );
+        let full_run = search(
+            "mi300x-8",
+            &m,
+            &sc,
+            &space,
+            &SearchCfg {
+                beam: 0,
+                prune: false,
+            },
+            &EvalCache::new(),
+        );
+        assert_eq!(full_run.pruned, 0);
+        assert!(
+            pruned_run.best.makespan == full_run.best.makespan,
+            "pruning changed the optimum: {} vs {}",
+            pruned_run.best.makespan,
+            full_run.best.makespan
+        );
+    }
+
+    #[test]
+    fn cache_memoizes_across_searches() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let cache = EvalCache::new();
+        let cfg = SearchCfg::default();
+        let a = search("mi300x-8", &m, &sc, &space, &cfg, &cache);
+        let misses_after_first = cache.misses();
+        let b = search("mi300x-8", &m, &sc, &space, &cfg, &cache);
+        assert_eq!(a.best.plan, b.best.plan);
+        assert_eq!(a.evaluated, b.evaluated, "counts are cache-independent");
+        assert_eq!(
+            cache.misses(),
+            misses_after_first,
+            "second search must be all cache hits"
+        );
+        assert!(cache.hits() > 0);
+    }
+
+    #[test]
+    fn overrides_narrow_the_space() {
+        let sc = sc();
+        let ov = SpaceOverrides {
+            pieces: Some(vec![1, 8]),
+            slots: Some(vec![7]),
+            mechs: None,
+        };
+        let space = space_for(&sc, &ov);
+        assert_eq!(space.pieces, vec![1, 8]);
+        assert_eq!(space.slots, vec![7]);
+        let plans = space.plans(&sc);
+        assert!(plans.iter().all(|p| p.slots == 7));
+        assert!(plans.iter().all(|p| p.pieces == 1 || p.pieces == 8));
+    }
+}

@@ -3,9 +3,11 @@
 //! The offline crate set available to this build has no `rand`,
 //! `serde`, or `prettytable`, so the substrates live here: a
 //! deterministic PRNG ([`rng`]), summary statistics ([`stats`]),
-//! table/CSV rendering ([`table`]), and a miniature property-based
-//! testing driver ([`prop`]).
+//! table/CSV rendering ([`table`]), a miniature property-based
+//! testing driver ([`prop`]), and the deterministic ordered worker
+//! pool ([`pool`]) behind the parallel sweep/tune drivers.
 
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

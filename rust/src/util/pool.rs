@@ -1,0 +1,191 @@
+//! Deterministic ordered worker pool — the sweep engine's
+//! worker-pool / reorder-buffer pattern factored out so every parallel
+//! driver (`ficco sweep`, `ficco tune`) shares one implementation.
+//!
+//! Items are evaluated concurrently on `jobs` std threads; results
+//! return over an mpsc channel and are buffered until the ordered
+//! prefix is complete, so the delivery callback observes results in
+//! item order regardless of parallelism — which is what makes
+//! incremental emitters byte-stable under any `--jobs` value.
+//! Evaluation must be a pure function of the item for that guarantee
+//! to mean anything; wall-clock measurements belong outside the
+//! emitted artifacts.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Hard ceiling on worker threads: far above any useful host
+/// parallelism, low enough that a huge `--jobs` cannot exhaust OS
+/// thread limits (each worker is a real `std::thread`).
+pub const MAX_JOBS: usize = 256;
+
+/// Worker count actually used for `n_items` items: at least one
+/// thread, never more threads than items, capped at [`MAX_JOBS`].
+pub fn clamp_jobs(jobs: usize, n_items: usize) -> usize {
+    jobs.max(1).min(n_items.max(1)).min(MAX_JOBS)
+}
+
+/// Outcome of one pool run: results in item order (the delivered
+/// prefix only, when cancelled).
+pub struct OrderedRun<R> {
+    /// Worker threads actually used (after clamping).
+    pub jobs: usize,
+    pub results: Vec<R>,
+    pub cancelled: bool,
+}
+
+/// Evaluate `items` on `jobs` workers, invoking `on_result` once per
+/// item *in item order* as soon as the ordered prefix is complete.
+///
+/// `on_result` returns whether to continue: `false` cancels the run —
+/// dispatch stops, in-flight items are allowed to finish but are
+/// discarded, and the returned results carry exactly the delivered
+/// prefix (so a cancelled run is as deterministic as a completed one).
+pub fn run_ordered<T, R, F, G>(items: &[T], jobs: usize, eval: F, mut on_result: G) -> OrderedRun<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+    G: FnMut(usize, &R) -> bool,
+{
+    let n = items.len();
+    let jobs = clamp_jobs(jobs, n);
+    let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut cancelled = false;
+    let mut next = 0usize;
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let stop = &stop;
+            let eval = &eval;
+            s.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, eval(i, &items[i]))).is_err() {
+                    // Receiver bailed: the run was cancelled.
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        'recv: for (idx, result) in rx {
+            slots[idx] = Some(result);
+            while next < n {
+                // Borrow rather than take: the slot stays filled for
+                // the final ordered collection below.
+                match &slots[next] {
+                    Some(ready) => {
+                        let keep_going = on_result(next, ready);
+                        next += 1;
+                        if !keep_going {
+                            cancelled = true;
+                            // Stop workers before they dispatch
+                            // another (discarded) item; dropping the
+                            // receiver below backstops the in-flight
+                            // sends.
+                            stop.store(true, Ordering::Relaxed);
+                            break 'recv;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Leaving the loop drops the receiver; workers stop taking
+        // new items on their next send. The scope joins them.
+    });
+
+    let results: Vec<R> = if cancelled {
+        // Exactly the delivered prefix: completed-but-undelivered
+        // stragglers are discarded so the cancelled run does not
+        // depend on worker timing.
+        slots.into_iter().take(next).flatten().collect()
+    } else {
+        slots
+            .into_iter()
+            .map(|s| s.expect("every pool item completes"))
+            .collect()
+    };
+    OrderedRun {
+        jobs,
+        results,
+        cancelled,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_in_order_at_any_parallelism() {
+        let items: Vec<usize> = (0..17).collect();
+        for jobs in [1, 3, 8] {
+            let mut seen = Vec::new();
+            let run = run_ordered(
+                &items,
+                jobs,
+                |i, &x| {
+                    assert_eq!(i, x);
+                    x * 10
+                },
+                |i, &r| {
+                    seen.push((i, r));
+                    true
+                },
+            );
+            assert!(!run.cancelled);
+            assert_eq!(run.results, (0..17).map(|x| x * 10).collect::<Vec<_>>());
+            assert_eq!(seen.len(), 17);
+            for (k, &(i, r)) in seen.iter().enumerate() {
+                assert_eq!(i, k);
+                assert_eq!(r, k * 10);
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_keeps_the_delivered_prefix() {
+        let items: Vec<usize> = (0..12).collect();
+        let mut delivered = 0usize;
+        let run = run_ordered(
+            &items,
+            4,
+            |_, &x| x,
+            |_, _| {
+                delivered += 1;
+                delivered < 3
+            },
+        );
+        assert!(run.cancelled);
+        assert_eq!(delivered, 3);
+        assert_eq!(run.results, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(clamp_jobs(0, 10), 1);
+        assert_eq!(clamp_jobs(4, 2), 2);
+        assert_eq!(clamp_jobs(9999, 9999), MAX_JOBS);
+        assert_eq!(clamp_jobs(3, 0), 1);
+    }
+
+    #[test]
+    fn empty_items_complete_immediately() {
+        let items: Vec<u32> = Vec::new();
+        let run = run_ordered(&items, 4, |_, &x| x, |_, _| true);
+        assert!(run.results.is_empty());
+        assert!(!run.cancelled);
+    }
+}

@@ -1,0 +1,118 @@
+//! Makespan-parity acceptance tests for the plan subsystem: every
+//! legacy schedule [`Kind`] is a named preset [`Plan`] whose lowered
+//! schedule must reproduce the frozen legacy generator's simulated
+//! makespan **exactly** — for every Table I scenario, on the paper's
+//! machine, under both communication mechanisms.
+//!
+//! "Exactly" is deliberate: the lowering reproduces the legacy node
+//! structure, stream assignment and insertion order, so the fluid
+//! simulator walks an identical event sequence and the makespans are
+//! bit-equal, not merely close.
+
+use ficco::hw::Machine;
+use ficco::plan::Plan;
+use ficco::schedule::generate::{generate, legacy};
+use ficco::schedule::{exec, validate::validate, Kind, Scenario};
+use ficco::sim::CommMech;
+use ficco::workloads;
+
+/// Simulate a schedule, validating first.
+fn measure(machine: &Machine, sched: &ficco::schedule::Schedule) -> exec::ExecResult {
+    validate(sched).unwrap_or_else(|e| panic!("{} invalid: {e}", sched.kind.name()));
+    exec::execute(machine, sched)
+}
+
+#[test]
+fn presets_reproduce_legacy_makespans_on_every_table1_scenario() {
+    let machine = Machine::mi300x_8();
+    for row in workloads::table1() {
+        for mech in [CommMech::Dma, CommMech::Kernel] {
+            let sc = row.scenario().with_mech(mech);
+            for kind in Kind::ALL {
+                let reference = measure(&machine, &legacy(kind, &sc));
+                let lowered_sched = Plan::preset(kind, &sc).lower(&sc);
+                assert_eq!(lowered_sched.kind, kind, "{} preset classification", row.name);
+                let lowered = measure(&machine, &lowered_sched);
+                assert!(
+                    lowered.makespan == reference.makespan,
+                    "{} {} {:?}: lowered {} != legacy {}",
+                    row.name,
+                    mech.name(),
+                    kind,
+                    lowered.makespan,
+                    reference.makespan
+                );
+                assert!(
+                    lowered.gemm_leg == reference.gemm_leg
+                        && lowered.comm_leg == reference.comm_leg,
+                    "{} {:?}: leg mismatch",
+                    row.name,
+                    kind
+                );
+                assert_eq!(lowered.n_tasks, reference.n_tasks, "{} {:?}", row.name, kind);
+            }
+        }
+    }
+}
+
+#[test]
+fn generate_is_the_plan_lowering() {
+    // `generate` now routes through the plan presets; its output must
+    // carry the plan tag and match the legacy structure node counts.
+    let sc = Scenario::new("t", 4096, 1024, 2048);
+    for kind in Kind::ALL {
+        let new = generate(kind, &sc);
+        let old = legacy(kind, &sc);
+        assert!(new.plan.is_some(), "{kind:?} lost its plan tag");
+        assert!(old.plan.is_none(), "legacy reference must stay plan-less");
+        assert_eq!(new.nodes.len(), old.nodes.len(), "{kind:?} node count");
+        assert_eq!(new.n_gemms(), old.n_gemms(), "{kind:?} gemm count");
+        assert_eq!(new.n_xfers(), old.n_xfers(), "{kind:?} xfer count");
+        assert!(
+            (new.comm_bytes() - old.comm_bytes()).abs() < 1e-6,
+            "{kind:?} comm bytes"
+        );
+        // Node-by-node: same op placement, stream slots and deps (the
+        // parts the simulator consumes).
+        for (i, (a, b)) in new.nodes.iter().zip(old.nodes.iter()).enumerate() {
+            assert_eq!(a.gpu, b.gpu, "{kind:?} node {i} gpu");
+            assert_eq!(a.slot, b.slot, "{kind:?} node {i} slot");
+            assert_eq!(a.deps, b.deps, "{kind:?} node {i} deps");
+            assert_eq!(
+                std::mem::discriminant(&a.kind),
+                std::mem::discriminant(&b.kind),
+                "{kind:?} node {i} op kind"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_holds_on_awkward_geometries() {
+    // Non-divisible dims and small GPU counts stress the balanced
+    // splits through both paths.
+    let machine4 = {
+        let mut m = Machine::mi300x_8();
+        m.topo.ngpus = 4;
+        m
+    };
+    let machine3 = {
+        let mut m = Machine::mi300x_8();
+        m.topo.ngpus = 3;
+        m
+    };
+    for (m, n, k, g) in [(1009u64, 37u64, 977u64, 4usize), (129, 7, 65, 4), (17, 3, 1031, 3)] {
+        let sc = Scenario::new("odd", m, n, k).with_ngpus(g);
+        let machine = if g == 3 { &machine3 } else { &machine4 };
+        for kind in Kind::ALL {
+            let reference = measure(machine, &legacy(kind, &sc));
+            let lowered = measure(machine, &Plan::preset(kind, &sc).lower(&sc));
+            assert!(
+                lowered.makespan == reference.makespan,
+                "{m}x{n}x{k}/{g} {kind:?}: {} != {}",
+                lowered.makespan,
+                reference.makespan
+            );
+        }
+    }
+}

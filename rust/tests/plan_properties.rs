@@ -1,0 +1,138 @@
+//! Property tests over the parameterized plan space: random `Plan`s
+//! on random scenario geometries must lower to schedules that satisfy
+//! the structural invariants (`schedule::validate` — every output
+//! element computed exactly once, every remote byte delivered exactly
+//! once), and the analytic makespan lower bound used for search
+//! pruning must never exceed the simulated makespan.
+
+use ficco::hw::Machine;
+use ficco::plan::{CommShape, Plan};
+use ficco::schedule::{exec, validate::validate, Scenario};
+use ficco::search;
+use ficco::sim::CommMech;
+use ficco::util::prop::{self, Config};
+use ficco::util::rng::Rng;
+
+fn gen_plan(r: &mut Rng, ngpus: usize) -> Plan {
+    Plan {
+        pieces: *r.choose(&[1usize, 2, 3, 4, 7, 8, 12, 16]),
+        shape: if r.bool(0.5) {
+            CommShape::Row
+        } else {
+            CommShape::Col
+        },
+        fused: r.bool(0.5),
+        head_start: r.bool(0.5),
+        mech: if r.bool(0.5) {
+            CommMech::Dma
+        } else {
+            CommMech::Kernel
+        },
+        slots: 1 + (r.next_u64() as usize) % (ngpus - 1),
+    }
+}
+
+#[test]
+fn random_plans_validate_on_random_geometries() {
+    prop::check_no_shrink(
+        "plan-space-invariants",
+        &Config {
+            cases: 100,
+            ..Config::default()
+        },
+        |r| {
+            let g = *r.choose(&[2usize, 3, 4, 8]);
+            let m = r.range_u64(g as u64, 4096) * r.range_u64(1, 64);
+            let n = r.range_u64(1, 2048);
+            let k = r.range_u64(1, 4096);
+            let plan = gen_plan(r, g);
+            (m, n, k, g, plan)
+        },
+        |&(m, n, k, g, plan)| {
+            let sc = Scenario::new("prop", m, n, k).with_ngpus(g);
+            plan.check(g).map_err(|e| format!("{}: {e}", plan.id()))?;
+            let sched = plan.lower(&sc);
+            validate(&sched).map_err(|e| format!("{} on {m}x{n}x{k}/{g}: {e}", plan.id()))?;
+            // Conservation: every remote byte moves exactly once, so
+            // per-GPU received rows ≈ (g-1)/g · m for Row plans, and
+            // comm volume equals the baseline's for any shape.
+            let base = Plan::preset(ficco::schedule::Kind::Baseline, &sc).lower(&sc);
+            if (sched.comm_bytes() - base.comm_bytes()).abs() > 1.0 {
+                return Err(format!(
+                    "{}: comm bytes {} != baseline {}",
+                    plan.id(),
+                    sched.comm_bytes(),
+                    base.comm_bytes()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lower_bound_never_exceeds_simulated_makespan() {
+    // Soundness of the pruning bound: for random plans on realistic
+    // shapes, bound ≤ simulated makespan (up to fp noise). An unsound
+    // bound would let the search prune the true optimum.
+    let machines = [Machine::mi300x_8(), Machine::pcie_gen4_4()];
+    prop::check_no_shrink(
+        "plan-bound-sound",
+        &Config {
+            cases: 14,
+            ..Config::default()
+        },
+        |r| {
+            let m = r.range_u64(8, 64) * 1024;
+            let n = r.range_u64(1, 16) * 512;
+            let k = r.range_u64(1, 16) * 512;
+            let mi = (r.next_u64() % 2) as usize;
+            let plan = gen_plan(r, if mi == 0 { 8 } else { 4 });
+            (m, n, k, mi, plan)
+        },
+        |&(m, n, k, mi, plan)| {
+            let machine = &machines[mi];
+            let sc = Scenario::new("prop", m, n, k).with_ngpus(machine.ngpus());
+            let bound = search::plan_lower_bound(machine, &sc, &plan);
+            let measured = exec::evaluate_plan(machine, &sc, &plan).makespan;
+            if !(bound.is_finite() && bound >= 0.0) {
+                return Err(format!("{}: bad bound {bound}", plan.id()));
+            }
+            if bound > measured * (1.0 + 1e-9) {
+                return Err(format!(
+                    "{}: bound {bound} exceeds makespan {measured}",
+                    plan.id()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn plan_makespans_respect_physical_bounds() {
+    // Any plan's simulated run obeys the same physics as the fixed
+    // kinds: positive finite makespan, CIL ≥ 1.
+    let machine = Machine::mi300x_8();
+    let sc = Scenario::new("t", 65536, 1024, 4096);
+    let mut rng = Rng::new(0xF1CC0);
+    for _ in 0..6 {
+        let plan = gen_plan(&mut rng, sc.ngpus);
+        let r = exec::evaluate_plan(&machine, &sc, &plan);
+        assert!(
+            r.makespan.is_finite() && r.makespan > 0.0,
+            "{}: makespan {}",
+            plan.id(),
+            r.makespan
+        );
+        assert!(r.gemm_cil >= 0.999, "{}: gemm CIL {}", plan.id(), r.gemm_cil);
+        assert!(r.comm_cil >= 0.999, "{}: comm CIL {}", plan.id(), r.comm_cil);
+        assert!(
+            r.makespan >= 0.95 * r.gemm_leg,
+            "{}: makespan {} below compute leg {}",
+            plan.id(),
+            r.makespan,
+            r.gemm_leg
+        );
+    }
+}

@@ -19,6 +19,7 @@ fn small_spec() -> SweepSpec {
         machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
         mechs: vec![CommMech::Dma, CommMech::Kernel],
         gpu_counts: Vec::new(),
+        search: None,
     }
 }
 
@@ -86,6 +87,46 @@ fn emitted_artifacts_are_well_formed() {
     assert_eq!(json.matches("\"schedules\":[").count(), 4);
     assert_eq!(json.matches("\"kind\":\"baseline\"").count(), 4);
     assert_eq!(json.matches("\"kind\":\"uniform-fused-1D\"").count(), 4);
+}
+
+#[test]
+fn sweep_with_plan_search_fills_best_plan_deterministically() {
+    // `--search` adds a per-cell plan-space search; artifacts must
+    // stay byte-identical across job counts and the best-found plan
+    // must be at least as fast as every fixed-kind row.
+    let mut spec = small_spec();
+    spec.scenarios.truncate(1);
+    spec.mechs.truncate(1);
+    spec.search = Some(ficco::search::SearchCfg {
+        beam: 2,
+        prune: true,
+    });
+    let render = |jobs: usize| {
+        let mut csv = CsvEmitter::new(Vec::new()).unwrap();
+        let report = run(&spec, jobs, |c| {
+            csv.cell(c).unwrap();
+            true
+        });
+        (String::from_utf8(csv.finish().unwrap()).unwrap(), report)
+    };
+    let (csv1, report1) = render(1);
+    let (csv4, _) = render(4);
+    assert_eq!(csv1, csv4, "searched sweep must stay byte-stable");
+    let cell = &report1.cells[0];
+    let best = cell.best_plan.as_ref().expect("search ran");
+    assert!(!best.id.is_empty());
+    for row in &cell.rows {
+        assert!(
+            best.speedup >= row.speedup * (1.0 - 1e-12),
+            "best plan {} ({}) slower than fixed kind {:?} ({})",
+            best.id,
+            best.speedup,
+            row.kind,
+            row.speedup
+        );
+    }
+    // The column actually lands in the CSV.
+    assert!(csv1.lines().nth(1).unwrap().contains(&best.id));
 }
 
 #[test]
