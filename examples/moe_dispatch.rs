@@ -29,7 +29,7 @@ fn main() {
         let sc = workloads::by_name(g).unwrap();
         let pick = heuristics::pick(&machine, &sc).pick;
         let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
-        let (_, best) = ev.best_ficco();
+        let (_, best) = ev.best_ficco().expect("all FiCCO kinds evaluated");
         t.row(vec![
             g.to_string(),
             sc.gemm.m.to_string(),
@@ -113,4 +113,21 @@ fn main() {
         );
     }
     println!("\nfiner grains let cold-pair compute start while hot pairs stream (Fig 5).");
+
+    // The same asymmetry, now first-class: `Scenario::with_skew`
+    // routes hot-expert imbalance through the partition layer, so
+    // every schedule, validator, cost model and search path sees the
+    // skewed per-GPU extents (DESIGN.md §5).
+    println!("\nfirst-class routing skew (g14, Zipf hotness via Scenario::with_skew):");
+    for skew in [0.0, 0.6, 1.2] {
+        let sc = workloads::by_name("g14").unwrap().with_skew(skew, 7);
+        let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
+        let (best, s) = ev.best_ficco().expect("all FiCCO kinds evaluated");
+        println!(
+            "  skew {skew:<4} imbalance {:<6} best {:<18} speedup {}",
+            x(sc.partition(1).imbalance()),
+            best.name(),
+            x(s),
+        );
+    }
 }

@@ -44,7 +44,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             x(ev.speedup(r.kind))
         );
     }
-    let (oracle, s) = ev.best_ficco();
+    let (oracle, s) = ev.best_ficco().expect("all FiCCO kinds evaluated");
     println!(
         "\noracle best: {} at {} (heuristic {})",
         oracle.name(),

@@ -37,7 +37,7 @@ fn main() {
         let pick = heuristics::pick(&machine, &sc).pick;
         let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
         let picked = ev.speedup(pick);
-        let (_, best) = ev.best_ficco();
+        let (_, best) = ev.best_ficco().expect("all FiCCO kinds evaluated");
         let picked_time = ev.baseline / picked;
         serial_total += ev.baseline;
         ficco_total += picked_time;

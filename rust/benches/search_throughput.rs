@@ -30,6 +30,11 @@ fn spec() -> SweepSpec {
         ],
         mechs: vec![CommMech::Dma],
         gpu_counts: Vec::new(),
+        // The skew dimension: every cell is searched both under
+        // balanced routing and with a hot expert, so the bench
+        // reports throughput over non-uniform plan evaluations too.
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
     }
 }
@@ -69,48 +74,51 @@ fn main() {
         );
     }
 
-    // Strategy comparison on one representative cell.
+    // Strategy comparison on one representative cell, balanced and
+    // hot-expert skewed.
     let machine = Machine::mi300x_8();
-    let sc = workloads::by_name("g6").expect("g6");
-    let space = SpaceSpec::default_for(&sc);
-    println!(
-        "\n== strategy comparison (g6 on mi300x-8, space {} plans) ==",
-        space.plans(&sc).len()
-    );
-    for (label, cfg) in [
-        (
-            "exhaustive",
-            SearchCfg {
-                beam: 0,
-                prune: false,
-            },
-        ),
-        (
-            "exhaustive+prune",
-            SearchCfg {
-                beam: 0,
-                prune: true,
-            },
-        ),
-        (
-            "beam 4",
-            SearchCfg {
-                beam: 4,
-                prune: true,
-            },
-        ),
-    ] {
-        let t0 = std::time::Instant::now();
-        let out = search("mi300x-8", &machine, &sc, &space, &cfg, &EvalCache::new());
+    for skew in [0.0f64, 1.0] {
+        let sc = workloads::by_name("g6").expect("g6").with_skew(skew, 2025);
+        let space = SpaceSpec::default_for(&sc);
         println!(
-            "{label:>18}: best {} ({:.3}x over baseline, gain {:.3}x over {})  {} evals, {} pruned, {:.3}s",
-            out.best.plan.id(),
-            out.best_speedup(),
-            out.plan_gain(),
-            out.best_legacy.0.name(),
-            out.evaluated,
-            out.pruned,
-            t0.elapsed().as_secs_f64(),
+            "\n== strategy comparison (g6 on mi300x-8, skew {skew}, space {} plans) ==",
+            space.plans(&sc).len()
         );
+        for (label, cfg) in [
+            (
+                "exhaustive",
+                SearchCfg {
+                    beam: 0,
+                    prune: false,
+                },
+            ),
+            (
+                "exhaustive+prune",
+                SearchCfg {
+                    beam: 0,
+                    prune: true,
+                },
+            ),
+            (
+                "beam 4",
+                SearchCfg {
+                    beam: 4,
+                    prune: true,
+                },
+            ),
+        ] {
+            let t0 = std::time::Instant::now();
+            let out = search("mi300x-8", &machine, &sc, &space, &cfg, &EvalCache::new());
+            println!(
+                "{label:>18}: best {} ({:.3}x over baseline, gain {:.3}x over {})  {} evals, {} pruned, {:.3}s",
+                out.best.plan.id(),
+                out.best_speedup(),
+                out.plan_gain(),
+                out.best_legacy.0.name(),
+                out.evaluated,
+                out.pruned,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
     }
 }

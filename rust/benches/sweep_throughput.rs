@@ -26,6 +26,8 @@ fn spec() -> SweepSpec {
         ],
         mechs: vec![CommMech::Dma, CommMech::Kernel],
         gpu_counts: Vec::new(),
+        skews: Vec::new(),
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
     }
 }

@@ -136,11 +136,8 @@ pub fn execute_numeric(
 }
 
 fn shard_region(sched: &Schedule, rank: usize) -> Region {
-    let (lo, hi) = crate::schedule::generate::split(
-        sched.scenario.gemm.m,
-        sched.scenario.ngpus as u64,
-        rank as u64,
-    );
+    // Partition-aware: skewed scenarios shard rows non-uniformly.
+    let (lo, hi) = sched.scenario.shard_rows(rank);
     Region::rows(lo, hi, sched.scenario.gemm.k)
 }
 

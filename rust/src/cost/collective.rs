@@ -83,6 +83,86 @@ pub fn comm_dil(gpu: &GpuSpec, topo: &Topology, shard_bytes: f64, mech: CommMech
     ag_ficco_time(gpu, topo, shard_bytes, mech) / ag_all_to_all_time(gpu, topo, shard_bytes, mech)
 }
 
+// ---------------------------------------------------------------------
+// Per-peer (non-uniform traffic) closed forms. Skewed expert routing
+// makes per-GPU shard sizes differ, so the scalar `shard_bytes`
+// formulas above no longer describe the collective; these variants
+// take the per-GPU byte vector instead. With all entries equal they
+// reduce to the scalar forms (the scalar paths are kept verbatim for
+// `skew == 0` so frozen goldens stay bit-stable).
+// ---------------------------------------------------------------------
+
+/// One-shot all-gather with per-GPU shard sizes: on a mesh every
+/// (src, dst) pair has a dedicated lane, so the largest shard's
+/// point-to-point time dominates; on a switch each NIC serializes its
+/// `(n-1)` outgoing shard copies against its incoming remote total —
+/// every message is priced at the rate *its own* size sustains (a
+/// cold GPU's tiny shard must not drag the rate applied to the bytes
+/// arriving from hot peers).
+pub fn ag_all_to_all_time_vec(
+    gpu: &GpuSpec,
+    topo: &Topology,
+    shard_bytes: &[f64],
+    mech: CommMech,
+) -> f64 {
+    let n = shard_bytes.len();
+    match topo.kind {
+        crate::hw::TopologyKind::Switch => {
+            // Per-message wire time at that message's own rate.
+            let msg_time =
+                |b: f64| -> f64 { b / link_rate(gpu, topo, b, mech) };
+            let rx_all: f64 = shard_bytes.iter().map(|&b| msg_time(b)).sum();
+            shard_bytes
+                .iter()
+                .map(|&b| {
+                    let tx = (n - 1) as f64 * b / link_rate(gpu, topo, b, mech);
+                    let rx = rx_all - msg_time(b);
+                    xfer_overhead(gpu, topo, mech) + tx.max(rx)
+                })
+                .fold(0.0, f64::max)
+        }
+        _ => shard_bytes
+            .iter()
+            .map(|&b| p2p_time(gpu, topo, b, mech))
+            .fold(0.0, f64::max),
+    }
+}
+
+/// Ring all-gather with per-GPU shard sizes: `n-1` serial hops per
+/// receiver, each moving one remote shard — the worst receiver pays
+/// the sum over all remote shards' point-to-point times.
+pub fn ag_ring_time_vec(
+    gpu: &GpuSpec,
+    topo: &Topology,
+    shard_bytes: &[f64],
+    mech: CommMech,
+) -> f64 {
+    (0..shard_bytes.len())
+        .map(|r| {
+            shard_bytes
+                .iter()
+                .enumerate()
+                .filter(|&(q, _)| q != r)
+                .map(|(_, &b)| p2p_time(gpu, topo, b, mech))
+                .sum::<f64>()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// FiCCO finer-grain all-gather with per-GPU shard sizes, each shard
+/// split into `pieces`: every step moves one piece of every shard on
+/// parallel lanes, so each step is paced by the largest piece.
+pub fn ag_ficco_time_vec(
+    gpu: &GpuSpec,
+    topo: &Topology,
+    shard_bytes: &[f64],
+    pieces: usize,
+    mech: CommMech,
+) -> f64 {
+    let max_piece = shard_bytes.iter().fold(0.0, |a: f64, &b| a.max(b)) / pieces as f64;
+    pieces as f64 * p2p_time(gpu, topo, max_piece, mech)
+}
+
 /// Bundle of the collective legs a scenario can need.
 #[derive(Debug, Clone, Copy)]
 pub struct CollectiveCost {
@@ -164,6 +244,72 @@ mod tests {
         assert!(
             a2a_time(&m.gpu, &m.topo, s, CommMech::Dma)
                 < ag_all_to_all_time(&m.gpu, &m.topo, s, CommMech::Dma)
+        );
+    }
+
+    #[test]
+    fn vec_forms_reduce_to_scalar_on_uniform_traffic() {
+        let m = m8();
+        let shard = 256e6;
+        let uniform = vec![shard; 8];
+        for mech in [CommMech::Dma, CommMech::Kernel] {
+            let one = ag_all_to_all_time_vec(&m.gpu, &m.topo, &uniform, mech);
+            assert!(
+                (one - ag_all_to_all_time(&m.gpu, &m.topo, shard, mech)).abs() / one < 1e-12,
+                "one-shot"
+            );
+            let ring = ag_ring_time_vec(&m.gpu, &m.topo, &uniform, mech);
+            assert!(
+                (ring - ag_ring_time(&m.gpu, &m.topo, shard, mech)).abs() / ring < 1e-9,
+                "ring"
+            );
+            let ficco = ag_ficco_time_vec(&m.gpu, &m.topo, &uniform, 8, mech);
+            assert!(
+                (ficco - ag_ficco_time(&m.gpu, &m.topo, shard, mech)).abs() / ficco < 1e-12,
+                "ficco"
+            );
+        }
+        // Switch topology one-shot reduction too.
+        let sw = Machine::switch_8();
+        let one = ag_all_to_all_time_vec(&sw.gpu, &sw.topo, &uniform, CommMech::Kernel);
+        let scalar = ag_all_to_all_time(&sw.gpu, &sw.topo, shard, CommMech::Kernel);
+        assert!((one - scalar).abs() / one < 1e-12, "switch one-shot");
+    }
+
+    #[test]
+    fn skewed_traffic_is_paced_by_the_hot_shard() {
+        let m = m8();
+        let mut skewed = vec![128e6; 8];
+        skewed[3] = 1024e6;
+        let uniform = vec![240e6; 8]; // same total bytes
+        for mech in [CommMech::Dma, CommMech::Kernel] {
+            assert!(
+                ag_all_to_all_time_vec(&m.gpu, &m.topo, &skewed, mech)
+                    > ag_all_to_all_time_vec(&m.gpu, &m.topo, &uniform, mech),
+                "hot shard must dominate the one-shot exchange"
+            );
+            assert!(
+                ag_ficco_time_vec(&m.gpu, &m.topo, &skewed, 8, mech)
+                    > ag_ficco_time_vec(&m.gpu, &m.topo, &uniform, 8, mech),
+                "hot pieces pace every FiCCO step"
+            );
+        }
+        // Switch: the hot NIC's serialized sends pace the exchange; a
+        // cold GPU's tiny own-shard rate must not poison the pricing
+        // of the bytes arriving from hot peers — the skewed time stays
+        // within the hot GPU's own send envelope, far from the
+        // pathological cold-rate blowup.
+        let sw = Machine::switch_8();
+        let t_skew = ag_all_to_all_time_vec(&sw.gpu, &sw.topo, &skewed, CommMech::Kernel);
+        let t_hot_uniform =
+            ag_all_to_all_time_vec(&sw.gpu, &sw.topo, &vec![1024e6; 8], CommMech::Kernel);
+        assert!(
+            t_skew <= t_hot_uniform * (1.0 + 1e-12),
+            "skewed switch exchange {t_skew} above all-hot envelope {t_hot_uniform}"
+        );
+        assert!(
+            t_skew > ag_all_to_all_time_vec(&sw.gpu, &sw.topo, &uniform, CommMech::Kernel),
+            "hot NIC must still pace the switch exchange"
         );
     }
 

@@ -102,6 +102,42 @@ pub fn gemm_cil_under_a2a(
     cil(gpu, &p)
 }
 
+/// Aggregate sustained comm bandwidth through one GPU when per-peer
+/// transfer sizes differ (skewed expert routing): each active peer
+/// lane runs at the rate its own transfer size sustains; zero-byte
+/// peers (empty shards) hold no lane at all.
+pub fn peer_comm_bw(gpu: &GpuSpec, topo: &Topology, peer_bytes: &[f64], mech: CommMech) -> f64 {
+    peer_bytes
+        .iter()
+        .filter(|&&b| b > 0.0)
+        .map(|&b| crate::cost::collective::link_rate(gpu, topo, b, mech))
+        .sum()
+}
+
+/// As [`gemm_cil_under_a2a`], with a per-peer byte vector instead of
+/// the all-equal assumption: the comm pressure on this GPU is the sum
+/// of the rates its *active* peer lanes sustain.
+pub fn gemm_cil_under_a2a_vec(
+    gpu: &GpuSpec,
+    topo: &Topology,
+    shape: &GemmShape,
+    mech: CommMech,
+    peer_bytes: &[f64],
+) -> (f64, f64) {
+    let cost = GemmCost::new(gpu);
+    let t = cost.time(shape);
+    let streams = peer_bytes.iter().filter(|&&b| b > 0.0).count();
+    let p = OverlapPoint {
+        gemm_time: t,
+        gemm_hbm: gpu.hbm_burst * shape.bytes() / t,
+        gemm_cus: cost.cus_used(shape) as f64,
+        comm_bw: peer_comm_bw(gpu, topo, peer_bytes, mech),
+        comm_streams: streams,
+        mech,
+    };
+    cil(gpu, &p)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +178,29 @@ mod tests {
         let shape = GemmShape::new(16384, 16384, 131072);
         let (g, _) = gemm_cil_under_a2a(&m.gpu, &m.topo, &shape, CommMech::Dma);
         assert!(g < 1.15, "cil={g}");
+    }
+
+    #[test]
+    fn per_peer_cil_matches_uniform_and_drops_with_idle_lanes() {
+        let m = Machine::mi300x_8();
+        let shape = GemmShape::new(1048576, 8192, 1024); // memory-bound
+        // Large equal transfers: per-peer aggregation reproduces the
+        // uniform convenience form.
+        let uniform = vec![1e12; m.topo.ngpus - 1];
+        let (g_vec, c_vec) =
+            gemm_cil_under_a2a_vec(&m.gpu, &m.topo, &shape, CommMech::Kernel, &uniform);
+        let (g_uni, c_uni) = gemm_cil_under_a2a(&m.gpu, &m.topo, &shape, CommMech::Kernel);
+        assert!((g_vec - g_uni).abs() < 1e-9 && (c_vec - c_uni).abs() < 1e-9);
+        // Skew that empties some peers' shards idles their lanes: less
+        // aggregate pressure, so GEMM CIL cannot grow.
+        let sparse = vec![1e12, 0.0, 0.0, 1e12, 0.0, 0.0, 0.0];
+        let (g_sparse, _) =
+            gemm_cil_under_a2a_vec(&m.gpu, &m.topo, &shape, CommMech::Kernel, &sparse);
+        assert!(g_sparse <= g_uni + 1e-12, "sparse {g_sparse} vs full {g_uni}");
+        assert!(
+            peer_comm_bw(&m.gpu, &m.topo, &sparse, CommMech::Dma)
+                < peer_comm_bw(&m.gpu, &m.topo, &uniform, CommMech::Dma)
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::util::table::{f, x, Align, Table};
 /// best-plan columns are filled only when the sweep ran with a
 /// plan-space search (`--search`); they stay empty otherwise so the
 /// artifact shape is stable.
-pub const CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,m,n,k,kind,\
+pub const CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,skew,m,n,k,kind,\
 makespan,speedup,gemm_leg,comm_leg,gemm_cil,comm_cil,n_tasks,is_pick,is_oracle,\
 best_plan,best_plan_speedup";
 
@@ -45,13 +45,14 @@ pub fn csv_rows(c: &CellResult) -> String {
     let mut out = String::new();
     for r in &c.rows {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_escape(&c.scenario),
             csv_escape(&c.machine_name),
             c.topology,
             c.ngpus,
             c.mech,
             c.collective,
+            c.skew,
             c.m,
             c.n,
             c.k,
@@ -92,7 +93,7 @@ pub fn json_cell(c: &CellResult) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
-         \"mech\":\"{}\",\"collective\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\
+         \"mech\":\"{}\",\"collective\":\"{}\",\"skew\":{},\"m\":{},\"n\":{},\"k\":{},\
          \"heuristic_pick\":\"{}\",\"oracle\":{},\"ideal_speedup\":{},\
          \"best_plan\":{},\"schedules\":[",
         json_escape(&c.scenario),
@@ -101,6 +102,7 @@ pub fn json_cell(c: &CellResult) -> String {
         c.ngpus,
         c.mech,
         c.collective,
+        c.skew,
         c.m,
         c.n,
         c.k,
@@ -280,6 +282,8 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma],
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
         };
         spec.cells().iter().map(eval_cell).collect()
@@ -331,6 +335,8 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma],
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
         };
         let r = eval_cell(&spec.cells()[0]);

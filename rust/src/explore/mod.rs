@@ -40,6 +40,10 @@ use crate::workloads;
 
 pub use crate::util::pool::{clamp_jobs, MAX_JOBS};
 
+/// Default hotness seed for sweep-axis skew (kept stable so skewed
+/// sweep artifacts are reproducible across runs and job counts).
+pub const DEFAULT_SKEW_SEED: u64 = 2025;
+
 /// The axes of one sweep: the cartesian product of everything listed.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
@@ -53,6 +57,13 @@ pub struct SweepSpec {
     pub mechs: Vec<CommMech>,
     /// GPU-count overrides; empty means each machine's native count.
     pub gpu_counts: Vec<usize>,
+    /// Expert-imbalance skew axis. Empty means `[0.0]` (balanced
+    /// routing only, the legacy sweep). Applied to every base
+    /// scenario that does not carry an intrinsic skew of its own
+    /// (the `moe:` synthetic suite keeps its sampled skews).
+    pub skews: Vec<f64>,
+    /// Hotness seed for axis-applied skews.
+    pub skew_seed: u64,
     /// When set, each cell also searches the parameterized plan space
     /// and the emitters fill the best-plan columns.
     pub search: Option<crate::search::SearchCfg>,
@@ -72,22 +83,28 @@ impl SweepSpec {
                 .collect(),
             mechs: vec![CommMech::Dma, CommMech::Kernel],
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: DEFAULT_SKEW_SEED,
             search: None,
         }
     }
 
     /// Build a spec from CLI-style comma-separated filters. Accepted:
-    /// - scenarios: `table1`, `g1,g5,g13`, `synth:COUNT:SEED`
+    /// - scenarios: `table1`, `g1,g5,g13`, `synth:COUNT:SEED`,
+    ///   `moe:COUNT:SEED` (skewed EP dispatch suite)
     /// - kinds: `all` or schedule names (`uniform-fused-1D`, ...)
     /// - machines: `all` or preset names (`mi300x-8`, ...)
     /// - mechs: `dma`, `rccl` (alias `kernel`), or `dma,rccl`
     /// - gpus: `native` or counts like `4,8`
+    /// - skews: expert-imbalance values like `0,0.6,1.2` (`0` =
+    ///   balanced legacy routing)
     pub fn from_filters(
         scenarios: &str,
         kinds: &str,
         machines: &str,
         mechs: &str,
         gpus: &str,
+        skews: &str,
     ) -> Result<SweepSpec, String> {
         let mut spec = SweepSpec {
             scenarios: Vec::new(),
@@ -95,6 +112,8 @@ impl SweepSpec {
             machines: Vec::new(),
             mechs: Vec::new(),
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: DEFAULT_SKEW_SEED,
             search: None,
         };
 
@@ -114,30 +133,57 @@ impl SweepSpec {
                     .map_err(|_| format!("bad synth seed in '{part}'"))?;
                 spec.scenarios
                     .extend(workloads::synthetic_scenarios(seed, count));
+            } else if let Some(rest) = part.strip_prefix("moe:") {
+                let (count, seed) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad moe filter '{part}' (want moe:COUNT:SEED)"))?;
+                let count: usize = count
+                    .parse()
+                    .map_err(|_| format!("bad moe count in '{part}'"))?;
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("bad moe seed in '{part}'"))?;
+                spec.scenarios
+                    .extend(workloads::synthetic_moe_scenarios(seed, count));
             } else if let Some(sc) = workloads::by_name(part) {
                 spec.scenarios.push(sc);
             } else {
                 return Err(format!(
-                    "unknown scenario '{part}' (try one of {}, table1, synth:N:SEED)",
+                    "unknown scenario '{part}' (try one of {}, table1, synth:N:SEED, moe:N:SEED)",
                     workloads::names().join("/")
                 ));
             }
         }
         // Drop exact duplicates (e.g. `--scenarios table1,g1`) so no
         // scenario is double-weighted in the emitted rows and
-        // summary geomeans. Identity is (name, shape, collective):
-        // same-named synthetic scenarios from different seeds differ
-        // in shape and are kept.
+        // summary geomeans. Identity is (name, shape, collective,
+        // intrinsic skew): same-named synthetic scenarios from
+        // different seeds differ in shape and are kept.
         let mut uniq: Vec<Scenario> = Vec::with_capacity(spec.scenarios.len());
         for sc in spec.scenarios {
-            let dup = uniq
-                .iter()
-                .any(|u| u.name == sc.name && u.gemm == sc.gemm && u.collective == sc.collective);
+            let dup = uniq.iter().any(|u| {
+                u.name == sc.name
+                    && u.gemm == sc.gemm
+                    && u.collective == sc.collective
+                    && u.skew == sc.skew
+            });
             if !dup {
                 uniq.push(sc);
             }
         }
         spec.scenarios = uniq;
+
+        for part in skews.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let skew: f64 = part
+                .parse()
+                .map_err(|_| format!("bad skew '{part}' (want e.g. 0,0.6,1.2)"))?;
+            if !skew.is_finite() || skew < 0.0 {
+                return Err(format!("skew must be finite and >= 0, got '{part}'"));
+            }
+            if !spec.skews.contains(&skew) {
+                spec.skews.push(skew);
+            }
+        }
 
         for part in kinds.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             if part == "all" {
@@ -231,8 +277,23 @@ impl SweepSpec {
         kinds
     }
 
+    /// The effective skew axis: empty means balanced routing only.
+    fn skew_axis(&self) -> Vec<f64> {
+        if self.skews.is_empty() {
+            vec![0.0]
+        } else {
+            self.skews.clone()
+        }
+    }
+
     /// Flatten the product into ordered evaluation cells:
-    /// machine-major, then GPU count, then mechanism, then scenario.
+    /// machine-major, then GPU count, then mechanism, then skew, then
+    /// scenario. An axis skew is applied only to base scenarios with
+    /// no intrinsic skew of their own (the `moe:` suite samples its
+    /// own routing factors, which the axis must not clobber);
+    /// intrinsically-skewed scenarios are emitted once per
+    /// (machine, count, mech) — on the first axis value only — so a
+    /// multi-valued `--skew` never duplicates their cells.
     pub fn cells(&self) -> Vec<Cell> {
         let kinds = self.eval_kinds();
         let mut cells = Vec::new();
@@ -244,20 +305,29 @@ impl SweepSpec {
             };
             for &ngpus in &counts {
                 for &mech in &self.mechs {
-                    for base in &self.scenarios {
-                        let mut machine = machine.clone();
-                        machine.topo.ngpus = ngpus;
-                        let mut scenario = base.clone();
-                        scenario.ngpus = ngpus;
-                        scenario.mech = mech;
-                        cells.push(Cell {
-                            index: cells.len(),
-                            machine_name: machine_name.clone(),
-                            machine,
-                            scenario,
-                            kinds: kinds.clone(),
-                            search: self.search,
-                        });
+                    for (si, &skew) in self.skew_axis().iter().enumerate() {
+                        for base in &self.scenarios {
+                            if base.skew != 0.0 && si > 0 {
+                                continue;
+                            }
+                            let mut machine = machine.clone();
+                            machine.topo.ngpus = ngpus;
+                            let mut scenario = base.clone();
+                            scenario.ngpus = ngpus;
+                            scenario.mech = mech;
+                            if scenario.skew == 0.0 {
+                                scenario.skew = skew;
+                                scenario.skew_seed = self.skew_seed;
+                            }
+                            cells.push(Cell {
+                                index: cells.len(),
+                                machine_name: machine_name.clone(),
+                                machine,
+                                scenario,
+                                kinds: kinds.clone(),
+                                search: self.search,
+                            });
+                        }
                     }
                 }
             }
@@ -272,7 +342,14 @@ impl SweepSpec {
         } else {
             self.gpu_counts.len()
         };
-        self.machines.len() * counts_per_machine * self.mechs.len() * self.scenarios.len()
+        // Unskewed scenarios multiply by the skew axis; intrinsically
+        // skewed ones appear once (see `cells`).
+        let unskewed = self.scenarios.iter().filter(|s| s.skew == 0.0).count();
+        let skewed = self.scenarios.len() - unskewed;
+        self.machines.len()
+            * counts_per_machine
+            * self.mechs.len()
+            * (self.skew_axis().len() * unskewed + skewed)
     }
 
     /// Number of (cell × kind) points the sweep will evaluate.
@@ -323,6 +400,9 @@ pub struct CellResult {
     pub scenario: String,
     pub collective: String,
     pub mech: String,
+    /// Expert-imbalance routing skew of the evaluated cell (0 =
+    /// balanced legacy routing).
+    pub skew: f64,
     pub m: u64,
     pub n: u64,
     pub k: u64,
@@ -354,11 +434,7 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
     let sc = &cell.scenario;
     let pick = crate::heuristics::pick(machine, sc).pick;
     let ev = ScenarioEval::run(machine, sc, &cell.kinds);
-    let oracle = if cell.kinds.iter().any(|k| k.is_ficco()) {
-        Some(ev.best_ficco().0)
-    } else {
-        None
-    };
+    let oracle = ev.best_ficco().map(|(k, _)| k);
     // Optional plan-space search. The cache is per-cell (the emitted
     // best-plan values are cache-independent either way) but seeded
     // with the fixed-kind rows just measured: preset plans lower to
@@ -401,6 +477,7 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
         scenario: sc.name.clone(),
         collective: sc.collective.name().to_string(),
         mech: sc.mech.name().to_string(),
+        skew: sc.skew,
         m: sc.gemm.m,
         n: sc.gemm.n,
         k: sc.gemm.k,
@@ -479,6 +556,8 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma, CommMech::Kernel],
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: DEFAULT_SKEW_SEED,
             search: None,
         }
     }
@@ -555,7 +634,7 @@ mod tests {
 
     #[test]
     fn filters_build_specs() {
-        let spec = SweepSpec::from_filters("g1,g5", "ficco", "mi300x-8,pcie-gen4-4", "dma", "")
+        let spec = SweepSpec::from_filters("g1,g5", "ficco", "mi300x-8,pcie-gen4-4", "dma", "", "")
             .unwrap();
         assert_eq!(spec.scenarios.len(), 2);
         assert_eq!(spec.kinds.len(), 4);
@@ -566,31 +645,104 @@ mod tests {
         assert_eq!(cells[0].scenario.ngpus, 8);
         assert_eq!(cells[2].scenario.ngpus, 4);
 
-        assert!(SweepSpec::from_filters("gX", "all", "all", "dma", "").is_err());
-        assert!(SweepSpec::from_filters("g1", "all", "all", "warp", "").is_err());
-        assert!(SweepSpec::from_filters("g1", "all", "nope", "dma", "").is_err());
-        assert!(SweepSpec::from_filters("g1", "all", "all", "dma", "1").is_err());
+        assert!(SweepSpec::from_filters("gX", "all", "all", "dma", "", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "all", "warp", "", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "nope", "dma", "", "").is_err());
+        assert!(SweepSpec::from_filters("g1", "all", "all", "dma", "1", "").is_err());
         assert!(
-            SweepSpec::from_filters("g1", "all", "all", "dma", "native,4").is_err(),
+            SweepSpec::from_filters("g1", "all", "all", "dma", "native,4", "").is_err(),
             "mixing native with explicit counts must be rejected"
         );
-        let synth = SweepSpec::from_filters("synth:3:7", "all", "mi300x-8", "dma", "8").unwrap();
+        assert!(
+            SweepSpec::from_filters("g1", "all", "all", "dma", "", "-0.5").is_err(),
+            "negative skew must be rejected"
+        );
+        assert!(SweepSpec::from_filters("g1", "all", "all", "dma", "", "hot").is_err());
+        let synth =
+            SweepSpec::from_filters("synth:3:7", "all", "mi300x-8", "dma", "8", "").unwrap();
         assert_eq!(synth.scenarios.len(), 3);
     }
 
     #[test]
     fn filters_drop_duplicates_on_every_axis() {
         let spec =
-            SweepSpec::from_filters("table1,g1", "all", "all,mi300x-8", "dma,dma", "8,8").unwrap();
+            SweepSpec::from_filters("table1,g1", "all", "all,mi300x-8", "dma,dma", "8,8", "0,0")
+                .unwrap();
         assert_eq!(spec.scenarios.len(), 16, "g1 must not be double-counted");
         assert_eq!(spec.machines.len(), Machine::preset_names().len());
         assert_eq!(spec.mechs.len(), 1);
         assert_eq!(spec.gpu_counts.len(), 1);
+        assert_eq!(spec.skews.len(), 1, "skews deduped");
         // Distinct synthetic suites share names but differ in shape:
         // both survive.
         let two_suites =
-            SweepSpec::from_filters("synth:2:1,synth:2:2", "all", "mi300x-8", "dma", "").unwrap();
+            SweepSpec::from_filters("synth:2:1,synth:2:2", "all", "mi300x-8", "dma", "", "")
+                .unwrap();
         assert_eq!(two_suites.scenarios.len(), 4);
+    }
+
+    #[test]
+    fn skew_axis_multiplies_cells_and_tags_scenarios() {
+        let spec =
+            SweepSpec::from_filters("g5", "ficco", "mi300x-8", "dma", "", "0,0.6").unwrap();
+        assert_eq!(spec.skews, vec![0.0, 0.6]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(spec.n_cells(), 2);
+        assert_eq!(cells[0].scenario.skew, 0.0);
+        assert_eq!(cells[1].scenario.skew, 0.6);
+        assert_eq!(cells[1].scenario.skew_seed, DEFAULT_SKEW_SEED);
+        // The emitted cell carries the skew.
+        let r = eval_cell(&cells[1]);
+        assert_eq!(r.skew, 0.6);
+        assert!(r.rows.iter().all(|row| row.makespan > 0.0));
+    }
+
+    #[test]
+    fn moe_scenarios_keep_their_intrinsic_skew() {
+        let spec =
+            SweepSpec::from_filters("moe:3:11", "ficco", "mi300x-8", "dma", "", "0").unwrap();
+        assert_eq!(spec.scenarios.len(), 3);
+        assert!(spec.scenarios.iter().all(|s| s.skew > 0.0));
+        for cell in spec.cells() {
+            let base = spec
+                .scenarios
+                .iter()
+                .find(|s| s.name == cell.scenario.name)
+                .unwrap();
+            assert_eq!(
+                cell.scenario.skew, base.skew,
+                "axis must not clobber sampled MoE skew"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_skew_axis_never_duplicates_intrinsically_skewed_cells() {
+        // moe scenarios ignore the axis, so a 3-value --skew must not
+        // triple their cells; unskewed g5 still multiplies.
+        let spec =
+            SweepSpec::from_filters("moe:2:11,g5", "ficco", "mi300x-8", "dma", "", "0,0.6,1.2")
+                .unwrap();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 + 3, "2 moe once + g5 x 3 skews");
+        assert_eq!(spec.n_cells(), cells.len());
+        let moe_cells = cells
+            .iter()
+            .filter(|c| c.scenario.name.starts_with("moe"))
+            .count();
+        assert_eq!(moe_cells, 2, "one cell per moe scenario");
+        // No two cells share (name, skew).
+        for (i, a) in cells.iter().enumerate() {
+            for b in &cells[i + 1..] {
+                assert!(
+                    a.scenario.name != b.scenario.name || a.scenario.skew != b.scenario.skew,
+                    "duplicate cell {} skew {}",
+                    a.scenario.name,
+                    a.scenario.skew
+                );
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,15 @@ pub struct StaticMetrics {
     pub norm_mt: f64,
     /// The combined metric compared against the threshold.
     pub combined: f64,
+    /// Traffic imbalance: max/mean shard-size ratio of the scenario's
+    /// row partition (1.0 under balanced routing; grows with the
+    /// expert skew). An input for skew-aware decision procedures —
+    /// the frozen Fig-12a rule ignores it, so `skew == 0` picks are
+    /// unchanged.
+    pub imbalance: f64,
+    /// The hot (largest) shard's rows as a fraction of M — `1/ngpus`
+    /// under balanced routing.
+    pub hot_share: f64,
 }
 
 pub fn static_metrics(machine: &Machine, sc: &Scenario) -> StaticMetrics {
@@ -49,12 +58,19 @@ pub fn static_metrics(machine: &Machine, sc: &Scenario) -> StaticMetrics {
     let balance = machine.balance(g.dtype);
     let norm_otb = otb / balance;
     let norm_mt = mt / machine.gpu.llc_bytes as f64;
+    let part = sc.partition(1);
     StaticMetrics {
         otb,
         mt,
         norm_otb,
         norm_mt,
         combined: norm_otb * norm_mt,
+        imbalance: part.imbalance(),
+        hot_share: if g.m == 0 {
+            0.0
+        } else {
+            part.max_shard() as f64 / g.m as f64
+        },
     }
 }
 
@@ -163,7 +179,9 @@ pub fn score(machine: &Machine, sc: &Scenario, threshold_scale: f64) -> Scored {
     let mut kinds = vec![Kind::Baseline];
     kinds.extend_from_slice(&Kind::FICCO);
     let ev = ScenarioEval::run(machine, sc, &kinds);
-    let (oracle, oracle_speedup) = ev.best_ficco();
+    let (oracle, oracle_speedup) = ev
+        .best_ficco()
+        .expect("score evaluates the full FiCCO family");
     Scored {
         scenario_name: sc.name.clone(),
         pick: decision.pick,
@@ -308,6 +326,27 @@ mod tests {
         let m = machine();
         let d = pick(&m, &workloads::by_name("g1").unwrap());
         assert!(!d.reason.is_empty());
+    }
+
+    #[test]
+    fn imbalance_features_track_the_partition() {
+        let m = machine();
+        let uniform = Scenario::new("u", 65536, 1024, 4096);
+        let mu = static_metrics(&m, &uniform);
+        assert_eq!(mu.imbalance, 1.0, "balanced routing");
+        assert_eq!(mu.hot_share, 1.0 / 8.0);
+        let skewed = uniform.clone().with_skew(1.0, 3);
+        let ms = static_metrics(&m, &skewed);
+        assert!(ms.imbalance > 1.2, "imbalance {}", ms.imbalance);
+        assert!(ms.hot_share > mu.hot_share);
+        // The frozen Fig-12a rule reads only the shape metrics, so the
+        // skew knob must not move skew-0-era picks.
+        assert_eq!(
+            pick(&m, &uniform).pick,
+            pick(&m, &skewed).pick,
+            "static pick is shape-driven"
+        );
+        assert_eq!(ms.combined, mu.combined);
     }
 
     #[test]

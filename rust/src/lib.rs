@@ -29,9 +29,15 @@
 //!   deterministic parallel tune driver (the `ficco tune`
 //!   subcommand);
 //! - [`explore`] — the parallel sweep engine evaluating the scenario
-//!   × schedule × machine × mechanism × GPU-count product on an
-//!   ordered worker pool ([`util::pool`]) with deterministic,
+//!   × schedule × machine × mechanism × GPU-count × skew product on
+//!   an ordered worker pool ([`util::pool`]) with deterministic,
 //!   byte-stable CSV/JSON output (the `ficco sweep` subcommand).
+//!
+//! Traffic is not assumed uniform: [`plan::Partition`] makes per-GPU
+//! row ownership first-class, and `Scenario::with_skew` opens the
+//! EP/MoE expert-imbalance axis (hot-expert Zipf routing) through
+//! every layer — lowering, validation, closed-form costs, the numeric
+//! executor, and the search cache (`DESIGN.md` §5).
 //!
 //! Machine presets beyond the paper's MI300X-8 testbed — an
 //! H100-DGX-like switched node and a PCIe-Gen4-class box — are

@@ -8,8 +8,9 @@
 //!                                   mech x GPU count, with
 //!                                   deterministic CSV/JSON output
 //!                                   (filters: --scenarios --kinds
-//!                                   --machines --mechs --gpus;
-//!                                   --out-dir results/sweep;
+//!                                   --machines --mechs --gpus --skew;
+//!                                   --skew-seed fixes the hot-expert
+//!                                   order; --out-dir results/sweep;
 //!                                   --search off|exhaustive|beam:N
 //!                                   fills the best-plan columns;
 //!                                   switches: --verbose prints
@@ -23,9 +24,9 @@
 //!                                   lower-bound pruning, deterministic
 //!                                   CSV/JSON artifacts (filters:
 //!                                   --scenarios --machines --mechs
-//!                                   --gpus; space: --pieces --slots;
-//!                                   --jobs, --out-dir results/tune,
-//!                                   --verbose, --csv)
+//!                                   --gpus --skew; space: --pieces
+//!                                   --slots; --jobs, --out-dir
+//!                                   results/tune, --verbose, --csv)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
 //!   characterize --what dil|comm-dil|cil
 //!   figures    [--out-dir results]  regenerate every paper exhibit
@@ -102,6 +103,13 @@ fn scenario_from(args: &Args, machine: &Machine) -> Result<Scenario, Box<dyn std
     if let Some(mech) = args.get("mech") {
         sc.mech = CommMech::parse(mech).ok_or_else(|| format!("unknown --mech '{mech}'"))?;
     }
+    let skew = args.get_f64("skew", 0.0)?;
+    if !skew.is_finite() || skew < 0.0 {
+        return Err(format!("--skew must be finite and >= 0, got {skew}").into());
+    }
+    if skew > 0.0 {
+        sc = sc.with_skew(skew, args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?);
+    }
     Ok(sc)
 }
 
@@ -152,9 +160,18 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let machine = machine_from(args)?;
     let sc = scenario_from(args, &machine)?;
     println!(
-        "scenario {}: GEMM ({}, {}, {}), {} over {} GPUs, {} comm",
+        "scenario {}: GEMM ({}, {}, {}), {} over {} GPUs, {} comm{}",
         sc.name, sc.gemm.m, sc.gemm.n, sc.gemm.k, sc.collective.name(), sc.ngpus,
         sc.mech.name(),
+        if sc.skew > 0.0 {
+            format!(
+                ", skew {} (imbalance {})",
+                sc.skew,
+                x(sc.partition(1).imbalance())
+            )
+        } else {
+            String::new()
+        },
     );
     let ev = ScenarioEval::run(&machine, &sc, &Kind::ALL);
     let mut t = Table::new(vec![
@@ -177,8 +194,47 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     println!("ideal overlap bound: {}", x(ev.ideal_speedup()));
     let d = ficco::heuristics::pick(&machine, &sc);
     println!("heuristic pick: {} ({})", d.pick.name(), d.reason);
-    let (oracle, s) = ev.best_ficco();
-    println!("oracle best:    {} ({})", oracle.name(), x(s));
+    match ev.best_ficco() {
+        Some((oracle, s)) => println!("oracle best:    {} ({})", oracle.name(), x(s)),
+        None => println!("oracle best:    n/a (no FiCCO schedule evaluated)"),
+    }
+    if sc.skew > 0.0 {
+        // Closed-form CIL under the *skewed* all-to-all: each GPU's
+        // comm pressure is the sum of the rates its active peer lanes
+        // sustain at their actual (imbalanced) transfer sizes, and
+        // each receiver's overlapped GEMM covers its own (skewed)
+        // shard rows. Report the receiver with the worst GEMM CIL
+        // (with its comm CIL alongside).
+        let part = sc.partition(1);
+        let per_gpu = sc.shard_bytes_per_gpu();
+        let mut worst = (1.0f64, 1.0f64);
+        for r in 0..sc.ngpus {
+            let rows = part.shard_len(r);
+            if rows == 0 {
+                continue;
+            }
+            let shard_gemm = ficco::cost::GemmShape { m: rows, ..sc.gemm };
+            let peers: Vec<f64> = (0..sc.ngpus)
+                .filter(|&q| q != r)
+                .map(|q| per_gpu[q])
+                .collect();
+            let (g_cil, c_cil) = ficco::cost::contention::gemm_cil_under_a2a_vec(
+                &machine.gpu,
+                &machine.topo,
+                &shard_gemm,
+                sc.mech,
+                &peers,
+            );
+            if g_cil > worst.0 {
+                worst = (g_cil, c_cil);
+            }
+        }
+        println!(
+            "closed-form CIL under skewed all-to-all (worst receiver by GEMM CIL): gemm {} comm {}",
+            x(worst.0),
+            x(worst.1)
+        );
+    }
     Ok(())
 }
 
@@ -191,7 +247,8 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 /// summary exhibit to `<out-dir>/summary.csv`.
 fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     args.expect_known(&[
-        "scenarios", "kinds", "machines", "mechs", "gpus", "jobs", "out-dir", "search",
+        "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
+        "search",
     ])?;
     args.expect_switches(&["verbose", "csv"])?;
     if let Some(stray) = args.positional.first() {
@@ -205,7 +262,9 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         args.get_or("machines", "all"),
         args.get_or("mechs", "dma,rccl"),
         args.get_or("gpus", "native"),
+        args.get_or("skew", "0"),
     )?;
+    spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
     spec.search = parse_search(args.get_or("search", "off"))?;
     let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/sweep");
@@ -334,19 +393,22 @@ fn parse_usize_list(name: &str, s: &str) -> Result<Vec<usize>, Box<dyn std::erro
 /// default space axes.
 fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     args.expect_known(&[
-        "scenarios", "machines", "mechs", "gpus", "jobs", "out-dir", "beam", "pieces", "slots",
+        "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir", "beam",
+        "pieces", "slots",
     ])?;
     args.expect_switches(&["verbose", "csv"])?;
     if let Some(stray) = args.positional.first() {
         return Err(format!("unexpected argument '{stray}' (tune takes only --options)").into());
     }
-    let spec = ficco::explore::SweepSpec::from_filters(
+    let mut spec = ficco::explore::SweepSpec::from_filters(
         args.get_or("scenarios", "table1"),
         "all", // kinds are irrelevant to tune; presets are always searched
         args.get_or("machines", "all"),
         args.get_or("mechs", "dma"),
         args.get_or("gpus", "native"),
+        args.get_or("skew", "0"),
     )?;
+    spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
     let cfg = ficco::search::SearchCfg {
         beam: args.get_usize("beam", 0)?,
         prune: true,
@@ -524,7 +586,11 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let count = args.get_usize("count", 16)?;
     let seed = args.get_u64("seed", 2025)?;
     let scale = args.get_f64("threshold", ficco::heuristics::DEFAULT_THRESHOLD_SCALE)?;
-    let suite = workloads::synthetic_scenarios(seed, count);
+    let suite = match args.get_or("suite", "synth") {
+        "synth" => workloads::synthetic_scenarios(seed, count),
+        "moe" => workloads::synthetic_moe_scenarios(seed, count),
+        other => return Err(format!("unknown --suite '{other}' (synth|moe)").into()),
+    };
     let against = args.get_or("against", "kinds");
     let (hit_rate, mean_loss, scored) = match against {
         "kinds" => ficco::heuristics::accuracy(&machine, &suite, scale),

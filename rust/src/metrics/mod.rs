@@ -275,7 +275,9 @@ pub fn fig12b_schedules(machine: &Machine) -> Exhibit {
         let sc = r.scenario();
         let ev = eval_scenario(machine, &sc);
         let pick = crate::heuristics::pick(machine, &sc).pick;
-        let (oracle, oracle_speedup) = ev.best_ficco();
+        let (oracle, oracle_speedup) = ev
+            .best_ficco()
+            .expect("fig12b evaluates every FiCCO kind");
         if pick == oracle {
             hits += 1;
         }

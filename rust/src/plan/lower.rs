@@ -19,22 +19,21 @@
 //! stream FIFO, so the emission orders above are part of the plan's
 //! semantics, not cosmetics.
 
-use super::{CommShape, Plan};
+use super::{CommShape, Partition, Plan};
 use crate::cost::gemm::GemmShape;
 use crate::schedule::generate::{lane, region, split, Builder};
 use crate::schedule::{Region, Scenario, Schedule};
 
-/// Region of piece `p` (of `d`) of GPU `q`'s shard under `shape`.
-fn piece_region(sc: &Scenario, shape: CommShape, q: usize, p: usize, d: usize) -> Region {
-    let (lo, hi) = split(sc.gemm.m, sc.ngpus as u64, q as u64);
+/// Region of piece `p` of GPU `q`'s shard under `shape`. Row extents
+/// come from the scenario's partition (uniform or skewed); the 2D
+/// K-split stays balanced (the reduction dimension is weight-resident,
+/// not routed).
+fn piece_region(part: &Partition, sc: &Scenario, shape: CommShape, q: usize, p: usize) -> Region {
     match shape {
-        CommShape::Row => {
-            let (plo, phi) = split(hi - lo, d as u64, p as u64);
-            region((lo + plo, lo + phi), (0, sc.gemm.k))
-        }
+        CommShape::Row => region(part.piece_rows(q, p), (0, sc.gemm.k)),
         CommShape::Col => {
-            let ks = split(sc.gemm.k, d as u64, p as u64);
-            region((lo, hi), ks)
+            let ks = split(sc.gemm.k, part.pieces as u64, p as u64);
+            region(part.shard_rows(q), ks)
         }
     }
 }
@@ -46,11 +45,12 @@ pub fn lower(plan: &Plan, sc: &Scenario) -> Schedule {
     plan.check(sc.ngpus)
         .unwrap_or_else(|e| panic!("invalid plan {} for {}: {e}", plan.id(), sc.name));
     let n = sc.ngpus;
+    let part = sc.partition(plan.pieces);
     let mut b = Builder::new();
     if plan.slots >= n - 1 {
-        lower_full(plan, sc, &mut b);
+        lower_full(plan, sc, &part, &mut b);
     } else {
-        lower_chained(plan, sc, &mut b);
+        lower_chained(plan, sc, &part, &mut b);
     }
     Schedule {
         kind: plan.kind(),
@@ -62,9 +62,9 @@ pub fn lower(plan: &Plan, sc: &Scenario) -> Schedule {
 
 /// Emit the head-start GEMM: the whole local shard, full K, computed
 /// immediately with no dependencies.
-fn head_start_gemm(sc: &Scenario, b: &mut Builder, r: usize) {
+fn head_start_gemm(sc: &Scenario, part: &Partition, b: &mut Builder, r: usize) {
     let g = &sc.gemm;
-    let (lo, hi) = split(g.m, sc.ngpus as u64, r as u64);
+    let (lo, hi) = part.shard_rows(r);
     b.gemm(
         r,
         GemmShape { m: hi - lo, ..*g },
@@ -137,12 +137,12 @@ fn emit_fused(
 /// Full-width lowering: receiver-major emission, a dedicated lane per
 /// (src, dst) pair, no transfer chaining (stream FIFO orders repeats
 /// of the same pair across piece steps).
-fn lower_full(plan: &Plan, sc: &Scenario, b: &mut Builder) {
+fn lower_full(plan: &Plan, sc: &Scenario, part: &Partition, b: &mut Builder) {
     let n = sc.ngpus;
     let d = plan.pieces;
     for r in 0..n {
         if plan.head_start {
-            head_start_gemm(sc, b, r);
+            head_start_gemm(sc, part, b, r);
         }
         for p in 0..d {
             let mut xfers: Vec<usize> = Vec::new();
@@ -151,7 +151,7 @@ fn lower_full(plan: &Plan, sc: &Scenario, b: &mut Builder) {
             // (uniform plans only) carry no dependency.
             let mut pieces: Vec<(Option<usize>, Region)> = Vec::new();
             for q in 0..n {
-                let reg = piece_region(sc, plan.shape, q, p, d);
+                let reg = piece_region(part, sc, plan.shape, q, p);
                 if q == r {
                     if !plan.head_start {
                         covers.push(reg);
@@ -182,13 +182,13 @@ fn lower_full(plan: &Plan, sc: &Scenario, b: &mut Builder) {
 
 /// Narrow-slot lowering: round-major emission with per-(receiver,
 /// lane) dependency chains serializing transfers that share a lane.
-fn lower_chained(plan: &Plan, sc: &Scenario, b: &mut Builder) {
+fn lower_chained(plan: &Plan, sc: &Scenario, part: &Partition, b: &mut Builder) {
     let n = sc.ngpus;
     let d = plan.pieces;
     let w = plan.slots;
     if plan.head_start {
         for r in 0..n {
-            head_start_gemm(sc, b, r);
+            head_start_gemm(sc, part, b, r);
         }
     }
     // Last transfer per (receiver, lane): the chain tails.
@@ -201,7 +201,7 @@ fn lower_chained(plan: &Plan, sc: &Scenario, b: &mut Builder) {
         for s_off in 1..n {
             for r in 0..n {
                 let q = (r + s_off) % n;
-                let reg = piece_region(sc, plan.shape, q, p, d);
+                let reg = piece_region(part, sc, plan.shape, q, p);
                 let lane_i = (n - 1 - s_off) % w;
                 let deps = match chain[r][lane_i] {
                     Some(x) => vec![x],
@@ -221,7 +221,7 @@ fn lower_chained(plan: &Plan, sc: &Scenario, b: &mut Builder) {
                 let mut covers: Vec<Region> = Vec::new();
                 let mut xfers: Vec<usize> = Vec::new();
                 if !plan.head_start {
-                    covers.push(piece_region(sc, plan.shape, r, p, d));
+                    covers.push(piece_region(part, sc, plan.shape, r, p));
                 }
                 for (x, reg) in arrivals {
                     xfers.push(x);
@@ -233,7 +233,7 @@ fn lower_chained(plan: &Plan, sc: &Scenario, b: &mut Builder) {
             // Uniform unfused: the local piece of this step still
             // needs computing (no transfer, no dependency).
             for r in 0..n {
-                let reg = piece_region(sc, plan.shape, r, p, d);
+                let reg = piece_region(part, sc, plan.shape, r, p);
                 b.gemm(r, piece_shape(plan, sc, &reg, p), vec![reg], step, vec![]);
             }
         }

@@ -29,8 +29,10 @@
 //! and invariants.
 
 mod lower;
+pub mod partition;
 
 pub use lower::lower;
+pub use partition::Partition;
 
 use crate::schedule::{Kind, Scenario, Schedule};
 use crate::sim::CommMech;

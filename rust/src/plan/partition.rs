@@ -1,0 +1,270 @@
+//! First-class row partitions: who owns which rows of the global
+//! input, and how each shard subdivides into communication pieces.
+//!
+//! Until this module existed the `M / ngpus` uniform-shard arithmetic
+//! was recomputed independently in at least five layers (scenario byte
+//! accounting, plan lowering, schedule validation, the numeric
+//! executor, and the closed-form collective costs). A [`Partition`]
+//! makes the row layout a single source of truth and — crucially —
+//! lets it be *non-uniform*: EP/MoE expert routing skews how many
+//! tokens each GPU owns, which breaks the AG↔A2A volume equivalence
+//! the uniform path relies on (`DESIGN.md` §1).
+//!
+//! Contract (see `DESIGN.md` §5):
+//!
+//! - shard bounds are monotone with `bounds[0] == 0` and
+//!   `bounds[ngpus] == m` — shards tile `[0, M)` exactly, so total
+//!   bytes are conserved for any skew;
+//! - piece sub-extents tile each shard exactly (balanced integer
+//!   split within the shard);
+//! - **`skew == 0` reproduces the legacy uniform floor arithmetic
+//!   bit-for-bit**: `bounds[i] == i·m/n`, identical to
+//!   `schedule::generate::split` — the frozen parity and golden tests
+//!   stay byte-stable;
+//! - skewed bounds are a pure function of `(m, ngpus, skew, seed)`
+//!   (deterministic via [`crate::util::rng`]), so caches keyed on
+//!   those inputs stay sound.
+//!
+//! The skew model is hot-expert / Zipf-style routing: GPU ranks are
+//! deterministically shuffled by `seed` into a hotness order, and the
+//! GPU at hotness position `r` receives weight `(r+1)^-skew`. `skew =
+//! 0` is balanced routing; `skew = 1` gives the hottest expert a
+//! harmonic-series share; larger values concentrate further.
+
+use crate::util::rng::Rng;
+
+/// Fixed-point scale for routing weights. At `skew == 0` every weight
+/// is exactly `SCALE`, so cumulative bounds reduce to the uniform
+/// `i·m/n` floor split.
+const SCALE: u64 = 1 << 20;
+
+/// Row layout of the global `M×K` input over `ngpus` GPUs, with each
+/// shard subdivided into `pieces` communication pieces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Total rows partitioned.
+    pub m: u64,
+    pub ngpus: usize,
+    /// Communication pieces per shard (decomposition degree, ≥ 1).
+    pub pieces: usize,
+    /// Shard row bounds: `bounds[q]..bounds[q+1]` is GPU `q`'s shard.
+    bounds: Vec<u64>,
+}
+
+impl Partition {
+    /// Balanced partition: GPU `q` owns rows `[q·m/n, (q+1)·m/n)` —
+    /// exactly the legacy `generate::split` floor arithmetic.
+    pub fn uniform(m: u64, ngpus: usize, pieces: usize) -> Partition {
+        assert!(ngpus >= 1 && pieces >= 1);
+        let bounds = (0..=ngpus as u64).map(|i| i * m / ngpus as u64).collect();
+        Partition {
+            m,
+            ngpus,
+            pieces,
+            bounds,
+        }
+    }
+
+    /// Skewed partition: Zipf-style hot-expert routing with exponent
+    /// `skew` over a `seed`-shuffled hotness order. `skew == 0`
+    /// returns [`Partition::uniform`] exactly (seed-independent).
+    pub fn skewed(m: u64, ngpus: usize, pieces: usize, skew: f64, seed: u64) -> Partition {
+        assert!(
+            skew.is_finite() && skew >= 0.0,
+            "skew must be finite and >= 0, got {skew}"
+        );
+        if skew == 0.0 {
+            return Partition::uniform(m, ngpus, pieces);
+        }
+        assert!(ngpus >= 1 && pieces >= 1);
+        // Deterministic hotness order: which GPU is the hot expert.
+        let mut order: Vec<usize> = (0..ngpus).collect();
+        let mut rng = Rng::new(seed ^ 0xF1CC0_5EED);
+        rng.shuffle(&mut order);
+        // Fixed-point Zipf weights (≥ 1 so no shard weight vanishes
+        // entirely; empty shards can still arise for tiny m, which the
+        // schedule layers tolerate as zero-area regions).
+        let mut weights = vec![0u64; ngpus];
+        for (hot_rank, &gpu) in order.iter().enumerate() {
+            let w = ((hot_rank + 1) as f64).powf(-skew) * SCALE as f64;
+            weights[gpu] = (w.round() as u64).max(1);
+        }
+        let total: u128 = weights.iter().map(|&w| w as u128).sum();
+        let mut bounds = Vec::with_capacity(ngpus + 1);
+        let mut cum: u128 = 0;
+        bounds.push(0u64);
+        for &w in &weights {
+            cum += w as u128;
+            bounds.push((m as u128 * cum / total) as u64);
+        }
+        Partition {
+            m,
+            ngpus,
+            pieces,
+            bounds,
+        }
+    }
+
+    /// Row range of GPU `q`'s shard.
+    pub fn shard_rows(&self, q: usize) -> (u64, u64) {
+        (self.bounds[q], self.bounds[q + 1])
+    }
+
+    /// Rows in GPU `q`'s shard.
+    pub fn shard_len(&self, q: usize) -> u64 {
+        self.bounds[q + 1] - self.bounds[q]
+    }
+
+    /// Row range of piece `p` within GPU `q`'s shard (balanced
+    /// sub-split — identical to the legacy nested `split` at any
+    /// skew, applied to this shard's extent).
+    pub fn piece_rows(&self, q: usize, p: usize) -> (u64, u64) {
+        assert!(p < self.pieces);
+        let (lo, hi) = self.shard_rows(q);
+        let len = hi - lo;
+        let (d, p) = (self.pieces as u64, p as u64);
+        (lo + p * len / d, lo + (p + 1) * len / d)
+    }
+
+    /// Largest shard, in rows.
+    pub fn max_shard(&self) -> u64 {
+        (0..self.ngpus).map(|q| self.shard_len(q)).max().unwrap_or(0)
+    }
+
+    /// Mean shard, in rows.
+    pub fn mean_shard(&self) -> f64 {
+        self.m as f64 / self.ngpus as f64
+    }
+
+    /// Max/mean shard ratio — 1.0 for a balanced partition (up to the
+    /// ±1-row floor rounding), growing with routing skew. The static
+    /// heuristic reads this as its imbalance feature.
+    pub fn imbalance(&self) -> f64 {
+        if self.m == 0 {
+            return 1.0;
+        }
+        self.max_shard() as f64 / self.mean_shard()
+    }
+
+    /// Rows GPU `q` must receive (everything outside its shard).
+    pub fn rx_rows(&self, q: usize) -> u64 {
+        self.m - self.shard_len(q)
+    }
+
+    /// Per-GPU shard sizes in bytes for a row of `row_bytes` bytes.
+    pub fn shard_bytes_per_gpu(&self, row_bytes: f64) -> Vec<f64> {
+        (0..self.ngpus)
+            .map(|q| self.shard_len(q) as f64 * row_bytes)
+            .collect()
+    }
+
+    /// Mean shard bytes — the uniform value, written with the exact
+    /// expression the pre-partition `Scenario::shard_bytes` used so
+    /// `skew == 0` byte accounting is bit-identical.
+    pub fn mean_shard_bytes(&self, row_bytes_k: f64, elem_bytes: f64) -> f64 {
+        (self.m as f64 / self.ngpus as f64) * row_bytes_k * elem_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_legacy_split() {
+        use crate::schedule::generate::split;
+        for (m, n) in [(4096u64, 8usize), (1009, 8), (17, 3), (7, 8), (0, 4)] {
+            let part = Partition::uniform(m, n, 4);
+            for q in 0..n {
+                let want = split(m, n as u64, q as u64);
+                assert_eq!(part.shard_rows(q), want, "m={m} n={n} q={q}");
+            }
+            for q in 0..n {
+                for p in 0..4 {
+                    let (lo, hi) = part.shard_rows(q);
+                    let (plo, phi) = split(hi - lo, 4, p as u64);
+                    assert_eq!(part.piece_rows(q, p), (lo + plo, lo + phi));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skew_zero_is_uniform_for_any_seed() {
+        for seed in [0u64, 7, 0xDEAD] {
+            assert_eq!(
+                Partition::skewed(1009, 8, 3, 0.0, seed),
+                Partition::uniform(1009, 8, 3)
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_bounds_tile_and_conserve() {
+        for (m, n, skew, seed) in [
+            (4096u64, 8usize, 0.5f64, 1u64),
+            (1009, 8, 1.0, 2),
+            (17, 3, 2.0, 3),
+            (1_607_680, 8, 1.5, 4),
+        ] {
+            let part = Partition::skewed(m, n, 4, skew, seed);
+            let mut covered = 0u64;
+            let mut prev = 0u64;
+            for q in 0..n {
+                let (lo, hi) = part.shard_rows(q);
+                assert_eq!(lo, prev, "contiguous at q={q}");
+                assert!(hi >= lo);
+                covered += hi - lo;
+                prev = hi;
+                // Pieces tile the shard.
+                let mut piece_prev = lo;
+                for p in 0..part.pieces {
+                    let (plo, phi) = part.piece_rows(q, p);
+                    assert_eq!(plo, piece_prev);
+                    piece_prev = phi;
+                }
+                assert_eq!(piece_prev, hi);
+            }
+            assert_eq!(covered, m, "rows conserved");
+            assert_eq!(prev, m, "full cover");
+        }
+    }
+
+    #[test]
+    fn skew_actually_skews_and_is_deterministic() {
+        let a = Partition::skewed(65536, 8, 8, 1.0, 42);
+        let b = Partition::skewed(65536, 8, 8, 1.0, 42);
+        assert_eq!(a, b, "deterministic for a seed");
+        assert!(a.imbalance() > 1.2, "imbalance {}", a.imbalance());
+        assert!(
+            a != Partition::uniform(65536, 8, 8),
+            "skew 1.0 must move bounds"
+        );
+        // A different seed permutes the hotness order but keeps the
+        // same weight profile (up to ±1-row floor rounding).
+        let c = Partition::skewed(65536, 8, 8, 1.0, 43);
+        assert!(
+            (a.max_shard() as i64 - c.max_shard() as i64).abs() <= 1,
+            "hotness profile must be seed-independent: {} vs {}",
+            a.max_shard(),
+            c.max_shard()
+        );
+    }
+
+    #[test]
+    fn higher_skew_concentrates_more() {
+        let mild = Partition::skewed(1 << 20, 8, 8, 0.5, 9);
+        let hot = Partition::skewed(1 << 20, 8, 8, 2.0, 9);
+        assert!(hot.imbalance() > mild.imbalance());
+        assert!(mild.imbalance() > 1.0);
+    }
+
+    #[test]
+    fn byte_accounting_matches_row_accounting() {
+        let part = Partition::skewed(4096, 8, 4, 1.0, 5);
+        let per = part.shard_bytes_per_gpu(1024.0 * 2.0);
+        let total: f64 = per.iter().sum();
+        assert_eq!(total, 4096.0 * 1024.0 * 2.0);
+        assert_eq!(part.rx_rows(0), 4096 - part.shard_len(0));
+    }
+}

@@ -169,9 +169,21 @@ fn mean_slowdown(report: &crate::sim::Report, tasks: &[TaskId]) -> f64 {
 }
 
 /// Isolated communication leg of a schedule kind (closed form), with
-/// the mechanism its transfers actually ride.
+/// the mechanism its transfers actually ride. Skewed scenarios route
+/// through the per-peer byte-vector forms; the uniform scalar path is
+/// kept verbatim at `skew == 0` so the frozen goldens stay bit-stable.
 fn comm_leg_isolated(machine: &Machine, sc: &Scenario, kind: Kind, mech: CommMech) -> f64 {
     use crate::cost::collective as cc;
+    if sc.skew != 0.0 {
+        let bytes = sc.shard_bytes_per_gpu();
+        return match kind {
+            Kind::Baseline => {
+                cc::ag_all_to_all_time_vec(&machine.gpu, &machine.topo, &bytes, mech)
+            }
+            Kind::ShardOverlap => cc::ag_ring_time_vec(&machine.gpu, &machine.topo, &bytes, mech),
+            _ => cc::ag_ficco_time_vec(&machine.gpu, &machine.topo, &bytes, sc.ngpus, mech),
+        };
+    }
     let shard = sc.shard_bytes();
     match kind {
         Kind::Baseline => cc::ag_all_to_all_time(&machine.gpu, &machine.topo, shard, mech),
@@ -250,21 +262,24 @@ pub struct ScenarioEval {
 
 impl ScenarioEval {
     pub fn run(machine: &Machine, sc: &Scenario, kinds: &[Kind]) -> ScenarioEval {
-        let mut results = Vec::new();
-        let mut baseline = f64::NAN;
-        let mut ideal = f64::NAN;
-        for &k in kinds {
-            let r = evaluate(machine, sc, k);
-            if k == Kind::Baseline {
-                baseline = r.makespan;
-                ideal = r.gemm_leg.max(r.comm_leg);
-            }
-            results.push(r);
-        }
-        assert!(
-            !baseline.is_nan(),
-            "ScenarioEval requires Kind::Baseline among kinds"
-        );
+        let results: Vec<ExecResult> = kinds.iter().map(|&k| evaluate(machine, sc, k)).collect();
+        // The serial reference is always measured, even when the
+        // baseline kind itself is filtered out of `kinds` (speedups
+        // need it); when it *was* requested, reuse that measurement.
+        let baseline = match results.iter().find(|r| r.kind == Kind::Baseline) {
+            Some(r) => r.makespan,
+            None => evaluate(machine, sc, Kind::Baseline).makespan,
+        };
+        // Perfect-overlap bound from the closed-form legs, computed
+        // unconditionally: the compute leg is the full per-GPU GEMM in
+        // isolation, the comm leg the serial baseline collective (the
+        // baseline is pinned to kernel-driven comm). Previously this
+        // was copied off the baseline's ExecResult and stayed NaN when
+        // that kind was filtered out; the values are identical when it
+        // is present.
+        let gemm_leg = GemmCost::new(&machine.gpu).time(&sc.gemm);
+        let comm_leg = comm_leg_isolated(machine, sc, Kind::Baseline, CommMech::Kernel);
+        let ideal = gemm_leg.max(comm_leg);
         ScenarioEval {
             scenario: sc.clone(),
             results,
@@ -293,14 +308,16 @@ impl ScenarioEval {
     }
 
     /// Best FiCCO schedule by measured makespan (the oracle the
-    /// heuristic is scored against in §VI-D).
-    pub fn best_ficco(&self) -> (Kind, f64) {
+    /// heuristic is scored against in §VI-D), or `None` when the
+    /// evaluated kinds included no FiCCO schedule — callers that
+    /// filter `kinds` must handle the empty family instead of
+    /// panicking.
+    pub fn best_ficco(&self) -> Option<(Kind, f64)> {
         self.results
             .iter()
             .filter(|r| r.kind.is_ficco())
             .map(|r| (r.kind, self.baseline / r.makespan))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .expect("no FiCCO kinds evaluated")
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("finite speedups"))
     }
 }
 
@@ -386,5 +403,57 @@ mod tests {
             assert!(r.makespan > 0.0, "{kind:?}");
             assert!(r.gemm_cil >= 0.999, "{kind:?} gemm cil {}", r.gemm_cil);
         }
+    }
+
+    #[test]
+    fn ideal_is_finite_for_filtered_kinds() {
+        // Regression: `ideal` stayed NaN (and `baseline` panicked)
+        // when the kinds filter dropped the baseline that used to
+        // carry the closed-form legs.
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let ev = ScenarioEval::run(&m, &sc, &[Kind::UniformFused1D]);
+        assert!(ev.ideal.is_finite() && ev.ideal > 0.0, "ideal {}", ev.ideal);
+        assert!(ev.baseline.is_finite() && ev.baseline > 0.0);
+        assert!(ev.ideal_speedup().is_finite());
+        assert!(ev.speedup(Kind::UniformFused1D) > 0.0);
+        // And the filtered evaluation agrees with the full one.
+        let full = ScenarioEval::run(&m, &sc, &Kind::ALL);
+        assert_eq!(ev.ideal, full.ideal, "ideal independent of the filter");
+        assert_eq!(ev.baseline, full.baseline);
+    }
+
+    #[test]
+    fn best_ficco_is_none_for_ficco_free_kinds() {
+        // Regression: used to `.expect` ("no FiCCO kinds evaluated").
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let ev = ScenarioEval::run(&m, &sc, &[Kind::Baseline, Kind::ShardOverlap]);
+        assert!(ev.best_ficco().is_none());
+        let full = ScenarioEval::run(&m, &sc, &Kind::ALL);
+        let (kind, speedup) = full.best_ficco().expect("FiCCO kinds evaluated");
+        assert!(kind.is_ficco());
+        assert!(speedup > 0.0);
+    }
+
+    #[test]
+    fn skewed_scenario_executes_and_costs_more_comm() {
+        // A hot expert inflates the comm leg and the hot GPU's load;
+        // at skew 0 the scenario is exactly the uniform one.
+        let m = machine();
+        let sc = sc_comm_heavy();
+        let skewed = sc.clone().with_skew(1.0, 7);
+        let base = evaluate(&m, &sc, Kind::UniformFused1D);
+        let hot = evaluate(&m, &skewed, Kind::UniformFused1D);
+        assert!(hot.makespan.is_finite() && hot.makespan > 0.0);
+        assert!(
+            hot.comm_leg > base.comm_leg,
+            "skewed comm leg {} <= uniform {}",
+            hot.comm_leg,
+            base.comm_leg
+        );
+        let zero = evaluate(&m, &sc.clone().with_skew(0.0, 99), Kind::UniformFused1D);
+        assert_eq!(zero.makespan, base.makespan, "skew 0 is bit-compatible");
+        assert_eq!(zero.comm_leg, base.comm_leg);
     }
 }

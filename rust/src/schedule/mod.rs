@@ -57,6 +57,13 @@ pub struct Scenario {
     /// Communication mechanism (DMA offload is the paper's default).
     pub mech: CommMech,
     pub ngpus: usize,
+    /// Expert-imbalance routing skew (Zipf-style hot-expert exponent;
+    /// 0 = balanced routing, the uniform-shard legacy behaviour). See
+    /// [`crate::plan::Partition`] and `DESIGN.md` §5.
+    pub skew: f64,
+    /// Seed for the deterministic hotness order of a skewed partition
+    /// (unused at `skew == 0`).
+    pub skew_seed: u64,
 }
 
 impl Scenario {
@@ -67,6 +74,8 @@ impl Scenario {
             collective: Collective::AllGather,
             mech: CommMech::Dma,
             ngpus: 8,
+            skew: 0.0,
+            skew_seed: 0,
         }
     }
 
@@ -85,20 +94,58 @@ impl Scenario {
         self
     }
 
+    /// Expert-imbalance routing skew (0 = balanced). The seed fixes
+    /// the hotness order so the traffic pattern is reproducible.
+    pub fn with_skew(mut self, skew: f64, seed: u64) -> Self {
+        self.skew = skew;
+        self.skew_seed = seed;
+        self
+    }
+
     pub fn dtype(&self) -> DType {
         self.gemm.dtype
     }
 
-    /// Bytes of one GPU's input shard (`M/n × K` activations).
-    pub fn shard_bytes(&self) -> f64 {
-        (self.gemm.m as f64 / self.ngpus as f64)
-            * self.gemm.k as f64
-            * self.gemm.dtype.bytes() as f64
+    /// The row partition this scenario's routing induces, at
+    /// decomposition degree `pieces` (pure function of the scenario,
+    /// see [`crate::plan::Partition`]).
+    pub fn partition(&self, pieces: usize) -> crate::plan::Partition {
+        crate::plan::Partition::skewed(self.gemm.m, self.ngpus, pieces, self.skew, self.skew_seed)
     }
 
-    /// Total bytes each GPU must receive.
+    /// Row range of GPU `q`'s input shard under this scenario's
+    /// partition.
+    pub fn shard_rows(&self, q: usize) -> (u64, u64) {
+        self.partition(1).shard_rows(q)
+    }
+
+    /// Mean bytes of one GPU's input shard (`M/n × K` activations) —
+    /// the uniform per-shard value at `skew == 0`; under skew, the
+    /// per-GPU sizes come from [`Scenario::shard_bytes_per_gpu`].
+    pub fn shard_bytes(&self) -> f64 {
+        self.partition(1)
+            .mean_shard_bytes(self.gemm.k as f64, self.gemm.dtype.bytes() as f64)
+    }
+
+    /// Per-GPU input-shard bytes under this scenario's partition (all
+    /// equal to [`Scenario::shard_bytes`] up to floor rounding when
+    /// `skew == 0`).
+    pub fn shard_bytes_per_gpu(&self) -> Vec<f64> {
+        self.partition(1)
+            .shard_bytes_per_gpu(self.gemm.k as f64 * self.gemm.dtype.bytes() as f64)
+    }
+
+    /// Mean total bytes each GPU must receive.
     pub fn rx_bytes_per_gpu(&self) -> f64 {
         (self.ngpus - 1) as f64 * self.shard_bytes()
+    }
+
+    /// Bytes GPU `q` must receive under this scenario's partition
+    /// (everything outside its own shard).
+    pub fn rx_bytes_of(&self, q: usize) -> f64 {
+        self.partition(1).rx_rows(q) as f64
+            * self.gemm.k as f64
+            * self.gemm.dtype.bytes() as f64
     }
 }
 
@@ -304,6 +351,27 @@ mod tests {
         // shard = 128 rows × 256 k × 2B
         assert_eq!(s.shard_bytes(), 128.0 * 256.0 * 2.0);
         assert_eq!(s.rx_bytes_per_gpu(), 7.0 * 128.0 * 256.0 * 2.0);
+        // Balanced routing: per-GPU bytes all equal the mean.
+        let per = s.shard_bytes_per_gpu();
+        assert_eq!(per.len(), 8);
+        assert!(per.iter().all(|&b| b == s.shard_bytes()));
+        assert_eq!(s.rx_bytes_of(3), s.rx_bytes_per_gpu());
+    }
+
+    #[test]
+    fn skewed_scenario_bytes_conserve_total() {
+        let s = Scenario::new("t", 1024, 512, 256).with_skew(1.0, 11);
+        let per = s.shard_bytes_per_gpu();
+        let total: f64 = per.iter().sum();
+        assert_eq!(total, 1024.0 * 256.0 * 2.0, "all rows accounted for");
+        let max = per.iter().cloned().fold(0.0, f64::max);
+        assert!(max > s.shard_bytes(), "hot expert owns more than the mean");
+        // rx = everything outside the own shard.
+        for q in 0..8 {
+            assert_eq!(s.rx_bytes_of(q), total - per[q]);
+        }
+        // The mean-based accessors are skew-independent.
+        assert_eq!(s.shard_bytes(), 128.0 * 256.0 * 2.0);
     }
 
     #[test]

@@ -16,8 +16,17 @@
 //!    contained in the union of transfer regions in its transitive
 //!    dependency closure.
 //! 5. **Topological order** — deps reference earlier nodes only.
+//! 6. **Partition soundness** — the scenario's row partition (uniform
+//!    or expert-skewed) tiles `[0, M)` contiguously, so the byte
+//!    conservation and full-row-cover checks above hold against the
+//!    *actual* per-GPU extents, not a recomputed uniform split.
+//!
+//! All shard extents come from the scenario's [`crate::plan::Partition`],
+//! so every invariant is checked against the same (possibly skewed)
+//! row layout the lowering used.
 
-use super::{generate::split, Node, OpKind, Region, Schedule};
+use super::{Node, OpKind, Region, Schedule};
+use crate::plan::Partition;
 
 #[derive(Debug)]
 pub struct ValidationError(pub String);
@@ -38,6 +47,22 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     let n = s.scenario.ngpus;
     let g = &s.scenario.gemm;
     let total_area = g.m * g.k;
+    let part = s.scenario.partition(1);
+
+    // 6: partition soundness — shards tile [0, M) contiguously.
+    let mut prev_hi = 0u64;
+    for q in 0..n {
+        let (lo, hi) = part.shard_rows(q);
+        if lo != prev_hi || hi < lo {
+            return err(format!(
+                "partition: shard {q} rows [{lo},{hi}) not contiguous after {prev_hi}"
+            ));
+        }
+        prev_hi = hi;
+    }
+    if prev_hi != g.m {
+        return err(format!("partition: shards cover {prev_hi} of {} rows", g.m));
+    }
 
     // 5: topological order (also guards the closure walk below).
     for (i, node) in s.nodes.iter().enumerate() {
@@ -52,7 +77,7 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     }
 
     for gpu in 0..n {
-        let shard = shard_region(s, gpu);
+        let shard = shard_region(s, &part, gpu);
 
         // 1: compute coverage.
         let mut covers: Vec<Region> = Vec::new();
@@ -83,7 +108,7 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
                     return err(format!("{}: received own shard data", node.label));
                 }
                 // 3: sender ownership.
-                let src_shard = shard_region(s, *src);
+                let src_shard = shard_region(s, &part, *src);
                 if region.row_lo < src_shard.row_lo || region.row_hi > src_shard.row_hi {
                     return err(format!(
                         "{}: region rows [{},{}) outside sender shard [{},{})",
@@ -99,7 +124,7 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     // 4: data-before-compute via transitive dependency closure.
     for (i, node) in s.nodes.iter().enumerate() {
         if let OpKind::Gemm { covers, .. } = &node.kind {
-            let shard = shard_region(s, node.gpu);
+            let shard = shard_region(s, &part, node.gpu);
             let closure_regions = closure_xfer_regions(&s.nodes, i);
             for c in covers {
                 // Local shard data is always present; the rest must be
@@ -123,8 +148,8 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     Ok(())
 }
 
-fn shard_region(s: &Schedule, gpu: usize) -> Region {
-    let (lo, hi) = split(s.scenario.gemm.m, s.scenario.ngpus as u64, gpu as u64);
+fn shard_region(s: &Schedule, part: &Partition, gpu: usize) -> Region {
+    let (lo, hi) = part.shard_rows(gpu);
     Region::rows(lo, hi, s.scenario.gemm.k)
 }
 

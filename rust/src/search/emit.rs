@@ -13,20 +13,21 @@ use crate::util::stats;
 use crate::util::table::{f, x, Align, Table};
 
 /// Column header shared by the tune CSV emitter and its tests.
-pub const TUNE_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,m,n,k,\
+pub const TUNE_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,skew,m,n,k,\
 space,evaluated,pruned,baseline_makespan,best_plan,best_makespan,best_speedup,\
 best_legacy_kind,best_legacy_speedup,plan_gain,heuristic_pick,heuristic_speedup,heuristic_loss";
 
 /// One tune result as a CSV row.
 pub fn tune_csv_row(r: &TuneResult) -> String {
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
         csv_escape(&r.scenario),
         csv_escape(&r.machine_name),
         r.topology,
         r.ngpus,
         r.mech,
         r.collective,
+        r.skew,
         r.m,
         r.n,
         r.k,
@@ -50,7 +51,7 @@ pub fn tune_csv_row(r: &TuneResult) -> String {
 pub fn tune_json(r: &TuneResult) -> String {
     format!(
         "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
-         \"mech\":\"{}\",\"collective\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\
+         \"mech\":\"{}\",\"collective\":\"{}\",\"skew\":{},\"m\":{},\"n\":{},\"k\":{},\
          \"space\":{},\"evaluated\":{},\"pruned\":{},\"baseline_makespan\":{},\
          \"best_plan\":\"{}\",\"best_makespan\":{},\"best_speedup\":{},\
          \"best_legacy_kind\":\"{}\",\"best_legacy_speedup\":{},\"plan_gain\":{},\
@@ -61,6 +62,7 @@ pub fn tune_json(r: &TuneResult) -> String {
         r.ngpus,
         r.mech,
         r.collective,
+        r.skew,
         r.m,
         r.n,
         r.k,
@@ -194,6 +196,8 @@ mod tests {
             machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
             mechs: vec![CommMech::Dma],
             gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
         };
         // Narrow space so the test stays fast.

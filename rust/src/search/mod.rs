@@ -159,8 +159,11 @@ pub fn space_for(sc: &Scenario, ov: &SpaceOverrides) -> SpaceSpec {
 }
 
 /// Cache key: everything the simulated makespan of a plan depends on.
-/// The collective tag is volume-equivalent (AG ↔ A2A, `DESIGN.md` §1)
-/// and deliberately not part of the key.
+/// The collective tag is volume-equivalent (AG ↔ A2A at `skew == 0`,
+/// `DESIGN.md` §1) and deliberately not part of the key; the routing
+/// skew and its hotness seed ARE part of the key — skewed partitions
+/// change piece sizes, so two scenarios differing only in skew must
+/// never share a memoized makespan.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct EvalKey {
     pub machine: String,
@@ -169,6 +172,11 @@ pub struct EvalKey {
     pub k: u64,
     pub dtype: DType,
     pub ngpus: usize,
+    /// `Scenario::skew` as raw bits (f64 is not `Eq`/`Hash`; bit
+    /// identity is exactly what partition determinism guarantees).
+    pub skew_bits: u64,
+    /// Hotness seed; irrelevant (normalized to 0) at `skew == 0`.
+    pub skew_seed: u64,
     pub plan: Plan,
 }
 
@@ -239,6 +247,11 @@ impl EvalCache {
             k: sc.gemm.k,
             dtype: sc.gemm.dtype,
             ngpus: sc.ngpus,
+            // At skew 0 neither the seed nor the sign of zero can
+            // affect the partition; normalize both so balanced cells
+            // share cache entries.
+            skew_bits: if sc.skew == 0.0 { 0 } else { sc.skew.to_bits() },
+            skew_seed: if sc.skew == 0.0 { 0 } else { sc.skew_seed },
             plan: *plan,
         }
     }
@@ -570,6 +583,8 @@ pub struct TuneResult {
     pub scenario: String,
     pub collective: String,
     pub mech: String,
+    /// Expert-imbalance routing skew of the searched cell.
+    pub skew: f64,
     pub m: u64,
     pub n: u64,
     pub k: u64,
@@ -618,6 +633,7 @@ pub fn tune_cell(cell: &Cell, ov: &SpaceOverrides, cfg: &SearchCfg, cache: &Eval
         scenario: sc.name.clone(),
         collective: sc.collective.name().to_string(),
         mech: sc.mech.name().to_string(),
+        skew: sc.skew,
         m: sc.gemm.m,
         n: sc.gemm.n,
         k: sc.gemm.k,
@@ -829,6 +845,40 @@ mod tests {
             "second search must be all cache hits"
         );
         assert!(cache.hits() > 0);
+    }
+
+    #[test]
+    fn cache_never_mixes_skews() {
+        let m = machine();
+        let sc = sc();
+        let skewed = sc.clone().with_skew(1.0, 7);
+        let cache = EvalCache::new();
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let a = cache.makespan("mi300x-8", &m, &sc, &plan);
+        let b = cache.makespan("mi300x-8", &m, &skewed, &plan);
+        assert_eq!(cache.misses(), 2, "distinct keys, no false sharing");
+        assert!(a != b, "skew must change the simulated makespan");
+        // Same skew, different seed: also distinct keys.
+        let reseeded = sc.clone().with_skew(1.0, 8);
+        let _ = cache.makespan("mi300x-8", &m, &reseeded, &plan);
+        assert_eq!(cache.misses(), 3);
+        // Skew 0 normalizes the seed away.
+        let zero = sc.clone().with_skew(0.0, 99);
+        let z = cache.makespan("mi300x-8", &m, &zero, &plan);
+        assert_eq!(cache.misses(), 3, "skew-0 seed variants share the entry");
+        assert_eq!(z, a);
+    }
+
+    #[test]
+    fn skewed_search_still_never_loses_to_presets() {
+        let m = machine();
+        let sc = sc().with_skew(0.8, 5);
+        let space = small_space(&sc);
+        let cache = EvalCache::new();
+        let out = search("mi300x-8", &m, &sc, &space, &SearchCfg::default(), &cache);
+        assert!(out.best.makespan <= out.best_legacy.1);
+        assert!(out.plan_gain() >= 1.0);
+        assert!(out.baseline.is_finite() && out.baseline > 0.0);
     }
 
     #[test]

@@ -49,6 +49,26 @@ pub fn synthetic_scenarios(seed: u64, count: usize) -> Vec<Scenario> {
     (0..count).map(|i| sample(&mut rng, i)).collect()
 }
 
+/// Skewed MoE-dispatch suite: expert-parallel all-to-all scenarios
+/// whose routing is hot-expert imbalanced. Shapes are drawn from the
+/// same stratified sampler as [`synthetic_scenarios`]; each scenario
+/// additionally samples a routing skew (Zipf hotness exponent in
+/// `[0.25, 1.5)`, so every scenario is genuinely non-uniform) and its
+/// own hotness seed. Seeded and reproducible like the base suite.
+pub fn synthetic_moe_scenarios(seed: u64, count: usize) -> Vec<Scenario> {
+    let mut rng = Rng::new(seed ^ 0x4D4F_45); // "MOE"
+    (0..count)
+        .map(|i| {
+            let mut sc = sample(&mut rng, i);
+            sc.name = format!("moe{i}");
+            sc.collective = crate::schedule::Collective::AllToAll;
+            sc.skew = rng.range_f64(0.25, 1.5);
+            sc.skew_seed = rng.next_u64();
+            sc
+        })
+        .collect()
+}
+
 /// Diversity diagnostic: (min, max) of log10(OTB) and log10(MT bytes)
 /// across a suite.
 pub fn diversity(scenarios: &[Scenario]) -> ((f64, f64), (f64, f64)) {
@@ -92,6 +112,30 @@ mod tests {
         let ((otb_lo, otb_hi), (mt_lo, mt_hi)) = diversity(&suite);
         assert!(otb_hi - otb_lo > 0.8, "OTB span {otb_lo}..{otb_hi}");
         assert!(mt_hi - mt_lo > 0.8, "MT span {mt_lo}..{mt_hi}");
+    }
+
+    #[test]
+    fn moe_suite_is_skewed_reproducible_and_a2a() {
+        let a = synthetic_moe_scenarios(7, 8);
+        let b = synthetic_moe_scenarios(7, 8);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gemm, y.gemm);
+            assert_eq!(x.skew, y.skew);
+            assert_eq!(x.skew_seed, y.skew_seed);
+        }
+        for sc in &a {
+            assert_eq!(sc.collective, crate::schedule::Collective::AllToAll);
+            assert!((0.25..1.5).contains(&sc.skew), "skew {}", sc.skew);
+            assert!(
+                sc.partition(1).imbalance() > 1.0,
+                "{}: sampled routing must be imbalanced",
+                sc.name
+            );
+        }
+        // Independent of the base suite's draws for the same seed.
+        let base = synthetic_scenarios(7, 8);
+        assert!(a.iter().zip(&base).any(|(x, y)| x.gemm != y.gemm));
     }
 
     #[test]

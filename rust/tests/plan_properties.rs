@@ -71,6 +71,109 @@ fn random_plans_validate_on_random_geometries() {
 }
 
 #[test]
+fn random_skewed_plans_validate_and_conserve_bytes() {
+    // The non-uniform traffic layer: random plans on random skewed
+    // geometries must still satisfy every structural invariant, the
+    // per-GPU shards must tile [0, M) with no overlap, and total
+    // communicated bytes must equal the baseline exchange on the SAME
+    // skewed partition (conservation — every remote byte moves exactly
+    // once whatever the routing).
+    prop::check_no_shrink(
+        "skewed-plan-invariants",
+        &Config {
+            cases: 80,
+            ..Config::default()
+        },
+        |r| {
+            let g = *r.choose(&[2usize, 3, 4, 8]);
+            let m = r.range_u64(g as u64, 4096) * r.range_u64(1, 64);
+            let n = r.range_u64(1, 2048);
+            let k = r.range_u64(1, 4096);
+            let skew = *r.choose(&[0.25f64, 0.5, 1.0, 1.5, 2.5]);
+            let seed = r.next_u64();
+            let plan = gen_plan(r, g);
+            (m, n, k, g, skew, seed, plan)
+        },
+        |&(m, n, k, g, skew, seed, plan)| {
+            let sc = Scenario::new("prop", m, n, k)
+                .with_ngpus(g)
+                .with_skew(skew, seed);
+            plan.check(g).map_err(|e| format!("{}: {e}", plan.id()))?;
+            // Partition tiles [0, M).
+            let part = sc.partition(plan.pieces);
+            let mut prev = 0u64;
+            for q in 0..g {
+                let (lo, hi) = part.shard_rows(q);
+                if lo != prev || hi < lo {
+                    return Err(format!("shard {q} [{lo},{hi}) breaks tiling at {prev}"));
+                }
+                prev = hi;
+            }
+            if prev != m {
+                return Err(format!("shards cover {prev} of {m} rows"));
+            }
+            // Lowered schedules stay structurally sound.
+            let sched = plan.lower(&sc);
+            validate(&sched)
+                .map_err(|e| format!("{} on {m}x{n}x{k}/{g} skew {skew}: {e}", plan.id()))?;
+            // Conservation on the same skewed partition.
+            let base = Plan::preset(ficco::schedule::Kind::Baseline, &sc).lower(&sc);
+            if (sched.comm_bytes() - base.comm_bytes()).abs() > 1.0 {
+                return Err(format!(
+                    "{}: comm bytes {} != baseline {} at skew {skew}",
+                    plan.id(),
+                    sched.comm_bytes(),
+                    base.comm_bytes()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn skew_zero_lowers_bitwise_equal_to_the_uniform_path() {
+    // `skew = 0` must be perfectly backward compatible: identical node
+    // structure AND identical simulated makespan, for any seed.
+    let machine = Machine::mi300x_8();
+    prop::check_no_shrink(
+        "skew-zero-identity",
+        &Config {
+            cases: 12,
+            ..Config::default()
+        },
+        |r| {
+            let m = r.range_u64(8, 64) * 1024;
+            let n = r.range_u64(1, 16) * 512;
+            let k = r.range_u64(1, 16) * 512;
+            let seed = r.next_u64();
+            let plan = gen_plan(r, 8);
+            (m, n, k, seed, plan)
+        },
+        |&(m, n, k, seed, plan)| {
+            let uniform = Scenario::new("prop", m, n, k);
+            let zeroed = uniform.clone().with_skew(0.0, seed);
+            let a = plan.lower(&uniform);
+            let b = plan.lower(&zeroed);
+            if a.nodes.len() != b.nodes.len() {
+                return Err(format!("{}: node count differs", plan.id()));
+            }
+            for (i, (x, y)) in a.nodes.iter().zip(b.nodes.iter()).enumerate() {
+                if x.gpu != y.gpu || x.slot != y.slot || x.deps != y.deps {
+                    return Err(format!("{}: node {i} placement differs", plan.id()));
+                }
+            }
+            let ma = exec::execute(&machine, &a).makespan;
+            let mb = exec::execute(&machine, &b).makespan;
+            if ma != mb {
+                return Err(format!("{}: makespan {ma} != {mb}", plan.id()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn lower_bound_never_exceeds_simulated_makespan() {
     // Soundness of the pruning bound: for random plans on realistic
     // shapes, bound ≤ simulated makespan (up to fp noise). An unsound
@@ -87,12 +190,18 @@ fn lower_bound_never_exceeds_simulated_makespan() {
             let n = r.range_u64(1, 16) * 512;
             let k = r.range_u64(1, 16) * 512;
             let mi = (r.next_u64() % 2) as usize;
+            // Half the cases exercise a skewed partition: the pruning
+            // bound must stay sound for non-uniform traffic too.
+            let skew = *r.choose(&[0.0f64, 0.0, 0.8, 1.5]);
+            let seed = r.next_u64();
             let plan = gen_plan(r, if mi == 0 { 8 } else { 4 });
-            (m, n, k, mi, plan)
+            (m, n, k, mi, skew, seed, plan)
         },
-        |&(m, n, k, mi, plan)| {
+        |&(m, n, k, mi, skew, seed, plan)| {
             let machine = &machines[mi];
-            let sc = Scenario::new("prop", m, n, k).with_ngpus(machine.ngpus());
+            let sc = Scenario::new("prop", m, n, k)
+                .with_ngpus(machine.ngpus())
+                .with_skew(skew, seed);
             let bound = search::plan_lower_bound(machine, &sc, &plan);
             let measured = exec::evaluate_plan(machine, &sc, &plan).makespan;
             if !(bound.is_finite() && bound >= 0.0) {

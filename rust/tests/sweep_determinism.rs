@@ -1,7 +1,8 @@
 //! Integration: the sweep engine must produce byte-identical ordered
 //! CSV/JSON artifacts regardless of worker count — a 2-scenario ×
-//! 2-schedule × 2-mechanism sweep run with 1 and with 4 jobs (the
-//! acceptance criterion for determinism under parallelism).
+//! 2-schedule × 2-mechanism × 2-skew sweep run with 1 and with 4 jobs
+//! (the acceptance criterion for determinism under parallelism,
+//! including expert-imbalanced cells).
 
 use ficco::explore::emit::{CsvEmitter, JsonEmitter, CSV_HEADER};
 use ficco::explore::{run, SweepSpec};
@@ -19,6 +20,10 @@ fn small_spec() -> SweepSpec {
         machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
         mechs: vec![CommMech::Dma, CommMech::Kernel],
         gpu_counts: Vec::new(),
+        // Balanced and hot-expert cells: the byte-compare must also
+        // cover non-uniform traffic.
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
     }
 }
@@ -37,7 +42,7 @@ fn render(jobs: usize) -> (String, String, Vec<usize>) {
         true
     });
     assert_eq!(report.jobs, jobs.min(spec.cells().len()));
-    assert_eq!(report.cells.len(), 4);
+    assert_eq!(report.cells.len(), 8);
     (
         String::from_utf8(csv.finish().unwrap()).unwrap(),
         String::from_utf8(json.finish().unwrap()).unwrap(),
@@ -49,8 +54,8 @@ fn render(jobs: usize) -> (String, String, Vec<usize>) {
 fn serial_and_parallel_sweeps_emit_identical_bytes() {
     let (csv1, json1, order1) = render(1);
     let (csv4, json4, order4) = render(4);
-    assert_eq!(order1, vec![0, 1, 2, 3]);
-    assert_eq!(order4, vec![0, 1, 2, 3], "parallel delivery must be reordered");
+    assert_eq!(order1, (0..8).collect::<Vec<_>>());
+    assert_eq!(order4, (0..8).collect::<Vec<_>>(), "parallel delivery must be reordered");
     assert_eq!(csv1, csv4, "CSV must be byte-identical across job counts");
     assert_eq!(json1, json4, "JSON must be byte-identical across job counts");
 }
@@ -67,10 +72,10 @@ fn repeated_runs_are_reproducible() {
 fn emitted_artifacts_are_well_formed() {
     let (csv, json, _) = render(2);
 
-    // CSV: header + (baseline + 2 kinds) per cell × 4 cells.
+    // CSV: header + (baseline + 2 kinds) per cell × 8 cells.
     let lines: Vec<&str> = csv.lines().collect();
     assert_eq!(lines[0], CSV_HEADER);
-    assert_eq!(lines.len(), 1 + 4 * 3);
+    assert_eq!(lines.len(), 1 + 8 * 3);
     let ncols = CSV_HEADER.split(',').count();
     for line in &lines[1..] {
         assert_eq!(line.split(',').count(), ncols, "{line}");
@@ -80,13 +85,17 @@ fn emitted_artifacts_are_well_formed() {
     assert!(csv.contains(",rccl,"));
     assert!(csv.contains("tiny-a,"));
     assert!(csv.contains("tiny-b,"));
+    // Both skew cells land, tagged in their own column.
+    assert!(csv.contains(",all-gather,0,"));
+    assert!(csv.contains(",all-gather,0.8,"));
 
-    // JSON: an array of 4 objects with nested schedule rows.
+    // JSON: an array of 8 objects with nested schedule rows.
     assert!(json.trim_start().starts_with('['));
     assert!(json.trim_end().ends_with(']'));
-    assert_eq!(json.matches("\"schedules\":[").count(), 4);
-    assert_eq!(json.matches("\"kind\":\"baseline\"").count(), 4);
-    assert_eq!(json.matches("\"kind\":\"uniform-fused-1D\"").count(), 4);
+    assert_eq!(json.matches("\"schedules\":[").count(), 8);
+    assert_eq!(json.matches("\"kind\":\"baseline\"").count(), 8);
+    assert_eq!(json.matches("\"kind\":\"uniform-fused-1D\"").count(), 8);
+    assert_eq!(json.matches("\"skew\":0.8").count(), 4);
 }
 
 #[test]

@@ -24,6 +24,9 @@ fn small_spec() -> SweepSpec {
         ],
         mechs: vec![CommMech::Dma, CommMech::Kernel],
         gpu_counts: Vec::new(),
+        // The byte-compare must also cover expert-imbalanced cells.
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
     }
 }
@@ -50,7 +53,7 @@ fn render(jobs: usize, beam: usize) -> (String, String, Vec<usize>) {
         json.result(r).unwrap();
         true
     });
-    assert_eq!(report.results.len(), 8);
+    assert_eq!(report.results.len(), 16);
     (
         String::from_utf8(csv.finish().unwrap()).unwrap(),
         String::from_utf8(json.finish().unwrap()).unwrap(),
@@ -62,22 +65,23 @@ fn render(jobs: usize, beam: usize) -> (String, String, Vec<usize>) {
 fn tune_artifacts_are_byte_identical_across_jobs() {
     let (csv1, json1, order1) = render(1, 4);
     let (csv4, json4, order4) = render(4, 4);
-    assert_eq!(order1, (0..8).collect::<Vec<_>>());
-    assert_eq!(order4, (0..8).collect::<Vec<_>>(), "parallel delivery must be reordered");
+    assert_eq!(order1, (0..16).collect::<Vec<_>>());
+    assert_eq!(order4, (0..16).collect::<Vec<_>>(), "parallel delivery must be reordered");
     assert_eq!(csv1, csv4, "tune CSV must be byte-identical across job counts");
     assert_eq!(json1, json4, "tune JSON must be byte-identical across job counts");
 
     // Artifact shape sanity.
     let lines: Vec<&str> = csv1.lines().collect();
     assert_eq!(lines[0], TUNE_CSV_HEADER);
-    assert_eq!(lines.len(), 1 + 8);
+    assert_eq!(lines.len(), 1 + 16);
     let ncols = TUNE_CSV_HEADER.split(',').count();
     for line in &lines[1..] {
         assert_eq!(line.split(',').count(), ncols, "{line}");
     }
     assert!(json1.trim_start().starts_with('['));
     assert!(json1.trim_end().ends_with(']'));
-    assert_eq!(json1.matches("\"best_plan\"").count(), 8);
+    assert_eq!(json1.matches("\"best_plan\"").count(), 16);
+    assert_eq!(json1.matches("\"skew\":0.8").count(), 8, "skewed cells searched");
 }
 
 #[test]
