@@ -1,13 +1,25 @@
 //! Bench: L3 hot-path microbenchmarks for EXPERIMENTS.md §Perf.
 //!
 //! Measures the simulator engine's event throughput, end-to-end
-//! scenario evaluation latency, and the schedule generator — the three
-//! L3 paths every figure and the heuristic oracle sit on.
+//! scenario evaluation latency, the schedule generator, and — the
+//! number the plan-search rewrite is judged by — **plan evaluations
+//! per second on a fixed tune cell** (g6 on mi300x-8, DMA, default
+//! space, exhaustive + pruning, cold cache every iteration).
+//!
+//! Emits a machine-readable `BENCH_hotpath.json` (override with
+//! `--out PATH`) so the perf trajectory has a recorded baseline;
+//! `--quick` shrinks iteration counts for the CI smoke job. The
+//! tune-cell metric is comparable across builds: the candidate set
+//! and evaluated/pruned counts are deterministic, only the wall time
+//! moves.
 
 use ficco::hw::Machine;
+use ficco::schedule::exec::Evaluator;
 use ficco::schedule::{exec, generate::generate, Kind, Scenario};
+use ficco::search::{search_in, EvalCache, SearchCfg, SpaceSpec};
 use ficco::sim::{Engine, TaskSpec};
 use ficco::util::stats::Accum;
+use std::io::Write;
 use std::time::Instant;
 
 fn bench<F: FnMut() -> usize>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -47,23 +59,41 @@ fn sim_engine_events(n_tasks: usize) -> usize {
 }
 
 fn main() {
-    println!("== perf: L3 hot paths ==");
-    bench("sim engine: 10k contending tasks", 5, || {
-        sim_engine_events(10_000)
-    });
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+
+    println!("== perf: L3 hot paths{} ==", if quick { " (quick)" } else { "" });
+    let engine_tasks = if quick { 2_000 } else { 10_000 };
+    let engine_iters = if quick { 2 } else { 5 };
+    let engine_median = bench(
+        &format!("sim engine: {engine_tasks} contending tasks"),
+        engine_iters,
+        || sim_engine_events(engine_tasks),
+    );
+    let engine_events = sim_engine_events(engine_tasks);
+    let engine_events_per_sec = engine_events as f64 / engine_median.max(1e-12);
 
     let sc = Scenario::new("g6-like", 262144, 2048, 8192);
-    bench("schedule generate: all 6 kinds", 20, || {
+    bench("schedule generate: all 6 kinds", if quick { 5 } else { 20 }, || {
         Kind::ALL.iter().map(|&k| generate(k, &sc).nodes.len()).sum()
     });
 
     let machine = Machine::mi300x_8();
-    bench("scenario eval: 6 schedules simulated", 5, || {
-        let ev = exec::ScenarioEval::run(&machine, &sc, &Kind::ALL);
-        ev.results.iter().map(|r| r.n_tasks).sum()
-    });
+    bench(
+        "scenario eval: 6 schedules simulated",
+        if quick { 2 } else { 5 },
+        || {
+            let ev = exec::ScenarioEval::run(&machine, &sc, &Kind::ALL);
+            ev.results.iter().map(|r| r.n_tasks).sum()
+        },
+    );
 
-    bench("heuristic pick (static)", 50, || {
+    bench("heuristic pick (static)", if quick { 10 } else { 50 }, || {
         ficco::workloads::table1()
             .iter()
             .map(|r| {
@@ -72,4 +102,71 @@ fn main() {
             })
             .sum()
     });
+
+    // The headline metric: plan evaluations/sec searching one fixed
+    // tune cell with a cold cache per iteration (so every non-pruned
+    // candidate is lowered, validated, loaded, and simulated) through
+    // one reusable evaluator arena — exactly the tune worker's shape.
+    let tune_sc = ficco::workloads::by_name("g6").expect("g6 in the Table I suite");
+    let tune_mech = tune_sc.mech.name();
+    let space = SpaceSpec::default_for(&tune_sc);
+    let space_size = space.plans(&tune_sc).len();
+    let cfg = SearchCfg {
+        beam: 0,
+        prune: true,
+    };
+    let mut ev = Evaluator::new();
+    let warm = search_in(
+        &mut ev,
+        "mi300x-8",
+        &machine,
+        &tune_sc,
+        &space,
+        &cfg,
+        &EvalCache::new(),
+    );
+    let tune_iters = if quick { 2 } else { 5 };
+    let mut acc = Accum::new();
+    for _ in 0..tune_iters {
+        let t0 = Instant::now();
+        let out = search_in(
+            &mut ev,
+            "mi300x-8",
+            &machine,
+            &tune_sc,
+            &space,
+            &cfg,
+            &EvalCache::new(),
+        );
+        acc.push(t0.elapsed().as_secs_f64());
+        assert_eq!(out.evaluated, warm.evaluated, "tune cell must be deterministic");
+        assert_eq!(out.pruned, warm.pruned);
+    }
+    let tune_median = acc.median();
+    let evals_per_sec = warm.evaluated as f64 / tune_median.max(1e-12);
+    println!(
+        "{:<44} median {:>10}  ({} evals, {} pruned of {} → {:.1} evals/s)",
+        "tune cell: g6 × mi300x-8 exhaustive+prune",
+        ficco::util::human_time(tune_median),
+        warm.evaluated,
+        warm.pruned,
+        space_size,
+        evals_per_sec,
+    );
+
+    // Machine-readable trajectory record.
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath\",\n  \"quick\": {quick},\n  \"engine\": {{\n    \
+         \"tasks\": {engine_tasks},\n    \"events\": {engine_events},\n    \
+         \"events_per_sec\": {engine_events_per_sec:.1}\n  }},\n  \"tune_cell\": {{\n    \
+         \"machine\": \"mi300x-8\",\n    \"scenario\": \"g6\",\n    \"mech\": \"{tune_mech}\",\n    \
+         \"beam\": 0,\n    \"prune\": true,\n    \"space_size\": {space_size},\n    \
+         \"evaluated\": {evaluated},\n    \"pruned\": {pruned},\n    \
+         \"median_seconds\": {tune_median:.6},\n    \"evals_per_sec\": {evals_per_sec:.1}\n  }}\n}}\n",
+        evaluated = warm.evaluated,
+        pruned = warm.pruned,
+    );
+    let mut f = std::fs::File::create(&out_path).expect("create bench artifact");
+    f.write_all(json.as_bytes()).expect("write bench artifact");
+    println!("  -> {out_path}");
 }

@@ -33,7 +33,7 @@ pub mod emit;
 use std::time::Instant;
 
 use crate::hw::Machine;
-use crate::schedule::exec::ScenarioEval;
+use crate::schedule::exec::{Evaluator, ScenarioEval};
 use crate::schedule::{Kind, Scenario};
 use crate::sim::CommMech;
 use crate::workloads;
@@ -427,14 +427,23 @@ pub struct BestPlan {
     pub speedup: f64,
 }
 
-/// Evaluate one cell (generate → validate → simulate each kind).
+/// Evaluate one cell (generate → validate → simulate each kind) —
+/// one-shot wrapper over [`eval_cell_in`].
 pub fn eval_cell(cell: &Cell) -> CellResult {
+    eval_cell_in(&mut Evaluator::new(), cell)
+}
+
+/// Evaluate one cell through a caller-owned reusable
+/// [`Evaluator`] arena (the sweep workers pass one per worker
+/// thread, so consecutive cells on a worker share the simulator
+/// skeleton and its warmed scratch buffers).
+pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
     let t0 = Instant::now();
     let machine = &cell.machine;
     let sc = &cell.scenario;
     let pick = crate::heuristics::pick(machine, sc).pick;
-    let ev = ScenarioEval::run(machine, sc, &cell.kinds);
-    let oracle = ev.best_ficco().map(|(k, _)| k);
+    let scev = ScenarioEval::run_in(ev, machine, sc, &cell.kinds);
+    let oracle = scev.best_ficco().map(|(k, _)| k);
     // Optional plan-space search. The cache is per-cell (the emitted
     // best-plan values are cache-independent either way) but seeded
     // with the fixed-kind rows just measured: preset plans lower to
@@ -443,23 +452,24 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
     let best_plan = cell.search.as_ref().map(|cfg| {
         let space = crate::search::SpaceSpec::default_for(sc);
         let cache = crate::search::EvalCache::new();
-        for r in &ev.results {
+        for r in &scev.results {
             let preset = crate::plan::Plan::preset(r.kind, sc);
             cache.insert(&cell.machine_name, sc, &preset, r.makespan);
         }
-        let out = crate::search::search(&cell.machine_name, machine, sc, &space, cfg, &cache);
+        let out =
+            crate::search::search_in(ev, &cell.machine_name, machine, sc, &space, cfg, &cache);
         BestPlan {
             id: out.best.plan.id(),
             speedup: out.best_speedup(),
         }
     });
-    let rows = ev
+    let rows = scev
         .results
         .iter()
         .map(|r| KindRow {
             kind: r.kind,
             makespan: r.makespan,
-            speedup: ev.baseline / r.makespan,
+            speedup: scev.baseline / r.makespan,
             gemm_leg: r.gemm_leg,
             comm_leg: r.comm_leg,
             gemm_cil: r.gemm_cil,
@@ -483,7 +493,7 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
         k: sc.gemm.k,
         pick,
         oracle,
-        ideal_speedup: ev.ideal_speedup(),
+        ideal_speedup: scev.ideal_speedup(),
         rows,
         best_plan,
         eval_seconds: t0.elapsed().as_secs_f64(),
@@ -512,7 +522,8 @@ impl SweepReport {
 }
 
 /// Run the sweep on `jobs` worker threads of the ordered pool
-/// ([`crate::util::pool::run_ordered`]). `on_cell` is invoked once
+/// ([`crate::util::pool::run_ordered_stateful`], one reusable
+/// evaluator arena per worker). `on_cell` is invoked once
 /// per cell *in deterministic cell order* as soon as the ordered
 /// prefix is complete — out-of-order completions are buffered — so
 /// incremental emitters produce identical bytes for any `jobs`.
@@ -529,10 +540,14 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
 ) -> SweepReport {
     let cells = spec.cells();
     let t0 = Instant::now();
-    let pool_run = crate::util::pool::run_ordered(
+    // One reusable evaluator arena per worker: cells on a worker
+    // share the simulator skeleton and scratch (speed only — every
+    // cell's numbers are a pure function of the cell).
+    let pool_run = crate::util::pool::run_ordered_stateful(
         &cells,
         jobs,
-        |_, cell| eval_cell(cell),
+        Evaluator::new,
+        |ev, _, cell| eval_cell_in(ev, cell),
         |_, result| on_cell(result),
     );
     SweepReport {

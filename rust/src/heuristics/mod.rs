@@ -206,13 +206,35 @@ pub fn score_searched(
     cfg: &crate::search::SearchCfg,
     cache: &crate::search::EvalCache,
 ) -> Scored {
+    score_searched_in(
+        &mut crate::schedule::exec::Evaluator::new(),
+        machine,
+        sc,
+        threshold_scale,
+        cfg,
+        cache,
+    )
+}
+
+/// As [`score_searched`], through a caller-owned reusable
+/// [`crate::schedule::exec::Evaluator`] arena — suite scorers pass
+/// one across all scenarios so candidate simulation reuses the
+/// machine skeleton and scratch buffers.
+fn score_searched_in(
+    ev: &mut crate::schedule::exec::Evaluator,
+    machine: &Machine,
+    sc: &Scenario,
+    threshold_scale: f64,
+    cfg: &crate::search::SearchCfg,
+    cache: &crate::search::EvalCache,
+) -> Scored {
     let mut scored = score(machine, sc, threshold_scale);
     let space = crate::search::SpaceSpec::default_for(sc);
     // Key by a machine fingerprint, not a constant: a cache shared
     // across machines must never serve one machine's makespans for
     // another's.
     let machine_name = crate::search::machine_key(machine);
-    let out = crate::search::search(&machine_name, machine, sc, &space, cfg, cache);
+    let out = crate::search::search_in(ev, &machine_name, machine, sc, &space, cfg, cache);
     scored.searched_speedup = Some(out.best_speedup());
     scored.searched_plan = Some(out.best.plan.id());
     scored
@@ -253,11 +275,13 @@ pub fn searched_accuracy(
         return (1.0, 0.0, Vec::new());
     }
     // One cache across the whole suite: synthetic suites repeat GEMM
-    // shapes often enough that cross-scenario memoization pays.
+    // shapes often enough that cross-scenario memoization pays. One
+    // evaluator arena likewise — every scenario shares the machine.
     let cache = crate::search::EvalCache::new();
+    let mut ev = crate::schedule::exec::Evaluator::new();
     let scored: Vec<Scored> = suite
         .iter()
-        .map(|sc| score_searched(machine, sc, threshold_scale, cfg, &cache))
+        .map(|sc| score_searched_in(&mut ev, machine, sc, threshold_scale, cfg, &cache))
         .collect();
     let hits = scored.iter().filter(|s| s.hit()).count();
     let mean_searched_loss = scored

@@ -29,7 +29,7 @@ impl DType {
 
 /// GPU hardware parameters. Defaults model the AMD Instinct MI300X as
 /// described in the paper's §IV-B methodology (public spec numbers).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
     pub name: String,
     /// Compute units (MI300X: 304). The simulator's compute resource.

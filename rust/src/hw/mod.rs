@@ -25,7 +25,10 @@ pub use topology::{Topology, TopologyKind};
 use crate::config::Doc;
 
 /// A machine = one GPU spec replicated over a topology.
-#[derive(Debug, Clone)]
+/// `PartialEq` lets a reusable evaluator detect whether its cached
+/// resource/stream skeleton still matches the machine it is asked to
+/// simulate (all fields are plain values, so equality is exact).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Machine {
     pub gpu: GpuSpec,
     pub topo: Topology,

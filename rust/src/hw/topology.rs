@@ -40,7 +40,7 @@ impl TopologyKind {
 }
 
 /// Network topology over `ngpus` GPUs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub kind: TopologyKind,
     pub ngpus: usize,
@@ -151,15 +151,28 @@ impl Topology {
     /// src→dst transfer. Returns one or two indices into the link
     /// resource array (switch transfers consume egress *and* ingress).
     pub fn link_indices(&self, src: usize, dst: usize) -> Vec<usize> {
+        let (a, b) = self.link_pair(src, dst);
+        match b {
+            Some(b) => vec![a, b],
+            None => vec![a],
+        }
+    }
+
+    /// Allocation-free form of [`Topology::link_indices`]: every
+    /// topology constrains a transfer by one or two link resources,
+    /// returned as `(first, second)`. The task loader building
+    /// hundreds of transfers per candidate schedule uses this to
+    /// avoid a `Vec` per transfer.
+    pub fn link_pair(&self, src: usize, dst: usize) -> (usize, Option<usize>) {
         assert!(self.connected(src, dst), "no link {src}→{dst}");
         match self.kind {
             TopologyKind::FullMesh => {
                 // Dense index over ordered pairs, skipping the diagonal.
                 let col = if dst > src { dst - 1 } else { dst };
-                vec![src * (self.ngpus - 1) + col]
+                (src * (self.ngpus - 1) + col, None)
             }
-            TopologyKind::Switch => vec![2 * src, 2 * dst + 1],
-            TopologyKind::Ring => vec![src],
+            TopologyKind::Switch => (2 * src, Some(2 * dst + 1)),
+            TopologyKind::Ring => (src, None),
         }
     }
 

@@ -2,11 +2,22 @@
 //! it. This is where DIL (via `cost::gemm` isolated times) and CIL
 //! (via resource sharing in `sim`) combine into end-to-end makespans —
 //! the quantity behind Figs 12b, 13, and 14.
+//!
+//! The module is organized around the reusable [`Evaluator`]: one
+//! evaluator owns a [`ClusterSim`] arena (resources, streams, and the
+//! engine's scratch buffers) that is *reset*, not rebuilt, between
+//! candidate schedules — the plan search simulates hundreds of
+//! candidates per (machine, scenario) cell, and rebuilding the
+//! machine skeleton and reallocating the task graph dominated its
+//! wall-clock before this existed (see `DESIGN.md` §6). The one-shot
+//! free functions ([`execute`], [`evaluate`], [`evaluate_plan`])
+//! remain as thin wrappers that spin up a throwaway evaluator.
 
 use super::{Kind, OpKind, Scenario, Schedule};
 use crate::cost::gemm::GemmCost;
 use crate::hw::Machine;
-use crate::sim::{ClusterSim, CommMech, TaskId};
+use crate::plan::Plan;
+use crate::sim::{ClusterSim, CommMech, Label, LeanReport, SimError, TaskId};
 
 /// Measured execution of one schedule.
 #[derive(Debug, Clone)]
@@ -41,113 +52,207 @@ fn sched_mech(sched: &Schedule) -> CommMech {
     }
 }
 
-/// Simulator tasks of one schedule plus the bookkeeping the metrics
-/// need (which tasks are GEMMs/transfers, isolated GEMM time per GPU).
-struct Loaded {
-    sim: ClusterSim,
+/// Reusable schedule-evaluation arena. Holds a [`ClusterSim`] bound
+/// to the last machine simulated (rebuilt only when the machine
+/// changes) plus the per-load bookkeeping the metrics need — all
+/// buffers persist across loads, so evaluating candidate after
+/// candidate allocates only while capacities warm up.
+///
+/// Contract (`DESIGN.md` §6): a load fully overwrites every piece of
+/// per-candidate state; nothing measured about candidate *k* depends
+/// on candidates *1..k-1*, which is why threading one evaluator
+/// through a search cannot change any reported number.
+pub struct Evaluator {
+    sim: Option<ClusterSim>,
     gemm_tasks: Vec<TaskId>,
     xfer_tasks: Vec<TaskId>,
     gemm_iso_per_gpu: Vec<f64>,
+    task_of: Vec<TaskId>,
+    dep_scratch: Vec<TaskId>,
 }
 
-/// Build the simulator task graph for `sched` without running it —
-/// shared by [`execute`] and the analytic [`makespan_lower_bound`].
-fn load(machine: &Machine, sched: &Schedule) -> Loaded {
-    let mut sim = ClusterSim::new(machine.clone());
-    let gcost = GemmCost::new(&machine.gpu);
-    let mech = sched_mech(sched);
-    let dtype = sched.scenario.dtype();
+impl Evaluator {
+    /// An unbound evaluator; the first load binds it to a machine.
+    pub fn new() -> Evaluator {
+        Evaluator {
+            sim: None,
+            gemm_tasks: Vec::new(),
+            xfer_tasks: Vec::new(),
+            gemm_iso_per_gpu: Vec::new(),
+            task_of: Vec::new(),
+            dep_scratch: Vec::new(),
+        }
+    }
 
-    let mut task_of: Vec<TaskId> = Vec::with_capacity(sched.nodes.len());
-    let mut gemm_tasks: Vec<TaskId> = Vec::new();
-    let mut xfer_tasks: Vec<TaskId> = Vec::new();
-    let mut gemm_iso_per_gpu = vec![0.0f64; machine.ngpus()];
-
-    for node in &sched.nodes {
-        let deps: Vec<TaskId> = node.deps.iter().map(|&d| task_of[d]).collect();
-        let tid = match &node.kind {
-            OpKind::Gemm { shape, .. } => {
-                let t = gcost.time(shape);
-                gemm_iso_per_gpu[node.gpu] += t;
-                let id = sim.gemm_task(
-                    node.gpu,
-                    node.label.clone(),
-                    t,
-                    shape.bytes(),
-                    gcost.cus_used(shape),
-                    &deps,
-                );
-                gemm_tasks.push(id);
-                id
-            }
-            OpKind::Xfer { src, region } => {
-                let id = sim.transfer_task(
-                    *src,
-                    node.gpu,
-                    node.slot,
-                    node.label.clone(),
-                    region.bytes(dtype),
-                    mech,
-                    &deps,
-                );
-                xfer_tasks.push(id);
-                id
-            }
-            OpKind::Gather { bytes } => sim.local_copy_task(
-                node.gpu,
-                node.label.clone(),
-                *bytes,
-                CommMech::Kernel,
-                &deps,
-            ),
-            OpKind::Scatter { bytes } => sim.local_copy_task(
-                node.gpu,
-                node.label.clone(),
-                *bytes,
-                CommMech::Kernel,
-                &deps,
-            ),
+    /// Build the simulator task graph for `sched` into the (reset)
+    /// arena without running it.
+    fn load(&mut self, machine: &Machine, sched: &Schedule) {
+        let rebuild = match &self.sim {
+            Some(s) => s.machine != *machine,
+            None => true,
         };
-        task_of.push(tid);
+        if rebuild {
+            self.sim = Some(ClusterSim::new(machine.clone()));
+        }
+        let sim = self.sim.as_mut().expect("sim bound above");
+        sim.reset();
+
+        let ngpus = machine.ngpus();
+        self.gemm_tasks.clear();
+        self.xfer_tasks.clear();
+        self.gemm_iso_per_gpu.clear();
+        self.gemm_iso_per_gpu.resize(ngpus, 0.0);
+        self.task_of.clear();
+
+        let gcost = GemmCost::new(&machine.gpu);
+        let mech = sched_mech(sched);
+        let dtype = sched.scenario.dtype();
+        // Tasks carry the schedule's node label only when tracing is
+        // on (it is rendered nowhere else); the allocation-free
+        // `n<index>` label otherwise — rerun with FICCO_SIM_TRACE=1
+        // for named traces.
+        let trace = crate::sim::trace_enabled();
+
+        for (i, node) in sched.nodes.iter().enumerate() {
+            self.dep_scratch.clear();
+            for &d in &node.deps {
+                self.dep_scratch.push(self.task_of[d]);
+            }
+            let label = if trace {
+                Label::Owned(node.label.clone())
+            } else {
+                Label::indexed("n", i)
+            };
+            let tid = match &node.kind {
+                OpKind::Gemm { shape, .. } => {
+                    let t = gcost.time(shape);
+                    self.gemm_iso_per_gpu[node.gpu] += t;
+                    let id = sim.gemm_task(
+                        node.gpu,
+                        label,
+                        t,
+                        shape.bytes(),
+                        gcost.cus_used(shape),
+                        &self.dep_scratch,
+                    );
+                    self.gemm_tasks.push(id);
+                    id
+                }
+                OpKind::Xfer { src, region } => {
+                    let id = sim.transfer_task(
+                        *src,
+                        node.gpu,
+                        node.slot,
+                        label,
+                        region.bytes(dtype),
+                        mech,
+                        &self.dep_scratch,
+                    );
+                    self.xfer_tasks.push(id);
+                    id
+                }
+                OpKind::Gather { bytes } => sim.local_copy_task(
+                    node.gpu,
+                    label,
+                    *bytes,
+                    CommMech::Kernel,
+                    &self.dep_scratch,
+                ),
+                OpKind::Scatter { bytes } => sim.local_copy_task(
+                    node.gpu,
+                    label,
+                    *bytes,
+                    CommMech::Kernel,
+                    &self.dep_scratch,
+                ),
+            };
+            self.task_of.push(tid);
+        }
     }
 
-    Loaded {
-        sim,
-        gemm_tasks,
-        xfer_tasks,
-        gemm_iso_per_gpu,
+    /// Analytic lower bound of the currently loaded graph.
+    fn loaded_bound(&self) -> f64 {
+        self.sim.as_ref().expect("graph loaded").engine.lower_bound()
+    }
+
+    /// Execute `sched` on `machine` with full per-task accounting;
+    /// panics on simulator livelock (which would indicate a malformed
+    /// schedule — run `validate` first).
+    pub fn execute(&mut self, machine: &Machine, sched: &Schedule) -> ExecResult {
+        self.load(machine, sched);
+        let report = {
+            let sim = self.sim.as_mut().expect("graph loaded");
+            sim.engine.run_full().unwrap_or_else(|e| {
+                panic!("simulating {} for {}: {e}", sched.kind.name(), sched.scenario.name)
+            })
+        };
+        let gemm_cil = mean_slowdown(&report, &self.gemm_tasks);
+        let comm_cil = mean_slowdown(&report, &self.xfer_tasks);
+        let gemm_leg = self.gemm_iso_per_gpu.iter().cloned().fold(0.0, f64::max);
+        let comm_leg = comm_leg_isolated(machine, &sched.scenario, sched.kind, sched_mech(sched));
+        ExecResult {
+            kind: sched.kind,
+            makespan: report.makespan,
+            gemm_leg,
+            comm_leg,
+            gemm_cil,
+            comm_cil,
+            n_tasks: sched.nodes.len(),
+            sim_events: report.events,
+        }
+    }
+
+    /// Lower → validate → load `plan`'s task graph without computing
+    /// anything about it.
+    fn load_plan_graph(&mut self, machine: &Machine, sc: &Scenario, plan: &Plan) {
+        let sched = crate::plan::lower(plan, sc);
+        super::validate::validate(&sched)
+            .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
+        self.load(machine, &sched);
+    }
+
+    /// Lower → validate → load `plan`'s task graph; returns the
+    /// analytic makespan lower bound of the loaded graph (orders of
+    /// magnitude cheaper than simulating). Follow with
+    /// [`Evaluator::run_loaded_lean`] to simulate the same graph —
+    /// the search's bound-then-maybe-simulate path builds it once.
+    pub fn load_plan(&mut self, machine: &Machine, sc: &Scenario, plan: &Plan) -> f64 {
+        self.load_plan_graph(machine, sc, plan);
+        self.loaded_bound()
+    }
+
+    /// Makespan-only simulation of the most recently loaded graph
+    /// (see [`Engine::run_lean`](crate::sim::Engine::run_lean) — the
+    /// makespan is bit-identical to the full run's).
+    pub fn run_loaded_lean(&mut self) -> Result<LeanReport, SimError> {
+        let sim = self.sim.as_mut().expect("graph loaded");
+        sim.engine.run_lean()
+    }
+
+    /// Simulated makespan of `plan` on (machine, scenario): lower →
+    /// validate → load → lean run, with no lower-bound computation
+    /// (callers that want the bound use [`Evaluator::load_plan`]).
+    /// The workhorse of the search hot path; bit-identical to
+    /// `evaluate_plan(..).makespan`.
+    pub fn plan_makespan(&mut self, machine: &Machine, sc: &Scenario, plan: &Plan) -> f64 {
+        self.load_plan_graph(machine, sc, plan);
+        self.run_loaded_lean()
+            .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name))
+            .makespan
     }
 }
 
-/// Run an already-loaded task graph and assemble the metrics.
-fn measure(machine: &Machine, sched: &Schedule, loaded: Loaded) -> ExecResult {
-    let n_tasks = sched.nodes.len();
-    let report = loaded.sim.run().unwrap_or_else(|e| {
-        panic!("simulating {} for {}: {e}", sched.kind.name(), sched.scenario.name)
-    });
-
-    let gemm_cil = mean_slowdown(&report, &loaded.gemm_tasks);
-    let comm_cil = mean_slowdown(&report, &loaded.xfer_tasks);
-    let gemm_leg = loaded.gemm_iso_per_gpu.iter().cloned().fold(0.0, f64::max);
-    let comm_leg = comm_leg_isolated(machine, &sched.scenario, sched.kind, sched_mech(sched));
-
-    ExecResult {
-        kind: sched.kind,
-        makespan: report.makespan,
-        gemm_leg,
-        comm_leg,
-        gemm_cil,
-        comm_cil,
-        n_tasks,
-        sim_events: report.events,
+impl Default for Evaluator {
+    fn default() -> Self {
+        Evaluator::new()
     }
 }
 
-/// Execute `sched` on `machine`; panics on simulator livelock (which
-/// would indicate a malformed schedule — run `validate` first).
+/// Execute `sched` on `machine` (one-shot wrapper over a throwaway
+/// [`Evaluator`]); panics on simulator livelock (which would indicate
+/// a malformed schedule — run `validate` first).
 pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
-    let loaded = load(machine, sched);
-    measure(machine, sched, loaded)
+    Evaluator::new().execute(machine, sched)
 }
 
 /// Analytic lower bound on the simulated makespan of `sched`: the
@@ -157,7 +262,9 @@ pub fn execute(machine: &Machine, sched: &Schedule) -> ExecResult {
 /// search subsystem uses it to prune plans whose bound already
 /// exceeds the incumbent.
 pub fn makespan_lower_bound(machine: &Machine, sched: &Schedule) -> f64 {
-    load(machine, sched).sim.engine.lower_bound()
+    let mut ev = Evaluator::new();
+    ev.load(machine, sched);
+    ev.loaded_bound()
 }
 
 fn mean_slowdown(report: &crate::sim::Report, tasks: &[TaskId]) -> f64 {
@@ -192,60 +299,33 @@ fn comm_leg_isolated(machine: &Machine, sc: &Scenario, kind: Kind, mech: CommMec
     }
 }
 
-/// Evaluate one scenario under one schedule kind (generate → validate
-/// → simulate).
-pub fn evaluate(machine: &Machine, sc: &Scenario, kind: Kind) -> ExecResult {
+/// Evaluate one scenario under one schedule kind through a reusable
+/// evaluator (generate → validate → simulate).
+pub fn evaluate_in(
+    ev: &mut Evaluator,
+    machine: &Machine,
+    sc: &Scenario,
+    kind: Kind,
+) -> ExecResult {
     let sched = super::generate::generate(kind, sc);
     super::validate::validate(&sched)
         .unwrap_or_else(|e| panic!("{} for {}: {e}", kind.name(), sc.name));
-    execute(machine, &sched)
+    ev.execute(machine, &sched)
+}
+
+/// Evaluate one scenario under one schedule kind (generate → validate
+/// → simulate).
+pub fn evaluate(machine: &Machine, sc: &Scenario, kind: Kind) -> ExecResult {
+    evaluate_in(&mut Evaluator::new(), machine, sc, kind)
 }
 
 /// Evaluate one scenario under an arbitrary plan-space point (lower →
-/// validate → simulate).
+/// validate → simulate, full accounting).
 pub fn evaluate_plan(machine: &Machine, sc: &Scenario, plan: &crate::plan::Plan) -> ExecResult {
-    prepare_plan(machine, sc, plan).run()
-}
-
-/// A lowered, validated, loaded-but-not-yet-simulated plan evaluation:
-/// the task graph is built exactly once and serves both the analytic
-/// lower bound (cheap) and, if the bound does not rule the plan out,
-/// the full simulation — so search pruning never constructs the graph
-/// twice.
-pub struct PreparedEval<'m> {
-    machine: &'m Machine,
-    sched: Schedule,
-    loaded: Loaded,
-}
-
-impl<'m> PreparedEval<'m> {
-    /// Analytic lower bound of the prepared graph (no simulation).
-    pub fn lower_bound(&self) -> f64 {
-        self.loaded.sim.engine.lower_bound()
-    }
-
-    /// Simulate the prepared graph.
-    pub fn run(self) -> ExecResult {
-        measure(self.machine, &self.sched, self.loaded)
-    }
-}
-
-/// Lower → validate → load a plan's task graph, returning the
-/// two-phase handle ([`PreparedEval`]).
-pub fn prepare_plan<'m>(
-    machine: &'m Machine,
-    sc: &Scenario,
-    plan: &crate::plan::Plan,
-) -> PreparedEval<'m> {
     let sched = crate::plan::lower(plan, sc);
     super::validate::validate(&sched)
         .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
-    let loaded = load(machine, &sched);
-    PreparedEval {
-        machine,
-        sched,
-        loaded,
-    }
+    execute(machine, &sched)
 }
 
 /// Scenario-level summary across all schedule kinds (the per-row data
@@ -262,13 +342,28 @@ pub struct ScenarioEval {
 
 impl ScenarioEval {
     pub fn run(machine: &Machine, sc: &Scenario, kinds: &[Kind]) -> ScenarioEval {
-        let results: Vec<ExecResult> = kinds.iter().map(|&k| evaluate(machine, sc, k)).collect();
+        ScenarioEval::run_in(&mut Evaluator::new(), machine, sc, kinds)
+    }
+
+    /// As [`ScenarioEval::run`], through a caller-owned reusable
+    /// [`Evaluator`] (one arena across all kinds — and across cells,
+    /// when the caller is a sweep worker).
+    pub fn run_in(
+        ev: &mut Evaluator,
+        machine: &Machine,
+        sc: &Scenario,
+        kinds: &[Kind],
+    ) -> ScenarioEval {
+        let results: Vec<ExecResult> = kinds
+            .iter()
+            .map(|&k| evaluate_in(ev, machine, sc, k))
+            .collect();
         // The serial reference is always measured, even when the
         // baseline kind itself is filtered out of `kinds` (speedups
         // need it); when it *was* requested, reuse that measurement.
         let baseline = match results.iter().find(|r| r.kind == Kind::Baseline) {
             Some(r) => r.makespan,
-            None => evaluate(machine, sc, Kind::Baseline).makespan,
+            None => evaluate_in(ev, machine, sc, Kind::Baseline).makespan,
         };
         // Perfect-overlap bound from the closed-form legs, computed
         // unconditionally: the compute leg is the full per-GPU GEMM in
@@ -403,6 +498,58 @@ mod tests {
             assert!(r.makespan > 0.0, "{kind:?}");
             assert!(r.gemm_cil >= 0.999, "{kind:?} gemm cil {}", r.gemm_cil);
         }
+    }
+
+    #[test]
+    fn reused_evaluator_reports_identical_results() {
+        // One evaluator across all kinds (and across machines) must
+        // report bit-identical makespans and CILs to fresh one-shot
+        // evaluations — the evaluator reuse contract of DESIGN.md §6.
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        for kind in Kind::ALL {
+            let reused = evaluate_in(&mut ev, &m, &sc, kind);
+            let fresh = evaluate(&m, &sc, kind);
+            assert_eq!(reused.makespan.to_bits(), fresh.makespan.to_bits(), "{kind:?}");
+            assert_eq!(reused.sim_events, fresh.sim_events, "{kind:?}");
+            assert_eq!(reused.gemm_cil.to_bits(), fresh.gemm_cil.to_bits(), "{kind:?}");
+            assert_eq!(reused.comm_cil.to_bits(), fresh.comm_cil.to_bits(), "{kind:?}");
+        }
+        // Rebinding to a different machine mid-stream is safe too.
+        let m2 = Machine::pcie_gen4_4();
+        let sc2 = Scenario::new("small4", 4096, 512, 1024).with_ngpus(4);
+        let reused = evaluate_in(&mut ev, &m2, &sc2, Kind::UniformFused1D);
+        let fresh = evaluate(&m2, &sc2, Kind::UniformFused1D);
+        assert_eq!(reused.makespan.to_bits(), fresh.makespan.to_bits());
+        // And back.
+        let again = evaluate_in(&mut ev, &m, &sc, Kind::Baseline);
+        assert_eq!(again.makespan.to_bits(), evaluate(&m, &sc, Kind::Baseline).makespan.to_bits());
+    }
+
+    #[test]
+    fn lean_plan_path_matches_full_evaluation() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        for kind in Kind::ALL {
+            let plan = Plan::preset(kind, &sc);
+            let lean = ev.plan_makespan(&m, &sc, &plan);
+            let full = evaluate_plan(&m, &sc, &plan).makespan;
+            assert_eq!(lean.to_bits(), full.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn load_plan_bound_never_exceeds_lean_makespan() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let bound = ev.load_plan(&m, &sc, &plan);
+        let makespan = ev.run_loaded_lean().expect("loaded").makespan;
+        assert!(bound <= makespan * (1.0 + 1e-9), "bound {bound} > {makespan}");
+        assert_eq!(bound.to_bits(), makespan_lower_bound(&m, &plan.lower(&sc)).to_bits());
     }
 
     #[test]

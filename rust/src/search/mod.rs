@@ -15,17 +15,22 @@
 //!   local search over single-knob mutations. Candidates whose
 //!   analytic lower bound ([`crate::schedule::exec::makespan_lower_bound`])
 //!   already exceeds the incumbent makespan are pruned without
-//!   simulating.
+//!   simulating. All simulation goes through a reusable
+//!   [`exec::Evaluator`] arena ([`search_in`]) — candidates share the
+//!   machine's simulator skeleton and scratch buffers instead of
+//!   rebuilding them, and run in the engine's makespan-only lean mode.
 //! - [`EvalCache`] — memoized plan evaluations keyed by
-//!   (machine, scenario shape, plan). The simulated makespan is a
-//!   pure function of that key, so sharing a cache across cells (or
-//!   runs) never changes results, only skips work.
+//!   (machine, scenario shape, plan), sharded so concurrently
+//!   searched cells do not serialize on one lock. The simulated
+//!   makespan is a pure function of the key, so sharing a cache
+//!   across cells (or runs) never changes results, only skips work.
 //! - [`tune`] — the `ficco tune` driver: (machine × mech × GPU-count
 //!   × scenario) cells searched concurrently on the deterministic
-//!   ordered worker pool ([`crate::util::pool`]), with byte-stable
-//!   artifacts via [`emit`].
+//!   ordered worker pool ([`crate::util::pool`]) with one evaluator
+//!   arena per worker, and byte-stable artifacts via [`emit`].
 //!
-//! See `DESIGN.md` §2–3 for the space semantics and search contract.
+//! See `DESIGN.md` §2–3 for the space semantics and search contract,
+//! §6 for the evaluator/scratch contract.
 
 pub mod emit;
 
@@ -37,7 +42,8 @@ use std::time::Instant;
 use crate::explore::{Cell, SweepSpec};
 use crate::hw::{DType, Machine};
 use crate::plan::{CommShape, Plan};
-use crate::schedule::{exec, Kind, Scenario};
+use crate::schedule::exec::Evaluator;
+use crate::schedule::{Kind, Scenario};
 use crate::sim::CommMech;
 
 /// Search strategy configuration.
@@ -98,10 +104,13 @@ impl SpaceSpec {
     }
 
     /// All valid plans of this space for `sc`, deterministic order,
-    /// duplicates removed.
+    /// duplicates removed (hash-set membership — the emission order
+    /// is first occurrence, exactly as the old `O(n²)` scan-dedup
+    /// emitted it).
     pub fn plans(&self, sc: &Scenario) -> Vec<Plan> {
         let n = sc.ngpus;
         let mut out: Vec<Plan> = Vec::new();
+        let mut seen: HashSet<Plan> = HashSet::new();
         for &shape in &self.shapes {
             for &pieces in &self.pieces {
                 for &fused in &self.fused {
@@ -116,7 +125,7 @@ impl SpaceSpec {
                                     mech,
                                     slots,
                                 };
-                                if p.check(n).is_ok() && !out.contains(&p) {
+                                if p.check(n).is_ok() && seen.insert(p) {
                                     out.push(p);
                                 }
                             }
@@ -199,14 +208,21 @@ pub fn machine_key(machine: &Machine) -> String {
     )
 }
 
+/// Lock shards per map. Sixteen is comfortably above the worker
+/// counts `--jobs` realistically sees while keeping the cache small;
+/// contention was measurable with the previous single
+/// `Mutex<HashMap>` once every worker's search hammered one lock.
+const CACHE_SHARDS: usize = 16;
+
 /// Memoized plan evaluations keyed by (machine, scenario, plan).
-/// Thread-safe; sharing across concurrently searched cells never
-/// changes any result (both the makespan and the analytic bound are
-/// pure functions of the key), it only skips repeated work.
+/// Thread-safe and lock-sharded (shard = hash of the key, so a given
+/// key always meets the same lock); sharing across concurrently
+/// searched cells never changes any result (both the makespan and the
+/// analytic bound are pure functions of the key), it only skips work.
 pub struct EvalCache {
-    map: Mutex<HashMap<EvalKey, f64>>,
+    map: Vec<Mutex<HashMap<EvalKey, f64>>>,
     /// Memoized analytic lower bounds (see [`EvalCache::makespan_bounded`]).
-    bounds: Mutex<HashMap<EvalKey, f64>>,
+    bounds: Vec<Mutex<HashMap<EvalKey, f64>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -214,15 +230,40 @@ pub struct EvalCache {
 impl EvalCache {
     pub fn new() -> EvalCache {
         EvalCache {
-            map: Mutex::new(HashMap::new()),
-            bounds: Mutex::new(HashMap::new()),
+            map: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            bounds: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
         }
     }
 
+    fn shard_of(key: &EvalKey) -> usize {
+        // Cheap integer mix over the key's scalar fields — not a
+        // second SipHash pass over the whole key (the shard's HashMap
+        // already pays that once). Shard choice only distributes
+        // locks; results never depend on it. The machine name is
+        // deliberately excluded: a search hammers one machine at a
+        // time, and the scenario/plan knobs carry the spread.
+        let p = &key.plan;
+        let knobs = (p.pieces as u64)
+            ^ ((p.slots as u64) << 10)
+            ^ ((p.fused as u64) << 20)
+            ^ ((p.head_start as u64) << 21)
+            ^ (((p.shape == CommShape::Col) as u64) << 22)
+            ^ (((p.mech == CommMech::Kernel) as u64) << 23);
+        let h = key
+            .m
+            .wrapping_add(key.n.rotate_left(17))
+            .wrapping_add(key.k.rotate_left(34))
+            .wrapping_add(key.skew_bits.rotate_left(5))
+            .wrapping_add(key.skew_seed.rotate_left(47))
+            .wrapping_add((key.ngpus as u64).rotate_left(27))
+            .wrapping_add(knobs);
+        (h.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % CACHE_SHARDS
+    }
+
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map.iter().map(|m| m.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -257,7 +298,19 @@ impl EvalCache {
     }
 
     fn lookup(&self, key: &EvalKey) -> Option<f64> {
-        self.map.lock().unwrap().get(key).copied()
+        self.map[Self::shard_of(key)].lock().unwrap().get(key).copied()
+    }
+
+    fn store(&self, key: EvalKey, makespan: f64) {
+        self.map[Self::shard_of(&key)].lock().unwrap().insert(key, makespan);
+    }
+
+    fn lookup_bound(&self, key: &EvalKey) -> Option<f64> {
+        self.bounds[Self::shard_of(key)].lock().unwrap().get(key).copied()
+    }
+
+    fn store_bound(&self, key: EvalKey, bound: f64) {
+        self.bounds[Self::shard_of(&key)].lock().unwrap().insert(key, bound);
     }
 
     /// Pre-load a known makespan (e.g. a preset the caller already
@@ -266,12 +319,27 @@ impl EvalCache {
     /// makespan on that machine/scenario.
     pub fn insert(&self, machine_name: &str, sc: &Scenario, plan: &Plan, makespan: f64) {
         let key = self.key(machine_name, sc, plan);
-        self.map.lock().unwrap().insert(key, makespan);
+        self.store(key, makespan);
     }
 
-    /// Simulated makespan of `plan` on (machine, scenario), memoized.
+    /// Simulated makespan of `plan` on (machine, scenario), memoized
+    /// — one-shot wrapper over [`EvalCache::makespan_in`].
     pub fn makespan(
         &self,
+        machine_name: &str,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+    ) -> f64 {
+        self.makespan_in(&mut Evaluator::new(), machine_name, machine, sc, plan)
+    }
+
+    /// Simulated makespan of `plan` on (machine, scenario), memoized;
+    /// misses simulate through the caller's reusable evaluator arena
+    /// (makespan-only lean mode).
+    pub fn makespan_in(
+        &self,
+        ev: &mut Evaluator,
         machine_name: &str,
         machine: &Machine,
         sc: &Scenario,
@@ -284,25 +352,27 @@ impl EvalCache {
         }
         // Evaluate outside the lock; a racing duplicate evaluation
         // computes the identical value.
-        let makespan = exec::evaluate_plan(machine, sc, plan).makespan;
+        let makespan = ev.plan_makespan(machine, sc, plan);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map.lock().unwrap().insert(key, makespan);
+        self.store(key, makespan);
         makespan
     }
 
-    /// As [`EvalCache::makespan`], but with lower-bound pruning:
+    /// As [`EvalCache::makespan_in`], but with lower-bound pruning:
     /// `Err(bound)` when the plan's analytic bound exceeds `cutoff`.
     ///
-    /// On a cold key the task graph is built once and shared between
-    /// the bound and the simulation ([`exec::prepare_plan`]); both
-    /// results are memoized, so a repeated key pays neither a graph
-    /// build nor a simulation. The pruning decision depends only on
-    /// the memoized-or-recomputed bound — a pure function of the key
-    /// — so a search's evaluated/pruned counts are a pure function of
-    /// its inputs and cross-cell cache sharing can only skip work,
+    /// On a cold key the task graph is built once in the evaluator and
+    /// shared between the bound and the simulation
+    /// ([`Evaluator::load_plan`] + [`Evaluator::run_loaded_lean`]);
+    /// both results are memoized, so a repeated key pays neither a
+    /// graph build nor a simulation. The pruning decision depends only
+    /// on the memoized-or-recomputed bound — a pure function of the
+    /// key — so a search's evaluated/pruned counts are a pure function
+    /// of its inputs and cross-cell cache sharing can only skip work,
     /// never change what a cell reports.
     pub fn makespan_bounded(
         &self,
+        ev: &mut Evaluator,
         machine_name: &str,
         machine: &Machine,
         sc: &Scenario,
@@ -311,11 +381,10 @@ impl EvalCache {
     ) -> Result<f64, f64> {
         let key = self.key(machine_name, sc, plan);
         let c = match cutoff {
-            None => return Ok(self.makespan(machine_name, machine, sc, plan)),
+            None => return Ok(self.makespan_in(ev, machine_name, machine, sc, plan)),
             Some(c) => c,
         };
-        let cached_bound = self.bounds.lock().unwrap().get(&key).copied();
-        match cached_bound {
+        match self.lookup_bound(&key) {
             Some(bound) => {
                 if bound > c {
                     return Err(bound);
@@ -324,15 +393,14 @@ impl EvalCache {
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     return Ok(v);
                 }
-                let makespan = exec::evaluate_plan(machine, sc, plan).makespan;
+                let makespan = ev.plan_makespan(machine, sc, plan);
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                self.map.lock().unwrap().insert(key, makespan);
+                self.store(key, makespan);
                 Ok(makespan)
             }
             None => {
-                let prepared = exec::prepare_plan(machine, sc, plan);
-                let bound = prepared.lower_bound();
-                self.bounds.lock().unwrap().insert(key.clone(), bound);
+                let bound = ev.load_plan(machine, sc, plan);
+                self.store_bound(key.clone(), bound);
                 if bound > c {
                     return Err(bound);
                 }
@@ -340,9 +408,14 @@ impl EvalCache {
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     return Ok(v);
                 }
-                let makespan = prepared.run().makespan;
+                // The graph is already loaded — simulate it without
+                // rebuilding.
+                let makespan = ev
+                    .run_loaded_lean()
+                    .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name))
+                    .makespan;
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                self.map.lock().unwrap().insert(key, makespan);
+                self.store(key, makespan);
                 Ok(makespan)
             }
         }
@@ -358,7 +431,7 @@ impl Default for EvalCache {
 /// Analytic lower bound on a plan's simulated makespan (lower the
 /// plan, bound the task graph — no simulation).
 pub fn plan_lower_bound(machine: &Machine, sc: &Scenario, plan: &Plan) -> f64 {
-    exec::prepare_plan(machine, sc, plan).lower_bound()
+    Evaluator::new().load_plan(machine, sc, plan)
 }
 
 /// One evaluated plan-space point.
@@ -437,7 +510,59 @@ fn neighbors(plan: &Plan, space: &SpaceSpec, ngpus: usize) -> Vec<Plan> {
     out
 }
 
-/// Search the plan space for one (machine, scenario) cell.
+/// Evaluate one unseen candidate against the incumbent, with optional
+/// lower-bound pruning. The strict `1 + 1e-9` margin on the cutoff
+/// absorbs ulp drift between the analytic bound and the event-driven
+/// simulation (they accumulate the same sums in different orders), so
+/// a mathematically tight bound can never prune the true optimum.
+#[allow(clippy::too_many_arguments)]
+fn consider(
+    ev: &mut Evaluator,
+    cache: &EvalCache,
+    machine_name: &str,
+    machine: &Machine,
+    sc: &Scenario,
+    prune: bool,
+    plan: Plan,
+    incumbent: &mut PlanEval,
+    evals: &mut Vec<PlanEval>,
+    evaluated: &mut usize,
+    pruned: &mut usize,
+) {
+    let cutoff = if prune {
+        Some(incumbent.makespan * (1.0 + 1e-9))
+    } else {
+        None
+    };
+    match cache.makespan_bounded(ev, machine_name, machine, sc, &plan, cutoff) {
+        Err(_bound) => {
+            *pruned += 1;
+        }
+        Ok(makespan) => {
+            *evaluated += 1;
+            evals.push(PlanEval { plan, makespan });
+            if makespan < incumbent.makespan {
+                *incumbent = PlanEval { plan, makespan };
+            }
+        }
+    }
+}
+
+/// Search the plan space for one (machine, scenario) cell (one-shot
+/// wrapper over [`search_in`] with a throwaway evaluator).
+pub fn search(
+    machine_name: &str,
+    machine: &Machine,
+    sc: &Scenario,
+    space: &SpaceSpec,
+    cfg: &SearchCfg,
+    cache: &EvalCache,
+) -> SearchOutcome {
+    search_in(&mut Evaluator::new(), machine_name, machine, sc, space, cfg, cache)
+}
+
+/// Search the plan space for one (machine, scenario) cell through a
+/// caller-owned reusable [`Evaluator`] arena.
 ///
 /// The six legacy presets are evaluated unconditionally: they seed the
 /// incumbent (so the result is at least as good as the best legacy
@@ -445,8 +570,10 @@ fn neighbors(plan: &Plan, space: &SpaceSpec, ngpus: usize) -> Vec<Plan> {
 /// the initial frontier. Exhaustive mode then walks every remaining
 /// space candidate; beam mode repeatedly expands single-knob
 /// neighborhoods of the current best `beam` plans until no unseen
-/// neighbor remains. Fully deterministic for a given input.
-pub fn search(
+/// neighbor remains. Fully deterministic for a given input: the
+/// evaluator and cache only skip work, they never change results.
+pub fn search_in(
+    ev: &mut Evaluator,
     machine_name: &str,
     machine: &Machine,
     sc: &Scenario,
@@ -464,7 +591,7 @@ pub fn search(
 
     for kind in Kind::ALL {
         let plan = Plan::preset(kind, sc);
-        let makespan = cache.makespan(machine_name, machine, sc, &plan);
+        let makespan = cache.makespan_in(ev, machine_name, machine, sc, &plan);
         evaluated += 1;
         seen.insert(plan);
         evals.push(PlanEval { plan, makespan });
@@ -489,45 +616,24 @@ pub fn search(
         }
     }
 
-    // Evaluate one unseen candidate against the incumbent, with
-    // optional lower-bound pruning. The strict `1 + 1e-9` margin on
-    // the cutoff absorbs ulp drift between the analytic bound and the
-    // event-driven simulation (they accumulate the same sums in
-    // different orders), so a mathematically tight bound can never
-    // prune the true optimum.
-    let consider = |plan: Plan,
-                    incumbent: &mut PlanEval,
-                    evals: &mut Vec<PlanEval>,
-                    evaluated: &mut usize,
-                    pruned: &mut usize|
-     -> bool {
-        let cutoff = if cfg.prune {
-            Some(incumbent.makespan * (1.0 + 1e-9))
-        } else {
-            None
-        };
-        match cache.makespan_bounded(machine_name, machine, sc, &plan, cutoff) {
-            Err(_bound) => {
-                *pruned += 1;
-                false
-            }
-            Ok(makespan) => {
-                *evaluated += 1;
-                evals.push(PlanEval { plan, makespan });
-                if makespan < incumbent.makespan {
-                    *incumbent = PlanEval { plan, makespan };
-                }
-                true
-            }
-        }
-    };
-
     if cfg.beam == 0 {
         for plan in space.plans(sc) {
             if !seen.insert(plan) {
                 continue;
             }
-            consider(plan, &mut incumbent, &mut evals, &mut evaluated, &mut pruned);
+            consider(
+                ev,
+                cache,
+                machine_name,
+                machine,
+                sc,
+                cfg.prune,
+                plan,
+                &mut incumbent,
+                &mut evals,
+                &mut evaluated,
+                &mut pruned,
+            );
         }
     } else {
         // Beam local search: expand single-knob neighborhoods of the
@@ -554,7 +660,19 @@ pub fn search(
                         continue;
                     }
                     new_any = true;
-                    consider(nb, &mut incumbent, &mut evals, &mut evaluated, &mut pruned);
+                    consider(
+                        ev,
+                        cache,
+                        machine_name,
+                        machine,
+                        sc,
+                        cfg.prune,
+                        nb,
+                        &mut incumbent,
+                        &mut evals,
+                        &mut evaluated,
+                        &mut pruned,
+                    );
                 }
             }
             if !new_any {
@@ -609,16 +727,36 @@ pub struct TuneResult {
     pub eval_seconds: f64,
 }
 
-/// Search one sweep cell of the plan space.
-pub fn tune_cell(cell: &Cell, ov: &SpaceOverrides, cfg: &SearchCfg, cache: &EvalCache) -> TuneResult {
+/// Search one sweep cell of the plan space (one-shot wrapper over
+/// [`tune_cell_in`]).
+pub fn tune_cell(
+    cell: &Cell,
+    ov: &SpaceOverrides,
+    cfg: &SearchCfg,
+    cache: &EvalCache,
+) -> TuneResult {
+    tune_cell_in(&mut Evaluator::new(), cell, ov, cfg, cache)
+}
+
+/// Search one sweep cell of the plan space through a caller-owned
+/// reusable [`Evaluator`] arena (the tune workers pass one per worker
+/// thread).
+pub fn tune_cell_in(
+    ev: &mut Evaluator,
+    cell: &Cell,
+    ov: &SpaceOverrides,
+    cfg: &SearchCfg,
+    cache: &EvalCache,
+) -> TuneResult {
     let t0 = Instant::now();
     let sc = &cell.scenario;
     let machine = &cell.machine;
     let space = space_for(sc, ov);
     let space_size = space.plans(sc).len();
-    let out = search(&cell.machine_name, machine, sc, &space, cfg, cache);
+    let out = search_in(ev, &cell.machine_name, machine, sc, &space, cfg, cache);
     let pick = crate::heuristics::pick(machine, sc).pick;
-    let pick_makespan = cache.makespan(
+    let pick_makespan = cache.makespan_in(
+        ev,
         &cell.machine_name,
         machine,
         sc,
@@ -680,14 +818,14 @@ impl TuneReport {
 }
 
 /// Run a tune over the sweep spec's (machine × mech × GPU-count ×
-/// scenario) cells on `jobs` workers of the ordered pool. `on_result`
-/// is invoked in deterministic cell order (reorder-buffered), so the
-/// tune emitters are byte-stable for any `jobs`; returning `false`
-/// cancels the run, keeping exactly the delivered prefix. One
-/// [`EvalCache`] is shared across cells — it memoizes duplicate
-/// (machine, scenario, plan) evaluations (e.g. kernel-mech presets
-/// re-appearing across mechanism cells) without affecting any
-/// reported number.
+/// scenario) cells on `jobs` workers of the ordered pool, one
+/// reusable [`Evaluator`] arena per worker. `on_result` is invoked in
+/// deterministic cell order (reorder-buffered), so the tune emitters
+/// are byte-stable for any `jobs`; returning `false` cancels the run,
+/// keeping exactly the delivered prefix. One [`EvalCache`] is shared
+/// across cells — it memoizes duplicate (machine, scenario, plan)
+/// evaluations (e.g. kernel-mech presets re-appearing across
+/// mechanism cells) without affecting any reported number.
 pub fn tune<F: FnMut(&TuneResult) -> bool>(
     spec: &SweepSpec,
     ov: &SpaceOverrides,
@@ -698,10 +836,11 @@ pub fn tune<F: FnMut(&TuneResult) -> bool>(
     let cells = spec.cells();
     let cache = EvalCache::new();
     let t0 = Instant::now();
-    let pool_run = crate::util::pool::run_ordered(
+    let pool_run = crate::util::pool::run_ordered_stateful(
         &cells,
         jobs,
-        |_, cell| tune_cell(cell, ov, cfg, &cache),
+        Evaluator::new,
+        |ev, _, cell| tune_cell_in(ev, cell, ov, cfg, &cache),
         |_, result| on_result(result),
     );
     TuneReport {
@@ -754,6 +893,20 @@ mod tests {
     }
 
     #[test]
+    fn plans_dedup_preserves_first_occurrence_order() {
+        // A space whose axes collide heavily (pieces duplicated via
+        // overrides is impossible — dedup_sorted — so collide via the
+        // mech axis instead): emission must be first-occurrence order.
+        let sc = sc();
+        let mut space = small_space(&sc);
+        space.mechs = vec![sc.mech, sc.mech];
+        let doubled = space.plans(&sc);
+        space.mechs = vec![sc.mech];
+        let single = space.plans(&sc);
+        assert_eq!(doubled, single, "duplicate axis values must not leak");
+    }
+
+    #[test]
     fn exhaustive_search_is_at_least_as_good_as_every_preset() {
         let m = machine();
         let sc = sc();
@@ -789,6 +942,29 @@ mod tests {
         assert_eq!(a.evaluated, b.evaluated);
         assert_eq!(a.pruned, b.pruned);
         assert!(a.best.makespan == b.best.makespan);
+    }
+
+    #[test]
+    fn shared_evaluator_matches_throwaway_evaluators() {
+        // Threading one arena through consecutive searches (as every
+        // tune worker now does) must not change any reported number.
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let cfg = SearchCfg::default();
+        let mut ev = Evaluator::new();
+        let a = search_in(&mut ev, "mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        let b = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        assert_eq!(a.best.plan, b.best.plan);
+        assert_eq!(a.best.makespan.to_bits(), b.best.makespan.to_bits());
+        assert_eq!(a.baseline.to_bits(), b.baseline.to_bits());
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.pruned, b.pruned);
+        // And again through the same (now warm) arena.
+        let c = search_in(&mut ev, "mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        assert_eq!(c.best.makespan.to_bits(), b.best.makespan.to_bits());
+        assert_eq!(c.evaluated, b.evaluated);
+        assert_eq!(c.pruned, b.pruned);
     }
 
     #[test]
@@ -845,6 +1021,7 @@ mod tests {
             "second search must be all cache hits"
         );
         assert!(cache.hits() > 0);
+        assert!(cache.len() > 0 && !cache.is_empty());
     }
 
     #[test]

@@ -4,8 +4,14 @@
 //! communication (RCCL-style), DMA-engine copies, and local
 //! gather/scatter kernels (FiCCO's steady-state `Gather`/`Scatter`,
 //! §III-B).
+//!
+//! The wrapper is reusable: [`ClusterSim::reset`] drops the task
+//! graph while keeping the machine's resource/stream skeleton (and
+//! the engine's warmed scratch buffers), so an
+//! [`crate::schedule::exec::Evaluator`] loads hundreds of candidate
+//! schedules without re-registering resources or reallocating.
 
-use super::engine::{Engine, Report, ResourceId, SimError, StreamId, TaskId, TaskSpec};
+use super::engine::{Engine, Label, Report, ResourceId, SimError, StreamId, TaskId};
 use crate::hw::Machine;
 
 /// How a byte stream is moved: by a GPU-core kernel (contends for CUs
@@ -39,7 +45,7 @@ impl CommMech {
 
 /// Simulator instantiated over a machine: resource ids, stream ids,
 /// and task builders. Wraps an [`Engine`]; call [`ClusterSim::run`]
-/// when the task graph is complete.
+/// (or run the engine in place) when the task graph is complete.
 pub struct ClusterSim {
     pub machine: Machine,
     pub engine: Engine,
@@ -86,6 +92,12 @@ impl ClusterSim {
         }
     }
 
+    /// Drop the task graph, keeping the machine's resource/stream
+    /// skeleton and the engine's scratch capacity.
+    pub fn reset(&mut self) {
+        self.engine.reset_tasks();
+    }
+
     pub fn ngpus(&self) -> usize {
         self.machine.ngpus()
     }
@@ -120,7 +132,7 @@ impl ClusterSim {
     pub fn gemm_task(
         &mut self,
         gpu: usize,
-        label: impl Into<String>,
+        label: impl Into<Label>,
         time_iso: f64,
         bytes: f64,
         cus: usize,
@@ -130,13 +142,18 @@ impl ClusterSim {
         // HBM demand carries the burstiness factor: GEMM memory phases
         // hit the memory subsystem far above the kernel's average rate.
         let burst = self.machine.gpu.hbm_burst;
-        let spec = TaskSpec::new(label, self.compute_streams[gpu])
+        let launch = self.machine.gpu.kernel_launch;
+        let cu = self.cu[gpu];
+        let hbm = self.hbm[gpu];
+        let stream = self.compute_streams[gpu];
+        self.engine
+            .task(label, stream)
             .deps(deps)
             .work(t)
-            .setup(self.machine.gpu.kernel_launch)
-            .demand(self.cu[gpu], cus as f64)
-            .demand(self.hbm[gpu], burst * bytes / t);
-        self.engine.add_task(spec)
+            .setup(launch)
+            .demand(cu, cus as f64)
+            .demand(hbm, burst * bytes / t)
+            .finish()
     }
 
     /// Add a point-to-point transfer src→dst of `bytes`, on the given
@@ -146,7 +163,7 @@ impl ClusterSim {
         src: usize,
         dst: usize,
         slot: usize,
-        label: impl Into<String>,
+        label: impl Into<Label>,
         bytes: f64,
         mech: CommMech,
         deps: &[TaskId],
@@ -177,22 +194,33 @@ impl ClusterSim {
         // (row-conflict/turnaround interference); core-driven comm
         // additionally thrashes caches (pollution ≥ 1).
         let amp = g.comm_hbm_amp;
-        let mut spec = TaskSpec::new(label, self.comm_stream(src, slot))
+        let (link_a, link_b) = topo.link_pair(src, dst);
+        let stream = self.comm_stream(src, slot);
+        let hbm_src = self.hbm[src];
+        let hbm_dst = self.hbm[dst];
+        let cu_src = self.cu[src];
+        let dma_src = self.dma[src];
+        let link_a = self.links[link_a];
+        let link_b = link_b.map(|l| self.links[l]);
+        let mut b = self
+            .engine
+            .task(label, stream)
             .deps(deps)
             .work(work.max(1e-9))
             .setup(setup)
-            .demand(self.hbm[src], rate * pollution * amp)
-            .demand(self.hbm[dst], rate * pollution * amp);
-        for l in topo.link_indices(src, dst) {
-            spec = spec.demand(self.links[l], rate);
+            .demand(hbm_src, rate * pollution * amp)
+            .demand(hbm_dst, rate * pollution * amp)
+            .demand(link_a, rate);
+        if let Some(l) = link_b {
+            b = b.demand(l, rate);
         }
         if cus > 0.0 {
-            spec = spec.demand(self.cu[src], cus);
+            b = b.demand(cu_src, cus);
         }
         if dma_engines > 0.0 {
-            spec = spec.demand(self.dma[src], dma_engines);
+            b = b.demand(dma_src, dma_engines);
         }
-        self.engine.add_task(spec)
+        b.finish()
     }
 
     /// Add a local gather/scatter copy of `bytes` on `gpu` (reads and
@@ -201,7 +229,7 @@ impl ClusterSim {
     pub fn local_copy_task(
         &mut self,
         gpu: usize,
-        label: impl Into<String>,
+        label: impl Into<Label>,
         bytes: f64,
         mech: CommMech,
         deps: &[TaskId],
@@ -219,18 +247,24 @@ impl ClusterSim {
             CommMech::Dma => (g.dma_engine_bw, 0.0, 1.0, 0.25 * g.kernel_launch),
         };
         let work = bytes / bw;
-        let mut spec = TaskSpec::new(label, self.copy_streams[gpu])
+        let stream = self.copy_streams[gpu];
+        let hbm = self.hbm[gpu];
+        let cu = self.cu[gpu];
+        let dma = self.dma[gpu];
+        let mut b = self
+            .engine
+            .task(label, stream)
             .deps(deps)
             .work(work.max(1e-9))
             .setup(setup)
-            .demand(self.hbm[gpu], 2.0 * bw);
+            .demand(hbm, 2.0 * bw);
         if cus > 0.0 {
-            spec = spec.demand(self.cu[gpu], cus);
+            b = b.demand(cu, cus);
         }
         if dma_engines > 0.0 {
-            spec = spec.demand(self.dma[gpu], dma_engines);
+            b = b.demand(dma, dma_engines);
         }
-        self.engine.add_task(spec)
+        b.finish()
     }
 
     /// Zero-cost synchronization marker on a stream (hipStreamWrite/
@@ -238,15 +272,15 @@ impl ClusterSim {
     pub fn sync_task(
         &mut self,
         gpu: usize,
-        label: impl Into<String>,
+        label: impl Into<Label>,
         deps: &[TaskId],
     ) -> TaskId {
-        let spec = TaskSpec::new(label, self.compute_streams[gpu]).deps(deps);
-        self.engine.add_task(spec)
+        let stream = self.compute_streams[gpu];
+        self.engine.task(label, stream).deps(deps).finish()
     }
 
-    pub fn run(self) -> Result<Report, SimError> {
-        self.engine.run()
+    pub fn run(mut self) -> Result<Report, SimError> {
+        self.engine.run_full()
     }
 }
 
@@ -334,5 +368,26 @@ mod tests {
         let rep = c.run().unwrap();
         // read+write at 80% of HBM → ≥ 2x/0.8 the one-pass time
         assert!(rep.makespan > 0.024, "makespan={}", rep.makespan);
+    }
+
+    #[test]
+    fn reset_reuses_the_machine_skeleton_bitwise() {
+        // Two identical graphs through one ClusterSim, reset between:
+        // same makespan bits as a fresh ClusterSim.
+        let m = Machine::mi300x_8();
+        let bytes = 64e9 * 0.01;
+        let mut c = ClusterSim::new(m.clone());
+        c.transfer_task(0, 1, 0, "a", bytes, CommMech::Dma, &[]);
+        let first = c.engine.run_lean().unwrap().makespan;
+        c.reset();
+        c.transfer_task(0, 1, 0, "a", bytes, CommMech::Dma, &[]);
+        let second = c.engine.run_lean().unwrap().makespan;
+        assert_eq!(first.to_bits(), second.to_bits());
+        let fresh = {
+            let mut c2 = ClusterSim::new(m);
+            c2.transfer_task(0, 1, 0, "a", bytes, CommMech::Dma, &[]);
+            c2.run().unwrap().makespan
+        };
+        assert_eq!(first.to_bits(), fresh.to_bits());
     }
 }

@@ -6,6 +6,31 @@
 //! link latency), then progresses at a rate in `[0, 1]` determined by
 //! max–min fair sharing of the resources it demands. `work` is the
 //! task's duration at rate 1 (its isolated execution time).
+//!
+//! The engine is built for **reuse** (`DESIGN.md` §6): task
+//! descriptions live in flat arenas (deps and demands are ranges into
+//! shared arrays, labels are lazy [`Label`]s — no per-task heap
+//! allocation once capacity is warm), the event loop runs entirely out
+//! of persistent scratch buffers ([`RunScratch`]), and
+//! [`Engine::reset_tasks`] drops the task graph while keeping the
+//! registered resources, streams, and scratch capacity. A search
+//! evaluating hundreds of candidate schedules per cell therefore
+//! allocates while warming up and then runs allocation-free
+//! (`rust/tests/zero_alloc.rs` asserts this with a counting
+//! allocator). [`Engine::run_lean`] additionally skips every
+//! per-task/per-resource output the caller does not need when only the
+//! makespan matters.
+//!
+//! The event-loop *algorithm* is unchanged from the original
+//! implementation — kept verbatim in [`super::reference`] for
+//! differential testing — and every floating-point operation is
+//! performed on the same values in the same order, so reported
+//! makespans and event counts are bit-for-bit identical.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fmt;
+use std::sync::OnceLock;
 
 /// Index of a resource (capacity-limited, e.g. a link or a CU pool).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -19,10 +44,63 @@ pub struct TaskId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StreamId(pub usize);
 
-/// Task description handed to [`Engine::add_task`].
+/// Process-wide `FICCO_SIM_TRACE` switch, read once per process. The
+/// env lookup used to run in every `Engine::new` — once per search
+/// candidate, thousands of times per tune cell.
+pub fn trace_enabled() -> bool {
+    static TRACE: OnceLock<bool> = OnceLock::new();
+    *TRACE.get_or_init(|| std::env::var("FICCO_SIM_TRACE").is_ok())
+}
+
+/// Lazily rendered task label: building a `String` per task was a
+/// measurable share of candidate-construction cost, and the label is
+/// only ever *read* on trace/error paths. `Static` and `Indexed`
+/// labels are allocation-free.
+#[derive(Debug, Clone)]
+pub enum Label {
+    Static(&'static str),
+    Owned(String),
+    /// `prefix` + decimal index, rendered on demand (e.g. `n17` for
+    /// schedule node 17).
+    Indexed(&'static str, u32),
+}
+
+impl Label {
+    pub fn indexed(prefix: &'static str, i: usize) -> Label {
+        Label::Indexed(prefix, i as u32)
+    }
+}
+
+impl fmt::Display for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Label::Static(s) => f.write_str(s),
+            Label::Owned(s) => f.write_str(s),
+            Label::Indexed(p, i) => write!(f, "{p}{i}"),
+        }
+    }
+}
+
+impl From<&'static str> for Label {
+    fn from(s: &'static str) -> Label {
+        Label::Static(s)
+    }
+}
+
+impl From<String> for Label {
+    fn from(s: String) -> Label {
+        Label::Owned(s)
+    }
+}
+
+/// Task description handed to [`Engine::add_task`]. Retained as the
+/// convenient owned-`Vec` builder for tests and one-off graphs; bulk
+/// loaders should prefer [`Engine::task`], which writes deps/demands
+/// straight into the engine's flat arenas without intermediate
+/// allocation.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
-    pub label: String,
+    pub label: Label,
     pub stream: StreamId,
     pub deps: Vec<TaskId>,
     /// Seconds of execution at rate 1.0 (isolated time, DIL included).
@@ -35,7 +113,7 @@ pub struct TaskSpec {
 }
 
 impl TaskSpec {
-    pub fn new(label: impl Into<String>, stream: StreamId) -> TaskSpec {
+    pub fn new(label: impl Into<Label>, stream: StreamId) -> TaskSpec {
         TaskSpec {
             label: label.into(),
             stream,
@@ -68,25 +146,30 @@ impl TaskSpec {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Execution phase of one task during a run. The setup deadline lives
+/// in [`RunScratch::setup_until`] (and the deadline heap), not in the
+/// phase itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
     /// Waiting on deps / stream order.
     Blocked,
-    /// Deps met; absorbing fixed setup latency until the given time.
-    Setup(f64),
+    /// Deps met; absorbing fixed setup latency.
+    Setup,
     /// Progressing under fair-shared rates.
     Running,
     Done,
 }
 
+/// One task's immutable description: scalar fields inline, deps and
+/// demands as `[start, end)` ranges into the engine's flat arenas.
 #[derive(Debug, Clone)]
-struct Task {
-    spec: TaskSpec,
-    phase: Phase,
-    remaining: f64,
-    start: f64,
-    run_start: f64,
-    finish: f64,
+struct TaskNode {
+    label: Label,
+    stream: StreamId,
+    work: f64,
+    setup: f64,
+    deps_at: (usize, usize),
+    demands_at: (usize, usize),
 }
 
 /// Simulation output.
@@ -128,13 +211,62 @@ impl Report {
     }
 }
 
-/// The engine. Build tasks, then [`Engine::run`].
+/// Makespan-only simulation output of [`Engine::run_lean`]: no
+/// per-task spans, no per-resource busy integrals — none of those
+/// sums are even accumulated.
+#[derive(Debug, Clone, Copy)]
+pub struct LeanReport {
+    pub makespan: f64,
+    pub events: usize,
+}
+
+/// Persistent per-run working state. Every buffer is sized (not
+/// reallocated) at the start of a run, so a reused engine's steady
+/// state performs no heap allocation inside the event loop.
+#[derive(Debug, Clone, Default)]
+struct RunScratch {
+    phase: Vec<Phase>,
+    remaining: Vec<f64>,
+    /// Setup deadline per task (valid while `phase == Setup`).
+    setup_until: Vec<f64>,
+    start: Vec<f64>,
+    run_start: Vec<f64>,
+    finish: Vec<f64>,
+    deps_left: Vec<usize>,
+    /// Dependents in CSR form: task `i`'s dependents are
+    /// `dep_list[dep_heads[i]..dep_heads[i + 1]]`.
+    dep_heads: Vec<usize>,
+    dep_cursor: Vec<usize>,
+    dep_list: Vec<TaskId>,
+    stream_cursor: Vec<usize>,
+    /// Running task indices, kept sorted ascending — the iteration
+    /// order every floating-point reduction in the loop depends on.
+    running: Vec<usize>,
+    /// Fair rates parallel to `running` (recomputed only when the
+    /// running set changes — rates are a pure function of the set).
+    rates: Vec<f64>,
+    frozen: Vec<bool>,
+    rem: Vec<f64>,
+    sum: Vec<f64>,
+    /// Min-heap of pending setup deadlines as (deadline bits, task).
+    /// Deadlines are non-negative finite f64s, for which the bit
+    /// pattern is order-preserving.
+    setup_heap: BinaryHeap<Reverse<(u64, usize)>>,
+    completed: Vec<usize>,
+    resource_busy: Vec<f64>,
+}
+
+/// The engine. Build tasks, then [`Engine::run_full`] /
+/// [`Engine::run_lean`] (or the consuming [`Engine::run`]).
 #[derive(Debug, Clone)]
 pub struct Engine {
     capacities: Vec<f64>,
-    tasks: Vec<Task>,
+    tasks: Vec<TaskNode>,
+    deps_flat: Vec<TaskId>,
+    demands_flat: Vec<(ResourceId, f64)>,
     streams: Vec<Vec<TaskId>>,
     trace: bool,
+    scratch: RunScratch,
 }
 
 #[derive(Debug)]
@@ -149,13 +281,77 @@ impl std::error::Error for SimError {}
 
 const EPS: f64 = 1e-12;
 
+/// In-place task construction writing deps/demands directly into the
+/// engine's flat arenas. Obtain via [`Engine::task`], configure, then
+/// call [`TaskBuilder::finish`] — a builder must not be abandoned
+/// mid-task (its arena entries would leak into the next task).
+pub struct TaskBuilder<'e> {
+    engine: &'e mut Engine,
+    label: Label,
+    stream: StreamId,
+    work: f64,
+    setup: f64,
+    deps_start: usize,
+    demands_start: usize,
+}
+
+impl<'e> TaskBuilder<'e> {
+    pub fn dep(mut self, t: TaskId) -> Self {
+        self.engine.deps_flat.push(t);
+        self
+    }
+    pub fn deps(mut self, ts: &[TaskId]) -> Self {
+        self.engine.deps_flat.extend_from_slice(ts);
+        self
+    }
+    pub fn work(mut self, w: f64) -> Self {
+        self.work = w;
+        self
+    }
+    pub fn setup(mut self, s: f64) -> Self {
+        self.setup = s;
+        self
+    }
+    pub fn demand(mut self, r: ResourceId, d: f64) -> Self {
+        assert!(d >= 0.0);
+        self.engine.demands_flat.push((r, d));
+        self
+    }
+
+    /// Validate and register the task; returns its id.
+    pub fn finish(self) -> TaskId {
+        let engine = self.engine;
+        let id = TaskId(engine.tasks.len());
+        for &(r, _) in &engine.demands_flat[self.demands_start..] {
+            assert!(r.0 < engine.capacities.len(), "unknown resource");
+        }
+        for &d in &engine.deps_flat[self.deps_start..] {
+            assert!(d.0 < id.0, "dep {:?} not earlier than task {:?}", d, id);
+        }
+        assert!(self.work >= 0.0 && self.setup >= 0.0);
+        engine.streams[self.stream.0].push(id);
+        engine.tasks.push(TaskNode {
+            label: self.label,
+            stream: self.stream,
+            work: self.work,
+            setup: self.setup,
+            deps_at: (self.deps_start, engine.deps_flat.len()),
+            demands_at: (self.demands_start, engine.demands_flat.len()),
+        });
+        id
+    }
+}
+
 impl Engine {
     pub fn new() -> Engine {
         Engine {
             capacities: Vec::new(),
             tasks: Vec::new(),
+            deps_flat: Vec::new(),
+            demands_flat: Vec::new(),
             streams: Vec::new(),
-            trace: std::env::var("FICCO_SIM_TRACE").is_ok(),
+            trace: trace_enabled(),
+            scratch: RunScratch::default(),
         }
     }
 
@@ -180,28 +376,63 @@ impl Engine {
         self.tasks.len()
     }
 
-    /// Add a task. Demands must reference registered resources; the
-    /// stream must be registered; deps must be earlier task ids.
+    /// Drop all tasks (and their stream queues) but keep the
+    /// registered resources, streams, and every scratch buffer's
+    /// capacity — the skeleton an evaluator reuses across candidate
+    /// schedules.
+    pub fn reset_tasks(&mut self) {
+        self.tasks.clear();
+        self.deps_flat.clear();
+        self.demands_flat.clear();
+        for s in &mut self.streams {
+            s.clear();
+        }
+    }
+
+    /// Start building a task in place (no intermediate allocation);
+    /// the stream must be registered. See [`TaskBuilder`].
+    pub fn task(&mut self, label: impl Into<Label>, stream: StreamId) -> TaskBuilder<'_> {
+        assert!(stream.0 < self.streams.len(), "unknown stream");
+        let deps_start = self.deps_flat.len();
+        let demands_start = self.demands_flat.len();
+        TaskBuilder {
+            engine: self,
+            label: label.into(),
+            stream,
+            work: 0.0,
+            setup: 0.0,
+            deps_start,
+            demands_start,
+        }
+    }
+
+    /// Add a task from an owned spec. Demands must reference
+    /// registered resources; the stream must be registered; deps must
+    /// be earlier task ids.
     pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
-        let id = TaskId(self.tasks.len());
-        assert!(spec.stream.0 < self.streams.len(), "unknown stream");
-        for &(r, _) in &spec.demands {
-            assert!(r.0 < self.capacities.len(), "unknown resource");
+        let TaskSpec {
+            label,
+            stream,
+            deps,
+            work,
+            setup,
+            demands,
+        } = spec;
+        let mut b = self.task(label, stream).deps(&deps).work(work).setup(setup);
+        for &(r, d) in &demands {
+            b = b.demand(r, d);
         }
-        for &d in &spec.deps {
-            assert!(d.0 < id.0, "dep {:?} not earlier than task {:?}", d, id);
-        }
-        assert!(spec.work >= 0.0 && spec.setup >= 0.0);
-        self.streams[spec.stream.0].push(id);
-        self.tasks.push(Task {
-            remaining: spec.work,
-            spec,
-            phase: Phase::Blocked,
-            start: f64::NAN,
-            run_start: f64::NAN,
-            finish: f64::NAN,
-        });
-        id
+        b.finish()
+    }
+
+    fn deps_of(&self, i: usize) -> &[TaskId] {
+        let (a, b) = self.tasks[i].deps_at;
+        &self.deps_flat[a..b]
+    }
+
+    fn demands_of(&self, i: usize) -> &[(ResourceId, f64)] {
+        let (a, b) = self.tasks[i].demands_at;
+        &self.demands_flat[a..b]
     }
 
     /// Analytic lower bound on the makespan of the task graph as
@@ -225,16 +456,16 @@ impl Engine {
             let serial: f64 = stream
                 .iter()
                 .map(|&tid| {
-                    let spec = &self.tasks[tid.0].spec;
-                    spec.setup + spec.work
+                    let t = &self.tasks[tid.0];
+                    t.setup + t.work
                 })
                 .sum();
             bound = bound.max(serial);
         }
         let mut usage = vec![0.0f64; self.capacities.len()];
-        for task in &self.tasks {
-            for &(r, demand) in &task.spec.demands {
-                usage[r.0] += task.spec.work * demand;
+        for t in &self.tasks {
+            for &(r, demand) in &self.demands_flat[t.demands_at.0..t.demands_at.1] {
+                usage[r.0] += t.work * demand;
             }
         }
         for (u, &cap) in usage.iter().zip(&self.capacities) {
@@ -243,57 +474,230 @@ impl Engine {
         bound
     }
 
-    /// Run to completion.
+    /// Run to completion, consuming the engine (compatibility shim
+    /// over [`Engine::run_full`]).
     pub fn run(mut self) -> Result<Report, SimError> {
+        self.run_full()
+    }
+
+    /// Run to completion with full per-task/per-resource accounting.
+    /// The engine (graph and scratch) stays usable afterwards.
+    pub fn run_full(&mut self) -> Result<Report, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        let res = self.run_core(&mut s, false);
+        let out = res.map(|(makespan, events)| {
+            let n = self.tasks.len();
+            let task_spans = (0..n).map(|i| (s.start[i], s.finish[i])).collect();
+            let task_run_time = (0..n)
+                .map(|i| {
+                    if s.run_start[i].is_nan() {
+                        0.0
+                    } else {
+                        s.finish[i] - s.run_start[i]
+                    }
+                })
+                .collect();
+            let ideal_work = self.tasks.iter().map(|t| t.work).collect();
+            Report {
+                makespan,
+                task_spans,
+                task_run_time,
+                resource_busy: s.resource_busy.clone(),
+                events,
+                ideal_work,
+            }
+        });
+        self.scratch = s;
+        out
+    }
+
+    /// Run to completion reporting only the makespan and event count:
+    /// per-task spans/run times and per-resource busy integrals are
+    /// not accumulated at all. The makespan is bit-identical to
+    /// [`Engine::run_full`]'s (those sums never feed back into rates
+    /// or event times).
+    pub fn run_lean(&mut self) -> Result<LeanReport, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        let res = self.run_core(&mut s, true);
+        self.scratch = s;
+        res.map(|(makespan, events)| LeanReport { makespan, events })
+    }
+
+    /// Promote `tid` Blocked → Setup if its deps are met and it heads
+    /// its stream's queue. Called exactly when one of those conditions
+    /// may have just become true, replacing the reference engine's
+    /// all-streams rescan; the promoted set per event is identical.
+    fn try_promote(&self, s: &mut RunScratch, tid: usize, now: f64) {
+        if s.phase[tid] != Phase::Blocked || s.deps_left[tid] != 0 {
+            return;
+        }
+        let st = self.tasks[tid].stream.0;
+        let c = s.stream_cursor[st];
+        if c >= self.streams[st].len() || self.streams[st][c].0 != tid {
+            return;
+        }
+        s.start[tid] = now;
+        let until = now + self.tasks[tid].setup;
+        s.setup_until[tid] = until;
+        s.phase[tid] = Phase::Setup;
+        s.setup_heap.push(Reverse((until.to_bits(), tid)));
+        if self.trace {
+            eprintln!("[{now:.9}] ready  {}", self.tasks[tid].label);
+        }
+    }
+
+    /// Progressive-filling max–min fair rates for the current running
+    /// set, written into `s.rates` (parallel to `s.running`). All
+    /// rates grow uniformly until a resource saturates (its tasks
+    /// freeze) or a task reaches rate 1.0; repeats on the remainder.
+    fn fill_fair_rates(&self, s: &mut RunScratch) {
+        let m = s.running.len();
+        s.rates.clear();
+        s.rates.resize(m, 0.0);
+        if m == 0 {
+            return;
+        }
+        s.frozen.clear();
+        s.frozen.resize(m, false);
+        s.rem.clear();
+        s.rem.extend_from_slice(&self.capacities);
+
+        loop {
+            // Aggregate unfrozen demand per resource.
+            s.sum.clear();
+            s.sum.resize(s.rem.len(), 0.0);
+            let mut any_unfrozen = false;
+            for (j, &i) in s.running.iter().enumerate() {
+                if s.frozen[j] {
+                    continue;
+                }
+                any_unfrozen = true;
+                for &(r, d) in self.demands_of(i) {
+                    s.sum[r.0] += d;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            // Max uniform rate increment.
+            let mut delta = f64::INFINITY;
+            for j in 0..m {
+                if !s.frozen[j] {
+                    delta = delta.min(1.0 - s.rates[j]);
+                }
+            }
+            for r in 0..s.rem.len() {
+                if s.sum[r] > EPS {
+                    delta = delta.min(s.rem[r] / s.sum[r]);
+                }
+            }
+            if !delta.is_finite() || delta < 0.0 {
+                break;
+            }
+            // Apply increment.
+            for j in 0..m {
+                if !s.frozen[j] {
+                    s.rates[j] += delta;
+                }
+            }
+            for r in 0..s.rem.len() {
+                if s.sum[r] > EPS {
+                    s.rem[r] -= delta * s.sum[r];
+                }
+            }
+            // Freeze saturated tasks.
+            let mut progressed = false;
+            for (j, &i) in s.running.iter().enumerate() {
+                if s.frozen[j] {
+                    continue;
+                }
+                if s.rates[j] >= 1.0 - EPS {
+                    s.frozen[j] = true;
+                    progressed = true;
+                    continue;
+                }
+                let saturated = self
+                    .demands_of(i)
+                    .iter()
+                    .any(|&(r, d)| d > EPS && s.rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
+                if saturated {
+                    s.frozen[j] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // delta was limited by the 1.0 cap of a task that was
+                // just frozen, or nothing changed: avoid spinning.
+                break;
+            }
+        }
+    }
+
+    /// The event loop. Returns (makespan, events); per-task state is
+    /// left in `s` for [`Engine::run_full`] to package.
+    fn run_core(&self, s: &mut RunScratch, lean: bool) -> Result<(f64, usize), SimError> {
         let n = self.tasks.len();
-        let mut done_count = 0usize;
-        let mut now = 0.0f64;
-        let mut events = 0usize;
-        let mut resource_busy = vec![0.0f64; self.capacities.len()];
-        // Per-stream cursor: next task index in the stream not yet done.
-        let mut stream_cursor = vec![0usize; self.streams.len()];
-        // Dep completion counting.
-        let mut deps_left: Vec<usize> = self.tasks.iter().map(|t| t.spec.deps.len()).collect();
-        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+
+        // Size and initialize the scratch state for this graph.
+        s.phase.clear();
+        s.phase.resize(n, Phase::Blocked);
+        s.remaining.clear();
+        s.remaining.extend(self.tasks.iter().map(|t| t.work));
+        s.setup_until.clear();
+        s.setup_until.resize(n, 0.0);
+        s.start.clear();
+        s.start.resize(n, f64::NAN);
+        s.run_start.clear();
+        s.run_start.resize(n, f64::NAN);
+        s.finish.clear();
+        s.finish.resize(n, f64::NAN);
+        s.deps_left.clear();
+        s.deps_left
+            .extend(self.tasks.iter().map(|t| t.deps_at.1 - t.deps_at.0));
+        s.stream_cursor.clear();
+        s.stream_cursor.resize(self.streams.len(), 0);
+        s.running.clear();
+        s.setup_heap.clear();
+        s.resource_busy.clear();
+        s.resource_busy.resize(self.capacities.len(), 0.0);
+
+        // Dependents in CSR form (counts → prefix offsets → fill).
+        s.dep_heads.clear();
+        s.dep_heads.resize(n + 1, 0);
+        for t in &self.tasks {
+            for d in &self.deps_flat[t.deps_at.0..t.deps_at.1] {
+                s.dep_heads[d.0 + 1] += 1;
+            }
+        }
+        for i in 1..=n {
+            s.dep_heads[i] += s.dep_heads[i - 1];
+        }
+        s.dep_cursor.clear();
+        s.dep_cursor.extend_from_slice(&s.dep_heads[..n]);
+        s.dep_list.clear();
+        s.dep_list.resize(self.deps_flat.len(), TaskId(0));
         for (i, t) in self.tasks.iter().enumerate() {
-            for &d in &t.spec.deps {
-                dependents[d.0].push(TaskId(i));
+            for &d in &self.deps_flat[t.deps_at.0..t.deps_at.1] {
+                let c = s.dep_cursor[d.0];
+                s.dep_list[c] = TaskId(i);
+                s.dep_cursor[d.0] = c + 1;
             }
         }
 
-        // Promote Blocked → Setup for every task whose deps and stream
-        // predecessor are satisfied.
-        let promote = |tasks: &mut Vec<Task>,
-                           deps_left: &Vec<usize>,
-                           stream_cursor: &Vec<usize>,
-                           streams: &Vec<Vec<TaskId>>,
-                           now: f64,
-                           trace: bool| {
-            for s in 0..streams.len() {
-                let c = stream_cursor[s];
-                if c >= streams[s].len() {
-                    continue;
-                }
-                let tid = streams[s][c];
-                let t = &mut tasks[tid.0];
-                if t.phase == Phase::Blocked && deps_left[tid.0] == 0 {
-                    t.start = now;
-                    t.phase = Phase::Setup(now + t.spec.setup);
-                    if trace {
-                        eprintln!("[{now:.9}] ready  {}", t.spec.label);
-                    }
-                }
-            }
-        };
+        let mut done_count = 0usize;
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+        // Rates are a pure function of the running set (demands and
+        // capacities are fixed per run), so they are recomputed only
+        // when that set changes.
+        let mut rates_dirty = true;
 
-        promote(
-            &mut self.tasks,
-            &deps_left,
-            &stream_cursor,
-            &self.streams,
-            now,
-            self.trace,
-        );
+        // Initial promotion: head-of-stream tasks with no deps.
+        for st in 0..self.streams.len() {
+            if let Some(&tid) = self.streams[st].first() {
+                self.try_promote(s, tid.0, now);
+            }
+        }
 
         while done_count < n {
             events += 1;
@@ -304,46 +708,50 @@ impl Engine {
                 )));
             }
 
-            // Move Setup tasks whose latency elapsed into Running.
-            for t in self.tasks.iter_mut() {
-                if let Phase::Setup(until) = t.phase {
-                    if until <= now + EPS {
-                        t.phase = Phase::Running;
-                        t.run_start = now;
-                    }
+            // Move Setup tasks whose latency elapsed into Running. The
+            // heap holds exactly the Setup-phase tasks, so popping
+            // every deadline ≤ now + EPS transitions the same set the
+            // reference engine finds by scanning all tasks.
+            let threshold = now + EPS;
+            while let Some(&Reverse((bits, tid))) = s.setup_heap.peek() {
+                if f64::from_bits(bits) > threshold {
+                    break;
                 }
+                s.setup_heap.pop();
+                s.phase[tid] = Phase::Running;
+                s.run_start[tid] = now;
+                let pos = s.running.partition_point(|&x| x < tid);
+                s.running.insert(pos, tid);
+                rates_dirty = true;
             }
 
-            // Collect running tasks and compute fair-share rates.
-            let running: Vec<usize> = (0..n)
-                .filter(|&i| self.tasks[i].phase == Phase::Running)
-                .collect();
-            let rates = self.fair_rates(&running);
+            if rates_dirty {
+                self.fill_fair_rates(s);
+                rates_dirty = false;
+            }
 
             // Next event: earliest of (a) a running task finishing at
             // its current rate, (b) a setup deadline expiring.
             let mut dt = f64::INFINITY;
-            for (j, &i) in running.iter().enumerate() {
-                let t = &self.tasks[i];
-                if t.remaining <= EPS {
+            for (j, &i) in s.running.iter().enumerate() {
+                if s.remaining[i] <= EPS {
                     dt = 0.0;
                     break;
                 }
-                if rates[j] > EPS {
-                    dt = dt.min(t.remaining / rates[j]);
+                if s.rates[j] > EPS {
+                    dt = dt.min(s.remaining[i] / s.rates[j]);
                 }
             }
-            for t in &self.tasks {
-                if let Phase::Setup(until) = t.phase {
-                    dt = dt.min((until - now).max(0.0));
-                }
+            if let Some(&Reverse((bits, _))) = s.setup_heap.peek() {
+                // min over Setup tasks of (until - now).max(0) equals
+                // the same expression at the smallest `until` —
+                // subtraction by a common `now` is monotone.
+                dt = dt.min((f64::from_bits(bits) - now).max(0.0));
             }
             if !dt.is_finite() {
-                let stuck: Vec<&str> = self
-                    .tasks
-                    .iter()
-                    .filter(|t| t.phase != Phase::Done)
-                    .map(|t| t.spec.label.as_str())
+                let stuck: Vec<String> = (0..n)
+                    .filter(|&i| s.phase[i] != Phase::Done)
+                    .map(|i| self.tasks[i].label.to_string())
                     .take(8)
                     .collect();
                 return Err(SimError(format!(
@@ -351,163 +759,69 @@ impl Engine {
                 )));
             }
 
-            // Integrate progress and resource usage over dt.
+            // Integrate progress (and, in full mode, resource usage)
+            // over dt.
             if dt > 0.0 {
-                for (j, &i) in running.iter().enumerate() {
-                    let rate = rates[j];
-                    self.tasks[i].remaining -= rate * dt;
-                    for &(r, d) in &self.tasks[i].spec.demands {
-                        resource_busy[r.0] += rate * d * dt;
+                for (j, &i) in s.running.iter().enumerate() {
+                    let rate = s.rates[j];
+                    s.remaining[i] -= rate * dt;
+                    if !lean {
+                        for &(r, d) in self.demands_of(i) {
+                            s.resource_busy[r.0] += rate * d * dt;
+                        }
                     }
                 }
                 now += dt;
             }
 
             // Complete tasks that hit zero remaining.
-            let mut completed: Vec<TaskId> = Vec::new();
-            for &i in &running {
-                if self.tasks[i].remaining <= EPS {
-                    self.tasks[i].phase = Phase::Done;
-                    self.tasks[i].finish = now;
-                    completed.push(TaskId(i));
+            s.completed.clear();
+            for &i in &s.running {
+                if s.remaining[i] <= EPS {
+                    s.phase[i] = Phase::Done;
+                    s.finish[i] = now;
+                    s.completed.push(i);
                     done_count += 1;
                     if self.trace {
-                        eprintln!("[{now:.9}] done   {}", self.tasks[i].spec.label);
+                        eprintln!("[{now:.9}] done   {}", self.tasks[i].label);
                     }
                 }
             }
-            // Also complete zero-work tasks sitting in Setup with
-            // elapsed deadline and no work (they became Running above).
+            if !s.completed.is_empty() {
+                rates_dirty = true;
+                let phase = &s.phase;
+                s.running.retain(|&i| phase[i] == Phase::Running);
+            }
 
-            for c in &completed {
-                for &dep in &dependents[c.0] {
-                    deps_left[dep.0] -= 1;
+            // Dependency and stream bookkeeping for the completed set,
+            // promoting newly eligible tasks at the same `now` the
+            // reference engine's end-of-event rescan would.
+            for ci in 0..s.completed.len() {
+                let c = s.completed[ci];
+                let (a, b) = (s.dep_heads[c], s.dep_heads[c + 1]);
+                for k in a..b {
+                    let dep = s.dep_list[k].0;
+                    s.deps_left[dep] -= 1;
+                    if s.deps_left[dep] == 0 {
+                        self.try_promote(s, dep, now);
+                    }
                 }
-                let s = self.tasks[c.0].spec.stream.0;
-                // Advance the stream cursor past completed prefix.
-                while stream_cursor[s] < self.streams[s].len()
-                    && self.tasks[self.streams[s][stream_cursor[s]].0].phase == Phase::Done
-                {
-                    stream_cursor[s] += 1;
+                // Advance the stream cursor past the completed prefix;
+                // the newly exposed head may have become eligible.
+                let st = self.tasks[c].stream.0;
+                while s.stream_cursor[st] < self.streams[st].len() {
+                    let head = self.streams[st][s.stream_cursor[st]].0;
+                    if s.phase[head] == Phase::Done {
+                        s.stream_cursor[st] += 1;
+                    } else {
+                        self.try_promote(s, head, now);
+                        break;
+                    }
                 }
             }
-            promote(
-                &mut self.tasks,
-                &deps_left,
-                &stream_cursor,
-                &self.streams,
-                now,
-                self.trace,
-            );
         }
 
-        let task_spans = self.tasks.iter().map(|t| (t.start, t.finish)).collect();
-        let task_run_time = self
-            .tasks
-            .iter()
-            .map(|t| {
-                if t.run_start.is_nan() {
-                    0.0
-                } else {
-                    t.finish - t.run_start
-                }
-            })
-            .collect();
-        let ideal_work = self.tasks.iter().map(|t| t.spec.work).collect();
-        Ok(Report {
-            makespan: now,
-            task_spans,
-            task_run_time,
-            resource_busy,
-            events,
-            ideal_work,
-        })
-    }
-
-    /// Progressive-filling max–min fair rates for the running set.
-    /// All rates grow uniformly until a resource saturates (its tasks
-    /// freeze) or a task reaches rate 1.0; repeats on the remainder.
-    fn fair_rates(&self, running: &[usize]) -> Vec<f64> {
-        let m = running.len();
-        let mut rates = vec![0.0f64; m];
-        if m == 0 {
-            return rates;
-        }
-        let mut frozen = vec![false; m];
-        let mut rem: Vec<f64> = self.capacities.clone();
-
-        loop {
-            // Aggregate unfrozen demand per resource.
-            let mut sum = vec![0.0f64; rem.len()];
-            let mut any_unfrozen = false;
-            for (j, &i) in running.iter().enumerate() {
-                if frozen[j] {
-                    continue;
-                }
-                any_unfrozen = true;
-                for &(r, d) in &self.tasks[i].spec.demands {
-                    sum[r.0] += d;
-                }
-            }
-            if !any_unfrozen {
-                break;
-            }
-            // Max uniform rate increment.
-            let mut delta = f64::INFINITY;
-            for j in 0..m {
-                if !frozen[j] {
-                    delta = delta.min(1.0 - rates[j]);
-                }
-            }
-            for r in 0..rem.len() {
-                if sum[r] > EPS {
-                    delta = delta.min(rem[r] / sum[r]);
-                }
-            }
-            if !delta.is_finite() || delta < 0.0 {
-                break;
-            }
-            // Apply increment.
-            for (j, &i) in running.iter().enumerate() {
-                if frozen[j] {
-                    continue;
-                }
-                rates[j] += delta;
-                let _ = i;
-            }
-            for r in 0..rem.len() {
-                if sum[r] > EPS {
-                    rem[r] -= delta * sum[r];
-                }
-            }
-            // Freeze saturated tasks.
-            let mut progressed = false;
-            for (j, &i) in running.iter().enumerate() {
-                if frozen[j] {
-                    continue;
-                }
-                if rates[j] >= 1.0 - EPS {
-                    frozen[j] = true;
-                    progressed = true;
-                    continue;
-                }
-                let saturated = self.tasks[i]
-                    .spec
-                    .demands
-                    .iter()
-                    .any(|&(r, d)| d > EPS && rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
-                if saturated {
-                    frozen[j] = true;
-                    progressed = true;
-                }
-            }
-            if !progressed {
-                // delta was limited by the 1.0 cap of a task that was
-                // just frozen, or nothing changed: avoid spinning.
-                break;
-            }
-        }
-        rates
+        Ok((now, events))
     }
 }
 
@@ -735,5 +1049,80 @@ mod tests {
         }
         let rep = quick(e);
         assert!(rep.makespan > 0.0);
+    }
+
+    #[test]
+    fn lean_run_matches_full_run_bitwise() {
+        let mut e = Engine::new();
+        let r1 = e.add_resource(3.0);
+        let r2 = e.add_resource(7.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        let a = e.add_task(TaskSpec::new("a", s1).work(0.7).setup(0.1).demand(r1, 2.0));
+        e.add_task(
+            TaskSpec::new("b", s2)
+                .work(1.3)
+                .dep(a)
+                .demand(r1, 2.5)
+                .demand(r2, 6.0),
+        );
+        e.add_task(TaskSpec::new("c", s1).work(0.4).demand(r2, 7.0));
+        let full = e.run_full().expect("full run");
+        let lean = e.run_lean().expect("lean run");
+        assert_eq!(full.makespan.to_bits(), lean.makespan.to_bits());
+        assert_eq!(full.events, lean.events);
+    }
+
+    #[test]
+    fn reset_and_rebuild_reuses_the_skeleton() {
+        let mut e = Engine::new();
+        let r = e.add_resource(2.0);
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("a", s).work(1.0).demand(r, 2.0));
+        let first = e.run_lean().expect("first run").makespan;
+        // Same graph again through the builder API after a reset: the
+        // resources and streams survive, the makespan is identical.
+        e.reset_tasks();
+        assert_eq!(e.n_tasks(), 0);
+        e.task("a", s).work(1.0).demand(r, 2.0).finish();
+        let second = e.run_lean().expect("second run").makespan;
+        assert_eq!(first.to_bits(), second.to_bits());
+        // And a different graph sees the new tasks, not stale ones.
+        e.reset_tasks();
+        let t0 = e.task("x", s).work(1.0).demand(r, 2.0).finish();
+        e.task("y", s).work(1.0).dep(t0).demand(r, 2.0).finish();
+        let rep = e.run_full().expect("third run");
+        assert_eq!(rep.task_spans.len(), 2);
+        assert!((rep.makespan - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn builder_and_spec_produce_identical_graphs() {
+        let build = |via_spec: bool| {
+            let mut e = Engine::new();
+            let r = e.add_resource(5.0);
+            let s1 = e.add_stream();
+            let s2 = e.add_stream();
+            if via_spec {
+                let a = e.add_task(TaskSpec::new("a", s1).work(0.5).setup(0.25).demand(r, 4.0));
+                e.add_task(TaskSpec::new("b", s2).work(1.0).dep(a).demand(r, 3.0));
+            } else {
+                let a = e.task("a", s1).work(0.5).setup(0.25).demand(r, 4.0).finish();
+                e.task("b", s2).work(1.0).dep(a).demand(r, 3.0).finish();
+            }
+            e.run_full().expect("run")
+        };
+        let a = build(true);
+        let b = build(false);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.task_spans, b.task_spans);
+    }
+
+    #[test]
+    fn labels_render_lazily() {
+        assert_eq!(Label::Static("gemm").to_string(), "gemm");
+        assert_eq!(Label::indexed("n", 17).to_string(), "n17");
+        assert_eq!(Label::from("x".to_string()).to_string(), "x");
     }
 }

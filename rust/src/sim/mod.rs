@@ -10,13 +10,21 @@
 //! *emerge* from this sharing; decomposition losses (DIL) enter
 //! through each task's isolated-time `work`, computed by `cost`.
 //!
-//! [`engine`] is the generic simulator; [`cluster`] instantiates the
-//! resource set for a [`crate::hw::Machine`] and provides typed task
-//! builders for GEMMs, core-driven comm, DMA copies and local
-//! gather/scatter kernels.
+//! [`engine`] is the generic simulator — zero-allocation in steady
+//! state and reusable across task graphs (see `DESIGN.md` §6);
+//! [`cluster`] instantiates the resource set for a
+//! [`crate::hw::Machine`] and provides typed task builders for GEMMs,
+//! core-driven comm, DMA copies and local gather/scatter kernels.
+//! [`reference`] (debug/test builds only) keeps the pre-optimization
+//! event loop verbatim for the differential property tests.
 
 pub mod cluster;
 pub mod engine;
+#[cfg(debug_assertions)]
+pub mod reference;
 
 pub use cluster::{ClusterSim, CommMech};
-pub use engine::{Engine, Report, ResourceId, StreamId, TaskId, TaskSpec};
+pub use engine::{
+    trace_enabled, Engine, Label, LeanReport, Report, ResourceId, SimError, StreamId, TaskId,
+    TaskSpec,
+};

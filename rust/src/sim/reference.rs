@@ -1,0 +1,439 @@
+//! Kept-verbatim reference implementation of the fluid engine.
+//!
+//! This is the pre-optimization event loop of [`super::engine`],
+//! frozen so the differential property tests
+//! (`rust/tests/engine_differential.rs`) can assert that the
+//! scratch-buffer rewrite reports **bit-identical** makespans and
+//! event counts on arbitrary DAGs. Debug/test builds only — it is
+//! compiled out of release binaries. Do not "fix" or optimize this
+//! module: its entire value is that it stays exactly the algorithm
+//! the frozen goldens were recorded against.
+//!
+//! The only deliberate differences from the original file are
+//! cosmetic: the shared id types ([`ResourceId`], [`StreamId`],
+//! [`TaskId`]) and [`SimError`] are imported from the live engine so
+//! a test can drive both engines with one DAG description, and labels
+//! stay plain `String`s (the live engine's lazy [`super::Label`] is
+//! part of the optimization under test).
+
+use super::engine::{ResourceId, SimError, StreamId, TaskId};
+
+/// Task description handed to [`Engine::add_task`] (original form,
+/// with an eagerly built `String` label).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub label: String,
+    pub stream: StreamId,
+    pub deps: Vec<TaskId>,
+    /// Seconds of execution at rate 1.0 (isolated time, DIL included).
+    pub work: f64,
+    /// Fixed pre-work latency once ready (launch overhead, wire latency).
+    pub setup: f64,
+    /// Resource consumption per unit rate: at rate ρ the task uses
+    /// `ρ·demand` of each listed resource.
+    pub demands: Vec<(ResourceId, f64)>,
+}
+
+impl TaskSpec {
+    pub fn new(label: impl Into<String>, stream: StreamId) -> TaskSpec {
+        TaskSpec {
+            label: label.into(),
+            stream,
+            deps: Vec::new(),
+            work: 0.0,
+            setup: 0.0,
+            demands: Vec::new(),
+        }
+    }
+    pub fn dep(mut self, t: TaskId) -> Self {
+        self.deps.push(t);
+        self
+    }
+    pub fn deps(mut self, ts: &[TaskId]) -> Self {
+        self.deps.extend_from_slice(ts);
+        self
+    }
+    pub fn work(mut self, w: f64) -> Self {
+        self.work = w;
+        self
+    }
+    pub fn setup(mut self, s: f64) -> Self {
+        self.setup = s;
+        self
+    }
+    pub fn demand(mut self, r: ResourceId, d: f64) -> Self {
+        assert!(d >= 0.0);
+        self.demands.push((r, d));
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Waiting on deps / stream order.
+    Blocked,
+    /// Deps met; absorbing fixed setup latency until the given time.
+    Setup(f64),
+    /// Progressing under fair-shared rates.
+    Running,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Task {
+    spec: TaskSpec,
+    phase: Phase,
+    remaining: f64,
+    start: f64,
+    run_start: f64,
+    finish: f64,
+}
+
+/// Simulation output (reference form).
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Total simulated time until the last task completes.
+    pub makespan: f64,
+    /// Per-task (ready/queue-exit time, finish time).
+    pub task_spans: Vec<(f64, f64)>,
+    /// Per-task time actually spent in Running phase.
+    pub task_run_time: Vec<f64>,
+    /// Per-resource integral of consumption (capacity-units × seconds).
+    pub resource_busy: Vec<f64>,
+    /// Number of scheduling events processed.
+    pub events: usize,
+    /// Isolated work per task (copied from specs for slowdown calc).
+    pub ideal_work: Vec<f64>,
+}
+
+/// The reference engine. Build tasks, then [`Engine::run`].
+#[derive(Debug, Clone)]
+pub struct Engine {
+    capacities: Vec<f64>,
+    tasks: Vec<Task>,
+    streams: Vec<Vec<TaskId>>,
+    trace: bool,
+}
+
+const EPS: f64 = 1e-12;
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine {
+            capacities: Vec::new(),
+            tasks: Vec::new(),
+            streams: Vec::new(),
+            trace: std::env::var("FICCO_SIM_TRACE").is_ok(),
+        }
+    }
+
+    /// Register a resource with the given capacity; returns its id.
+    pub fn add_resource(&mut self, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource capacity must be positive");
+        self.capacities.push(capacity);
+        ResourceId(self.capacities.len() - 1)
+    }
+
+    /// Register a stream (in-order issue queue); returns its id.
+    pub fn add_stream(&mut self) -> StreamId {
+        self.streams.push(Vec::new());
+        StreamId(self.streams.len() - 1)
+    }
+
+    /// Add a task. Demands must reference registered resources; the
+    /// stream must be registered; deps must be earlier task ids.
+    pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        assert!(spec.stream.0 < self.streams.len(), "unknown stream");
+        for &(r, _) in &spec.demands {
+            assert!(r.0 < self.capacities.len(), "unknown resource");
+        }
+        for &d in &spec.deps {
+            assert!(d.0 < id.0, "dep {:?} not earlier than task {:?}", d, id);
+        }
+        assert!(spec.work >= 0.0 && spec.setup >= 0.0);
+        self.streams[spec.stream.0].push(id);
+        self.tasks.push(Task {
+            remaining: spec.work,
+            spec,
+            phase: Phase::Blocked,
+            start: f64::NAN,
+            run_start: f64::NAN,
+            finish: f64::NAN,
+        });
+        id
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> Result<Report, SimError> {
+        let n = self.tasks.len();
+        let mut done_count = 0usize;
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+        let mut resource_busy = vec![0.0f64; self.capacities.len()];
+        // Per-stream cursor: next task index in the stream not yet done.
+        let mut stream_cursor = vec![0usize; self.streams.len()];
+        // Dep completion counting.
+        let mut deps_left: Vec<usize> = self.tasks.iter().map(|t| t.spec.deps.len()).collect();
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.spec.deps {
+                dependents[d.0].push(TaskId(i));
+            }
+        }
+
+        // Promote Blocked → Setup for every task whose deps and stream
+        // predecessor are satisfied.
+        let promote = |tasks: &mut Vec<Task>,
+                           deps_left: &Vec<usize>,
+                           stream_cursor: &Vec<usize>,
+                           streams: &Vec<Vec<TaskId>>,
+                           now: f64,
+                           trace: bool| {
+            for s in 0..streams.len() {
+                let c = stream_cursor[s];
+                if c >= streams[s].len() {
+                    continue;
+                }
+                let tid = streams[s][c];
+                let t = &mut tasks[tid.0];
+                if t.phase == Phase::Blocked && deps_left[tid.0] == 0 {
+                    t.start = now;
+                    t.phase = Phase::Setup(now + t.spec.setup);
+                    if trace {
+                        eprintln!("[{now:.9}] ready  {}", t.spec.label);
+                    }
+                }
+            }
+        };
+
+        promote(
+            &mut self.tasks,
+            &deps_left,
+            &stream_cursor,
+            &self.streams,
+            now,
+            self.trace,
+        );
+
+        while done_count < n {
+            events += 1;
+            if events > 200 * n + 1000 {
+                return Err(SimError(format!(
+                    "event budget exceeded ({} events for {} tasks) — livelock?",
+                    events, n
+                )));
+            }
+
+            // Move Setup tasks whose latency elapsed into Running.
+            for t in self.tasks.iter_mut() {
+                if let Phase::Setup(until) = t.phase {
+                    if until <= now + EPS {
+                        t.phase = Phase::Running;
+                        t.run_start = now;
+                    }
+                }
+            }
+
+            // Collect running tasks and compute fair-share rates.
+            let running: Vec<usize> = (0..n)
+                .filter(|&i| self.tasks[i].phase == Phase::Running)
+                .collect();
+            let rates = self.fair_rates(&running);
+
+            // Next event: earliest of (a) a running task finishing at
+            // its current rate, (b) a setup deadline expiring.
+            let mut dt = f64::INFINITY;
+            for (j, &i) in running.iter().enumerate() {
+                let t = &self.tasks[i];
+                if t.remaining <= EPS {
+                    dt = 0.0;
+                    break;
+                }
+                if rates[j] > EPS {
+                    dt = dt.min(t.remaining / rates[j]);
+                }
+            }
+            for t in &self.tasks {
+                if let Phase::Setup(until) = t.phase {
+                    dt = dt.min((until - now).max(0.0));
+                }
+            }
+            if !dt.is_finite() {
+                let stuck: Vec<&str> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.phase != Phase::Done)
+                    .map(|t| t.spec.label.as_str())
+                    .take(8)
+                    .collect();
+                return Err(SimError(format!(
+                    "no runnable progress at t={now}; blocked tasks (cycle or zero-rate): {stuck:?}"
+                )));
+            }
+
+            // Integrate progress and resource usage over dt.
+            if dt > 0.0 {
+                for (j, &i) in running.iter().enumerate() {
+                    let rate = rates[j];
+                    self.tasks[i].remaining -= rate * dt;
+                    for &(r, d) in &self.tasks[i].spec.demands {
+                        resource_busy[r.0] += rate * d * dt;
+                    }
+                }
+                now += dt;
+            }
+
+            // Complete tasks that hit zero remaining.
+            let mut completed: Vec<TaskId> = Vec::new();
+            for &i in &running {
+                if self.tasks[i].remaining <= EPS {
+                    self.tasks[i].phase = Phase::Done;
+                    self.tasks[i].finish = now;
+                    completed.push(TaskId(i));
+                    done_count += 1;
+                    if self.trace {
+                        eprintln!("[{now:.9}] done   {}", self.tasks[i].spec.label);
+                    }
+                }
+            }
+            // Also complete zero-work tasks sitting in Setup with
+            // elapsed deadline and no work (they became Running above).
+
+            for c in &completed {
+                for &dep in &dependents[c.0] {
+                    deps_left[dep.0] -= 1;
+                }
+                let s = self.tasks[c.0].spec.stream.0;
+                // Advance the stream cursor past completed prefix.
+                while stream_cursor[s] < self.streams[s].len()
+                    && self.tasks[self.streams[s][stream_cursor[s]].0].phase == Phase::Done
+                {
+                    stream_cursor[s] += 1;
+                }
+            }
+            promote(
+                &mut self.tasks,
+                &deps_left,
+                &stream_cursor,
+                &self.streams,
+                now,
+                self.trace,
+            );
+        }
+
+        let task_spans = self.tasks.iter().map(|t| (t.start, t.finish)).collect();
+        let task_run_time = self
+            .tasks
+            .iter()
+            .map(|t| {
+                if t.run_start.is_nan() {
+                    0.0
+                } else {
+                    t.finish - t.run_start
+                }
+            })
+            .collect();
+        let ideal_work = self.tasks.iter().map(|t| t.spec.work).collect();
+        Ok(Report {
+            makespan: now,
+            task_spans,
+            task_run_time,
+            resource_busy,
+            events,
+            ideal_work,
+        })
+    }
+
+    /// Progressive-filling max–min fair rates for the running set.
+    /// All rates grow uniformly until a resource saturates (its tasks
+    /// freeze) or a task reaches rate 1.0; repeats on the remainder.
+    fn fair_rates(&self, running: &[usize]) -> Vec<f64> {
+        let m = running.len();
+        let mut rates = vec![0.0f64; m];
+        if m == 0 {
+            return rates;
+        }
+        let mut frozen = vec![false; m];
+        let mut rem: Vec<f64> = self.capacities.clone();
+
+        loop {
+            // Aggregate unfrozen demand per resource.
+            let mut sum = vec![0.0f64; rem.len()];
+            let mut any_unfrozen = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                any_unfrozen = true;
+                for &(r, d) in &self.tasks[i].spec.demands {
+                    sum[r.0] += d;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            // Max uniform rate increment.
+            let mut delta = f64::INFINITY;
+            for j in 0..m {
+                if !frozen[j] {
+                    delta = delta.min(1.0 - rates[j]);
+                }
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    delta = delta.min(rem[r] / sum[r]);
+                }
+            }
+            if !delta.is_finite() || delta < 0.0 {
+                break;
+            }
+            // Apply increment.
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                rates[j] += delta;
+                let _ = i;
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    rem[r] -= delta * sum[r];
+                }
+            }
+            // Freeze saturated tasks.
+            let mut progressed = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                if rates[j] >= 1.0 - EPS {
+                    frozen[j] = true;
+                    progressed = true;
+                    continue;
+                }
+                let saturated = self.tasks[i]
+                    .spec
+                    .demands
+                    .iter()
+                    .any(|&(r, d)| d > EPS && rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
+                if saturated {
+                    frozen[j] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // delta was limited by the 1.0 cap of a task that was
+                // just frozen, or nothing changed: avoid spinning.
+                break;
+            }
+        }
+        rates
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}

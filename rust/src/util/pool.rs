@@ -41,11 +41,39 @@ pub struct OrderedRun<R> {
 /// dispatch stops, in-flight items are allowed to finish but are
 /// discarded, and the returned results carry exactly the delivered
 /// prefix (so a cancelled run is as deterministic as a completed one).
-pub fn run_ordered<T, R, F, G>(items: &[T], jobs: usize, eval: F, mut on_result: G) -> OrderedRun<R>
+pub fn run_ordered<T, R, F, G>(items: &[T], jobs: usize, eval: F, on_result: G) -> OrderedRun<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
+    G: FnMut(usize, &R) -> bool,
+{
+    run_ordered_stateful(items, jobs, || (), |_, i, t| eval(i, t), on_result)
+}
+
+/// As [`run_ordered`], with a per-worker scratch state: each worker
+/// thread builds one `S` via `init` at startup and threads it through
+/// every item it evaluates. This is how the sweep/tune drivers give
+/// each worker a reusable [`crate::schedule::exec::Evaluator`] arena
+/// instead of rebuilding simulator state per cell.
+///
+/// Determinism contract: `eval` must return a value that is a pure
+/// function of the *item* — worker state may only affect speed (cache
+/// reuse, buffer warmth), never results. Everything [`run_ordered`]
+/// guarantees about ordering and cancellation holds unchanged,
+/// because which worker evaluates which item remains unobservable.
+pub fn run_ordered_stateful<T, R, S, I, F, G>(
+    items: &[T],
+    jobs: usize,
+    init: I,
+    eval: F,
+    mut on_result: G,
+) -> OrderedRun<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
     G: FnMut(usize, &R) -> bool,
 {
     let n = items.len();
@@ -63,17 +91,21 @@ where
             let cursor = &cursor;
             let stop = &stop;
             let eval = &eval;
-            s.spawn(move || loop {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                if tx.send((i, eval(i, &items[i]))).is_err() {
-                    // Receiver bailed: the run was cancelled.
-                    break;
+            let init = &init;
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, eval(&mut state, i, &items[i]))).is_err() {
+                        // Receiver bailed: the run was cancelled.
+                        break;
+                    }
                 }
             });
         }
@@ -179,6 +211,28 @@ mod tests {
         assert_eq!(clamp_jobs(4, 2), 2);
         assert_eq!(clamp_jobs(9999, 9999), MAX_JOBS);
         assert_eq!(clamp_jobs(3, 0), 1);
+    }
+
+    #[test]
+    fn worker_state_persists_within_a_worker_and_results_stay_ordered() {
+        // The per-worker state is a cache: results must not depend on
+        // it. Here each worker counts its own items; results are the
+        // item values, delivered in order regardless.
+        let items: Vec<usize> = (0..23).collect();
+        for jobs in [1, 2, 5] {
+            let run = run_ordered_stateful(
+                &items,
+                jobs,
+                || 0usize,
+                |seen: &mut usize, _, &x| {
+                    *seen += 1;
+                    assert!(*seen <= items.len(), "state leaked across workers");
+                    x * 3
+                },
+                |_, _| true,
+            );
+            assert_eq!(run.results, (0..23).map(|x| x * 3).collect::<Vec<_>>());
+        }
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Differential property tests: the optimized scratch-buffer engine
+//! vs the kept-verbatim reference implementation
+//! (`ficco::sim::reference`).
+//!
+//! The perf rewrite's hard constraint is that it changes *nothing*
+//! observable: every floating-point operation happens on the same
+//! values in the same order, so makespans, event counts, task spans,
+//! run times, and resource-busy integrals must be **bit-for-bit**
+//! identical on arbitrary DAGs — including zero-work sync tasks,
+//! setup-only tasks, and saturated multi-resource cells. The lean
+//! run mode must match too (it only skips accounting that never feeds
+//! back into event times).
+//!
+//! Debug builds only: the reference module is compiled out of release
+//! binaries.
+#![cfg(debug_assertions)]
+
+use ficco::sim::{reference, Engine, ResourceId, StreamId, TaskSpec};
+use ficco::util::prop::{self, Config};
+use ficco::util::rng::Rng;
+
+/// A randomly generated engine workload (indices, not handles, so the
+/// case is printable by the property driver on failure).
+#[derive(Debug, Clone)]
+struct DagCase {
+    caps: Vec<f64>,
+    n_streams: usize,
+    tasks: Vec<TaskCase>,
+}
+
+#[derive(Debug, Clone)]
+struct TaskCase {
+    stream: usize,
+    deps: Vec<usize>,
+    work: f64,
+    setup: f64,
+    demands: Vec<(usize, f64)>,
+}
+
+fn gen_dag(r: &mut Rng) -> DagCase {
+    let n_res = r.range(1, 5);
+    let caps: Vec<f64> = (0..n_res).map(|_| r.range_f64(1.0, 100.0)).collect();
+    let n_streams = r.range(1, 7);
+    let n_tasks = r.range(1, 41);
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for i in 0..n_tasks {
+        let mut deps = Vec::new();
+        if i > 0 {
+            for d in 0..i {
+                if r.bool(2.0 / (i as f64 + 1.0)) {
+                    deps.push(d);
+                }
+            }
+        }
+        // Zero-work sync tasks and setup-only tasks are deliberately
+        // common: they exercise the dt == 0 completion path and the
+        // deadline heap.
+        let work = if r.bool(0.15) { 0.0 } else { r.range_f64(1e-5, 0.01) };
+        let setup = if r.bool(0.3) { 0.0 } else { r.range_f64(0.0, 1e-4) };
+        let mut demands = Vec::new();
+        for (res, &cap) in caps.iter().enumerate() {
+            if r.bool(0.6) {
+                // Demands up to 1.5× capacity saturate resources hard.
+                demands.push((res, r.range_f64(0.1, 1.5 * cap)));
+            }
+        }
+        tasks.push(TaskCase {
+            stream: r.range(0, n_streams),
+            deps,
+            work,
+            setup,
+            demands,
+        });
+    }
+    DagCase {
+        caps,
+        n_streams,
+        tasks,
+    }
+}
+
+/// Build and run the case on the optimized engine (full accounting).
+fn run_optimized(case: &DagCase) -> Result<ficco::sim::Report, String> {
+    let mut e = Engine::new();
+    let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
+    let streams: Vec<StreamId> = (0..case.n_streams).map(|_| e.add_stream()).collect();
+    let mut ids = Vec::with_capacity(case.tasks.len());
+    for (i, t) in case.tasks.iter().enumerate() {
+        let mut spec = TaskSpec::new(format!("t{i}"), streams[t.stream])
+            .work(t.work)
+            .setup(t.setup);
+        for &d in &t.deps {
+            spec = spec.dep(ids[d]);
+        }
+        for &(res, demand) in &t.demands {
+            spec = spec.demand(resources[res], demand);
+        }
+        ids.push(e.add_task(spec));
+    }
+    e.run_full().map_err(|e| format!("optimized sim failed: {e}"))
+}
+
+/// Build and run the case on the optimized engine in lean mode.
+fn run_optimized_lean(case: &DagCase) -> Result<ficco::sim::LeanReport, String> {
+    let mut e = Engine::new();
+    let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
+    let streams: Vec<StreamId> = (0..case.n_streams).map(|_| e.add_stream()).collect();
+    let mut ids = Vec::with_capacity(case.tasks.len());
+    for (i, t) in case.tasks.iter().enumerate() {
+        let mut b = e.task(ficco::sim::Label::indexed("t", i), streams[t.stream]);
+        for &d in &t.deps {
+            b = b.dep(ids[d]);
+        }
+        b = b.work(t.work).setup(t.setup);
+        for &(res, demand) in &t.demands {
+            b = b.demand(resources[res], demand);
+        }
+        ids.push(b.finish());
+    }
+    e.run_lean().map_err(|e| format!("lean sim failed: {e}"))
+}
+
+/// Build and run the case on the kept-verbatim reference engine.
+fn run_reference(case: &DagCase) -> Result<reference::Report, String> {
+    let mut e = reference::Engine::new();
+    let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
+    let streams: Vec<StreamId> = (0..case.n_streams).map(|_| e.add_stream()).collect();
+    let mut ids = Vec::with_capacity(case.tasks.len());
+    for (i, t) in case.tasks.iter().enumerate() {
+        let mut spec = reference::TaskSpec::new(format!("t{i}"), streams[t.stream])
+            .work(t.work)
+            .setup(t.setup);
+        for &d in &t.deps {
+            spec = spec.dep(ids[d]);
+        }
+        for &(res, demand) in &t.demands {
+            spec = spec.demand(resources[res], demand);
+        }
+        ids.push(e.add_task(spec));
+    }
+    e.run().map_err(|e| format!("reference sim failed: {e}"))
+}
+
+fn assert_bits(name: &str, i: usize, a: f64, b: f64) -> Result<(), String> {
+    if a.to_bits() != b.to_bits() {
+        return Err(format!(
+            "{name}[{i}]: optimized {a:?} ({:#x}) != reference {b:?} ({:#x})",
+            a.to_bits(),
+            b.to_bits()
+        ));
+    }
+    Ok(())
+}
+
+fn check_case(case: &DagCase) -> Result<(), String> {
+    let opt = run_optimized(case)?;
+    let lean = run_optimized_lean(case)?;
+    let refr = run_reference(case)?;
+
+    assert_bits("makespan", 0, opt.makespan, refr.makespan)?;
+    assert_bits("lean makespan", 0, lean.makespan, refr.makespan)?;
+    if opt.events != refr.events {
+        return Err(format!(
+            "events: optimized {} != reference {}",
+            opt.events, refr.events
+        ));
+    }
+    if lean.events != refr.events {
+        return Err(format!(
+            "lean events: optimized {} != reference {}",
+            lean.events, refr.events
+        ));
+    }
+    for (i, (a, b)) in opt.task_spans.iter().zip(&refr.task_spans).enumerate() {
+        assert_bits("span.start", i, a.0, b.0)?;
+        assert_bits("span.finish", i, a.1, b.1)?;
+    }
+    for (i, (&a, &b)) in opt.task_run_time.iter().zip(&refr.task_run_time).enumerate() {
+        assert_bits("run_time", i, a, b)?;
+    }
+    for (i, (&a, &b)) in opt.resource_busy.iter().zip(&refr.resource_busy).enumerate() {
+        assert_bits("resource_busy", i, a, b)?;
+    }
+    for (i, (&a, &b)) in opt.ideal_work.iter().zip(&refr.ideal_work).enumerate() {
+        assert_bits("ideal_work", i, a, b)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn optimized_engine_is_bit_identical_to_reference_on_random_dags() {
+    prop::check_no_shrink(
+        "engine-differential",
+        &Config {
+            cases: 200,
+            ..Config::default()
+        },
+        gen_dag,
+        check_case,
+    );
+}
+
+#[test]
+fn zero_work_chains_match() {
+    // A stream of pure sync tasks (work 0, setup 0) fencing two real
+    // tasks: exercises same-instant completion cascades.
+    let case = DagCase {
+        caps: vec![4.0],
+        n_streams: 2,
+        tasks: vec![
+            TaskCase { stream: 0, deps: vec![], work: 0.0, setup: 0.0, demands: vec![] },
+            TaskCase { stream: 0, deps: vec![0], work: 0.0, setup: 0.0, demands: vec![] },
+            TaskCase { stream: 1, deps: vec![1], work: 0.005, setup: 0.0, demands: vec![(0, 4.0)] },
+            TaskCase { stream: 0, deps: vec![2], work: 0.0, setup: 0.0, demands: vec![] },
+            TaskCase { stream: 1, deps: vec![3], work: 0.003, setup: 0.0, demands: vec![(0, 2.0)] },
+        ],
+    };
+    check_case(&case).unwrap();
+}
+
+#[test]
+fn setup_only_tasks_match() {
+    // Tasks that are all setup and no work: the deadline heap is the
+    // only thing driving time forward.
+    let case = DagCase {
+        caps: vec![1.0],
+        n_streams: 3,
+        tasks: vec![
+            TaskCase { stream: 0, deps: vec![], work: 0.0, setup: 3e-4, demands: vec![] },
+            TaskCase { stream: 1, deps: vec![], work: 0.0, setup: 1e-4, demands: vec![] },
+            TaskCase { stream: 2, deps: vec![0, 1], work: 0.0, setup: 2e-4, demands: vec![] },
+            TaskCase { stream: 0, deps: vec![2], work: 0.0, setup: 5e-5, demands: vec![] },
+        ],
+    };
+    check_case(&case).unwrap();
+}
+
+#[test]
+fn saturated_multi_resource_cell_matches() {
+    // Many concurrent tasks over-subscribing two resources with a
+    // third uncontended: progressive filling freezes tasks in rounds.
+    let mut tasks = Vec::new();
+    for i in 0..12 {
+        tasks.push(TaskCase {
+            stream: i % 6,
+            deps: if i >= 6 { vec![i - 6] } else { vec![] },
+            work: 0.002 + 0.0005 * i as f64,
+            setup: if i % 3 == 0 { 2e-5 } else { 0.0 },
+            demands: vec![(0, 5.0), (1, 1.0 + i as f64 * 0.25), (2, 0.01)],
+        });
+    }
+    let case = DagCase {
+        caps: vec![10.0, 3.0, 50.0],
+        n_streams: 6,
+        tasks,
+    };
+    check_case(&case).unwrap();
+}
