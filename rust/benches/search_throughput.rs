@@ -36,6 +36,7 @@ fn spec() -> SweepSpec {
         skews: vec![0.0, 0.8],
         skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
+        model: None,
     }
 }
 

@@ -29,6 +29,7 @@ fn spec() -> SweepSpec {
         skews: Vec::new(),
         skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
+        model: None,
     }
 }
 

@@ -159,6 +159,110 @@ impl Args {
     }
 }
 
+/// Boolean switches the `ficco` binary registers at parse time
+/// (switch names are global: parsing must know them before the
+/// subcommand is dispatched).
+pub const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "csv", "no-overlap-report"];
+
+/// Every `ficco` subcommand, in help order.
+pub const SUBCOMMANDS: &[&str] = &[
+    "workloads",
+    "simulate",
+    "sweep",
+    "tune",
+    "heuristic",
+    "characterize",
+    "figures",
+    "synth",
+    "validate",
+    "train",
+    "calibrate",
+];
+
+/// The strict CLI contract: exactly the options and switches each
+/// `ficco` subcommand honors. A typo'd flag (`--treshold 2`,
+/// `--scenaro g5`) must fail loudly instead of silently running with
+/// defaults, so [`validate_strict`] rejects anything not listed here.
+pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [&'static str])> {
+    match sub {
+        "workloads" => Some((&[], &[])),
+        "simulate" => Some((
+            &["config", "gpus", "scenario", "m", "n", "k", "mech", "skew", "skew-seed"],
+            &[],
+        )),
+        "sweep" => Some((
+            &[
+                "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
+                "out-dir", "search", "model",
+            ],
+            &["verbose", "csv"],
+        )),
+        "tune" => Some((
+            &[
+                "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
+                "beam", "pieces", "slots", "model",
+            ],
+            &["verbose", "csv"],
+        )),
+        "heuristic" => Some((
+            &[
+                "config", "gpus", "scenario", "m", "n", "k", "mech", "skew", "skew-seed",
+                "threshold", "model",
+            ],
+            &["all"],
+        )),
+        "characterize" => Some((&["config", "gpus", "what"], &[])),
+        "figures" => Some((&["config", "gpus", "out-dir"], &["csv"])),
+        "synth" => Some((
+            &["config", "gpus", "count", "seed", "threshold", "suite", "against", "beam", "model"],
+            &[],
+        )),
+        "validate" => Some((&["artifacts", "m", "n", "k", "gpus"], &[])),
+        "train" => Some((
+            &["preset", "steps", "seed", "artifacts", "log-every", "loss-csv"],
+            &["no-overlap-report"],
+        )),
+        "calibrate" => Some((
+            &[
+                "scenarios", "holdout", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
+                "beam", "pieces", "slots", "out",
+            ],
+            &["verbose"],
+        )),
+        _ => None,
+    }
+}
+
+/// Enforce the strict CLI contract for the parsed subcommand: unknown
+/// options, inapplicable switches, and stray positional arguments are
+/// all errors. Unknown subcommands are left for the dispatcher (it
+/// has the better error message).
+pub fn validate_strict(args: &Args) -> Result<(), CliError> {
+    let sub = match args.subcommand.as_deref() {
+        Some(s) => s,
+        None => {
+            // Bare `ficco` prints the help banner, but `ficco --typo 2`
+            // must not masquerade as a successful run (exit 0) — with
+            // no subcommand, no option or switch is honored.
+            args.expect_known(&[])?;
+            args.expect_switches(&[])?;
+            return Ok(());
+        }
+    };
+    let (opts, switches) = match subcommand_spec(sub) {
+        Some(spec) => spec,
+        None => return Ok(()),
+    };
+    args.expect_known(opts)?;
+    args.expect_switches(switches)?;
+    if let Some(stray) = args.positional.first() {
+        return Err(CliError(format!(
+            "unexpected argument '{stray}' ({sub} takes only --options)"
+        )));
+    }
+    Ok(())
+}
+
 /// The host's available parallelism (fallback 1), the default for
 /// `--jobs`-style options.
 pub fn default_jobs() -> usize {
@@ -243,5 +347,76 @@ mod tests {
         assert!(a.expect_switches(&["verbose"]).is_err());
         assert!(a.expect_switches(&["all", "verbose"]).is_ok());
         assert!(a.expect_switches(&[]).is_err());
+    }
+
+    fn strict(argv: Vec<&str>) -> Result<(), CliError> {
+        validate_strict(&Args::parse(argv, KNOWN_SWITCHES).unwrap())
+    }
+
+    #[test]
+    fn every_subcommand_has_a_strict_spec() {
+        for &sub in SUBCOMMANDS {
+            assert!(subcommand_spec(sub).is_some(), "{sub} missing from spec table");
+        }
+        assert!(subcommand_spec("nonsense").is_none());
+        // Bare invocation (help banner) is fine; a flag with no
+        // subcommand is not — it would exit 0 looking successful.
+        assert!(strict(vec![]).is_ok());
+        assert!(strict(vec!["--treshold", "2"]).is_err());
+        assert!(strict(vec!["--verbose"]).is_err());
+    }
+
+    #[test]
+    fn strict_rejects_unknown_options_on_every_subcommand() {
+        // Regression: 7 of 10 subcommands used to silently drop
+        // typo'd options and run with defaults.
+        for &sub in SUBCOMMANDS {
+            let e = strict(vec![sub, "--definitely-bogus", "1"]).unwrap_err();
+            assert!(e.0.contains("definitely-bogus"), "{sub}: {}", e.0);
+        }
+    }
+
+    #[test]
+    fn strict_rejects_typod_options_per_subcommand() {
+        // The exact typos from the bug report, plus one per remaining
+        // subcommand.
+        assert!(strict(vec!["heuristic", "--treshold", "2"]).is_err());
+        assert!(strict(vec!["simulate", "--scenaro", "g5"]).is_err());
+        assert!(strict(vec!["characterize", "--waht", "dil"]).is_err());
+        assert!(strict(vec!["figures", "--outdir", "r"]).is_err());
+        assert!(strict(vec!["synth", "--cout", "4"]).is_err());
+        assert!(strict(vec!["validate", "--artifact", "a"]).is_err());
+        assert!(strict(vec!["train", "--step", "5"]).is_err());
+        assert!(strict(vec!["workloads", "--anything", "x"]).is_err());
+        assert!(strict(vec!["sweep", "--scenario", "g5"]).is_err(), "sweep takes --scenarios");
+        assert!(strict(vec!["tune", "--kinds", "all"]).is_err(), "tune has no kinds filter");
+        assert!(strict(vec!["calibrate", "--houldout", "x"]).is_err());
+    }
+
+    #[test]
+    fn strict_accepts_each_subcommands_own_flags() {
+        assert!(strict(vec!["workloads"]).is_ok());
+        assert!(strict(vec!["simulate", "--scenario", "g5", "--mech", "dma"]).is_ok());
+        assert!(strict(vec!["sweep", "--scenarios", "g1", "--jobs", "2", "--csv"]).is_ok());
+        assert!(strict(vec!["tune", "--beam", "4", "--pieces", "1,8", "--verbose"]).is_ok());
+        assert!(strict(vec!["heuristic", "--all", "--threshold", "2"]).is_ok());
+        assert!(strict(vec!["characterize", "--what", "cil"]).is_ok());
+        assert!(strict(vec!["figures", "--out-dir", "r", "--csv"]).is_ok());
+        assert!(strict(vec!["synth", "--count", "8", "--against", "plans"]).is_ok());
+        assert!(strict(vec!["validate", "--artifacts", "a", "--m", "64"]).is_ok());
+        assert!(strict(vec!["train", "--preset", "tiny", "--no-overlap-report"]).is_ok());
+        assert!(strict(vec!["calibrate", "--holdout", "holdout:4:7", "--out", "m.ficco"]).is_ok());
+    }
+
+    #[test]
+    fn strict_rejects_inapplicable_switches_and_positionals() {
+        // `--all` is a real switch, but only `heuristic` honors it.
+        assert!(strict(vec!["simulate", "--all"]).is_err());
+        assert!(strict(vec!["figures", "--verbose"]).is_err());
+        assert!(strict(vec!["heuristic", "--csv"]).is_err());
+        // Stray positionals (e.g. a value after a switch) are errors.
+        let e = strict(vec!["sweep", "stray"]).unwrap_err();
+        assert!(e.0.contains("stray"), "{}", e.0);
+        assert!(strict(vec!["simulate", "g5"]).is_err());
     }
 }

@@ -16,15 +16,16 @@ use super::CellResult;
 use crate::metrics::Exhibit;
 use crate::schedule::Kind;
 use crate::util::stats;
-use crate::util::table::{f, x, Align, Table};
+use crate::util::table::{f, Align, Table};
 
 /// Column header shared by the CSV emitter and its tests. The
 /// best-plan columns are filled only when the sweep ran with a
-/// plan-space search (`--search`); they stay empty otherwise so the
-/// artifact shape is stable.
+/// plan-space search (`--search`), and `model_pick` only when a
+/// calibrated model was loaded (`--model`); they stay empty otherwise
+/// so the artifact shape is stable.
 pub const CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,skew,m,n,k,kind,\
 makespan,speedup,gemm_leg,comm_leg,gemm_cil,comm_cil,n_tasks,is_pick,is_oracle,\
-best_plan,best_plan_speedup";
+best_plan,best_plan_speedup,model_pick";
 
 /// RFC-4180-ish quoting for the free-form name fields (CLI-produced
 /// names are comma-free, but `Scenario::new` is public API).
@@ -42,10 +43,11 @@ pub fn csv_rows(c: &CellResult) -> String {
         Some(b) => (b.id.clone(), b.speedup.to_string()),
         None => (String::new(), String::new()),
     };
+    let model_pick = c.model_plan.clone().unwrap_or_default();
     let mut out = String::new();
     for r in &c.rows {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_escape(&c.scenario),
             csv_escape(&c.machine_name),
             c.topology,
@@ -68,6 +70,7 @@ pub fn csv_rows(c: &CellResult) -> String {
             r.is_oracle,
             best_plan,
             best_plan_speedup,
+            model_pick,
         ));
     }
     out
@@ -95,7 +98,7 @@ pub fn json_cell(c: &CellResult) -> String {
         "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
          \"mech\":\"{}\",\"collective\":\"{}\",\"skew\":{},\"m\":{},\"n\":{},\"k\":{},\
          \"heuristic_pick\":\"{}\",\"oracle\":{},\"ideal_speedup\":{},\
-         \"best_plan\":{},\"schedules\":[",
+         \"best_plan\":{},\"model_pick\":{},\"schedules\":[",
         json_escape(&c.scenario),
         json_escape(&c.machine_name),
         c.topology,
@@ -118,6 +121,10 @@ pub fn json_cell(c: &CellResult) -> String {
                 json_escape(&b.id),
                 b.speedup
             ),
+            None => "null".to_string(),
+        },
+        match &c.model_plan {
+            Some(p) => format!("\"{}\"", json_escape(p)),
             None => "null".to_string(),
         },
     ));
@@ -225,10 +232,20 @@ pub fn summary(cells: &[CellResult]) -> Exhibit {
                 .filter_map(|c| c.rows.iter().find(|r| r.kind == kind))
                 .map(|r| r.speedup)
                 .collect();
-            let g = stats::geomean(&speedups);
-            row.push(x(g));
+            // A zero/NaN speedup cell is dropped from the geomean —
+            // the cell and a `geomean_skipped_*` summary flag the
+            // drop instead of skipping silently (the old behaviour
+            // was an abort).
+            let (g, skipped, cell) = stats::geomean_summary(&speedups);
+            row.push(cell);
             if kind.is_ficco() {
                 summaries.push((format!("geomean_{}_{}", mach, kind.name()), g));
+                if skipped > 0 {
+                    summaries.push((
+                        format!("geomean_skipped_{}_{}", mach, kind.name()),
+                        skipped as f64,
+                    ));
+                }
             }
         }
         // A cell is scoreable only when the oracle is meaningful: the
@@ -285,6 +302,7 @@ mod tests {
             skews: Vec::new(),
             skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         };
         spec.cells().iter().map(eval_cell).collect()
     }
@@ -338,6 +356,7 @@ mod tests {
             skews: Vec::new(),
             skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         };
         let r = eval_cell(&spec.cells()[0]);
         let ncols = CSV_HEADER.split(',').count();

@@ -67,6 +67,10 @@ pub struct SweepSpec {
     /// When set, each cell also searches the parameterized plan space
     /// and the emitters fill the best-plan columns.
     pub search: Option<crate::search::SearchCfg>,
+    /// When set, the per-cell static pick comes from this calibrated
+    /// plan-space model (`--model`) instead of the frozen Fig-12a
+    /// rule, and the emitters fill the `model_pick` column.
+    pub model: Option<crate::heuristics::model::HeuristicModel>,
 }
 
 impl SweepSpec {
@@ -86,12 +90,14 @@ impl SweepSpec {
             skews: Vec::new(),
             skew_seed: DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         }
     }
 
     /// Build a spec from CLI-style comma-separated filters. Accepted:
     /// - scenarios: `table1`, `g1,g5,g13`, `synth:COUNT:SEED`,
-    ///   `moe:COUNT:SEED` (skewed EP dispatch suite)
+    ///   `moe:COUNT:SEED` (skewed EP dispatch suite),
+    ///   `holdout:COUNT:SEED` (calibration holdout suite)
     /// - kinds: `all` or schedule names (`uniform-fused-1D`, ...)
     /// - machines: `all` or preset names (`mi300x-8`, ...)
     /// - mechs: `dma`, `rccl` (alias `kernel`), or `dma,rccl`
@@ -115,6 +121,7 @@ impl SweepSpec {
             skews: Vec::new(),
             skew_seed: DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         };
 
         for part in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -145,11 +152,24 @@ impl SweepSpec {
                     .map_err(|_| format!("bad moe seed in '{part}'"))?;
                 spec.scenarios
                     .extend(workloads::synthetic_moe_scenarios(seed, count));
+            } else if let Some(rest) = part.strip_prefix("holdout:") {
+                let (count, seed) = rest.split_once(':').ok_or_else(|| {
+                    format!("bad holdout filter '{part}' (want holdout:COUNT:SEED)")
+                })?;
+                let count: usize = count
+                    .parse()
+                    .map_err(|_| format!("bad holdout count in '{part}'"))?;
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("bad holdout seed in '{part}'"))?;
+                spec.scenarios
+                    .extend(workloads::holdout_scenarios(seed, count));
             } else if let Some(sc) = workloads::by_name(part) {
                 spec.scenarios.push(sc);
             } else {
                 return Err(format!(
-                    "unknown scenario '{part}' (try one of {}, table1, synth:N:SEED, moe:N:SEED)",
+                    "unknown scenario '{part}' (try one of {}, table1, synth:N:SEED, moe:N:SEED, \
+                     holdout:N:SEED)",
                     workloads::names().join("/")
                 ));
             }
@@ -326,6 +346,7 @@ impl SweepSpec {
                                 scenario,
                                 kinds: kinds.clone(),
                                 search: self.search,
+                                model: self.model.clone(),
                             });
                         }
                     }
@@ -369,6 +390,9 @@ pub struct Cell {
     pub kinds: Vec<Kind>,
     /// Plan-space search configuration (None = fixed kinds only).
     pub search: Option<crate::search::SearchCfg>,
+    /// Calibrated decision model for the static pick (None = the
+    /// frozen Fig-12a rule, the bit-stable legacy path).
+    pub model: Option<crate::heuristics::model::HeuristicModel>,
 }
 
 /// One schedule kind's measurements within a cell.
@@ -415,6 +439,9 @@ pub struct CellResult {
     /// Best plan found by searching the parameterized plan space
     /// (None when the sweep ran without `--search`).
     pub best_plan: Option<BestPlan>,
+    /// Full plan predicted by the calibrated model (None when the
+    /// sweep ran without `--model`; then `pick` is the frozen rule's).
+    pub model_plan: Option<String>,
     pub eval_seconds: f64,
 }
 
@@ -441,7 +468,16 @@ pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
     let t0 = Instant::now();
     let machine = &cell.machine;
     let sc = &cell.scenario;
-    let pick = crate::heuristics::pick(machine, sc).pick;
+    // Static pick: the calibrated model's full-plan prediction when
+    // one is loaded, else the frozen Fig-12a rule (bit-identical to
+    // the pre-model sweep artifacts).
+    let (pick, model_plan) = match &cell.model {
+        Some(model) => {
+            let d = model.predict(machine, sc);
+            (d.kind, Some(d.plan.id()))
+        }
+        None => (crate::heuristics::pick(machine, sc).pick, None),
+    };
     let scev = ScenarioEval::run_in(ev, machine, sc, &cell.kinds);
     let oracle = scev.best_ficco().map(|(k, _)| k);
     // Optional plan-space search. The cache is per-cell (the emitted
@@ -496,6 +532,7 @@ pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
         ideal_speedup: scev.ideal_speedup(),
         rows,
         best_plan,
+        model_plan,
         eval_seconds: t0.elapsed().as_secs_f64(),
     }
 }
@@ -574,6 +611,7 @@ mod tests {
             skews: Vec::new(),
             skew_seed: DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         }
     }
 
@@ -614,6 +652,39 @@ mod tests {
         assert_eq!(r.rows.iter().filter(|row| row.is_oracle).count(), 1);
         assert!(r.oracle.is_some());
         assert!(r.rows.iter().all(|row| row.makespan > 0.0));
+    }
+
+    #[test]
+    fn model_drives_the_pick_column() {
+        use crate::heuristics::model::{CountVal, Feature, HeuristicModel, Rule};
+        let mut spec = tiny_spec();
+        // Without a model the cell reports the frozen rule's pick and
+        // no model plan.
+        let legacy = eval_cell(&spec.cells()[0]);
+        assert!(legacy.model_plan.is_none());
+        // A loaded model fills the model_pick column with its full
+        // plan prediction.
+        spec.model = Some(HeuristicModel {
+            pieces: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: 0.0,
+                below: CountVal::Keep,
+                at_or_above: CountVal::TwiceGpus,
+            }),
+            ..HeuristicModel::default()
+        });
+        let cells = spec.cells();
+        let cell = &cells[0];
+        assert!(cell.model.is_some());
+        let r = eval_cell(cell);
+        let plan_id = r.model_plan.expect("model plan recorded");
+        let plan = crate::plan::Plan::parse_id(&plan_id).expect("well-formed plan id");
+        assert_eq!(plan.pieces, 2 * cell.scenario.ngpus);
+        // The default model reproduces the legacy pick exactly.
+        spec.model = Some(HeuristicModel::default());
+        let d = eval_cell(&spec.cells()[0]);
+        assert_eq!(d.pick, legacy.pick);
+        assert!(d.model_plan.is_some());
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Calibration: fit a [`HeuristicModel`] against `ficco tune`
+//! searched optima (DESIGN.md §7).
+//!
+//! The fit is a deterministic grid + greedy coordinate search:
+//!
+//! 1. score the frozen default model on the training examples;
+//! 2. grid-search the Fig-12a threshold scale (rule-free models);
+//! 3. for each plan axis in fixed order (pieces, slots, fused,
+//!    head-start, shape), try every candidate decision rule —
+//!    feature × cutoff × (below, at-or-above) value pair — on top of
+//!    the incumbent and keep the best strict improvement.
+//!
+//! The objective is the mean fraction of the searched-optimum speedup
+//! lost over the suite (plan-level hits tie-break). Every candidate's
+//! predicted plans are simulated through one shared [`EvalCache`] /
+//! [`Evaluator`] pair, so repeated predictions cost a hash lookup.
+//! Candidate order is fixed and scoring is sequential, so the fitted
+//! model — and its serialized artifact — is byte-identical for any
+//! `--jobs` used to produce the training examples.
+//!
+//! [`calibrate`] adds the **holdout gate** (the fallback semantics):
+//! the fitted model ships only if it does not degrade the frozen
+//! Fig-12a rule on a held-out suite — otherwise the default model is
+//! returned — so the accepted model's holdout hit-rate is ≥ the
+//! frozen rule's by construction.
+
+use crate::plan::CommShape;
+use crate::schedule::exec::Evaluator;
+use crate::search::{CalExample, EvalCache};
+
+use super::model::{CountVal, Feature, FlagVal, HeuristicModel, Rule, ShapeVal};
+
+/// How a model scores on a calibration suite (plan-level).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuiteScore {
+    /// Scenarios where the predicted plan IS the searched optimum.
+    pub plan_hits: usize,
+    pub n: usize,
+    /// Mean fraction of the searched-optimum speedup lost by the
+    /// predictions, over the whole suite (0 contribution on hits).
+    pub mean_loss: f64,
+}
+
+impl SuiteScore {
+    /// Plan-level hit rate; an empty suite is vacuously accurate.
+    pub fn hit_rate(&self) -> f64 {
+        if self.n == 0 {
+            1.0
+        } else {
+            self.plan_hits as f64 / self.n as f64
+        }
+    }
+}
+
+/// Score `model` on `examples`: each predicted plan is simulated
+/// through the shared cache/evaluator (memoized across candidate
+/// models) and compared against the example's searched optimum.
+pub fn score_model(
+    model: &HeuristicModel,
+    examples: &[CalExample],
+    cache: &EvalCache,
+    ev: &mut Evaluator,
+) -> SuiteScore {
+    let mut hits = 0usize;
+    let mut loss_sum = 0.0f64;
+    for exm in examples {
+        let d = model.predict(&exm.machine, &exm.scenario);
+        if d.plan == exm.searched_plan {
+            hits += 1;
+            continue; // exact hit: zero loss, nothing to simulate
+        }
+        let ms = cache.makespan_in(ev, &exm.machine_name, &exm.machine, &exm.scenario, &d.plan);
+        // Loss vs the searched optimum, clamped at 0: a prediction
+        // outside the searched space can legitimately beat it. A
+        // prediction that does not simulate to a positive finite
+        // makespan is maximally wrong — scoring it 0 would let a
+        // degenerate candidate flatter its way past every honest one
+        // (and through the holdout gate).
+        loss_sum += if ms.is_finite() && ms > 0.0 {
+            (1.0 - exm.searched_makespan / ms).max(0.0)
+        } else {
+            1.0
+        };
+    }
+    SuiteScore {
+        plan_hits: hits,
+        n: examples.len(),
+        mean_loss: if examples.is_empty() {
+            0.0
+        } else {
+            loss_sum / examples.len() as f64
+        },
+    }
+}
+
+/// Fit configuration: the threshold-scale grid. (Axis-rule candidates
+/// — features, cutoffs, symbolic values — are fixed; see the module
+/// consts.)
+#[derive(Debug, Clone)]
+pub struct FitCfg {
+    pub threshold_grid: Vec<f64>,
+}
+
+impl Default for FitCfg {
+    fn default() -> FitCfg {
+        FitCfg {
+            threshold_grid: vec![0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0],
+        }
+    }
+}
+
+/// Candidate cutoffs per feature (rough decision boundaries of each
+/// metric's natural scale; the greedy fit picks among them).
+fn cutoffs(feature: Feature) -> &'static [f64] {
+    match feature {
+        Feature::NormOtb => &[0.5, 1.0, 2.0],
+        Feature::NormMt => &[0.5, 1.0, 2.0, 5.0],
+        Feature::Combined => &[0.5, 1.0, 2.0, 5.0, 10.0],
+        Feature::Imbalance => &[1.05, 1.25, 1.5, 2.0],
+        Feature::HotShare => &[0.2, 0.3, 0.5],
+    }
+}
+
+const PIECES_VALS: [CountVal; 6] = [
+    CountVal::Keep,
+    CountVal::Const(2),
+    CountVal::Const(4),
+    CountVal::HalfGpus,
+    CountVal::Gpus,
+    CountVal::TwiceGpus,
+];
+
+const SLOTS_VALS: [CountVal; 4] = [
+    CountVal::Keep,
+    CountVal::Const(1),
+    CountVal::Const(2),
+    CountVal::FullMesh,
+];
+
+const FLAG_VALS: [FlagVal; 3] = [FlagVal::Keep, FlagVal::Set(false), FlagVal::Set(true)];
+
+const SHAPE_VALS: [ShapeVal; 3] = [
+    ShapeVal::Keep,
+    ShapeVal::Set(CommShape::Row),
+    ShapeVal::Set(CommShape::Col),
+];
+
+/// All candidate rules over a value set, in deterministic order.
+/// Pairs with `below == at_or_above` are feature-independent and
+/// excluded (they are not decision rules).
+fn rules_for<V: Copy + PartialEq>(vals: &[V]) -> Vec<Rule<V>> {
+    let mut out = Vec::new();
+    for feature in Feature::ALL {
+        for &cutoff in cutoffs(feature) {
+            for &below in vals {
+                for &at_or_above in vals {
+                    if below != at_or_above {
+                        out.push(Rule {
+                            feature,
+                            cutoff,
+                            below,
+                            at_or_above,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Is `a` strictly better than `b`? Primary: lower mean loss (beyond
+/// a float-noise margin); tie-break: more plan hits. Strictness keeps
+/// the fit deterministic and biased toward the earlier (simpler)
+/// candidate.
+fn better(a: &SuiteScore, b: &SuiteScore) -> bool {
+    if a.mean_loss < b.mean_loss - 1e-12 {
+        return true;
+    }
+    if a.mean_loss > b.mean_loss + 1e-12 {
+        return false;
+    }
+    a.plan_hits > b.plan_hits
+}
+
+/// Result of [`fit`]: the best model found and how it compares to the
+/// frozen default on the training suite.
+#[derive(Debug, Clone)]
+pub struct FitOutcome {
+    pub model: HeuristicModel,
+    pub train: SuiteScore,
+    pub default_train: SuiteScore,
+    /// Candidate models scored (diagnostic).
+    pub candidates: usize,
+}
+
+fn try_axis<V: Copy + PartialEq>(
+    best: &mut (HeuristicModel, SuiteScore),
+    vals: &[V],
+    set: impl Fn(&mut HeuristicModel, Rule<V>),
+    train: &[CalExample],
+    cache: &EvalCache,
+    ev: &mut Evaluator,
+    candidates: &mut usize,
+) {
+    for rule in rules_for(vals) {
+        let mut m = best.0.clone();
+        set(&mut m, rule);
+        *candidates += 1;
+        let s = score_model(&m, train, cache, ev);
+        if better(&s, &best.1) {
+            *best = (m, s);
+        }
+    }
+}
+
+/// Fit a model to the training examples (no holdout gate — see
+/// [`calibrate`]). The default model is always a candidate, so the
+/// fitted model never scores worse than the frozen rule on `train`.
+pub fn fit(
+    train: &[CalExample],
+    cfg: &FitCfg,
+    cache: &EvalCache,
+    ev: &mut Evaluator,
+) -> FitOutcome {
+    let mut candidates = 0usize;
+    let default_train = score_model(&HeuristicModel::default(), train, cache, ev);
+    let mut best = (HeuristicModel::default(), default_train);
+
+    for &scale in &cfg.threshold_grid {
+        if !(scale.is_finite() && scale > 0.0) {
+            continue;
+        }
+        let m = HeuristicModel {
+            threshold_scale: scale,
+            ..HeuristicModel::default()
+        };
+        candidates += 1;
+        let s = score_model(&m, train, cache, ev);
+        if better(&s, &best.1) {
+            best = (m, s);
+        }
+    }
+
+    try_axis(&mut best, &PIECES_VALS, |m, r| m.pieces = Some(r), train, cache, ev, &mut candidates);
+    try_axis(&mut best, &SLOTS_VALS, |m, r| m.slots = Some(r), train, cache, ev, &mut candidates);
+    try_axis(&mut best, &FLAG_VALS, |m, r| m.fused = Some(r), train, cache, ev, &mut candidates);
+    try_axis(
+        &mut best,
+        &FLAG_VALS,
+        |m, r| m.head_start = Some(r),
+        train,
+        cache,
+        ev,
+        &mut candidates,
+    );
+    try_axis(&mut best, &SHAPE_VALS, |m, r| m.shape = Some(r), train, cache, ev, &mut candidates);
+
+    FitOutcome {
+        model: best.0,
+        train: best.1,
+        default_train,
+        candidates,
+    }
+}
+
+/// Result of [`calibrate`]: the accepted model plus every score the
+/// holdout gate weighed.
+#[derive(Debug, Clone)]
+pub struct CalibrationOutcome {
+    /// The accepted model: the fitted one, or the frozen default when
+    /// the holdout gate rejected the fit.
+    pub model: HeuristicModel,
+    /// What the fit produced before the gate.
+    pub fitted: HeuristicModel,
+    pub fell_back: bool,
+    /// Training score of the fitted model.
+    pub train: SuiteScore,
+    pub default_train: SuiteScore,
+    /// Holdout score of the **accepted** model.
+    pub holdout: SuiteScore,
+    /// Holdout score of the frozen default (the gate's reference).
+    pub default_holdout: SuiteScore,
+    /// Holdout score of the fitted model (== `holdout` unless the fit
+    /// fell back).
+    pub fitted_holdout: SuiteScore,
+    pub candidates: usize,
+}
+
+/// Fit on `train`, then apply the holdout gate: accept the fitted
+/// model only if its holdout plan-hit count is ≥ the frozen default's
+/// and its holdout mean loss is no worse. The accepted model's
+/// holdout hit-rate is therefore ≥ the Fig-12a rule's by
+/// construction.
+pub fn calibrate(
+    train: &[CalExample],
+    holdout: &[CalExample],
+    cfg: &FitCfg,
+) -> CalibrationOutcome {
+    let cache = EvalCache::new();
+    let mut ev = Evaluator::new();
+    let out = fit(train, cfg, &cache, &mut ev);
+    let default_model = HeuristicModel::default();
+    let default_holdout = score_model(&default_model, holdout, &cache, &mut ev);
+    let fitted_holdout = score_model(&out.model, holdout, &cache, &mut ev);
+    let accept = fitted_holdout.plan_hits >= default_holdout.plan_hits
+        && fitted_holdout.mean_loss <= default_holdout.mean_loss + 1e-9;
+    CalibrationOutcome {
+        model: if accept {
+            out.model.clone()
+        } else {
+            default_model
+        },
+        fitted: out.model,
+        fell_back: !accept,
+        train: out.train,
+        default_train: out.default_train,
+        holdout: if accept { fitted_holdout } else { default_holdout },
+        default_holdout,
+        fitted_holdout,
+        candidates: out.candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_score_hit_rate() {
+        let s = SuiteScore {
+            plan_hits: 3,
+            n: 4,
+            mean_loss: 0.1,
+        };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        let empty = SuiteScore {
+            plan_hits: 0,
+            n: 0,
+            mean_loss: 0.0,
+        };
+        assert_eq!(empty.hit_rate(), 1.0, "vacuously accurate");
+    }
+
+    #[test]
+    fn better_orders_by_loss_then_hits() {
+        let a = SuiteScore { plan_hits: 1, n: 4, mean_loss: 0.05 };
+        let b = SuiteScore { plan_hits: 3, n: 4, mean_loss: 0.10 };
+        assert!(better(&a, &b), "lower loss wins despite fewer hits");
+        assert!(!better(&b, &a));
+        let c = SuiteScore { plan_hits: 2, n: 4, mean_loss: 0.05 };
+        assert!(better(&c, &a), "equal loss, more hits wins");
+        assert!(!better(&a, &c));
+        assert!(!better(&a, &a), "strictness: a candidate never beats itself");
+    }
+
+    #[test]
+    fn score_model_on_empty_suite() {
+        let s = score_model(
+            &HeuristicModel::default(),
+            &[],
+            &EvalCache::new(),
+            &mut Evaluator::new(),
+        );
+        assert_eq!((s.plan_hits, s.n), (0, 0));
+        assert_eq!(s.mean_loss, 0.0);
+        assert_eq!(s.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn rule_candidates_are_real_decision_rules() {
+        let rules = rules_for(&FLAG_VALS);
+        assert!(!rules.is_empty());
+        assert!(rules.iter().all(|r| r.below != r.at_or_above));
+        // Deterministic enumeration: two calls agree exactly.
+        assert_eq!(rules, rules_for(&FLAG_VALS));
+        // Every feature appears.
+        for f in Feature::ALL {
+            assert!(rules.iter().any(|r| r.feature == f), "{:?}", f);
+        }
+    }
+}

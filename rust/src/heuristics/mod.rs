@@ -16,14 +16,23 @@
 //! The oracle (argmin over simulated schedules) lives here too — it is
 //! what the heuristic is scored against in §VI-D.
 
+pub mod fit;
+pub mod model;
+
 use crate::hw::Machine;
 use crate::schedule::exec::ScenarioEval;
 use crate::schedule::{Kind, Scenario};
 
 /// Tuned multiplier on the machine-balance threshold separating the
-/// uniform-fused-1D regime; the hetero-unfused regime starts at 5×
-/// this (the paper's "exceeds the threshold by 5×").
+/// uniform-fused-1D regime; the hetero-unfused regime starts at
+/// [`THRESHOLD_BAND`]× this.
 pub const DEFAULT_THRESHOLD_SCALE: f64 = 1.0;
+
+/// Width of the hetero-fused band: the hetero-unfused regime starts
+/// at this multiple of the (scaled) threshold (the paper's "exceeds
+/// the threshold by 5×"). Shared with the CLI so the printed decision
+/// boundary can never drift from the rule.
+pub const THRESHOLD_BAND: f64 = 5.0;
 
 /// Static metrics the heuristic reads (Fig 12a inputs).
 #[derive(Debug, Clone, Copy)]
@@ -104,19 +113,24 @@ pub fn pick_with_threshold(machine: &Machine, sc: &Scenario, scale: f64) -> Deci
             Kind::UniformFused1D,
             format!("combined {:.3} < {:.3} (low OTB+MT): DIL-sensitive", m.combined, t),
         )
-    } else if m.combined > 5.0 * t {
+    } else if m.combined > THRESHOLD_BAND * t {
         (
             Kind::HeteroUnfused1D,
             format!(
                 "combined {:.3} > {:.3} (high OTB+MT): CIL-sensitive",
                 m.combined,
-                5.0 * t
+                THRESHOLD_BAND * t
             ),
         )
     } else {
         (
             Kind::HeteroFused1D,
-            format!("combined {:.3} in [{:.3}, {:.3}]: balanced", m.combined, t, 5.0 * t),
+            format!(
+                "combined {:.3} in [{:.3}, {:.3}]: balanced",
+                m.combined,
+                t,
+                THRESHOLD_BAND * t
+            ),
         )
     };
     Decision {
@@ -140,6 +154,14 @@ pub struct Scored {
     pub searched_speedup: Option<f64>,
     /// Plan id of the searched optimum, when searched.
     pub searched_plan: Option<String>,
+    /// Plan id the decision procedure predicted: the picked kind's
+    /// preset for the kind-level rule, the model's full plan for a
+    /// calibrated model. `None` when the plan space was not searched.
+    pub pick_plan: Option<String>,
+    /// Plan-level hit: the predicted plan IS the searched optimum
+    /// (`None` when unsearched). Strictly harder than [`Scored::hit`]
+    /// — a kind can be right while its knobs are not.
+    pub plan_hit: Option<bool>,
 }
 
 /// Fraction of `reference` speedup lost by `pick_speedup`, guarded:
@@ -190,6 +212,8 @@ pub fn score(machine: &Machine, sc: &Scenario, threshold_scale: f64) -> Scored {
         oracle_speedup,
         searched_speedup: None,
         searched_plan: None,
+        pick_plan: None,
+        plan_hit: None,
     }
 }
 
@@ -237,6 +261,9 @@ fn score_searched_in(
     let out = crate::search::search_in(ev, &machine_name, machine, sc, &space, cfg, cache);
     scored.searched_speedup = Some(out.best_speedup());
     scored.searched_plan = Some(out.best.plan.id());
+    let preset = crate::plan::Plan::preset(scored.pick, sc);
+    scored.pick_plan = Some(preset.id());
+    scored.plan_hit = Some(out.best.plan == preset);
     scored
 }
 
@@ -294,6 +321,72 @@ pub fn searched_accuracy(
         mean_searched_loss,
         scored,
     )
+}
+
+/// Score a calibrated full-plan model against the searched plan-space
+/// optimum on one scenario: the kind-level oracle fields as in
+/// [`score`], plus the model's predicted plan, its simulated speedup,
+/// and the plan-level hit/loss vs the searched best.
+fn score_model_searched_in(
+    ev: &mut crate::schedule::exec::Evaluator,
+    machine: &Machine,
+    sc: &Scenario,
+    decision_model: &model::HeuristicModel,
+    cfg: &crate::search::SearchCfg,
+    cache: &crate::search::EvalCache,
+) -> Scored {
+    let d = decision_model.predict(machine, sc);
+    let mut kinds = vec![Kind::Baseline];
+    kinds.extend_from_slice(&Kind::FICCO);
+    let evr = ScenarioEval::run_in(ev, machine, sc, &kinds);
+    let (oracle, oracle_speedup) = evr
+        .best_ficco()
+        .expect("full FiCCO family evaluated");
+    let machine_name = crate::search::machine_key(machine);
+    let space = crate::search::SpaceSpec::default_for(sc);
+    let out = crate::search::search_in(ev, &machine_name, machine, sc, &space, cfg, cache);
+    let pick_makespan = cache.makespan_in(ev, &machine_name, machine, sc, &d.plan);
+    Scored {
+        scenario_name: sc.name.clone(),
+        pick: d.kind,
+        oracle,
+        pick_speedup: out.baseline / pick_makespan,
+        oracle_speedup,
+        searched_speedup: Some(out.best_speedup()),
+        searched_plan: Some(out.best.plan.id()),
+        pick_plan: Some(d.plan.id()),
+        plan_hit: Some(out.best.plan == d.plan),
+    }
+}
+
+/// Accuracy of a calibrated model over a suite, scored against the
+/// searched plan-space optimum: (**plan-level** hit rate, mean
+/// searched loss over the whole suite, per-scenario details). The
+/// kind-level [`searched_accuracy`] keeps the frozen Fig-12a
+/// semantics; this is its plan-space counterpart
+/// (`ficco synth --model`). Empty suites are vacuously accurate.
+pub fn model_searched_accuracy(
+    machine: &Machine,
+    suite: &[Scenario],
+    decision_model: &model::HeuristicModel,
+    cfg: &crate::search::SearchCfg,
+) -> (f64, f64, Vec<Scored>) {
+    if suite.is_empty() {
+        return (1.0, 0.0, Vec::new());
+    }
+    let cache = crate::search::EvalCache::new();
+    let mut ev = crate::schedule::exec::Evaluator::new();
+    let scored: Vec<Scored> = suite
+        .iter()
+        .map(|sc| score_model_searched_in(&mut ev, machine, sc, decision_model, cfg, &cache))
+        .collect();
+    let hits = scored.iter().filter(|s| s.plan_hit == Some(true)).count();
+    let mean_loss = scored
+        .iter()
+        .filter_map(Scored::searched_loss)
+        .sum::<f64>()
+        / scored.len() as f64;
+    (hits as f64 / suite.len() as f64, mean_loss, scored)
 }
 
 #[cfg(test)]
@@ -398,6 +491,8 @@ mod tests {
             oracle_speedup: 0.0,
             searched_speedup: None,
             searched_plan: None,
+            pick_plan: None,
+            plan_hit: None,
         };
         assert_eq!(base.loss(), 0.0);
         let nan = Scored {
@@ -440,5 +535,47 @@ mod tests {
         assert!(s.searched_plan.is_some());
         let loss = s.searched_loss().expect("searched loss");
         assert!((0.0..=1.0).contains(&loss));
+        // The searched score now also reports the plan-level verdict.
+        assert_eq!(
+            s.pick_plan.as_deref(),
+            Some(crate::plan::Plan::preset(s.pick, &sc).id().as_str())
+        );
+        assert!(s.plan_hit.is_some());
+        if s.plan_hit == Some(true) {
+            assert_eq!(s.pick_plan, s.searched_plan);
+        }
+    }
+
+    #[test]
+    fn default_model_accuracy_matches_plan_level_semantics() {
+        // The default model's predictions are the legacy picks'
+        // presets, so its plan-level hit/loss must agree with the
+        // kind-level searched scorer's new plan fields.
+        let m = machine();
+        let suite = vec![
+            Scenario::new("a", 65536, 1024, 4096),
+            Scenario::new("b", 16384, 1024, 65536),
+        ];
+        let cfg = crate::search::SearchCfg {
+            beam: 2,
+            prune: true,
+        };
+        let (hit_rate, mean_loss, scored) =
+            model_searched_accuracy(&m, &suite, &model::HeuristicModel::default(), &cfg);
+        assert!(hit_rate.is_finite() && (0.0..=1.0).contains(&hit_rate));
+        assert!(mean_loss.is_finite() && mean_loss >= 0.0);
+        assert_eq!(scored.len(), 2);
+        let (kh, kl, kscored) = searched_accuracy(&m, &suite, 1.0, &cfg);
+        assert!(kh.is_finite() && kl.is_finite());
+        for (ms, ks) in scored.iter().zip(&kscored) {
+            assert_eq!(ms.pick, ks.pick, "{}", ms.scenario_name);
+            assert_eq!(ms.pick_plan, ks.pick_plan, "{}", ms.scenario_name);
+            assert_eq!(ms.plan_hit, ks.plan_hit, "{}", ms.scenario_name);
+            assert_eq!(ms.searched_plan, ks.searched_plan);
+        }
+        // Empty suite stays NaN-free.
+        let (eh, el, es) =
+            model_searched_accuracy(&m, &[], &model::HeuristicModel::default(), &cfg);
+        assert_eq!((eh, el, es.len()), (1.0, 0.0, 0));
     }
 }

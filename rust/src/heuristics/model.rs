@@ -1,0 +1,680 @@
+//! The plan-space-aware heuristic model (DESIGN.md §7).
+//!
+//! The frozen Fig-12a rule ([`super::pick`]) chooses among the six
+//! legacy [`Kind`]s; `ficco tune` searches the full parameterized
+//! [`Plan`] space. A [`HeuristicModel`] closes that gap: it maps the
+//! static metrics ([`super::StaticMetrics`], including the PR-3
+//! `imbalance`/`hot_share` skew features the frozen rule ignores) to a
+//! **full plan prediction** — pieces, shape, fused, head start, slots
+//! — instead of just a kind.
+//!
+//! Structure: the Fig-12a decision procedure with a calibratable
+//! threshold scale picks a preset plan, then optional per-axis
+//! decision rules (one feature threshold per plan axis) override
+//! individual knobs. Counts are symbolic ([`CountVal`]: `gpus`,
+//! `2gpus`, `mesh`, ...) so a fitted model transfers across GPU
+//! fan-outs. The **default model** (`HeuristicModel::default()`) has
+//! no rules and the default threshold scale: its prediction is
+//! exactly `Plan::preset(pick(machine, sc).pick, sc)`, which keeps
+//! every skew-0 golden bit-identical on the uncalibrated path.
+//!
+//! Models serialize to a byte-stable line-oriented text artifact
+//! ([`HeuristicModel::to_text`] / [`HeuristicModel::parse`]): floats
+//! use Rust's shortest-round-trip `Display`, lines are emitted in a
+//! fixed order, so a deterministic fit produces identical bytes for
+//! any `--jobs` value. Fitting lives in [`super::fit`].
+
+use crate::hw::Machine;
+use crate::plan::{CommShape, Plan};
+use crate::schedule::{Kind, Scenario};
+
+use super::{pick_with_threshold, StaticMetrics, DEFAULT_THRESHOLD_SCALE};
+
+/// Static scenario feature an axis rule can threshold on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Feature {
+    /// OTB normalized by machine balance.
+    NormOtb,
+    /// Memory traffic normalized by LLC capacity.
+    NormMt,
+    /// The Fig-12a combined metric (`norm_otb * norm_mt`).
+    Combined,
+    /// Max/mean shard-size ratio of the routing partition.
+    Imbalance,
+    /// Hot shard's rows as a fraction of M.
+    HotShare,
+}
+
+impl Feature {
+    pub const ALL: [Feature; 5] = [
+        Feature::NormOtb,
+        Feature::NormMt,
+        Feature::Combined,
+        Feature::Imbalance,
+        Feature::HotShare,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Feature::NormOtb => "norm-otb",
+            Feature::NormMt => "norm-mt",
+            Feature::Combined => "combined",
+            Feature::Imbalance => "imbalance",
+            Feature::HotShare => "hot-share",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Feature> {
+        Feature::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Read this feature out of the computed static metrics.
+    pub fn of(self, m: &StaticMetrics) -> f64 {
+        match self {
+            Feature::NormOtb => m.norm_otb,
+            Feature::NormMt => m.norm_mt,
+            Feature::Combined => m.combined,
+            Feature::Imbalance => m.imbalance,
+            Feature::HotShare => m.hot_share,
+        }
+    }
+}
+
+/// Symbolic count for the `pieces`/`slots` axes, resolved against the
+/// scenario's GPU fan-out so one fitted model transfers across
+/// machine scales.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CountVal {
+    /// Keep the Fig-12a preset's value.
+    Keep,
+    /// Absolute value.
+    Const(usize),
+    /// `ngpus / 2` (min 1).
+    HalfGpus,
+    /// `ngpus` (the paper's FiCCO decomposition point).
+    Gpus,
+    /// `2 * ngpus`.
+    TwiceGpus,
+    /// `ngpus - 1` (a transfer lane per peer).
+    FullMesh,
+}
+
+impl CountVal {
+    pub fn resolve(self, ngpus: usize, preset: usize) -> usize {
+        match self {
+            CountVal::Keep => preset,
+            CountVal::Const(v) => v,
+            CountVal::HalfGpus => (ngpus / 2).max(1),
+            CountVal::Gpus => ngpus,
+            CountVal::TwiceGpus => 2 * ngpus,
+            CountVal::FullMesh => ngpus.saturating_sub(1).max(1),
+        }
+    }
+
+    pub fn encode(self) -> String {
+        match self {
+            CountVal::Keep => "keep".to_string(),
+            CountVal::Const(v) => format!("const:{v}"),
+            CountVal::HalfGpus => "gpus/2".to_string(),
+            CountVal::Gpus => "gpus".to_string(),
+            CountVal::TwiceGpus => "2gpus".to_string(),
+            CountVal::FullMesh => "mesh".to_string(),
+        }
+    }
+
+    pub fn decode(s: &str) -> Result<CountVal, String> {
+        match s {
+            "keep" => Ok(CountVal::Keep),
+            "gpus/2" => Ok(CountVal::HalfGpus),
+            "gpus" => Ok(CountVal::Gpus),
+            "2gpus" => Ok(CountVal::TwiceGpus),
+            "mesh" => Ok(CountVal::FullMesh),
+            other => other
+                .strip_prefix("const:")
+                .and_then(|v| v.parse().ok())
+                .map(CountVal::Const)
+                .ok_or_else(|| format!("unknown count value '{s}'")),
+        }
+    }
+}
+
+/// Boolean axis override (`fused`, `head_start`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlagVal {
+    Keep,
+    Set(bool),
+}
+
+impl FlagVal {
+    pub fn resolve(self, preset: bool) -> bool {
+        match self {
+            FlagVal::Keep => preset,
+            FlagVal::Set(b) => b,
+        }
+    }
+
+    pub fn encode(self) -> &'static str {
+        match self {
+            FlagVal::Keep => "keep",
+            FlagVal::Set(true) => "on",
+            FlagVal::Set(false) => "off",
+        }
+    }
+
+    pub fn decode(s: &str) -> Result<FlagVal, String> {
+        match s {
+            "keep" => Ok(FlagVal::Keep),
+            "on" => Ok(FlagVal::Set(true)),
+            "off" => Ok(FlagVal::Set(false)),
+            other => Err(format!("unknown flag value '{other}'")),
+        }
+    }
+}
+
+/// Communication-shape axis override.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShapeVal {
+    Keep,
+    Set(CommShape),
+}
+
+impl ShapeVal {
+    pub fn resolve(self, preset: CommShape) -> CommShape {
+        match self {
+            ShapeVal::Keep => preset,
+            ShapeVal::Set(s) => s,
+        }
+    }
+
+    pub fn encode(self) -> &'static str {
+        match self {
+            ShapeVal::Keep => "keep",
+            ShapeVal::Set(CommShape::Row) => "row",
+            ShapeVal::Set(CommShape::Col) => "col",
+        }
+    }
+
+    pub fn decode(s: &str) -> Result<ShapeVal, String> {
+        match s {
+            "keep" => Ok(ShapeVal::Keep),
+            "row" => Ok(ShapeVal::Set(CommShape::Row)),
+            "col" => Ok(ShapeVal::Set(CommShape::Col)),
+            other => Err(format!("unknown shape value '{other}'")),
+        }
+    }
+}
+
+/// One per-axis decision rule: `feature >= cutoff` selects
+/// `at_or_above`, otherwise `below`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rule<V> {
+    pub feature: Feature,
+    pub cutoff: f64,
+    pub below: V,
+    pub at_or_above: V,
+}
+
+impl<V: Copy> Rule<V> {
+    pub fn value(&self, m: &StaticMetrics) -> V {
+        if self.feature.of(m) >= self.cutoff {
+            self.at_or_above
+        } else {
+            self.below
+        }
+    }
+}
+
+/// A deterministic, serializable mapping from static metrics to a
+/// full [`Plan`] prediction. See the module docs for semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeuristicModel {
+    /// Fig-12a threshold multiplier (the kind-selection knob the
+    /// legacy `--threshold` exposed).
+    pub threshold_scale: f64,
+    pub pieces: Option<Rule<CountVal>>,
+    pub slots: Option<Rule<CountVal>>,
+    pub fused: Option<Rule<FlagVal>>,
+    pub head_start: Option<Rule<FlagVal>>,
+    pub shape: Option<Rule<ShapeVal>>,
+}
+
+impl Default for HeuristicModel {
+    /// The frozen Fig-12a rule lifted to plan space: no axis rules,
+    /// default threshold — predictions are exactly the legacy pick's
+    /// preset plan.
+    fn default() -> Self {
+        HeuristicModel {
+            threshold_scale: DEFAULT_THRESHOLD_SCALE,
+            pieces: None,
+            slots: None,
+            fused: None,
+            head_start: None,
+            shape: None,
+        }
+    }
+}
+
+/// A model's full prediction for one scenario.
+#[derive(Debug, Clone)]
+pub struct PlanDecision {
+    /// The predicted plan (always structurally valid for the
+    /// scenario's GPU count).
+    pub plan: Plan,
+    /// Legacy classification of the predicted plan (reporting).
+    pub kind: Kind,
+    pub metrics: StaticMetrics,
+    pub reason: String,
+}
+
+impl HeuristicModel {
+    /// True when this is the uncalibrated frozen-rule model.
+    pub fn is_default(&self) -> bool {
+        *self == HeuristicModel::default()
+    }
+
+    /// Predict the bespoke FiCCO plan for a scenario: Fig-12a (at this
+    /// model's threshold scale) picks the preset, then the axis rules
+    /// override individual knobs. Out-of-range resolved counts are
+    /// clamped to the plan's validity range, so the returned plan
+    /// always passes `Plan::check`.
+    pub fn predict(&self, machine: &Machine, sc: &Scenario) -> PlanDecision {
+        let d = pick_with_threshold(machine, sc, self.threshold_scale);
+        let mut plan = Plan::preset(d.pick, sc);
+        let mut reason = d.reason;
+        let n = sc.ngpus;
+        let m = d.metrics;
+        if let Some(r) = &self.pieces {
+            let v = r.value(&m).resolve(n, plan.pieces).clamp(1, Plan::MAX_PIECES);
+            if v != plan.pieces {
+                reason.push_str(&format!(
+                    "; pieces {} -> {} ({} {} {})",
+                    plan.pieces,
+                    v,
+                    r.feature.name(),
+                    if r.feature.of(&m) >= r.cutoff { ">=" } else { "<" },
+                    r.cutoff,
+                ));
+                plan.pieces = v;
+            }
+        }
+        if let Some(r) = &self.slots {
+            let full = n.saturating_sub(1).max(1);
+            let v = r.value(&m).resolve(n, plan.slots).clamp(1, full);
+            if v != plan.slots {
+                reason.push_str(&format!("; slots {} -> {}", plan.slots, v));
+                plan.slots = v;
+            }
+        }
+        if let Some(r) = &self.fused {
+            let v = r.value(&m).resolve(plan.fused);
+            if v != plan.fused {
+                reason.push_str(&format!("; fused {} -> {}", plan.fused, v));
+                plan.fused = v;
+            }
+        }
+        if let Some(r) = &self.head_start {
+            let v = r.value(&m).resolve(plan.head_start);
+            if v != plan.head_start {
+                reason.push_str(&format!("; head-start {} -> {}", plan.head_start, v));
+                plan.head_start = v;
+            }
+        }
+        if let Some(r) = &self.shape {
+            let v = r.value(&m).resolve(plan.shape);
+            if v != plan.shape {
+                reason.push_str(&format!("; shape {} -> {}", plan.shape.name(), v.name()));
+                plan.shape = v;
+            }
+        }
+        PlanDecision {
+            kind: plan.kind(),
+            plan,
+            metrics: m,
+            reason,
+        }
+    }
+
+    /// Serialize to the byte-stable artifact format: a version header,
+    /// the threshold scale, then one `rule <axis> <feature> <cutoff>
+    /// <below> <at-or-above>` line per set axis, in fixed axis order
+    /// (the same axis names [`HeuristicModel::parse`] matches on).
+    pub fn to_text(&self) -> String {
+        fn rule_line<V: Copy>(
+            out: &mut String,
+            axis: &str,
+            rule: &Option<Rule<V>>,
+            enc: impl Fn(V) -> String,
+        ) {
+            if let Some(r) = rule {
+                out.push_str(&format!(
+                    "rule {axis} {} {} {} {}\n",
+                    r.feature.name(),
+                    r.cutoff,
+                    enc(r.below),
+                    enc(r.at_or_above),
+                ));
+            }
+        }
+        let mut out = String::from("ficco-heuristic-model v1\n");
+        out.push_str(&format!("threshold-scale {}\n", self.threshold_scale));
+        rule_line(&mut out, "pieces", &self.pieces, CountVal::encode);
+        rule_line(&mut out, "slots", &self.slots, CountVal::encode);
+        rule_line(&mut out, "fused", &self.fused, |v| v.encode().to_string());
+        rule_line(&mut out, "head-start", &self.head_start, |v| v.encode().to_string());
+        rule_line(&mut out, "shape", &self.shape, |v| v.encode().to_string());
+        out
+    }
+
+    /// Parse an artifact produced by [`HeuristicModel::to_text`]
+    /// (blank lines and `#` comments tolerated).
+    pub fn parse(text: &str) -> Result<HeuristicModel, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().ok_or("empty model file")?;
+        if header != "ficco-heuristic-model v1" {
+            return Err(format!("bad model header '{header}'"));
+        }
+        let mut model = HeuristicModel::default();
+        let mut saw_threshold = false;
+        for line in lines {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.as_slice() {
+                ["threshold-scale", v] => {
+                    model.threshold_scale = v
+                        .parse()
+                        .map_err(|_| format!("bad threshold-scale '{v}'"))?;
+                    if !(model.threshold_scale.is_finite() && model.threshold_scale > 0.0) {
+                        return Err(format!("threshold-scale must be positive, got '{v}'"));
+                    }
+                    saw_threshold = true;
+                }
+                ["rule", axis, feat, cutoff, below, above] => {
+                    let feature =
+                        Feature::parse(feat).ok_or_else(|| format!("unknown feature '{feat}'"))?;
+                    let raw = cutoff;
+                    let cutoff: f64 = cutoff
+                        .parse()
+                        .map_err(|_| format!("bad rule cutoff '{raw}'"))?;
+                    // A NaN/inf cutoff would make the rule silently
+                    // never (or always) fire — reject it like the
+                    // threshold-scale line above.
+                    if !cutoff.is_finite() {
+                        return Err(format!("rule cutoff must be finite, got '{raw}'"));
+                    }
+                    match *axis {
+                        "pieces" => {
+                            model.pieces = Some(Rule {
+                                feature,
+                                cutoff,
+                                below: CountVal::decode(below)?,
+                                at_or_above: CountVal::decode(above)?,
+                            })
+                        }
+                        "slots" => {
+                            model.slots = Some(Rule {
+                                feature,
+                                cutoff,
+                                below: CountVal::decode(below)?,
+                                at_or_above: CountVal::decode(above)?,
+                            })
+                        }
+                        "fused" => {
+                            model.fused = Some(Rule {
+                                feature,
+                                cutoff,
+                                below: FlagVal::decode(below)?,
+                                at_or_above: FlagVal::decode(above)?,
+                            })
+                        }
+                        "head-start" => {
+                            model.head_start = Some(Rule {
+                                feature,
+                                cutoff,
+                                below: FlagVal::decode(below)?,
+                                at_or_above: FlagVal::decode(above)?,
+                            })
+                        }
+                        "shape" => {
+                            model.shape = Some(Rule {
+                                feature,
+                                cutoff,
+                                below: ShapeVal::decode(below)?,
+                                at_or_above: ShapeVal::decode(above)?,
+                            })
+                        }
+                        other => return Err(format!("unknown rule axis '{other}'")),
+                    }
+                }
+                _ => return Err(format!("unparseable model line '{line}'")),
+            }
+        }
+        if !saw_threshold {
+            return Err("model missing threshold-scale".into());
+        }
+        Ok(model)
+    }
+
+    /// Write the artifact to `path`.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_text())
+    }
+
+    /// Load and parse an artifact from `path`.
+    pub fn load(path: &str) -> Result<HeuristicModel, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading model {path}: {e}"))?;
+        HeuristicModel::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn machine() -> Machine {
+        Machine::mi300x_8()
+    }
+
+    fn full_model() -> HeuristicModel {
+        HeuristicModel {
+            threshold_scale: 2.5,
+            pieces: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: 5.0,
+                below: CountVal::Keep,
+                at_or_above: CountVal::TwiceGpus,
+            }),
+            slots: Some(Rule {
+                feature: Feature::Imbalance,
+                cutoff: 1.25,
+                below: CountVal::FullMesh,
+                at_or_above: CountVal::Const(2),
+            }),
+            fused: Some(Rule {
+                feature: Feature::NormMt,
+                cutoff: 1.0,
+                below: FlagVal::Keep,
+                at_or_above: FlagVal::Set(false),
+            }),
+            head_start: Some(Rule {
+                feature: Feature::HotShare,
+                cutoff: 0.3,
+                below: FlagVal::Keep,
+                at_or_above: FlagVal::Set(true),
+            }),
+            shape: Some(Rule {
+                feature: Feature::NormOtb,
+                cutoff: 0.5,
+                below: ShapeVal::Set(CommShape::Row),
+                at_or_above: ShapeVal::Keep,
+            }),
+        }
+    }
+
+    #[test]
+    fn default_model_is_the_frozen_rule_lifted_to_plan_space() {
+        let m = machine();
+        let model = HeuristicModel::default();
+        assert!(model.is_default());
+        for row in workloads::table1() {
+            let sc = row.scenario();
+            let legacy = super::super::pick(&m, &sc);
+            let d = model.predict(&m, &sc);
+            assert_eq!(d.kind, legacy.pick, "{}", row.name);
+            assert_eq!(d.plan, Plan::preset(legacy.pick, &sc), "{}", row.name);
+            assert_eq!(d.reason, legacy.reason, "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn threshold_scale_moves_the_kind_decision() {
+        let m = machine();
+        let sc = workloads::by_name("g2").unwrap();
+        let low = HeuristicModel {
+            threshold_scale: 1e-9,
+            ..HeuristicModel::default()
+        };
+        let high = HeuristicModel {
+            threshold_scale: 1e9,
+            ..HeuristicModel::default()
+        };
+        assert_eq!(low.predict(&m, &sc).kind, Kind::HeteroUnfused1D);
+        assert_eq!(high.predict(&m, &sc).kind, Kind::UniformFused1D);
+    }
+
+    #[test]
+    fn axis_rules_fire_on_their_feature_side() {
+        let m = machine();
+        // g2 is a 1D pick with a large combined metric on mi300x-8.
+        let sc = workloads::by_name("g2").unwrap();
+        let base = HeuristicModel::default().predict(&m, &sc);
+        let model = HeuristicModel {
+            pieces: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: 0.0, // always at-or-above
+                below: CountVal::Keep,
+                at_or_above: CountVal::TwiceGpus,
+            }),
+            ..HeuristicModel::default()
+        };
+        let d = model.predict(&m, &sc);
+        assert_eq!(d.plan.pieces, 2 * sc.ngpus);
+        assert_ne!(d.plan, base.plan);
+        assert!(d.reason.contains("pieces"), "{}", d.reason);
+        assert!(d.plan.check(sc.ngpus).is_ok());
+        // The other side of the cutoff keeps the preset.
+        let keep = HeuristicModel {
+            pieces: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: f64::INFINITY,
+                below: CountVal::Keep,
+                at_or_above: CountVal::TwiceGpus,
+            }),
+            ..HeuristicModel::default()
+        };
+        assert_eq!(keep.predict(&m, &sc).plan, base.plan);
+    }
+
+    #[test]
+    fn resolved_counts_are_clamped_to_validity() {
+        let m = machine();
+        let sc = workloads::by_name("g2").unwrap();
+        let model = HeuristicModel {
+            slots: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: 0.0,
+                below: CountVal::Const(100),
+                at_or_above: CountVal::Const(100),
+            }),
+            pieces: Some(Rule {
+                feature: Feature::Combined,
+                cutoff: 0.0,
+                below: CountVal::Const(100_000),
+                at_or_above: CountVal::Const(100_000),
+            }),
+            ..HeuristicModel::default()
+        };
+        let d = model.predict(&m, &sc);
+        assert_eq!(d.plan.slots, sc.ngpus - 1, "slots clamp to the mesh width");
+        assert_eq!(d.plan.pieces, Plan::MAX_PIECES, "pieces clamp to the cap");
+        assert!(d.plan.check(sc.ngpus).is_ok());
+    }
+
+    #[test]
+    fn skew_features_can_drive_the_prediction() {
+        let m = machine();
+        let uniform = Scenario::new("u", 65536, 1024, 4096);
+        let skewed = uniform.clone().with_skew(1.0, 3);
+        let model = HeuristicModel {
+            slots: Some(Rule {
+                feature: Feature::Imbalance,
+                cutoff: 1.2,
+                below: CountVal::Keep,
+                at_or_above: CountVal::Const(1),
+            }),
+            ..HeuristicModel::default()
+        };
+        let du = model.predict(&m, &uniform);
+        let ds = model.predict(&m, &skewed);
+        assert_eq!(
+            du.plan,
+            Plan::preset(super::super::pick(&m, &uniform).pick, &uniform),
+            "balanced routing keeps the preset"
+        );
+        assert_eq!(ds.plan.slots, 1, "hot-expert routing narrows the slots");
+    }
+
+    #[test]
+    fn artifact_round_trips_byte_stably() {
+        for model in [HeuristicModel::default(), full_model()] {
+            let text = model.to_text();
+            let back = HeuristicModel::parse(&text).expect("parse own artifact");
+            assert_eq!(back, model);
+            assert_eq!(back.to_text(), text, "re-serialization is byte-identical");
+        }
+        assert!(full_model().to_text().starts_with("ficco-heuristic-model v1\n"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_artifacts() {
+        assert!(HeuristicModel::parse("").is_err());
+        assert!(HeuristicModel::parse("wrong header\nthreshold-scale 1\n").is_err());
+        assert!(HeuristicModel::parse("ficco-heuristic-model v1\n").is_err(), "missing threshold");
+        assert!(
+            HeuristicModel::parse("ficco-heuristic-model v1\nthreshold-scale -2\n").is_err(),
+            "non-positive threshold"
+        );
+        assert!(HeuristicModel::parse(
+            "ficco-heuristic-model v1\nthreshold-scale 1\nrule pieces bogus 1 keep gpus\n"
+        )
+        .is_err());
+        assert!(
+            HeuristicModel::parse(
+                "ficco-heuristic-model v1\nthreshold-scale 1\nrule pieces combined nan keep gpus\n"
+            )
+            .is_err(),
+            "NaN cutoff must be rejected, not silently never fire"
+        );
+        assert!(HeuristicModel::parse(
+            "ficco-heuristic-model v1\nthreshold-scale 1\nrule pieces combined inf keep gpus\n"
+        )
+        .is_err());
+        assert!(HeuristicModel::parse(
+            "ficco-heuristic-model v1\nthreshold-scale 1\nrule warp combined 1 keep gpus\n"
+        )
+        .is_err());
+        assert!(HeuristicModel::parse(
+            "ficco-heuristic-model v1\nthreshold-scale 1\nnonsense line\n"
+        )
+        .is_err());
+        // Comments and blank lines are tolerated.
+        let ok = HeuristicModel::parse(
+            "ficco-heuristic-model v1\n# a comment\n\nthreshold-scale 2\n",
+        )
+        .unwrap();
+        assert_eq!(ok.threshold_scale, 2.0);
+    }
+}

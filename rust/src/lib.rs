@@ -33,6 +33,12 @@
 //!   an ordered worker pool ([`util::pool`]) with deterministic,
 //!   byte-stable CSV/JSON output (the `ficco sweep` subcommand).
 //!
+//! The selection side is closed by [`heuristics`]: the frozen Fig-12a
+//! static rule, plus the calibrated plan-space model
+//! ([`heuristics::model`]) that `ficco calibrate` fits against
+//! tune-searched optima ([`heuristics::fit`], training data via
+//! [`search::training`]; contract in `DESIGN.md` §7).
+//!
 //! Traffic is not assumed uniform: [`plan::Partition`] makes per-GPU
 //! row ownership first-class, and `Scenario::with_skew` opens the
 //! EP/MoE expert-imbalance axis (hot-expert Zipf routing) through

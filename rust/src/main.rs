@@ -28,20 +28,36 @@
 //!                                   --slots; --jobs, --out-dir
 //!                                   results/tune, --verbose, --csv)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
+//!                                   (--threshold S scales the Fig-12a
+//!                                   threshold; --model FILE predicts
+//!                                   through a calibrated plan model)
 //!   characterize --what dil|comm-dil|cil
 //!   figures    [--out-dir results]  regenerate every paper exhibit
 //!   synth      --count 16 --seed 7  heuristic accuracy on synthetic
 //!                                   suite (--against plans scores the
 //!                                   heuristic against the searched
-//!                                   plan-space optimum)
+//!                                   plan-space optimum; --model FILE
+//!                                   scores a calibrated model
+//!                                   plan-level)
+//!   calibrate  [--scenarios ...]    fit the plan-space heuristic
+//!                                   model against tune-searched
+//!                                   optima (--holdout suite gates the
+//!                                   fit; byte-stable artifact via
+//!                                   --out results/model.ficco)
 //!   validate   [--artifacts DIR]    numeric equivalence of all schedules
 //!                                   (real data through PJRT)
-//!   train      [--config FILE]      end-to-end training driver
+//!   train      [--preset NAME]      end-to-end training driver
+//!                                   (--steps --seed --artifacts
+//!                                   --log-every --loss-csv,
+//!                                   --no-overlap-report)
 //!
 //! Global flags (single-scenario subcommands): --config FILE (machine
 //! preset), --gpus N, --mech dma|rccl. `sweep`/`tune` instead take the
 //! list filters above (--machines/--mechs/--gpus accept comma lists).
 //! Machine presets for sweeps: mi300x-8, h100-dgx-8, pcie-gen4-4, switch-8.
+//! Every subcommand is strict: unknown options, inapplicable switches
+//! and stray positionals are errors, not silently ignored
+//! (see `cli::subcommand_spec`).
 
 use ficco::cli::Args;
 use ficco::hw::Machine;
@@ -51,7 +67,7 @@ use ficco::util::table::{f, x, Align, Table};
 use ficco::workloads;
 
 fn main() {
-    let args = match Args::from_env(&["all", "verbose", "csv"]) {
+    let args = match Args::from_env(ficco::cli::KNOWN_SWITCHES) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("{e}");
@@ -114,6 +130,9 @@ fn scenario_from(args: &Args, machine: &Machine) -> Result<Scenario, Box<dyn std
 }
 
 fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    // Strict CLI contract: a typo'd flag must fail loudly on every
+    // subcommand instead of silently running with defaults.
+    ficco::cli::validate_strict(args)?;
     match args.subcommand.as_deref() {
         Some("workloads") => cmd_workloads(),
         Some("simulate") => cmd_simulate(args),
@@ -123,14 +142,25 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         Some("characterize") => cmd_characterize(args),
         Some("figures") => cmd_figures(args),
         Some("synth") => cmd_synth(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("validate") => cmd_validate(args),
         Some("train") => cmd_train(args),
         Some(other) => Err(format!("unknown subcommand '{other}'").into()),
         None => {
             println!("ficco {} — FiCCO: finer-grain compute-communication overlap", ficco::version());
-            println!("subcommands: workloads simulate sweep tune heuristic characterize figures synth validate train");
+            println!("subcommands: {}", ficco::cli::SUBCOMMANDS.join(" "));
             Ok(())
         }
+    }
+}
+
+/// Load the calibrated heuristic model named by `--model`, when given.
+fn model_opt_from(
+    args: &Args,
+) -> Result<Option<ficco::heuristics::model::HeuristicModel>, Box<dyn std::error::Error>> {
+    match args.get("model") {
+        Some(path) => Ok(Some(ficco::heuristics::model::HeuristicModel::load(path)?)),
+        None => Ok(None),
     }
 }
 
@@ -246,16 +276,6 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 /// prints per-cell progress with timings; `--csv` also writes the
 /// summary exhibit to `<out-dir>/summary.csv`.
 fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
-    args.expect_known(&[
-        "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
-        "search",
-    ])?;
-    args.expect_switches(&["verbose", "csv"])?;
-    if let Some(stray) = args.positional.first() {
-        // A bare token is always a mistake here (e.g. `--csv out.csv`
-        // where --csv is a switch, or a typo'd filter value).
-        return Err(format!("unexpected argument '{stray}' (sweep takes only --options)").into());
-    }
     let mut spec = ficco::explore::SweepSpec::from_filters(
         args.get_or("scenarios", "table1"),
         args.get_or("kinds", "all"),
@@ -266,6 +286,7 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     )?;
     spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
     spec.search = parse_search(args.get_or("search", "off"))?;
+    spec.model = model_opt_from(args)?;
     let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/sweep");
     std::fs::create_dir_all(out_dir)?;
@@ -384,35 +405,11 @@ fn parse_usize_list(name: &str, s: &str) -> Result<Vec<usize>, Box<dyn std::erro
     Ok(out)
 }
 
-/// `ficco tune`: search the parameterized plan space per (machine ×
-/// mech × GPU count × scenario) cell on a worker pool, streaming
-/// deterministic CSV/JSON to `--out-dir` and printing a summary per
-/// machine. `--beam 0` (default) enumerates the space exhaustively
-/// with lower-bound pruning; `--beam N` runs a beam local search
-/// seeded by the six legacy presets. `--pieces`/`--slots` override the
-/// default space axes.
-fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
-    args.expect_known(&[
-        "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir", "beam",
-        "pieces", "slots",
-    ])?;
-    args.expect_switches(&["verbose", "csv"])?;
-    if let Some(stray) = args.positional.first() {
-        return Err(format!("unexpected argument '{stray}' (tune takes only --options)").into());
-    }
-    let mut spec = ficco::explore::SweepSpec::from_filters(
-        args.get_or("scenarios", "table1"),
-        "all", // kinds are irrelevant to tune; presets are always searched
-        args.get_or("machines", "all"),
-        args.get_or("mechs", "dma"),
-        args.get_or("gpus", "native"),
-        args.get_or("skew", "0"),
-    )?;
-    spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
-    let cfg = ficco::search::SearchCfg {
-        beam: args.get_usize("beam", 0)?,
-        prune: true,
-    };
+/// Parse the `--pieces`/`--slots` plan-space overrides (shared by
+/// `tune` and `calibrate`).
+fn space_overrides_from(
+    args: &Args,
+) -> Result<ficco::search::SpaceOverrides, Box<dyn std::error::Error>> {
     let mut ov = ficco::search::SpaceOverrides::default();
     if let Some(pieces) = args.get("pieces") {
         let pieces = parse_usize_list("pieces", pieces)?;
@@ -428,12 +425,20 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(slots) = args.get("slots") {
         ov.slots = Some(parse_usize_list("slots", slots)?);
     }
-    // Out-of-range values for *some* machines are filtered per cell
-    // (e.g. --slots 7 is valid on an 8-GPU mesh but not a 4-GPU box);
-    // a space left empty on any swept cell would silently "search"
-    // nothing there, so reject it up front like any other bad filter.
+    Ok(ov)
+}
+
+/// Reject specs whose overridden plan space is empty on any cell.
+/// Out-of-range values for *some* machines are filtered per cell
+/// (e.g. --slots 7 is valid on an 8-GPU mesh but not a 4-GPU box); a
+/// space left empty on any swept cell would silently "search" nothing
+/// there, so reject it up front like any other bad filter.
+fn ensure_searchable_space(
+    spec: &ficco::explore::SweepSpec,
+    ov: &ficco::search::SpaceOverrides,
+) -> Result<(), Box<dyn std::error::Error>> {
     for cell in spec.cells() {
-        let space = ficco::search::space_for(&cell.scenario, &ov);
+        let space = ficco::search::space_for(&cell.scenario, ov);
         if space.plans(&cell.scenario).is_empty() {
             return Err(format!(
                 "empty plan space on machine {} ({} GPUs): no --pieces/--slots value is \
@@ -445,6 +450,33 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             .into());
         }
     }
+    Ok(())
+}
+
+/// `ficco tune`: search the parameterized plan space per (machine ×
+/// mech × GPU count × scenario) cell on a worker pool, streaming
+/// deterministic CSV/JSON to `--out-dir` and printing a summary per
+/// machine. `--beam 0` (default) enumerates the space exhaustively
+/// with lower-bound pruning; `--beam N` runs a beam local search
+/// seeded by the six legacy presets. `--pieces`/`--slots` override the
+/// default space axes.
+fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let mut spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("scenarios", "table1"),
+        "all", // kinds are irrelevant to tune; presets are always searched
+        args.get_or("machines", "all"),
+        args.get_or("mechs", "dma"),
+        args.get_or("gpus", "native"),
+        args.get_or("skew", "0"),
+    )?;
+    spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
+    spec.model = model_opt_from(args)?;
+    let cfg = ficco::search::SearchCfg {
+        beam: args.get_usize("beam", 0)?,
+        prune: true,
+    };
+    let ov = space_overrides_from(args)?;
+    ensure_searchable_space(&spec, &ov)?;
     let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/tune");
     std::fs::create_dir_all(out_dir)?;
@@ -521,27 +553,59 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 
 fn cmd_heuristic(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let machine = machine_from(args)?;
+    // Decision procedure: the frozen Fig-12a rule lifted to plan
+    // space by default, a calibrated model with --model. --threshold
+    // overrides the (possibly calibrated) threshold scale either way
+    // — it used to be parsed and then ignored.
+    let mut decision_model = match model_opt_from(args)? {
+        Some(m) => {
+            println!("model: {} (calibrated)", args.get("model").unwrap_or("?"));
+            m
+        }
+        None => ficco::heuristics::model::HeuristicModel::default(),
+    };
+    decision_model.threshold_scale = args.get_f64("threshold", decision_model.threshold_scale)?;
+    if !(decision_model.threshold_scale.is_finite() && decision_model.threshold_scale > 0.0) {
+        return Err(format!(
+            "--threshold must be positive, got {}",
+            decision_model.threshold_scale
+        )
+        .into());
+    }
+    println!(
+        "threshold scale: {} (hetero-unfused beyond {})",
+        decision_model.threshold_scale,
+        ficco::heuristics::THRESHOLD_BAND * decision_model.threshold_scale,
+    );
     if args.has("all") || args.get("scenario").is_none() {
-        let mut t = Table::new(vec!["scenario", "M>K", "combined", "pick", "reason"])
+        let mut t = Table::new(vec!["scenario", "M>K", "combined", "pick", "plan", "reason"])
             .align(0, Align::Left)
             .align(3, Align::Left)
-            .align(4, Align::Left);
+            .align(4, Align::Left)
+            .align(5, Align::Left);
         for r in workloads::table1() {
             let sc = r.scenario();
-            let d = ficco::heuristics::pick(&machine, &sc);
+            let d = decision_model.predict(&machine, &sc);
             t.row(vec![
                 r.name.to_string(),
                 (r.m > r.k).to_string(),
                 f(d.metrics.combined, 3),
-                d.pick.name().to_string(),
+                d.kind.name().to_string(),
+                d.plan.id(),
                 d.reason,
             ]);
         }
         print!("{}", t.render());
     } else {
         let sc = scenario_from(args, &machine)?;
-        let d = ficco::heuristics::pick(&machine, &sc);
-        println!("{}: pick {} — {}", sc.name, d.pick.name(), d.reason);
+        let d = decision_model.predict(&machine, &sc);
+        println!(
+            "{}: pick {} (plan {}) — {}",
+            sc.name,
+            d.kind.name(),
+            d.plan.id(),
+            d.reason
+        );
     }
     Ok(())
 }
@@ -586,25 +650,53 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let count = args.get_usize("count", 16)?;
     let seed = args.get_u64("seed", 2025)?;
     let scale = args.get_f64("threshold", ficco::heuristics::DEFAULT_THRESHOLD_SCALE)?;
+    if !(scale.is_finite() && scale > 0.0) {
+        return Err(format!("--threshold must be positive, got {scale}").into());
+    }
     let suite = match args.get_or("suite", "synth") {
         "synth" => workloads::synthetic_scenarios(seed, count),
         "moe" => workloads::synthetic_moe_scenarios(seed, count),
-        other => return Err(format!("unknown --suite '{other}' (synth|moe)").into()),
+        "holdout" => workloads::holdout_scenarios(seed, count),
+        other => return Err(format!("unknown --suite '{other}' (synth|moe|holdout)").into()),
     };
-    let against = args.get_or("against", "kinds");
-    let (hit_rate, mean_loss, scored) = match against {
-        "kinds" => ficco::heuristics::accuracy(&machine, &suite, scale),
-        "plans" => {
+    let decision_model = model_opt_from(args)?;
+    // A calibrated model predicts full plans, so it is scored against
+    // the searched plan space; `--against kinds` only makes sense for
+    // the kind-level rule.
+    let against = match args.get("against") {
+        Some(a) => a,
+        None if decision_model.is_some() => "plans",
+        None => "kinds",
+    };
+    let (hit_rate, mean_loss, scored) = match (against, &decision_model) {
+        ("kinds", None) => ficco::heuristics::accuracy(&machine, &suite, scale),
+        ("kinds", Some(_)) => {
+            return Err("--model predicts full plans; use --against plans".into())
+        }
+        ("plans", m) => {
             let cfg = ficco::search::SearchCfg {
                 beam: args.get_usize("beam", 4)?,
                 prune: true,
             };
-            ficco::heuristics::searched_accuracy(&machine, &suite, scale, &cfg)
+            match m {
+                None => ficco::heuristics::searched_accuracy(&machine, &suite, scale, &cfg),
+                Some(model) => {
+                    let mut model = model.clone();
+                    if args.get("threshold").is_some() {
+                        model.threshold_scale = scale;
+                    }
+                    ficco::heuristics::model_searched_accuracy(&machine, &suite, &model, &cfg)
+                }
+            }
         }
-        other => return Err(format!("unknown --against '{other}' (kinds|plans)").into()),
+        (other, _) => return Err(format!("unknown --against '{other}' (kinds|plans)").into()),
     };
     let searched = against == "plans";
+    let modeled = decision_model.is_some();
     let mut headers = vec!["scenario", "pick", "oracle", "pick speedup", "oracle speedup"];
+    if modeled {
+        headers.insert(2, "pick plan");
+    }
     if searched {
         headers.push("searched best");
         headers.push("searched loss %");
@@ -614,6 +706,9 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .align(0, Align::Left)
         .align(1, Align::Left)
         .align(2, Align::Left);
+    if modeled {
+        t = t.align(3, Align::Left);
+    }
     for s in &scored {
         let mut row = vec![
             s.scenario_name.clone(),
@@ -622,6 +717,9 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             x(s.pick_speedup),
             x(s.oracle_speedup),
         ];
+        if modeled {
+            row.insert(2, s.pick_plan.clone().unwrap_or_else(|| "-".to_string()));
+        }
         if searched {
             row.push(match s.searched_speedup {
                 Some(v) => x(v),
@@ -632,11 +730,23 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 None => "-".to_string(),
             });
         }
-        row.push(if s.hit() { "*".to_string() } else { "miss".to_string() });
+        let hit = if modeled {
+            s.plan_hit == Some(true)
+        } else {
+            s.hit()
+        };
+        row.push(if hit { "*".to_string() } else { "miss".to_string() });
         t.row(row);
     }
     print!("{}", t.render());
-    if searched {
+    if modeled {
+        println!(
+            "model plan-level hit rate vs searched optimum: {:.0}% ({} scenarios); mean loss vs searched plan-space optimum: {:.1}%",
+            100.0 * hit_rate,
+            count,
+            100.0 * mean_loss
+        );
+    } else if searched {
         println!(
             "heuristic accuracy vs 6-kind oracle: {:.0}% ({} scenarios); mean loss vs searched plan-space optimum: {:.1}%",
             100.0 * hit_rate,
@@ -651,6 +761,132 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             100.0 * mean_loss
         );
     }
+    Ok(())
+}
+
+/// `ficco calibrate`: fit the plan-space heuristic model against
+/// tune-searched optima over a seeded training suite, gate it on a
+/// held-out suite (fall back to the frozen Fig-12a rule if the fit
+/// degrades there), and write the byte-stable model artifact.
+fn cmd_calibrate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machines = args.get_or("machines", "mi300x-8");
+    let mechs = args.get_or("mechs", "dma");
+    let gpus = args.get_or("gpus", "native");
+    let mut train_spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("scenarios", "synth:12:2025"),
+        "all", // kinds are irrelevant: the plan space is searched
+        machines,
+        mechs,
+        gpus,
+        args.get_or("skew", "0"),
+    )?;
+    train_spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
+    let mut holdout_spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("holdout", "holdout:8:2025"),
+        "all",
+        machines,
+        mechs,
+        gpus,
+        "", // the holdout suite carries its own intrinsic skews
+    )?;
+    holdout_spec.skew_seed = train_spec.skew_seed;
+    let cfg = ficco::search::SearchCfg {
+        beam: args.get_usize("beam", 4)?,
+        prune: true,
+    };
+    let ov = space_overrides_from(args)?;
+    ensure_searchable_space(&train_spec, &ov)?;
+    ensure_searchable_space(&holdout_spec, &ov)?;
+    let jobs = ficco::explore::clamp_jobs(
+        args.get_jobs("jobs")?,
+        train_spec.n_cells().max(holdout_spec.n_cells()),
+    );
+    println!(
+        "calibrate: {} training + {} holdout cells ({}) on {} worker thread{}",
+        train_spec.n_cells(),
+        holdout_spec.n_cells(),
+        if cfg.beam == 0 {
+            "exhaustive + pruning".to_string()
+        } else {
+            format!("beam {}", cfg.beam)
+        },
+        jobs,
+        if jobs == 1 { "" } else { "s" },
+    );
+
+    let train = ficco::search::calibration_examples(&train_spec, &ov, &cfg, jobs)?;
+    let holdout = ficco::search::calibration_examples(&holdout_spec, &ov, &cfg, jobs)?;
+    if args.has("verbose") {
+        for e in &train {
+            println!(
+                "  train {:<10} {:<12} searched best {} ({})",
+                e.scenario.name,
+                e.machine_name,
+                e.searched_plan.id(),
+                x(e.searched_speedup()),
+            );
+        }
+    }
+    let out = ficco::heuristics::fit::calibrate(
+        &train,
+        &holdout,
+        &ficco::heuristics::fit::FitCfg::default(),
+    );
+
+    let mut t = Table::new(vec![
+        "model",
+        "threshold",
+        "train hit %",
+        "train loss %",
+        "holdout hit %",
+        "holdout loss %",
+    ])
+    .align(0, Align::Left);
+    let mut row = |name: &str,
+                   scale: f64,
+                   train: &ficco::heuristics::fit::SuiteScore,
+                   hold: &ficco::heuristics::fit::SuiteScore| {
+        t.row(vec![
+            name.to_string(),
+            scale.to_string(),
+            f(100.0 * train.hit_rate(), 0),
+            f(100.0 * train.mean_loss, 1),
+            f(100.0 * hold.hit_rate(), 0),
+            f(100.0 * hold.mean_loss, 1),
+        ]);
+    };
+    row(
+        "fig12a-default",
+        ficco::heuristics::DEFAULT_THRESHOLD_SCALE,
+        &out.default_train,
+        &out.default_holdout,
+    );
+    row(
+        "fitted",
+        out.fitted.threshold_scale,
+        &out.train,
+        &out.fitted_holdout,
+    );
+    drop(row);
+    print!("{}", t.render());
+    println!(
+        "{} candidate models scored; holdout gate: {}",
+        out.candidates,
+        if out.fell_back {
+            "fitted model degraded the frozen rule on holdout — falling back to the default model"
+        } else {
+            "fitted model accepted"
+        },
+    );
+
+    let out_path = args.get_or("out", "results/model.ficco");
+    if let Some(parent) = std::path::Path::new(out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    out.model.save(out_path)?;
+    println!("model -> {out_path}");
     Ok(())
 }
 

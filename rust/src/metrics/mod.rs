@@ -378,24 +378,29 @@ pub fn fig14_comparison(machine: &Machine) -> Exhibit {
         ficco_rccl.push(best_rccl);
     }
     let mut table = Table::new(vec!["technique", "geomean speedup"]).align(0, Align::Left);
+    // `geomean_summary` flags any degenerate (zero/NaN) speedup
+    // sample dropped from the geomean — both in the rendered cell and
+    // as a `*_skipped` summary — so the exhibit never silently
+    // shrinks its sample set (the old stats assert used to abort).
     let rows = [
-        ("shard-overlap (AsyncTP)", stats::geomean(&shard)),
-        ("FiCCO-rccl", stats::geomean(&ficco_rccl)),
-        ("FiCCO-1D", stats::geomean(&ficco_1d)),
-        ("FiCCO-2D (emulated)", stats::geomean(&ficco_2d)),
+        ("shard-overlap (AsyncTP)", "geomean_shard", &shard),
+        ("FiCCO-rccl", "geomean_ficco_rccl", &ficco_rccl),
+        ("FiCCO-1D", "geomean_ficco_1d", &ficco_1d),
+        ("FiCCO-2D (emulated)", "geomean_ficco_2d", &ficco_2d),
     ];
-    for (name, v) in rows {
-        table.row(vec![name.to_string(), x(v)]);
+    let mut summaries = Vec::new();
+    for (label, key, samples) in rows {
+        let (g, skipped, cell) = stats::geomean_summary(samples);
+        table.row(vec![label.to_string(), cell]);
+        summaries.push((key.to_string(), g));
+        if skipped > 0 {
+            summaries.push((format!("{key}_skipped"), skipped as f64));
+        }
     }
     Exhibit {
         title: "Fig 14: FiCCO vs other overlap techniques (geomean)",
         table,
-        summaries: vec![
-            ("geomean_shard".into(), stats::geomean(&shard)),
-            ("geomean_ficco_rccl".into(), stats::geomean(&ficco_rccl)),
-            ("geomean_ficco_1d".into(), stats::geomean(&ficco_1d)),
-            ("geomean_ficco_2d".into(), stats::geomean(&ficco_2d)),
-        ],
+        summaries,
     }
 }
 

@@ -10,7 +10,7 @@ use super::TuneResult;
 use crate::explore::emit::{csv_escape, json_escape};
 use crate::metrics::Exhibit;
 use crate::util::stats;
-use crate::util::table::{f, x, Align, Table};
+use crate::util::table::{f, Align, Table};
 
 /// Column header shared by the tune CSV emitter and its tests.
 pub const TUNE_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,skew,m,n,k,\
@@ -159,19 +159,27 @@ pub fn summary(results: &[TuneResult]) -> Exhibit {
         let legacy: Vec<f64> = group.iter().map(|r| r.best_legacy_speedup).collect();
         let gain: Vec<f64> = group.iter().map(|r| r.plan_gain).collect();
         let loss = group.iter().map(|r| r.pick_loss).sum::<f64>() / group.len().max(1) as f64;
-        let g_best = stats::geomean(&best);
-        let g_gain = stats::geomean(&gain);
+        // Degenerate (zero/NaN) cells are dropped from the geomeans —
+        // every geomean cell flags the drop, and a `geomean_skipped_*`
+        // summary records the total, instead of hiding it.
+        let (g_best, best_skipped, best_cell) = stats::geomean_summary(&best);
+        let (_, legacy_skipped, legacy_cell) = stats::geomean_summary(&legacy);
+        let (g_gain, gain_skipped, gain_cell) = stats::geomean_summary(&gain);
         table.row(vec![
             mach.clone(),
             group.len().to_string(),
-            x(g_best),
-            x(stats::geomean(&legacy)),
-            x(g_gain),
+            best_cell,
+            legacy_cell,
+            gain_cell,
             f(100.0 * loss, 1),
         ]);
         summaries.push((format!("geomean_best_{mach}"), g_best));
         summaries.push((format!("geomean_gain_{mach}"), g_gain));
         summaries.push((format!("mean_pick_loss_{mach}"), loss));
+        let skipped = best_skipped + legacy_skipped + gain_skipped;
+        if skipped > 0 {
+            summaries.push((format!("geomean_skipped_{mach}"), skipped as f64));
+        }
     }
     Exhibit {
         title: "Tune summary: searched plan space vs legacy kinds",
@@ -199,6 +207,7 @@ mod tests {
             skews: Vec::new(),
             skew_seed: crate::explore::DEFAULT_SKEW_SEED,
             search: None,
+            model: None,
         };
         // Narrow space so the test stays fast.
         let ov = SpaceOverrides {

@@ -33,6 +33,9 @@
 //! §6 for the evaluator/scratch contract.
 
 pub mod emit;
+pub mod training;
+
+pub use training::{calibration_examples, CalExample};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -754,14 +757,20 @@ pub fn tune_cell_in(
     let space = space_for(sc, ov);
     let space_size = space.plans(sc).len();
     let out = search_in(ev, &cell.machine_name, machine, sc, &space, cfg, cache);
-    let pick = crate::heuristics::pick(machine, sc).pick;
-    let pick_makespan = cache.makespan_in(
-        ev,
-        &cell.machine_name,
-        machine,
-        sc,
-        &Plan::preset(pick, sc),
-    );
+    // The static pick: a calibrated model predicts a full plan; the
+    // default path keeps the frozen Fig-12a kind and its preset plan
+    // (bit-identical to the pre-model tune artifacts).
+    let (pick, pick_plan) = match &cell.model {
+        Some(model) => {
+            let d = model.predict(machine, sc);
+            (d.kind, d.plan)
+        }
+        None => {
+            let pick = crate::heuristics::pick(machine, sc).pick;
+            (pick, Plan::preset(pick, sc))
+        }
+    };
+    let pick_makespan = cache.makespan_in(ev, &cell.machine_name, machine, sc, &pick_plan);
     let pick_speedup = out.baseline / pick_makespan;
     TuneResult {
         index: cell.index,

@@ -1,0 +1,116 @@
+//! Training-data extraction for heuristic calibration.
+//!
+//! `ficco calibrate` fits a [`crate::heuristics::model::HeuristicModel`]
+//! against plan-space searched optima. This module turns a tune run
+//! ([`super::tune`] over a [`SweepSpec`]'s cells) into supervised
+//! [`CalExample`]s: each cell's scenario (pinned to its machine, mech
+//! and GPU count) paired with the best plan the search found there.
+//! The extraction inherits the tune driver's determinism — ordered
+//! worker pool, pure search — so the example list is identical for
+//! any `jobs` value, which is what makes the fitted model artifact
+//! byte-stable.
+
+use crate::explore::SweepSpec;
+use crate::hw::Machine;
+use crate::plan::Plan;
+use crate::schedule::Scenario;
+
+use super::{tune, SearchCfg, SpaceOverrides};
+
+/// One supervised calibration example: a scenario and the plan-space
+/// optimum `ficco tune`'s search found for it.
+#[derive(Debug, Clone)]
+pub struct CalExample {
+    /// Machine preset name (the cache key the fit scores under).
+    pub machine_name: String,
+    pub machine: Machine,
+    pub scenario: Scenario,
+    /// Serial-baseline makespan of the cell (speedup reference).
+    pub baseline: f64,
+    /// The searched optimum (never worse than the best legacy kind).
+    pub searched_plan: Plan,
+    pub searched_makespan: f64,
+}
+
+impl CalExample {
+    /// Speedup of the searched optimum over the serial baseline.
+    pub fn searched_speedup(&self) -> f64 {
+        self.baseline / self.searched_makespan
+    }
+}
+
+/// Search every cell of `spec` and extract the calibration examples
+/// from the [`super::TuneResult`]s, in deterministic cell order.
+pub fn calibration_examples(
+    spec: &SweepSpec,
+    ov: &SpaceOverrides,
+    cfg: &SearchCfg,
+    jobs: usize,
+) -> Result<Vec<CalExample>, String> {
+    let cells = spec.cells();
+    let report = tune(spec, ov, cfg, jobs, |_| true);
+    if report.results.len() != cells.len() {
+        return Err(format!(
+            "tune delivered {} of {} cells",
+            report.results.len(),
+            cells.len()
+        ));
+    }
+    report
+        .results
+        .iter()
+        .zip(&cells)
+        .map(|(r, cell)| {
+            debug_assert_eq!(r.index, cell.index);
+            let plan = Plan::parse_id(&r.best_plan)
+                .ok_or_else(|| format!("unparseable searched plan id '{}'", r.best_plan))?;
+            Ok(CalExample {
+                machine_name: cell.machine_name.clone(),
+                machine: cell.machine.clone(),
+                scenario: cell.scenario.clone(),
+                baseline: r.baseline_makespan,
+                searched_plan: plan,
+                searched_makespan: r.best_makespan,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Kind;
+    use crate::sim::CommMech;
+
+    #[test]
+    fn examples_mirror_the_tune_cells() {
+        let spec = SweepSpec {
+            scenarios: vec![Scenario::new("t", 8192, 512, 1024)],
+            kinds: Kind::ALL.to_vec(),
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
+            search: None,
+            model: None,
+        };
+        let ov = SpaceOverrides {
+            pieces: Some(vec![1, 8]),
+            slots: Some(vec![1, 7]),
+            mechs: None,
+        };
+        let cfg = SearchCfg {
+            beam: 2,
+            prune: true,
+        };
+        let examples = calibration_examples(&spec, &ov, &cfg, 2).unwrap();
+        assert_eq!(examples.len(), 1);
+        let e = &examples[0];
+        assert_eq!(e.machine_name, "mi300x-8");
+        assert_eq!(e.scenario.name, "t");
+        assert!(e.searched_plan.check(e.scenario.ngpus).is_ok());
+        assert!(e.baseline > 0.0 && e.searched_makespan > 0.0);
+        assert!(e.searched_speedup() >= 1.0 - 1e-12, "search never loses to baseline");
+    }
+}

@@ -9,19 +9,52 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Geometric mean. All inputs must be positive; returns 0.0 for empty.
+/// Geometric mean over the positive finite inputs. Non-positive or
+/// non-finite samples are skipped rather than aborting the whole
+/// summary (one zero-speedup cell must not kill a sweep); use
+/// [`geomean_pos`] when the caller wants to know how many were
+/// dropped. Returns 0.0 when no sample qualifies (including empty).
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    geomean_pos(xs).0
+}
+
+/// As [`geomean`], additionally reporting how many samples were
+/// skipped for being non-positive or non-finite (the flag callers can
+/// surface next to the summary).
+pub fn geomean_pos(xs: &[f64]) -> (f64, usize) {
+    let mut log_sum = 0.0f64;
+    let mut n = 0usize;
+    for &x in xs {
+        if x.is_finite() && x > 0.0 {
+            log_sum += x.ln();
+            n += 1;
+        }
     }
-    let log_sum: f64 = xs
-        .iter()
-        .map(|&x| {
-            assert!(x > 0.0, "geomean over non-positive value {x}");
-            x.ln()
-        })
-        .sum();
-    (log_sum / xs.len() as f64).exp()
+    if n == 0 {
+        (0.0, xs.len())
+    } else {
+        ((log_sum / n as f64).exp(), xs.len() - n)
+    }
+}
+
+/// One-pass geomean for summary emitters: the value, the number of
+/// degenerate (non-positive/non-finite) samples dropped, and the
+/// rendered table cell (`"<g>x"` or `"<g>x [N skipped]"`). Shared by
+/// the sweep/tune/figure emitters so the flagging never drifts
+/// between them.
+pub fn geomean_summary(xs: &[f64]) -> (f64, usize, String) {
+    let (g, skipped) = geomean_pos(xs);
+    let cell = if skipped == 0 {
+        crate::util::table::x(g)
+    } else {
+        format!("{} [{skipped} skipped]", crate::util::table::x(g))
+    };
+    (g, skipped, cell)
+}
+
+/// Just the rendered cell of [`geomean_summary`].
+pub fn geomean_cell(xs: &[f64]) -> String {
+    geomean_summary(xs).2
 }
 
 /// Population standard deviation.
@@ -33,14 +66,31 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, `p` in [0, 100].
+/// Normalize a sample for total-order sorting: every NaN becomes the
+/// positive quiet NaN (fixed bit pattern — `f64::NAN`'s sign is
+/// documented as unspecified). IEEE total order puts *negative* NaN
+/// (what `0.0 / 0.0` produces on x86-64) before every finite value,
+/// which would corrupt the low percentiles / first ranks; after
+/// normalization all NaNs deterministically sort last.
+fn nan_last(x: f64) -> f64 {
+    if x.is_nan() {
+        f64::from_bits(0x7FF8_0000_0000_0000)
+    } else {
+        x
+    }
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100]. NaN samples sort
+/// last (sign-normalized `total_cmp`) instead of aborting, so a
+/// poisoned series degrades to a NaN-adjacent top percentile rather
+/// than a panic mid-sweep.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
     if xs.is_empty() {
         return 0.0;
     }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut sorted: Vec<f64> = xs.iter().map(|&x| nan_last(x)).collect();
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = p / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -91,7 +141,9 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    // Sign-normalized `total_cmp`: any NaN sample gets the last rank
+    // deterministically instead of aborting the correlation.
+    idx.sort_by(|&a, &b| nan_last(xs[a]).total_cmp(&nan_last(xs[b])));
     let mut r = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -194,6 +246,61 @@ mod tests {
         let xs = [1.0, 1.0, 2.0];
         let ys = [3.0, 3.0, 5.0];
         assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` used to abort the whole
+        // process on the first NaN sample.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0, "finite samples sort ahead of NaN");
+        assert!(median(&xs).is_finite());
+        // Negative NaN (what 0.0/0.0 yields on x86-64) must also sort
+        // last, not corrupt the low percentiles.
+        let neg = [2.0, f64::NAN.copysign(-1.0), 1.0, 3.0];
+        assert_eq!(percentile(&neg, 0.0), 1.0, "-NaN sorts last too");
+        assert!(median(&neg).is_finite());
+        // All-NaN degrades to NaN, not a panic.
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn ranks_and_spearman_tolerate_nan() {
+        // Regression: a NaN in either series used to panic in `ranks`.
+        let xs = [1.0, f64::NAN, 2.0];
+        let ys = [3.0, 4.0, 5.0];
+        let r = spearman(&xs, &ys);
+        assert!(r.is_finite(), "spearman over NaN-bearing series: {r}");
+        // Either NaN sign ranks last; finite samples keep their order.
+        let neg = [1.0, f64::NAN.copysign(-1.0), 2.0];
+        let rk = ranks(&neg);
+        assert_eq!(rk[1], 2.0, "-NaN takes the last rank: {rk:?}");
+        assert!(rk[0] < rk[2]);
+    }
+
+    #[test]
+    fn geomean_skips_non_positive_inputs() {
+        // Regression: one zero-speedup cell used to assert-abort the
+        // whole sweep summary.
+        assert!((geomean(&[2.0, 0.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, -1.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, f64::NAN, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[0.0]), 0.0);
+        assert_eq!(geomean(&[f64::INFINITY]), 0.0);
+        let (g, skipped) = geomean_pos(&[2.0, 0.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+        assert_eq!(skipped, 1);
+        assert_eq!(geomean_pos(&[]), (0.0, 0));
+        assert_eq!(geomean_pos(&[-1.0, 0.0]), (0.0, 2));
+    }
+
+    #[test]
+    fn geomean_cell_flags_skips() {
+        assert_eq!(geomean_cell(&[2.0, 8.0]), crate::util::table::x(4.0));
+        let flagged = geomean_cell(&[2.0, 0.0, 8.0]);
+        assert!(flagged.contains("[1 skipped]"), "{flagged}");
+        assert!(flagged.starts_with(&crate::util::table::x(4.0)), "{flagged}");
     }
 
     #[test]

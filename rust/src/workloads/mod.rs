@@ -4,7 +4,7 @@
 pub mod synthetic;
 pub mod table1;
 
-pub use synthetic::{synthetic_moe_scenarios, synthetic_scenarios};
+pub use synthetic::{holdout_scenarios, synthetic_moe_scenarios, synthetic_scenarios};
 pub use table1::{table1, Table1Row};
 
 use crate::schedule::{Collective, Scenario};

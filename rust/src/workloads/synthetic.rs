@@ -69,6 +69,29 @@ pub fn synthetic_moe_scenarios(seed: u64, count: usize) -> Vec<Scenario> {
         .collect()
 }
 
+/// Held-out evaluation suite for `ficco calibrate`: shapes from the
+/// same stratified OTB×MT sampler, drawn from a decorrelated stream
+/// (so a model fitted on `synthetic_scenarios(seed, ..)` never sees
+/// these shapes), with every odd-indexed scenario turned into a
+/// skewed EP dispatch — the holdout gate must see both balanced and
+/// hot-expert regimes. Seeded and reproducible.
+pub fn holdout_scenarios(seed: u64, count: usize) -> Vec<Scenario> {
+    let mut rng = Rng::new(seed ^ 0x484F_4C44); // "HOLD"
+    (0..count)
+        .map(|i| {
+            let mut sc = sample(&mut rng, i);
+            sc.name = format!("hold{i}");
+            if i % 2 == 1 {
+                sc.collective = crate::schedule::Collective::AllToAll;
+                let skew = rng.range_f64(0.25, 1.0);
+                let hot_seed = rng.next_u64();
+                sc = sc.with_skew(skew, hot_seed);
+            }
+            sc
+        })
+        .collect()
+}
+
 /// Diversity diagnostic: (min, max) of log10(OTB) and log10(MT bytes)
 /// across a suite.
 pub fn diversity(scenarios: &[Scenario]) -> ((f64, f64), (f64, f64)) {
@@ -136,6 +159,29 @@ mod tests {
         // Independent of the base suite's draws for the same seed.
         let base = synthetic_scenarios(7, 8);
         assert!(a.iter().zip(&base).any(|(x, y)| x.gemm != y.gemm));
+    }
+
+    #[test]
+    fn holdout_suite_is_reproducible_and_mixes_regimes() {
+        let a = holdout_scenarios(7, 8);
+        let b = holdout_scenarios(7, 8);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gemm, y.gemm);
+            assert_eq!(x.skew, y.skew);
+            assert_eq!(x.skew_seed, y.skew_seed);
+        }
+        for (i, sc) in a.iter().enumerate() {
+            if i % 2 == 1 {
+                assert_eq!(sc.collective, crate::schedule::Collective::AllToAll);
+                assert!((0.25..1.0).contains(&sc.skew), "{}: skew {}", sc.name, sc.skew);
+            } else {
+                assert_eq!(sc.skew, 0.0, "{}: even indices stay balanced", sc.name);
+            }
+        }
+        // Decorrelated from the training stream at the same seed.
+        let train = synthetic_scenarios(7, 8);
+        assert!(a.iter().zip(&train).any(|(x, y)| x.gemm != y.gemm));
     }
 
     #[test]

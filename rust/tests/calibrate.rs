@@ -1,0 +1,170 @@
+//! Integration: `ficco calibrate` acceptance criteria — byte-stable
+//! model artifacts for any `--jobs`, a holdout hit-rate never below
+//! the frozen Fig-12a rule's (the fallback gate), and the default
+//! (uncalibrated) model predicting exactly the legacy picks' preset
+//! plans so every skew-0 golden stays frozen.
+
+use ficco::explore::SweepSpec;
+use ficco::heuristics::fit::{calibrate, FitCfg};
+use ficco::heuristics::model::HeuristicModel;
+use ficco::hw::Machine;
+use ficco::plan::Plan;
+use ficco::schedule::{Kind, Scenario};
+use ficco::search::{calibration_examples, CalExample, SearchCfg, SpaceOverrides};
+use ficco::sim::CommMech;
+use ficco::workloads;
+
+fn spec(scenarios: Vec<Scenario>) -> SweepSpec {
+    SweepSpec {
+        scenarios,
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+        mechs: vec![CommMech::Dma],
+        gpu_counts: Vec::new(),
+        skews: Vec::new(),
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
+        search: None,
+        model: None,
+    }
+}
+
+/// Narrowed space + small suites keep the searches quick in debug
+/// builds (the full default space is exercised by the CI smoke).
+fn small_space() -> SpaceOverrides {
+    SpaceOverrides {
+        pieces: Some(vec![1, 4, 8]),
+        slots: Some(vec![1, 7]),
+        mechs: None,
+    }
+}
+
+fn cfg() -> SearchCfg {
+    SearchCfg {
+        beam: 2,
+        prune: true,
+    }
+}
+
+fn train_examples(jobs: usize) -> Vec<CalExample> {
+    calibration_examples(
+        &spec(workloads::synthetic_scenarios(7, 3)),
+        &small_space(),
+        &cfg(),
+        jobs,
+    )
+    .unwrap()
+}
+
+fn holdout_examples(jobs: usize) -> Vec<CalExample> {
+    calibration_examples(
+        &spec(workloads::holdout_scenarios(7, 3)),
+        &small_space(),
+        &cfg(),
+        jobs,
+    )
+    .unwrap()
+}
+
+#[test]
+fn model_artifact_is_byte_deterministic_across_jobs() {
+    let t1 = train_examples(1);
+    let t4 = train_examples(4);
+    assert_eq!(t1.len(), t4.len());
+    for (a, b) in t1.iter().zip(&t4) {
+        assert_eq!(a.searched_plan, b.searched_plan, "{}", a.scenario.name);
+        assert_eq!(
+            a.searched_makespan.to_bits(),
+            b.searched_makespan.to_bits(),
+            "{}",
+            a.scenario.name
+        );
+        assert_eq!(a.baseline.to_bits(), b.baseline.to_bits());
+    }
+    let h1 = holdout_examples(1);
+    let h4 = holdout_examples(4);
+    let a = calibrate(&t1, &h1, &FitCfg::default());
+    let b = calibrate(&t4, &h4, &FitCfg::default());
+    assert_eq!(
+        a.model.to_text(),
+        b.model.to_text(),
+        "model artifact must be byte-identical across --jobs"
+    );
+    assert_eq!(a.fell_back, b.fell_back);
+    assert_eq!(a.candidates, b.candidates);
+    // The artifact round-trips to the same model.
+    let round = HeuristicModel::parse(&a.model.to_text()).unwrap();
+    assert_eq!(round, a.model);
+    assert_eq!(round.to_text(), a.model.to_text());
+}
+
+#[test]
+fn holdout_hit_rate_never_below_the_frozen_rule() {
+    let train = train_examples(2);
+    let holdout = holdout_examples(2);
+    let out = calibrate(&train, &holdout, &FitCfg::default());
+    // The fit never regresses the training objective (the default is
+    // always a candidate).
+    assert!(
+        out.train.mean_loss <= out.default_train.mean_loss + 1e-9,
+        "train loss regressed: {} > {}",
+        out.train.mean_loss,
+        out.default_train.mean_loss
+    );
+    assert!(
+        out.train.plan_hits >= out.default_train.plan_hits
+            || out.train.mean_loss < out.default_train.mean_loss,
+        "fit must improve hits or loss over the default"
+    );
+    // The holdout gate: the accepted model is never worse than the
+    // frozen Fig-12a rule on the held-out suite.
+    assert!(
+        out.holdout.plan_hits >= out.default_holdout.plan_hits,
+        "accepted holdout hits {} < default {}",
+        out.holdout.plan_hits,
+        out.default_holdout.plan_hits
+    );
+    assert!(out.holdout.mean_loss <= out.default_holdout.mean_loss + 1e-9);
+    assert!(out.holdout.hit_rate() >= out.default_holdout.hit_rate());
+    if out.fell_back {
+        assert!(out.model.is_default(), "fallback ships the frozen rule");
+        assert_eq!(out.holdout, out.default_holdout);
+    } else {
+        assert_eq!(out.model, out.fitted);
+        assert_eq!(out.holdout, out.fitted_holdout);
+    }
+    assert!(out.candidates > 0);
+}
+
+#[test]
+fn skew0_default_model_picks_are_identical_to_legacy_pick() {
+    // The uncalibrated path must leave every golden frozen: the
+    // default model's prediction is exactly the legacy pick's preset
+    // plan on every Table I row and synthetic scenario.
+    let machines = [
+        ("mi300x-8", Machine::mi300x_8()),
+        ("pcie-gen4-4", Machine::pcie_gen4_4()),
+    ];
+    let model = HeuristicModel::default();
+    for (name, m) in &machines {
+        let scenarios: Vec<Scenario> = workloads::table1()
+            .iter()
+            .map(|r| r.scenario())
+            .chain(workloads::synthetic_scenarios(2025, 8))
+            .map(|mut sc| {
+                sc.ngpus = m.ngpus();
+                sc
+            })
+            .collect();
+        for sc in &scenarios {
+            let legacy = ficco::heuristics::pick(m, sc);
+            let d = model.predict(m, sc);
+            assert_eq!(d.kind, legacy.pick, "{name}/{}", sc.name);
+            assert_eq!(
+                d.plan,
+                Plan::preset(legacy.pick, sc),
+                "{name}/{}: default model must lift the frozen rule exactly",
+                sc.name
+            );
+        }
+    }
+}

@@ -86,6 +86,7 @@ fn sweep_artifacts_carry_skewed_cells() {
         skews: vec![0.0, 0.6],
         skew_seed: DEFAULT_SKEW_SEED,
         search: None,
+        model: None,
     };
     let mut csv = ficco::explore::emit::CsvEmitter::new(Vec::new()).unwrap();
     let report = run(&spec, 2, |c| {
@@ -122,6 +123,7 @@ fn skew_zero_sweep_is_identical_to_the_legacy_default() {
             skews,
             skew_seed: 12345,
             search: None,
+            model: None,
         };
         let mut csv = ficco::explore::emit::CsvEmitter::new(Vec::new()).unwrap();
         run(&spec, 1, |c| {

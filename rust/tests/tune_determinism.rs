@@ -28,6 +28,7 @@ fn small_spec() -> SweepSpec {
         skews: vec![0.0, 0.8],
         skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
         search: None,
+        model: None,
     }
 }
 
