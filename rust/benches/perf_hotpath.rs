@@ -17,7 +17,7 @@ use ficco::hw::Machine;
 use ficco::schedule::exec::Evaluator;
 use ficco::schedule::{exec, generate::generate, Kind, Scenario};
 use ficco::search::{search_in, EvalCache, SearchCfg, SpaceSpec};
-use ficco::sim::{Engine, TaskSpec};
+use ficco::sim::{set_default_fair_mode, Engine, FairMode, TaskSpec};
 use ficco::util::stats::Accum;
 use std::io::Write;
 use std::time::Instant;
@@ -154,6 +154,70 @@ fn main() {
         evals_per_sec,
     );
 
+    // ISSUE 6: old-vs-new fair sharing on the same contention-saturated
+    // tune cell, measured in one process. `set_default_fair_mode` flips
+    // the mode every Engine a fresh Evaluator constructs inherits; both
+    // modes produce bit-identical makespans (asserted below), only the
+    // rate-fill cost differs. Order: slow first, incremental second, so
+    // the final state is the shipping default.
+    let mut mode_stats: Vec<(&str, f64, f64)> = Vec::new();
+    let mut mode_best: Vec<f64> = Vec::new();
+    for (mode, label) in [
+        (FairMode::Slow, "slow"),
+        (FairMode::Incremental, "incremental"),
+    ] {
+        set_default_fair_mode(mode);
+        let mut mev = Evaluator::new();
+        let mwarm = search_in(
+            &mut mev,
+            "mi300x-8",
+            &machine,
+            &tune_sc,
+            &space,
+            &cfg,
+            &EvalCache::new(),
+        );
+        assert_eq!(mwarm.evaluated, warm.evaluated, "{label}: candidate set moved");
+        let mut macc = Accum::new();
+        for _ in 0..tune_iters {
+            let t0 = Instant::now();
+            let out = search_in(
+                &mut mev,
+                "mi300x-8",
+                &machine,
+                &tune_sc,
+                &space,
+                &cfg,
+                &EvalCache::new(),
+            );
+            macc.push(t0.elapsed().as_secs_f64());
+            assert_eq!(out.evaluated, mwarm.evaluated);
+        }
+        let med = macc.median();
+        let eps = mwarm.evaluated as f64 / med.max(1e-12);
+        println!(
+            "{:<44} median {:>10}  ({:.1} evals/s)",
+            format!("tune cell, fair sharing = {label}"),
+            ficco::util::human_time(med),
+            eps,
+        );
+        mode_stats.push((label, med, eps));
+        mode_best.push(mwarm.best.makespan);
+    }
+    set_default_fair_mode(FairMode::Incremental);
+    assert_eq!(
+        mode_best[0].to_bits(),
+        mode_best[1].to_bits(),
+        "fair-sharing modes must agree bitwise on the searched optimum"
+    );
+    let slow_evals_per_sec = mode_stats[0].2;
+    let incremental_evals_per_sec = mode_stats[1].2;
+    let speedup_vs_slow = incremental_evals_per_sec / slow_evals_per_sec.max(1e-12);
+    println!(
+        "{:<44} {:.2}x evals/s vs from-scratch recompute",
+        "incremental fair sharing", speedup_vs_slow,
+    );
+
     // Machine-readable trajectory record.
     let json = format!(
         "{{\n  \"bench\": \"perf_hotpath\",\n  \"quick\": {quick},\n  \"engine\": {{\n    \
@@ -162,7 +226,11 @@ fn main() {
          \"machine\": \"mi300x-8\",\n    \"scenario\": \"g6\",\n    \"mech\": \"{tune_mech}\",\n    \
          \"beam\": 0,\n    \"prune\": true,\n    \"space_size\": {space_size},\n    \
          \"evaluated\": {evaluated},\n    \"pruned\": {pruned},\n    \
-         \"median_seconds\": {tune_median:.6},\n    \"evals_per_sec\": {evals_per_sec:.1}\n  }}\n}}\n",
+         \"median_seconds\": {tune_median:.6},\n    \"evals_per_sec\": {evals_per_sec:.1}\n  }},\n  \
+         \"fair_sharing\": {{\n    \
+         \"slow_evals_per_sec\": {slow_evals_per_sec:.1},\n    \
+         \"incremental_evals_per_sec\": {incremental_evals_per_sec:.1},\n    \
+         \"speedup_vs_slow\": {speedup_vs_slow:.3}\n  }}\n}}\n",
         evaluated = warm.evaluated,
         pruned = warm.pruned,
     );

@@ -30,6 +30,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
 /// Index of a resource (capacity-limited, e.g. a link or a CU pool).
@@ -50,6 +51,64 @@ pub struct StreamId(pub usize);
 pub fn trace_enabled() -> bool {
     static TRACE: OnceLock<bool> = OnceLock::new();
     *TRACE.get_or_init(|| std::env::var("FICCO_SIM_TRACE").is_ok())
+}
+
+/// Which fair-sharing implementation an engine runs (`DESIGN.md` §6).
+///
+/// Both produce **bit-identical** rates; `Slow` is the kept-verbatim
+/// from-scratch recompute retained as the differential baseline (and
+/// as the cross-check oracle), `Incremental` is the default hot path
+/// that maintains per-resource aggregates across events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FairMode {
+    /// Maintain per-resource flow lists and cached demand aggregates
+    /// across events; a task start/finish only touches the resources
+    /// it demands.
+    Incremental,
+    /// Recompute progressive filling from scratch over the whole
+    /// running set on every event (the pre-ISSUE-6 algorithm, kept
+    /// verbatim as [`Engine::fill_fair_rates_slow`]).
+    Slow,
+}
+
+/// Process default for [`FairMode`]: 0 = incremental, 1 = slow,
+/// 2 = uninitialized (resolve from `FICCO_SIM_SLOW_FAIR` on first use).
+static FAIR_MODE_DEFAULT: AtomicU8 = AtomicU8::new(2);
+
+/// The process-wide default fair-sharing mode new engines start in.
+/// Resolved from the `FICCO_SIM_SLOW_FAIR` env var on first call
+/// unless [`set_default_fair_mode`] ran earlier.
+pub fn default_fair_mode() -> FairMode {
+    match FAIR_MODE_DEFAULT.load(Ordering::Relaxed) {
+        0 => FairMode::Incremental,
+        1 => FairMode::Slow,
+        _ => {
+            let slow = std::env::var("FICCO_SIM_SLOW_FAIR").is_ok();
+            FAIR_MODE_DEFAULT.store(u8::from(slow), Ordering::Relaxed);
+            if slow {
+                FairMode::Slow
+            } else {
+                FairMode::Incremental
+            }
+        }
+    }
+}
+
+/// Override the process default fair-sharing mode (picked up by every
+/// subsequently constructed [`Engine`], e.g. deep inside an
+/// `exec::Evaluator`). The `perf_hotpath` bench uses this to measure
+/// old-vs-new on identical workloads in one process.
+pub fn set_default_fair_mode(mode: FairMode) {
+    FAIR_MODE_DEFAULT.store(u8::from(mode == FairMode::Slow), Ordering::Relaxed);
+}
+
+/// Process-wide `FICCO_SIM_CHECK_RATES` switch: when set, every engine
+/// runs **both** fair-sharing implementations on every rate fill and
+/// panics if any rate differs bitwise (the cross-check mode the
+/// `sim-differential` CI job turns on).
+pub fn check_rates_enabled() -> bool {
+    static CHECK: OnceLock<bool> = OnceLock::new();
+    *CHECK.get_or_init(|| std::env::var("FICCO_SIM_CHECK_RATES").is_ok())
 }
 
 /// Lazily rendered task label: building a `String` per task was a
@@ -254,6 +313,36 @@ struct RunScratch {
     setup_heap: BinaryHeap<Reverse<(u64, usize)>>,
     completed: Vec<usize>,
     resource_busy: Vec<f64>,
+
+    // --- incremental fair-sharing state (DESIGN.md §6) ---
+    /// Per-resource running flows as (task, demand), ascending by task
+    /// id with a task's duplicate demands in declaration order — the
+    /// exact order the slow path's per-round sums accumulate in.
+    flows: Vec<Vec<(u32, f64)>>,
+    /// Cached full-running-set demand aggregate per resource, valid
+    /// while `agg_dirty` is false: reusable bitwise because the flow
+    /// list (and therefore the addition sequence) is unchanged.
+    agg_sum: Vec<f64>,
+    agg_dirty: Vec<bool>,
+    /// Resources with at least one running flow (arbitrary order;
+    /// nothing order-dependent is computed over it).
+    active_res: Vec<u32>,
+    /// Position of each resource in `active_res` (`u32::MAX` = absent).
+    active_pos: Vec<u32>,
+    /// Per-fill: resources whose remainder crossed the saturation
+    /// threshold (monotone within a fill — rem never grows).
+    saturated: Vec<bool>,
+    newly_saturated: Vec<u32>,
+    /// Per-round: resources whose unfrozen membership changed and need
+    /// a fresh ascending-order sum next round.
+    refresh_res: Vec<u32>,
+    refresh_mark: Vec<bool>,
+    /// Separate buffers for the env-gated slow-path cross-check so the
+    /// oracle never aliases the incremental path's working state.
+    check_rates: Vec<f64>,
+    check_frozen: Vec<bool>,
+    check_rem: Vec<f64>,
+    check_sum: Vec<f64>,
 }
 
 /// The engine. Build tasks, then [`Engine::run_full`] /
@@ -266,6 +355,8 @@ pub struct Engine {
     demands_flat: Vec<(ResourceId, f64)>,
     streams: Vec<Vec<TaskId>>,
     trace: bool,
+    fair_mode: FairMode,
+    check_rates: bool,
     scratch: RunScratch,
 }
 
@@ -351,8 +442,28 @@ impl Engine {
             demands_flat: Vec::new(),
             streams: Vec::new(),
             trace: trace_enabled(),
+            fair_mode: default_fair_mode(),
+            check_rates: check_rates_enabled(),
             scratch: RunScratch::default(),
         }
+    }
+
+    /// Select which fair-sharing implementation this engine runs. Both
+    /// produce bit-identical rates; `Slow` exists as the measurable
+    /// baseline and cross-check oracle.
+    pub fn set_fair_mode(&mut self, mode: FairMode) {
+        self.fair_mode = mode;
+    }
+
+    pub fn fair_mode(&self) -> FairMode {
+        self.fair_mode
+    }
+
+    /// Enable/disable the per-event slow-vs-incremental rate
+    /// cross-check on this engine (panics on any bitwise divergence).
+    /// Process-wide default comes from `FICCO_SIM_CHECK_RATES`.
+    pub fn set_check_rates(&mut self, on: bool) {
+        self.check_rates = on;
     }
 
     /// Register a resource with the given capacity; returns its id.
@@ -547,10 +658,151 @@ impl Engine {
     }
 
     /// Progressive-filling max–min fair rates for the current running
-    /// set, written into `s.rates` (parallel to `s.running`). All
-    /// rates grow uniformly until a resource saturates (its tasks
-    /// freeze) or a task reaches rate 1.0; repeats on the remainder.
+    /// set, written into `s.rates` (parallel to `s.running`),
+    /// dispatched to the configured [`FairMode`]. Under cross-check,
+    /// the slow oracle additionally runs into separate buffers and any
+    /// bitwise rate divergence panics with the offending tasks.
     fn fill_fair_rates(&self, s: &mut RunScratch) {
+        match self.fair_mode {
+            FairMode::Incremental => {
+                self.fill_fair_rates_incremental(s);
+                if self.check_rates {
+                    self.cross_check_rates(s);
+                }
+            }
+            FairMode::Slow => {
+                let RunScratch {
+                    running,
+                    rates,
+                    frozen,
+                    rem,
+                    sum,
+                    ..
+                } = s;
+                self.fill_fair_rates_slow(running, rates, frozen, rem, sum);
+            }
+        }
+    }
+
+    /// From-scratch progressive filling over the whole running set —
+    /// the pre-incremental algorithm, kept **verbatim** (same float
+    /// ops, same order) as the baseline `FairMode::Slow` runs and the
+    /// oracle the cross-check mode compares against. Buffers are
+    /// caller-supplied so the oracle never aliases incremental state.
+    fn fill_fair_rates_slow(
+        &self,
+        running: &[usize],
+        rates: &mut Vec<f64>,
+        frozen: &mut Vec<bool>,
+        rem: &mut Vec<f64>,
+        sum: &mut Vec<f64>,
+    ) {
+        let m = running.len();
+        rates.clear();
+        rates.resize(m, 0.0);
+        if m == 0 {
+            return;
+        }
+        frozen.clear();
+        frozen.resize(m, false);
+        rem.clear();
+        rem.extend_from_slice(&self.capacities);
+
+        loop {
+            // Aggregate unfrozen demand per resource.
+            sum.clear();
+            sum.resize(rem.len(), 0.0);
+            let mut any_unfrozen = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                any_unfrozen = true;
+                for &(r, d) in self.demands_of(i) {
+                    sum[r.0] += d;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            // Max uniform rate increment.
+            let mut delta = f64::INFINITY;
+            for j in 0..m {
+                if !frozen[j] {
+                    delta = delta.min(1.0 - rates[j]);
+                }
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    delta = delta.min(rem[r] / sum[r]);
+                }
+            }
+            if !delta.is_finite() || delta < 0.0 {
+                break;
+            }
+            // Apply increment.
+            for j in 0..m {
+                if !frozen[j] {
+                    rates[j] += delta;
+                }
+            }
+            for r in 0..rem.len() {
+                if sum[r] > EPS {
+                    rem[r] -= delta * sum[r];
+                }
+            }
+            // Freeze saturated tasks.
+            let mut progressed = false;
+            for (j, &i) in running.iter().enumerate() {
+                if frozen[j] {
+                    continue;
+                }
+                if rates[j] >= 1.0 - EPS {
+                    frozen[j] = true;
+                    progressed = true;
+                    continue;
+                }
+                let saturated = self
+                    .demands_of(i)
+                    .iter()
+                    .any(|&(r, d)| d > EPS && rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
+                if saturated {
+                    frozen[j] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // delta was limited by the 1.0 cap of a task that was
+                // just frozen, or nothing changed: avoid spinning.
+                break;
+            }
+        }
+    }
+
+    /// Incremental progressive filling — bit-identical rates to
+    /// [`Engine::fill_fair_rates_slow`] at a fraction of the work:
+    ///
+    /// - **Round-1 sums** come from `agg_sum`, the cached
+    ///   full-running-set aggregate per resource; only resources whose
+    ///   membership changed since the last fill (`agg_dirty`, set by
+    ///   task start/finish) are re-summed — bitwise safe because an
+    ///   unchanged flow list replays the identical addition sequence.
+    /// - **The uniform rate** of all never-frozen tasks is a single
+    ///   accumulator `lambda` (the slow path adds the same delta to
+    ///   every unfrozen task, so all those rates share one bit
+    ///   pattern); a task's final rate is the value of `lambda` when
+    ///   it froze.
+    /// - **Freezing propagates through flow lists**: when a resource's
+    ///   remainder crosses the saturation threshold, exactly its
+    ///   running flows with demand > EPS freeze — no all-task scan.
+    /// - **Per-round sums refresh only where membership changed**:
+    ///   resources untouched by this round's freezes keep last round's
+    ///   sum (same unfrozen flows ⇒ same addition sequence).
+    ///
+    /// The per-event slow-vs-incremental bitwise equivalence is
+    /// asserted by the cross-check mode, `tests/fair_sharing.rs`, and
+    /// the differential suite vs `sim::reference`.
+    fn fill_fair_rates_incremental(&self, s: &mut RunScratch) {
         let m = s.running.len();
         s.rates.clear();
         s.rates.resize(m, 0.0);
@@ -561,32 +813,36 @@ impl Engine {
         s.frozen.resize(m, false);
         s.rem.clear();
         s.rem.extend_from_slice(&self.capacities);
+        s.saturated.clear();
+        s.saturated.resize(self.capacities.len(), false);
+
+        // Round-1 sums: refresh dirty aggregates, reuse the rest.
+        for k in 0..s.active_res.len() {
+            let r = s.active_res[k] as usize;
+            if s.agg_dirty[r] {
+                let mut acc = 0.0f64;
+                for &(_, d) in &s.flows[r] {
+                    acc += d;
+                }
+                s.agg_sum[r] = acc;
+                s.agg_dirty[r] = false;
+            }
+            s.sum[r] = s.agg_sum[r];
+        }
+
+        // Common rate of every never-frozen task (all grow in lockstep).
+        let mut lambda = 0.0f64;
+        let mut n_unfrozen = m;
 
         loop {
-            // Aggregate unfrozen demand per resource.
-            s.sum.clear();
-            s.sum.resize(s.rem.len(), 0.0);
-            let mut any_unfrozen = false;
-            for (j, &i) in s.running.iter().enumerate() {
-                if s.frozen[j] {
-                    continue;
-                }
-                any_unfrozen = true;
-                for &(r, d) in self.demands_of(i) {
-                    s.sum[r.0] += d;
-                }
-            }
-            if !any_unfrozen {
+            if n_unfrozen == 0 {
                 break;
             }
-            // Max uniform rate increment.
-            let mut delta = f64::INFINITY;
-            for j in 0..m {
-                if !s.frozen[j] {
-                    delta = delta.min(1.0 - s.rates[j]);
-                }
-            }
-            for r in 0..s.rem.len() {
+            // Max uniform rate increment: the 1.0 cap and resource
+            // headroom over resources with unfrozen demand.
+            let mut delta = 1.0 - lambda;
+            for k in 0..s.active_res.len() {
+                let r = s.active_res[k] as usize;
                 if s.sum[r] > EPS {
                     delta = delta.min(s.rem[r] / s.sum[r]);
                 }
@@ -594,43 +850,229 @@ impl Engine {
             if !delta.is_finite() || delta < 0.0 {
                 break;
             }
-            // Apply increment.
-            for j in 0..m {
-                if !s.frozen[j] {
-                    s.rates[j] += delta;
-                }
-            }
-            for r in 0..s.rem.len() {
+            lambda += delta;
+            for k in 0..s.active_res.len() {
+                let r = s.active_res[k] as usize;
                 if s.sum[r] > EPS {
                     s.rem[r] -= delta * s.sum[r];
                 }
             }
-            // Freeze saturated tasks.
+
             let mut progressed = false;
-            for (j, &i) in s.running.iter().enumerate() {
-                if s.frozen[j] {
-                    continue;
+            if lambda >= 1.0 - EPS {
+                // Every unfrozen task hits the rate cap together.
+                for j in 0..m {
+                    if !s.frozen[j] {
+                        s.frozen[j] = true;
+                        s.rates[j] = lambda;
+                    }
                 }
-                if s.rates[j] >= 1.0 - EPS {
-                    s.frozen[j] = true;
-                    progressed = true;
-                    continue;
+                n_unfrozen = 0;
+                progressed = true;
+            } else {
+                // Saturation freezing via the flow lists of resources
+                // that just crossed the threshold.
+                s.newly_saturated.clear();
+                for k in 0..s.active_res.len() {
+                    let r = s.active_res[k] as usize;
+                    if !s.saturated[r] && s.rem[r] <= EPS * self.capacities[r].max(1.0) {
+                        s.saturated[r] = true;
+                        s.newly_saturated.push(r as u32);
+                    }
                 }
-                let saturated = self
-                    .demands_of(i)
-                    .iter()
-                    .any(|&(r, d)| d > EPS && s.rem[r.0] <= EPS * self.capacities[r.0].max(1.0));
-                if saturated {
-                    s.frozen[j] = true;
-                    progressed = true;
+                s.refresh_res.clear();
+                for si in 0..s.newly_saturated.len() {
+                    let r = s.newly_saturated[si] as usize;
+                    for fi in 0..s.flows[r].len() {
+                        let (t, d) = s.flows[r][fi];
+                        if d <= EPS {
+                            continue;
+                        }
+                        let j = s.running.partition_point(|&x| x < t as usize);
+                        if s.frozen[j] {
+                            continue;
+                        }
+                        s.frozen[j] = true;
+                        s.rates[j] = lambda;
+                        n_unfrozen -= 1;
+                        progressed = true;
+                        // This task's resources lose a term next round.
+                        for &(rr, _) in self.demands_of(t as usize) {
+                            if !s.refresh_mark[rr.0] {
+                                s.refresh_mark[rr.0] = true;
+                                s.refresh_res.push(rr.0 as u32);
+                            }
+                        }
+                    }
+                }
+                // Fresh ascending-order sums where membership changed.
+                for ri in 0..s.refresh_res.len() {
+                    let r = s.refresh_res[ri] as usize;
+                    s.refresh_mark[r] = false;
+                    let mut acc = 0.0f64;
+                    for fi in 0..s.flows[r].len() {
+                        let (t, d) = s.flows[r][fi];
+                        let j = s.running.partition_point(|&x| x < t as usize);
+                        if !s.frozen[j] {
+                            acc += d;
+                        }
+                    }
+                    s.sum[r] = acc;
                 }
             }
             if !progressed {
-                // delta was limited by the 1.0 cap of a task that was
-                // just frozen, or nothing changed: avoid spinning.
                 break;
             }
         }
+        // Tasks never frozen end at the final common rate.
+        if n_unfrozen > 0 {
+            for j in 0..m {
+                if !s.frozen[j] {
+                    s.rates[j] = lambda;
+                }
+            }
+        }
+    }
+
+    /// Cross-check: run the slow oracle into separate buffers and
+    /// panic if any rate differs bitwise from the incremental result.
+    fn cross_check_rates(&self, s: &mut RunScratch) {
+        let RunScratch {
+            running,
+            check_rates,
+            check_frozen,
+            check_rem,
+            check_sum,
+            ..
+        } = s;
+        self.fill_fair_rates_slow(running, check_rates, check_frozen, check_rem, check_sum);
+        for (j, (&a, &b)) in s.rates.iter().zip(s.check_rates.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                panic!(
+                    "fair-rate cross-check: task {} ({}) incremental {:?} ({:#x}) \
+                     != slow {:?} ({:#x}) over running set {:?}",
+                    s.running[j],
+                    self.tasks[s.running[j]].label,
+                    a,
+                    a.to_bits(),
+                    b,
+                    b.to_bits(),
+                    s.running
+                );
+            }
+        }
+    }
+
+    /// Register a task that just entered `Running` with the
+    /// incremental fair-sharing state: insert its demands into the
+    /// per-resource flow lists (ascending task order, duplicates in
+    /// declaration order) and mark those resources membership-dirty.
+    fn flows_add(&self, s: &mut RunScratch, i: usize) {
+        for &(r, d) in self.demands_of(i) {
+            let list = &mut s.flows[r.0];
+            let pos = list.partition_point(|e| e.0 <= i as u32);
+            list.insert(pos, (i as u32, d));
+            s.agg_dirty[r.0] = true;
+            if s.active_pos[r.0] == u32::MAX {
+                s.active_pos[r.0] = s.active_res.len() as u32;
+                s.active_res.push(r.0 as u32);
+            }
+        }
+    }
+
+    /// Remove a finished task's flows; resources left with no running
+    /// flow leave the active set (order there is arbitrary, so a
+    /// swap-remove is fine).
+    fn flows_remove(&self, s: &mut RunScratch, i: usize) {
+        for &(r, _) in self.demands_of(i) {
+            let list = &mut s.flows[r.0];
+            let a = list.partition_point(|e| e.0 < i as u32);
+            let b = list.partition_point(|e| e.0 <= i as u32);
+            if a < b {
+                list.drain(a..b);
+            }
+            s.agg_dirty[r.0] = true;
+            if list.is_empty() && s.active_pos[r.0] != u32::MAX {
+                let p = s.active_pos[r.0] as usize;
+                s.active_res.swap_remove(p);
+                if p < s.active_res.len() {
+                    s.active_pos[s.active_res[p] as usize] = p as u32;
+                }
+                s.active_pos[r.0] = u32::MAX;
+            }
+        }
+    }
+
+    /// Size and reset the cross-event incremental fair-sharing state
+    /// for a run over the currently registered resources.
+    fn init_fair_state(&self, s: &mut RunScratch) {
+        let nr = self.capacities.len();
+        if s.flows.len() < nr {
+            s.flows.resize_with(nr, Vec::new);
+        }
+        for f in &mut s.flows {
+            f.clear();
+        }
+        s.agg_sum.clear();
+        s.agg_sum.resize(nr, 0.0);
+        s.agg_dirty.clear();
+        s.agg_dirty.resize(nr, false);
+        s.active_res.clear();
+        s.active_pos.clear();
+        s.active_pos.resize(nr, u32::MAX);
+        s.sum.clear();
+        s.sum.resize(nr, 0.0);
+        s.refresh_mark.clear();
+        s.refresh_mark.resize(nr, false);
+    }
+
+    /// Fair rates for a hypothetical running set, computed by the
+    /// given implementation without running the event loop — the probe
+    /// `tests/fair_sharing.rs` drives its invariant properties
+    /// through. Returns rates parallel to `running` (which may be in
+    /// any order; duplicates are not allowed).
+    pub fn probe_fair_rates(&mut self, running: &[TaskId], mode: FairMode) -> Vec<f64> {
+        let mut s = std::mem::take(&mut self.scratch);
+        s.running.clear();
+        for t in running {
+            assert!(t.0 < self.tasks.len(), "probe: unknown task {:?}", t);
+            s.running.push(t.0);
+        }
+        s.running.sort_unstable();
+        debug_assert!(
+            s.running.windows(2).all(|w| w[0] < w[1]),
+            "probe: duplicate task in running set"
+        );
+        match mode {
+            FairMode::Incremental => {
+                self.init_fair_state(&mut s);
+                for k in 0..s.running.len() {
+                    let i = s.running[k];
+                    self.flows_add(&mut s, i);
+                }
+                self.fill_fair_rates_incremental(&mut s);
+            }
+            FairMode::Slow => {
+                let RunScratch {
+                    running,
+                    rates,
+                    frozen,
+                    rem,
+                    sum,
+                    ..
+                } = &mut s;
+                self.fill_fair_rates_slow(running, rates, frozen, rem, sum);
+            }
+        }
+        let out = running
+            .iter()
+            .map(|t| {
+                let j = s.running.partition_point(|&x| x < t.0);
+                s.rates[j]
+            })
+            .collect();
+        self.scratch = s;
+        out
     }
 
     /// The event loop. Returns (makespan, events); per-task state is
@@ -660,6 +1102,14 @@ impl Engine {
         s.setup_heap.clear();
         s.resource_busy.clear();
         s.resource_busy.resize(self.capacities.len(), 0.0);
+
+        // Incremental fair-sharing bookkeeping is maintained only when
+        // the incremental path will read it — the slow baseline must
+        // not pay (or be credited for) its upkeep.
+        let inc = self.fair_mode == FairMode::Incremental;
+        if inc {
+            self.init_fair_state(s);
+        }
 
         // Dependents in CSR form (counts → prefix offsets → fill).
         s.dep_heads.clear();
@@ -722,8 +1172,15 @@ impl Engine {
                 s.run_start[tid] = now;
                 let pos = s.running.partition_point(|&x| x < tid);
                 s.running.insert(pos, tid);
+                if inc {
+                    self.flows_add(s, tid);
+                }
                 rates_dirty = true;
             }
+            // The heap pops deadline ties in ascending task order and
+            // the sorted insert keeps `running` strictly ascending —
+            // the order every float reduction below depends on.
+            debug_assert!(s.running.windows(2).all(|w| w[0] < w[1]));
 
             if rates_dirty {
                 self.fill_fair_rates(s);
@@ -791,6 +1248,18 @@ impl Engine {
                 rates_dirty = true;
                 let phase = &s.phase;
                 s.running.retain(|&i| phase[i] == Phase::Running);
+                // `completed` was collected by scanning the ascending
+                // running set, so same-instant (float-equal) finishes
+                // are processed in deterministic ascending task order
+                // — on ties the incremental update order can never
+                // diverge from the reference engine's rescan.
+                debug_assert!(s.completed.windows(2).all(|w| w[0] < w[1]));
+                if inc {
+                    for ci in 0..s.completed.len() {
+                        let c = s.completed[ci];
+                        self.flows_remove(s, c);
+                    }
+                }
             }
 
             // Dependency and stream bookkeeping for the completed set,

@@ -25,6 +25,6 @@ pub mod reference;
 
 pub use cluster::{ClusterSim, CommMech};
 pub use engine::{
-    trace_enabled, Engine, Label, LeanReport, Report, ResourceId, SimError, StreamId, TaskId,
-    TaskSpec,
+    check_rates_enabled, default_fair_mode, set_default_fair_mode, trace_enabled, Engine, FairMode,
+    Label, LeanReport, Report, ResourceId, SimError, StreamId, TaskId, TaskSpec,
 };

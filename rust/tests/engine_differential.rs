@@ -15,7 +15,7 @@
 //! binaries.
 #![cfg(debug_assertions)]
 
-use ficco::sim::{reference, Engine, ResourceId, StreamId, TaskSpec};
+use ficco::sim::{reference, Engine, FairMode, ResourceId, StreamId, TaskSpec};
 use ficco::util::prop::{self, Config};
 use ficco::util::rng::Rng;
 
@@ -79,8 +79,8 @@ fn gen_dag(r: &mut Rng) -> DagCase {
     }
 }
 
-/// Build and run the case on the optimized engine (full accounting).
-fn run_optimized(case: &DagCase) -> Result<ficco::sim::Report, String> {
+/// Build the case on the optimized engine (owned-spec API).
+fn build_optimized(case: &DagCase) -> Engine {
     let mut e = Engine::new();
     let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
     let streams: Vec<StreamId> = (0..case.n_streams).map(|_| e.add_stream()).collect();
@@ -97,10 +97,28 @@ fn run_optimized(case: &DagCase) -> Result<ficco::sim::Report, String> {
         }
         ids.push(e.add_task(spec));
     }
+    e
+}
+
+/// Build and run the case on the optimized engine (full accounting,
+/// incremental fair sharing, per-event slow-oracle cross-check on).
+fn run_optimized(case: &DagCase) -> Result<ficco::sim::Report, String> {
+    let mut e = build_optimized(case);
+    e.set_fair_mode(FairMode::Incremental);
+    e.set_check_rates(true);
     e.run_full().map_err(|e| format!("optimized sim failed: {e}"))
 }
 
-/// Build and run the case on the optimized engine in lean mode.
+/// Build and run the case with the kept-verbatim slow fair-sharing
+/// path — it must stay bit-identical to the reference too.
+fn run_optimized_slow(case: &DagCase) -> Result<ficco::sim::Report, String> {
+    let mut e = build_optimized(case);
+    e.set_fair_mode(FairMode::Slow);
+    e.run_full().map_err(|e| format!("slow-mode sim failed: {e}"))
+}
+
+/// Build and run the case on the optimized engine in lean mode (also
+/// incremental + cross-check, via the arena builder API).
 fn run_optimized_lean(case: &DagCase) -> Result<ficco::sim::LeanReport, String> {
     let mut e = Engine::new();
     let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
@@ -117,6 +135,8 @@ fn run_optimized_lean(case: &DagCase) -> Result<ficco::sim::LeanReport, String> 
         }
         ids.push(b.finish());
     }
+    e.set_fair_mode(FairMode::Incremental);
+    e.set_check_rates(true);
     e.run_lean().map_err(|e| format!("lean sim failed: {e}"))
 }
 
@@ -155,10 +175,18 @@ fn assert_bits(name: &str, i: usize, a: f64, b: f64) -> Result<(), String> {
 fn check_case(case: &DagCase) -> Result<(), String> {
     let opt = run_optimized(case)?;
     let lean = run_optimized_lean(case)?;
+    let slow = run_optimized_slow(case)?;
     let refr = run_reference(case)?;
 
     assert_bits("makespan", 0, opt.makespan, refr.makespan)?;
     assert_bits("lean makespan", 0, lean.makespan, refr.makespan)?;
+    assert_bits("slow-mode makespan", 0, slow.makespan, refr.makespan)?;
+    if slow.events != refr.events {
+        return Err(format!(
+            "slow-mode events: optimized {} != reference {}",
+            slow.events, refr.events
+        ));
+    }
     if opt.events != refr.events {
         return Err(format!(
             "events: optimized {} != reference {}",
@@ -187,6 +215,204 @@ fn check_case(case: &DagCase) -> Result<(), String> {
     Ok(())
 }
 
+/// Many short tasks in layered wide fan-out joins: the running set
+/// churns on nearly every event, hammering the incremental path's
+/// flow-list add/remove and aggregate-refresh bookkeeping.
+fn gen_high_churn(r: &mut Rng) -> DagCase {
+    let n_res = r.range(2, 6);
+    let caps: Vec<f64> = (0..n_res).map(|_| r.range_f64(1.0, 20.0)).collect();
+    let n_streams = r.range(4, 11);
+    let mut tasks: Vec<TaskCase> = Vec::new();
+    let mut layer: Vec<usize> = Vec::new();
+    let n_layers = r.range(3, 7);
+    for _ in 0..n_layers {
+        let width = r.range(1, 13);
+        let mut new_layer = Vec::with_capacity(width);
+        for _ in 0..width {
+            // Wide join on the whole previous layer 70% of the time,
+            // else a single random parent.
+            let deps = if !layer.is_empty() && r.bool(0.7) {
+                layer.clone()
+            } else if !layer.is_empty() {
+                vec![*r.choose(&layer)]
+            } else {
+                Vec::new()
+            };
+            let work = if r.bool(0.2) { 0.0 } else { r.range_f64(1e-7, 1e-4) };
+            let setup = if r.bool(0.5) { 0.0 } else { r.range_f64(0.0, 1e-6) };
+            let mut demands = Vec::new();
+            for (res, &cap) in caps.iter().enumerate() {
+                if r.bool(0.5) {
+                    demands.push((res, r.range_f64(0.5, 2.0 * cap)));
+                }
+            }
+            new_layer.push(tasks.len());
+            tasks.push(TaskCase {
+                stream: r.range(0, n_streams),
+                deps,
+                work,
+                setup,
+                demands,
+            });
+        }
+        layer = new_layer;
+    }
+    DagCase {
+        caps,
+        n_streams,
+        tasks,
+    }
+}
+
+/// Degenerate shapes: all-tasks-on-one-bottleneck, zero-demand tasks,
+/// single-flow resources, duplicate demands on one resource, and
+/// sub-EPS demands/capacities.
+fn gen_degenerate(r: &mut Rng) -> DagCase {
+    let kind = r.range(0, 5);
+    let n_streams = r.range(1, 7);
+    let (caps, tasks) = match kind {
+        0 => {
+            // Every task contends on the single resource.
+            let caps = vec![r.range_f64(1.0, 10.0)];
+            let tasks = (0..r.range(2, 31))
+                .map(|_| TaskCase {
+                    stream: r.range(0, n_streams),
+                    deps: vec![],
+                    work: r.range_f64(1e-5, 1e-3),
+                    setup: 0.0,
+                    demands: vec![(0, r.range_f64(0.1, 2.0 * caps[0]))],
+                })
+                .collect();
+            (caps, tasks)
+        }
+        1 => {
+            // Zero-demand tasks mixed with contenders.
+            let caps = vec![r.range_f64(1.0, 10.0), r.range_f64(1.0, 10.0)];
+            let n = r.range(2, 26);
+            let mut tasks = Vec::with_capacity(n);
+            for i in 0..n {
+                let demands = if r.bool(0.4) {
+                    vec![]
+                } else {
+                    vec![(r.range(0, 2), r.range_f64(0.1, 15.0))]
+                };
+                let deps = (0..i).filter(|_| r.bool(0.1)).collect();
+                tasks.push(TaskCase {
+                    stream: r.range(0, n_streams),
+                    deps,
+                    work: r.range_f64(0.0, 1e-4),
+                    setup: 0.0,
+                    demands,
+                });
+            }
+            (caps, tasks)
+        }
+        2 => {
+            // Single-flow resources: exactly one task per resource.
+            let nr = r.range(2, 7);
+            let caps: Vec<f64> = (0..nr).map(|_| r.range_f64(0.5, 5.0)).collect();
+            let tasks = (0..nr)
+                .map(|res| TaskCase {
+                    stream: r.range(0, n_streams),
+                    deps: vec![],
+                    work: r.range_f64(1e-5, 1e-3),
+                    setup: r.range_f64(0.0, 1e-5),
+                    demands: vec![(res, r.range_f64(0.1, 2.0 * caps[res]))],
+                })
+                .collect();
+            (caps, tasks)
+        }
+        3 => {
+            // Duplicate demands on the same resource (flow lists hold
+            // two entries for one task, declaration order).
+            let caps = vec![r.range_f64(1.0, 10.0), r.range_f64(1.0, 10.0)];
+            let tasks = (0..r.range(2, 16))
+                .map(|_| {
+                    let res = r.range(0, 2);
+                    let mut demands = vec![
+                        (res, r.range_f64(0.1, 5.0)),
+                        (res, r.range_f64(0.1, 5.0)),
+                    ];
+                    if r.bool(0.5) {
+                        demands.push((1 - res, r.range_f64(0.1, 5.0)));
+                    }
+                    TaskCase {
+                        stream: r.range(0, n_streams),
+                        deps: vec![],
+                        work: r.range_f64(1e-5, 1e-3),
+                        setup: 0.0,
+                        demands,
+                    }
+                })
+                .collect();
+            (caps, tasks)
+        }
+        _ => {
+            // Sub-EPS demands and capacities.
+            let cap_pool = [1e-13, 1e-12, 1.0, 5.0];
+            let caps: Vec<f64> = (0..r.range(1, 4)).map(|_| *r.choose(&cap_pool)).collect();
+            let dem_pool = [1e-14, 1e-13, 5e-13, 0.5, 1.0];
+            let tasks = (0..r.range(2, 13))
+                .map(|_| {
+                    let mut demands = Vec::new();
+                    for res in 0..caps.len() {
+                        if r.bool(0.7) {
+                            demands.push((res, *r.choose(&dem_pool)));
+                        }
+                    }
+                    TaskCase {
+                        stream: r.range(0, n_streams),
+                        deps: vec![],
+                        work: r.range_f64(1e-6, 1e-4),
+                        setup: 0.0,
+                        demands,
+                    }
+                })
+                .collect();
+            (caps, tasks)
+        }
+    };
+    DagCase {
+        caps,
+        n_streams,
+        tasks,
+    }
+}
+
+/// Quantized works/setups/demands (powers of two) so setup deadlines
+/// and finish times collide at float-*equal* instants — the events
+/// where a nondeterministic processing order would let the incremental
+/// path diverge from the reference.
+fn gen_ties(r: &mut Rng) -> DagCase {
+    let caps = vec![4.0, 8.0];
+    let n_streams = r.range(2, 7);
+    let works = [0.0, 0.25, 0.5, 1.0];
+    let setups = [0.0, 0.25, 0.5];
+    let mut tasks = Vec::new();
+    for i in 0..r.range(3, 21) {
+        let deps = (0..i).filter(|_| r.bool(0.15)).collect();
+        let mut demands = Vec::new();
+        for (res, &cap) in caps.iter().enumerate() {
+            if r.bool(0.6) {
+                let quarters = [cap, cap / 2.0, cap / 4.0];
+                demands.push((res, *r.choose(&quarters)));
+            }
+        }
+        tasks.push(TaskCase {
+            stream: r.range(0, n_streams),
+            deps,
+            work: *r.choose(&works),
+            setup: *r.choose(&setups),
+            demands,
+        });
+    }
+    DagCase {
+        caps,
+        n_streams,
+        tasks,
+    }
+}
+
 #[test]
 fn optimized_engine_is_bit_identical_to_reference_on_random_dags() {
     prop::check_no_shrink(
@@ -196,6 +422,45 @@ fn optimized_engine_is_bit_identical_to_reference_on_random_dags() {
             ..Config::default()
         },
         gen_dag,
+        check_case,
+    );
+}
+
+#[test]
+fn high_churn_fanout_joins_are_bit_identical() {
+    prop::check_no_shrink(
+        "engine-differential-high-churn",
+        &Config {
+            cases: 150,
+            ..Config::default()
+        },
+        gen_high_churn,
+        check_case,
+    );
+}
+
+#[test]
+fn degenerate_demand_shapes_are_bit_identical() {
+    prop::check_no_shrink(
+        "engine-differential-degenerate",
+        &Config {
+            cases: 200,
+            ..Config::default()
+        },
+        gen_degenerate,
+        check_case,
+    );
+}
+
+#[test]
+fn float_equal_tie_events_are_bit_identical() {
+    prop::check_no_shrink(
+        "engine-differential-ties",
+        &Config {
+            cases: 200,
+            ..Config::default()
+        },
+        gen_ties,
         check_case,
     );
 }
@@ -251,6 +516,107 @@ fn saturated_multi_resource_cell_matches() {
     }
     let case = DagCase {
         caps: vec![10.0, 3.0, 50.0],
+        n_streams: 6,
+        tasks,
+    };
+    check_case(&case).unwrap();
+}
+
+/// Regression (ISSUE 6 tie-break audit): four tasks engineered to
+/// finish at the *same float instant* (power-of-two works and demands,
+/// equal shares), with dependents fanning out from each. Completion
+/// order on the tie is pinned to ascending task id by the sorted
+/// running set — both engines must agree bitwise, and the run must be
+/// reproducible bit-for-bit across repeats.
+#[test]
+fn float_equal_finish_tie_order_is_pinned() {
+    let mut tasks = vec![];
+    // Tasks 0–3: same stream-free shape, work 0.5 each, equal demand 2.0
+    // on a capacity-8 resource → all run at rate 1 and finish at exactly
+    // t = 0.5 (0.5 and 2.0 are exact binary values).
+    for i in 0..4 {
+        tasks.push(TaskCase {
+            stream: i,
+            deps: vec![],
+            work: 0.5,
+            setup: 0.0,
+            demands: vec![(0, 2.0)],
+        });
+    }
+    // Dependents joining different subsets of the tied finishers: their
+    // start times (and rates) depend on the tie being resolved the same
+    // way in both engines.
+    tasks.push(TaskCase {
+        stream: 0,
+        deps: vec![0, 1],
+        work: 0.25,
+        setup: 0.0,
+        demands: vec![(0, 8.0)],
+    });
+    tasks.push(TaskCase {
+        stream: 1,
+        deps: vec![2, 3],
+        work: 0.25,
+        setup: 0.0,
+        demands: vec![(0, 8.0)],
+    });
+    tasks.push(TaskCase {
+        stream: 2,
+        deps: vec![4, 5],
+        work: 0.0,
+        setup: 0.0,
+        demands: vec![],
+    });
+    let case = DagCase {
+        caps: vec![8.0],
+        n_streams: 4,
+        tasks,
+    };
+    check_case(&case).unwrap();
+    // Bit-for-bit reproducibility across repeated runs.
+    let a = run_optimized(&case).unwrap();
+    let b = run_optimized(&case).unwrap();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.events, b.events);
+    for (x, y) in a.task_spans.iter().zip(&b.task_spans) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits());
+        assert_eq!(x.1.to_bits(), y.1.to_bits());
+    }
+}
+
+/// Regression (ISSUE 6 tie-break audit): setup deadlines colliding at
+/// the same float instant pop from the deadline heap in ascending task
+/// order (the heap key is (deadline bits, task id)); the tasks join
+/// the running set in one event and the rate fill sees one canonical
+/// set in both engines.
+#[test]
+fn setup_deadline_tie_order_is_pinned() {
+    let mut tasks = vec![];
+    // Six tasks on six streams, identical setup 0.25, immediately
+    // contending on one resource when they all arrive together.
+    for i in 0..6 {
+        tasks.push(TaskCase {
+            stream: i,
+            deps: vec![],
+            work: 0.125,
+            setup: 0.25,
+            demands: vec![(0, 1.0 + i as f64)],
+        });
+    }
+    // A second wave whose setup deadlines tie with the first wave's
+    // finish times (0.25 setup + 0.125 work at degraded rates keeps
+    // the heap and the completion scan interleaving).
+    for i in 0..3 {
+        tasks.push(TaskCase {
+            stream: i,
+            deps: vec![i],
+            work: 0.125,
+            setup: 0.25,
+            demands: vec![(0, 2.0)],
+        });
+    }
+    let case = DagCase {
+        caps: vec![4.0],
         n_streams: 6,
         tasks,
     };

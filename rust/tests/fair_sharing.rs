@@ -1,0 +1,313 @@
+//! Property tests for the max–min fair-sharing implementations
+//! (`DESIGN.md` §6, ISSUE 6).
+//!
+//! The engine carries two rate fillers: the kept-verbatim from-scratch
+//! progressive filling (`FairMode::Slow`) and the incremental default
+//! (`FairMode::Incremental`). These tests pin the *semantics* both
+//! must satisfy — rates bounded by 1 (so no flow exceeds its demand),
+//! capacities respected, oversubscribed bottlenecks fully utilized,
+//! the per-task max–min condition (a task below rate 1 is pinned by a
+//! saturated resource it demands), and invariance under task
+//! permutation — plus the structural contract that the two
+//! implementations agree **bitwise** on every random running set.
+//!
+//! `Engine::probe_fair_rates` computes rates for a hypothetical
+//! running set without running the event loop, which lets these
+//! properties sample running sets far denser than any schedule would
+//! reach naturally.
+
+use ficco::sim::{Engine, FairMode, ResourceId, TaskId, TaskSpec};
+use ficco::util::prop::{self, Config};
+use ficco::util::rng::Rng;
+
+/// A random contention cell: resources with capacities, tasks with
+/// demand vectors, and a running subset to probe.
+#[derive(Debug, Clone)]
+struct RateCase {
+    caps: Vec<f64>,
+    /// Per task: (resource, demand) pairs, duplicates allowed.
+    demands: Vec<Vec<(usize, f64)>>,
+    /// Which tasks are running (strictly ascending).
+    running: Vec<usize>,
+}
+
+fn gen_case(r: &mut Rng) -> RateCase {
+    let n_res = r.range(1, 7);
+    let caps: Vec<f64> = (0..n_res)
+        .map(|_| {
+            if r.bool(0.1) {
+                // Tiny capacities saturate instantly.
+                r.range_f64(1e-9, 1e-3)
+            } else {
+                r.range_f64(0.5, 100.0)
+            }
+        })
+        .collect();
+    let n_tasks = r.range(1, 33);
+    let mut demands = Vec::with_capacity(n_tasks);
+    for _ in 0..n_tasks {
+        let mut d = Vec::new();
+        if !r.bool(0.1) {
+            // 10% of tasks are pure-sync (no demands at all).
+            for res in 0..n_res {
+                if r.bool(0.55) {
+                    let demand = if r.bool(0.08) {
+                        0.0 // zero-demand entry
+                    } else if r.bool(0.1) {
+                        r.range_f64(0.0, 1e-13) // sub-EPS demand
+                    } else {
+                        r.range_f64(0.05, 2.0 * caps[res])
+                    };
+                    d.push((res, demand));
+                    if r.bool(0.1) {
+                        // Duplicate demand on the same resource.
+                        d.push((res, r.range_f64(0.05, caps[res])));
+                    }
+                }
+            }
+        }
+        demands.push(d);
+    }
+    let running: Vec<usize> = (0..n_tasks).filter(|_| r.bool(0.7)).collect();
+    RateCase {
+        caps,
+        demands,
+        running,
+    }
+}
+
+fn build_engine(case: &RateCase) -> (Engine, Vec<TaskId>) {
+    let mut e = Engine::new();
+    let resources: Vec<ResourceId> = case.caps.iter().map(|&c| e.add_resource(c)).collect();
+    let stream = e.add_stream();
+    let mut ids = Vec::with_capacity(case.demands.len());
+    for (i, d) in case.demands.iter().enumerate() {
+        let mut spec = TaskSpec::new(format!("t{i}"), stream).work(1.0);
+        for &(res, demand) in d {
+            spec = spec.demand(resources[res], demand);
+        }
+        ids.push(e.add_task(spec));
+    }
+    (e, ids)
+}
+
+const EPS: f64 = 1e-12;
+
+/// All fair-sharing invariants over one probed running set.
+fn check_invariants(case: &RateCase) -> Result<(), String> {
+    let (mut e, ids) = build_engine(case);
+    let running: Vec<TaskId> = case.running.iter().map(|&i| ids[i]).collect();
+    let inc = e.probe_fair_rates(&running, FairMode::Incremental);
+    let slow = e.probe_fair_rates(&running, FairMode::Slow);
+
+    // 1. The two implementations agree bitwise.
+    for (j, (&a, &b)) in inc.iter().zip(&slow).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!(
+                "task {}: incremental {a:?} ({:#x}) != slow {b:?} ({:#x})",
+                case.running[j],
+                a.to_bits(),
+                b.to_bits()
+            ));
+        }
+    }
+
+    // 2. No flow exceeds its demand rate: rates live in [0, 1], so a
+    //    task's draw on resource r is rate·d ≤ d.
+    for (j, &rate) in inc.iter().enumerate() {
+        if !(0.0..=1.0 + 1e-9).contains(&rate) {
+            return Err(format!(
+                "task {}: rate {rate} outside [0, 1]",
+                case.running[j]
+            ));
+        }
+    }
+
+    // 3. No resource exceeds its capacity.
+    let mut usage = vec![0.0f64; case.caps.len()];
+    for (j, &i) in case.running.iter().enumerate() {
+        for &(res, d) in &case.demands[i] {
+            usage[res] += inc[j] * d;
+        }
+    }
+    for (res, (&u, &cap)) in usage.iter().zip(&case.caps).enumerate() {
+        if u > cap * (1.0 + 1e-9) + 1e-12 {
+            return Err(format!("resource {res}: usage {u} > capacity {cap}"));
+        }
+    }
+
+    // 4. Max–min bottleneck condition: a task held below rate 1 must
+    //    demand (d > EPS) some resource that is saturated — otherwise
+    //    progressive filling would have kept raising it. This is also
+    //    the sense in which every oversubscribed bottleneck ends fully
+    //    utilized: the tasks it holds back point at a resource with no
+    //    headroom left. "Saturated" mirrors the engine's absolute
+    //    threshold (rem ≤ EPS·max(cap, 1)), with slack for recomputing
+    //    usage from the returned rates.
+    for (j, &i) in case.running.iter().enumerate() {
+        if inc[j] >= 1.0 - 1e-9 {
+            continue;
+        }
+        let pinned = case.demands[i].iter().any(|&(res, d)| {
+            d > EPS && case.caps[res] - usage[res] <= 10.0 * EPS * case.caps[res].max(1.0)
+        });
+        if !pinned {
+            return Err(format!(
+                "task {i}: rate {} < 1 but no demanded resource is saturated",
+                inc[j]
+            ));
+        }
+    }
+
+    // 5. Probe-order invariance, bitwise: the rates belong to the
+    //    *set*, not the order the caller lists it in.
+    let mut shuffled = running.clone();
+    let mut r = Rng::new(case.running.len() as u64 ^ 0x5EED);
+    r.shuffle(&mut shuffled);
+    let via_shuffled = e.probe_fair_rates(&shuffled, FairMode::Incremental);
+    for (k, t) in shuffled.iter().enumerate() {
+        let j = running.iter().position(|x| x == t).unwrap();
+        if via_shuffled[k].to_bits() != inc[j].to_bits() {
+            return Err(format!(
+                "probe-order variance: task {:?} rate {:?} != {:?}",
+                t, via_shuffled[k], inc[j]
+            ));
+        }
+    }
+
+    Ok(())
+}
+
+#[test]
+fn fair_sharing_invariants_hold_on_random_cells() {
+    prop::check_no_shrink(
+        "fair-sharing-invariants",
+        &Config {
+            cases: 300,
+            ..Config::default()
+        },
+        gen_case,
+        check_invariants,
+    );
+}
+
+/// Task-index permutation invariance: rebuilding the cell with tasks
+/// declared in a different order changes float summation order, so
+/// rates match approximately (not bitwise) — each task keeps its rate
+/// up to roundoff.
+#[test]
+fn rates_invariant_under_task_index_permutation() {
+    prop::check_no_shrink(
+        "fair-sharing-permutation",
+        &Config {
+            cases: 150,
+            ..Config::default()
+        },
+        |r| {
+            let case = gen_case(r);
+            let mut perm: Vec<usize> = (0..case.demands.len()).collect();
+            r.shuffle(&mut perm);
+            (case, perm)
+        },
+        |(case, perm)| {
+            let (mut e, ids) = build_engine(case);
+            let running: Vec<TaskId> = case.running.iter().map(|&i| ids[i]).collect();
+            let base = e.probe_fair_rates(&running, FairMode::Incremental);
+
+            // Rebuild with tasks declared in permuted order. `perm[k]`
+            // is the original index of the task declared k-th.
+            let permuted = RateCase {
+                caps: case.caps.clone(),
+                demands: perm.iter().map(|&i| case.demands[i].clone()).collect(),
+                running: Vec::new(),
+            };
+            let (mut e2, ids2) = build_engine(&permuted);
+            // Map each original running task to its new id.
+            let running2: Vec<TaskId> = case
+                .running
+                .iter()
+                .map(|&orig| {
+                    let k = perm.iter().position(|&p| p == orig).unwrap();
+                    ids2[k]
+                })
+                .collect();
+            let permuted_rates = e2.probe_fair_rates(&running2, FairMode::Incremental);
+            for (j, (&a, &b)) in base.iter().zip(&permuted_rates).enumerate() {
+                prop::approx_eq(
+                    a,
+                    b,
+                    1e-9,
+                    &format!("task {} rate under permutation", case.running[j]),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The canonical oversubscription shape, pinned deterministically: n
+/// tasks share one resource with total demand > capacity, so the
+/// bottleneck ends exactly fully utilized and every task gets the
+/// equal share cap/total.
+#[test]
+fn single_oversubscribed_bottleneck_is_fully_utilized() {
+    let mut e = Engine::new();
+    let r = e.add_resource(10.0);
+    let s = e.add_stream();
+    let ids: Vec<TaskId> = (0..8)
+        .map(|i| e.add_task(TaskSpec::new(format!("t{i}"), s).work(1.0).demand(r, 4.0)))
+        .collect();
+    for mode in [FairMode::Incremental, FairMode::Slow] {
+        let rates = e.probe_fair_rates(&ids, mode);
+        let usage: f64 = rates.iter().map(|&x| x * 4.0).sum();
+        assert!(
+            (usage - 10.0).abs() < 1e-9,
+            "{mode:?}: bottleneck usage {usage} != capacity 10"
+        );
+        for &x in &rates {
+            assert!((x - 10.0 / 32.0).abs() < 1e-12, "{mode:?}: unequal share {x}");
+        }
+    }
+}
+
+/// Uncontended tasks run at rate 1 in both modes, and pure-sync tasks
+/// (no demands) are never held below 1 by other tasks' contention.
+#[test]
+fn uncontended_and_sync_tasks_run_at_full_rate() {
+    let mut e = Engine::new();
+    let r0 = e.add_resource(100.0);
+    let r1 = e.add_resource(1.0);
+    let s = e.add_stream();
+    let light = e.add_task(TaskSpec::new("light", s).work(1.0).demand(r0, 5.0));
+    let sync = e.add_task(TaskSpec::new("sync", s).work(1.0));
+    let hog_a = e.add_task(TaskSpec::new("hog_a", s).work(1.0).demand(r1, 3.0));
+    let hog_b = e.add_task(TaskSpec::new("hog_b", s).work(1.0).demand(r1, 3.0));
+    for mode in [FairMode::Incremental, FairMode::Slow] {
+        let rates = e.probe_fair_rates(&[light, sync, hog_a, hog_b], mode);
+        assert!((rates[0] - 1.0).abs() < 1e-12, "{mode:?}: light {}", rates[0]);
+        assert!((rates[1] - 1.0).abs() < 1e-12, "{mode:?}: sync {}", rates[1]);
+        // The two hogs split r1's capacity 1.0 → rate 1/6 each.
+        assert!((rates[2] - 1.0 / 6.0).abs() < 1e-12, "{mode:?}: hog {}", rates[2]);
+        assert_eq!(rates[2].to_bits(), rates[3].to_bits(), "{mode:?}");
+    }
+}
+
+/// Repeated probes on one engine must not leak incremental state
+/// between running sets (flows are rebuilt per probe).
+#[test]
+fn probe_is_stateless_across_running_sets() {
+    let mut e = Engine::new();
+    let r = e.add_resource(6.0);
+    let s = e.add_stream();
+    let ids: Vec<TaskId> = (0..6)
+        .map(|i| {
+            e.add_task(TaskSpec::new(format!("t{i}"), s).work(1.0).demand(r, 2.0 + i as f64))
+        })
+        .collect();
+    let full_first = e.probe_fair_rates(&ids, FairMode::Incremental);
+    let _subset = e.probe_fair_rates(&ids[..2], FairMode::Incremental);
+    let full_again = e.probe_fair_rates(&ids, FairMode::Incremental);
+    for (a, b) in full_first.iter().zip(&full_again) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

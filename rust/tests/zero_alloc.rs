@@ -44,6 +44,10 @@ static A: CountingAlloc = CountingAlloc;
 /// fair-rate rounds, setup deadlines, zero-work syncs, completions
 /// cascading through deps and stream cursors.
 fn build(e: &mut Engine, resources: &[ResourceId], streams: &[StreamId]) {
+    build_shape_a(e, resources, streams)
+}
+
+fn build_shape_a(e: &mut Engine, resources: &[ResourceId], streams: &[StreamId]) {
     let n_tasks = 300usize;
     let mut prev: Option<TaskId> = None;
     for i in 0..n_tasks {
@@ -62,6 +66,39 @@ fn build(e: &mut Engine, resources: &[ResourceId], streams: &[StreamId]) {
         let id = b.finish();
         if i % 4 == 0 {
             prev = Some(id);
+        }
+    }
+}
+
+/// A deliberately *different* DAG shape from `build_shape_a`, aimed at
+/// the incremental fair-sharing bookkeeping (ISSUE 6): fewer, wider
+/// tasks where **every** task demands **every** resource, so the
+/// per-resource flow lists in `RunScratch` carry the whole running set
+/// and churn on each start/finish; sparse deps keep a big concurrent
+/// running set alive.
+fn build_shape_b(e: &mut Engine, resources: &[ResourceId], streams: &[StreamId]) {
+    let n_tasks = 180usize;
+    let mut fence: Option<TaskId> = None;
+    for i in 0..n_tasks {
+        let stream = streams[(i * 3) % streams.len()];
+        let mut b = e.task(Label::indexed("b", i), stream);
+        if let Some(f) = fence {
+            if i % 9 == 0 {
+                b = b.dep(f);
+            }
+        }
+        b = b.work(5e-5 + (i % 13) as f64 * 2e-5);
+        if i % 7 == 0 {
+            b = b.setup(1e-6);
+        }
+        // All-resources demands: every flow list holds every running
+        // task — the incremental path's worst-case membership churn.
+        for (k, &r) in resources.iter().enumerate() {
+            b = b.demand(r, 1.0 + ((i + k) % 5) as f64);
+        }
+        let id = b.finish();
+        if i % 6 == 0 {
+            fence = Some(id);
         }
     }
 }
@@ -105,4 +142,42 @@ fn engine_run_steady_state_allocates_nothing() {
         during_build, 0,
         "graph rebuild allocated {during_build} times in steady state"
     );
+
+    // ISSUE 6: the incremental fair-sharing aggregates (per-resource
+    // flow lists, cached sums, active/saturation sets) live in
+    // `RunScratch` and must obey the same contract — including across
+    // `reset_tasks` reuse with a *different* DAG shape. Warm shape B
+    // once (its all-resources demands push the flow lists to a new
+    // high-water mark), then alternate shapes; neither rebuild nor run
+    // may allocate.
+    e.reset_tasks();
+    build_shape_b(&mut e, &resources, &streams);
+    let warm_b = e.run_lean().expect("shape-B warm-up run");
+
+    for round in 0..2 {
+        e.reset_tasks();
+        build_shape_b(&mut e, &resources, &streams);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let again_b = e.run_lean().expect("shape-B steady-state run");
+        let during = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            during, 0,
+            "shape-B run_lean allocated {during} times in steady state (round {round})"
+        );
+        assert_eq!(warm_b.makespan.to_bits(), again_b.makespan.to_bits());
+        assert_eq!(warm_b.events, again_b.events);
+
+        // Swap back to shape A in the same engine: both shapes' scratch
+        // high-water marks are warm, so the alternation stays at zero.
+        e.reset_tasks();
+        build(&mut e, &resources, &streams);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let again_a = e.run_lean().expect("shape-A steady-state run");
+        let during = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            during, 0,
+            "shape-A run_lean after shape-B allocated {during} times (round {round})"
+        );
+        assert_eq!(first.makespan.to_bits(), again_a.makespan.to_bits());
+    }
 }

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Gate a fresh perf_hotpath run against the committed BENCH_hotpath.json.
+
+Usage: check_bench_regression.py COMMITTED_JSON FRESH_JSON
+
+Rules (ISSUE 6, CI `sim-differential` job):
+
+- The fresh run must be structurally sound: the tune-cell and
+  fair-sharing sections present, evaluations/sec positive, and the
+  incremental fair-sharing path not slower than the kept-verbatim
+  from-scratch recompute measured in the same run (small noise
+  allowance for --quick CI boxes).
+- If the committed snapshot is a real rust-bench measurement (no
+  "provenance" marker; positive throughput numbers), apply the 20%
+  regression rule: fresh evaluations/sec must be at least 0.8x the
+  committed value, for both the tune cell and the incremental
+  fair-sharing figure.
+- If the committed snapshot is marked with a "provenance" note (the
+  authoring-time python-port work-ratio snapshot), absolute
+  throughputs are not comparable across harnesses: skip the absolute
+  gates, say so, and remind the committer to refresh the baseline with
+  a rust-provenance run.
+
+Exit 0 on pass, 1 on any gate failure.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"BENCH REGRESSION: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail(f"usage: {sys.argv[0]} COMMITTED_JSON FRESH_JSON")
+    with open(sys.argv[1]) as f:
+        committed = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    # Structural soundness of the fresh run.
+    for section in ("tune_cell", "fair_sharing"):
+        if section not in fresh:
+            fail(f"fresh run is missing the '{section}' section")
+    fresh_eps = fresh["tune_cell"].get("evals_per_sec", 0.0)
+    if not fresh_eps > 0.0:
+        fail(f"fresh tune-cell evals_per_sec is {fresh_eps}")
+    fs = fresh["fair_sharing"]
+    for key in ("slow_evals_per_sec", "incremental_evals_per_sec", "speedup_vs_slow"):
+        if not fs.get(key, 0.0) > 0.0:
+            fail(f"fresh fair_sharing.{key} is {fs.get(key)}")
+
+    # The incremental path must never lose to the from-scratch
+    # recompute it replaces (0.95 allows --quick timer noise).
+    if fs["speedup_vs_slow"] < 0.95:
+        fail(
+            "incremental fair sharing is slower than the from-scratch "
+            f"recompute: speedup_vs_slow = {fs['speedup_vs_slow']:.3f}"
+        )
+
+    comparable = "provenance" not in committed
+    if not comparable:
+        print(
+            "baseline is the authoring-time python-port snapshot "
+            f"(fill work ratio {committed['fair_sharing']['speedup_vs_slow']}); "
+            "absolute throughput gates skipped — refresh BENCH_hotpath.json "
+            "from a rust-bench run to arm the 20% regression rule."
+        )
+        print(
+            f"fresh: tune cell {fresh_eps:.1f} evals/s, incremental fair sharing "
+            f"{fs['speedup_vs_slow']:.2f}x vs slow — OK"
+        )
+        return
+
+    # The 20% rule against a comparable (rust-bench) baseline.
+    committed_eps = committed["tune_cell"]["evals_per_sec"]
+    if committed_eps > 0.0 and fresh_eps < 0.8 * committed_eps:
+        fail(
+            f"tune-cell evals/sec regressed >20%: {fresh_eps:.1f} vs "
+            f"committed {committed_eps:.1f}"
+        )
+    committed_inc = committed.get("fair_sharing", {}).get("incremental_evals_per_sec", 0.0)
+    if committed_inc > 0.0 and fs["incremental_evals_per_sec"] < 0.8 * committed_inc:
+        fail(
+            "incremental fair-sharing evals/sec regressed >20%: "
+            f"{fs['incremental_evals_per_sec']:.1f} vs committed {committed_inc:.1f}"
+        )
+    print(
+        f"bench gate OK: tune cell {fresh_eps:.1f} evals/s "
+        f"(committed {committed_eps:.1f}), incremental fair sharing "
+        f"{fs['speedup_vs_slow']:.2f}x vs slow"
+    )
+
+
+if __name__ == "__main__":
+    main()
