@@ -14,6 +14,7 @@
 //! moves.
 
 use ficco::hw::Machine;
+use ficco::obs::TimelineRecorder;
 use ficco::schedule::exec::Evaluator;
 use ficco::schedule::{exec, generate::generate, Kind, Scenario};
 use ficco::search::{search_in, EvalCache, SearchCfg, SpaceSpec};
@@ -218,6 +219,57 @@ fn main() {
         "incremental fair sharing", speedup_vs_slow,
     );
 
+    // ISSUE 7: flight-recorder overhead. `run_full` under a
+    // TimelineRecorder re-runs the same graph with full timeline
+    // capture; the perf gate (scripts/check_bench_regression.py)
+    // holds the ratio to <= 1.5x the recorder-off run. The graph is
+    // rebuilt outside the timer each iteration so both sides measure
+    // the run alone, and the recorder is reused (each run resets it)
+    // so this is its steady state.
+    let mut reng = Engine::new();
+    let rres = reng.add_resource(100.0);
+    let rstreams: Vec<_> = (0..16).map(|_| reng.add_stream()).collect();
+    let rebuild = |e: &mut Engine| {
+        e.reset_tasks();
+        for i in 0..engine_tasks {
+            e.add_task(
+                TaskSpec::new("t", rstreams[i % 16])
+                    .work(1e-4)
+                    .demand(rres, 10.0),
+            );
+        }
+    };
+    rebuild(&mut reng);
+    reng.run_full().expect("recorder warm-up run");
+    let mut off_acc = Accum::new();
+    let mut on_acc = Accum::new();
+    let mut rec = TimelineRecorder::new();
+    for _ in 0..engine_iters {
+        rebuild(&mut reng);
+        let t0 = Instant::now();
+        let off = reng.run_full().expect("recorder-off run");
+        off_acc.push(t0.elapsed().as_secs_f64());
+        rebuild(&mut reng);
+        let t0 = Instant::now();
+        let on = reng.run_full_recorded(&mut rec).expect("recorder-on run");
+        on_acc.push(t0.elapsed().as_secs_f64());
+        assert_eq!(
+            off.makespan.to_bits(),
+            on.makespan.to_bits(),
+            "recorder must not perturb the simulation"
+        );
+    }
+    let recorder_off = off_acc.median();
+    let recorder_on = on_acc.median();
+    let recorder_overhead = recorder_on / recorder_off.max(1e-12);
+    println!(
+        "{:<44} median {:>10}  (off {}, {:.2}x overhead)",
+        format!("run_full + TimelineRecorder: {engine_tasks} tasks"),
+        ficco::util::human_time(recorder_on),
+        ficco::util::human_time(recorder_off),
+        recorder_overhead,
+    );
+
     // Machine-readable trajectory record.
     let json = format!(
         "{{\n  \"bench\": \"perf_hotpath\",\n  \"quick\": {quick},\n  \"engine\": {{\n    \
@@ -230,7 +282,9 @@ fn main() {
          \"fair_sharing\": {{\n    \
          \"slow_evals_per_sec\": {slow_evals_per_sec:.1},\n    \
          \"incremental_evals_per_sec\": {incremental_evals_per_sec:.1},\n    \
-         \"speedup_vs_slow\": {speedup_vs_slow:.3}\n  }}\n}}\n",
+         \"speedup_vs_slow\": {speedup_vs_slow:.3}\n  }},\n  \"recorder\": {{\n    \
+         \"off_seconds\": {recorder_off:.6},\n    \"on_seconds\": {recorder_on:.6},\n    \
+         \"overhead_ratio\": {recorder_overhead:.3}\n  }}\n}}\n",
         evaluated = warm.evaluated,
         pruned = warm.pruned,
     );

@@ -162,7 +162,8 @@ impl Args {
 /// Boolean switches the `ficco` binary registers at parse time
 /// (switch names are global: parsing must know them before the
 /// subcommand is dispatched).
-pub const KNOWN_SWITCHES: &[&str] = &["all", "verbose", "csv", "no-overlap-report"];
+pub const KNOWN_SWITCHES: &[&str] =
+    &["all", "verbose", "csv", "no-overlap-report", "stats", "quiet"];
 
 /// Every `ficco` subcommand, in help order.
 pub const SUBCOMMANDS: &[&str] = &[
@@ -170,6 +171,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "simulate",
     "sweep",
     "tune",
+    "trace",
     "heuristic",
     "characterize",
     "figures",
@@ -187,22 +189,32 @@ pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [
     match sub {
         "workloads" => Some((&[], &[])),
         "simulate" => Some((
-            &["config", "gpus", "scenario", "m", "n", "k", "mech", "skew", "skew-seed"],
-            &[],
+            &[
+                "config", "gpus", "scenario", "m", "n", "k", "mech", "skew", "skew-seed",
+                "trace-out",
+            ],
+            &["quiet"],
         )),
         "sweep" => Some((
             &[
                 "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
                 "out-dir", "search", "model",
             ],
-            &["verbose", "csv"],
+            &["verbose", "csv", "stats", "quiet"],
         )),
         "tune" => Some((
             &[
                 "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
-                "beam", "pieces", "slots", "model",
+                "beam", "pieces", "slots", "model", "trace-out",
             ],
-            &["verbose", "csv"],
+            &["verbose", "csv", "stats", "quiet"],
+        )),
+        "trace" => Some((
+            &[
+                "scenario", "machine", "m", "n", "k", "mech", "skew", "skew-seed", "plan", "beam",
+                "pieces", "slots", "jobs", "out-dir",
+            ],
+            &["stats", "quiet"],
         )),
         "heuristic" => Some((
             &[
@@ -212,7 +224,7 @@ pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [
             &["all"],
         )),
         "characterize" => Some((&["config", "gpus", "what"], &[])),
-        "figures" => Some((&["config", "gpus", "out-dir"], &["csv"])),
+        "figures" => Some((&["config", "gpus", "out-dir"], &["csv", "quiet"])),
         "synth" => Some((
             &["config", "gpus", "count", "seed", "threshold", "suite", "against", "beam", "model"],
             &[],
@@ -382,6 +394,7 @@ mod tests {
         // subcommand.
         assert!(strict(vec!["heuristic", "--treshold", "2"]).is_err());
         assert!(strict(vec!["simulate", "--scenaro", "g5"]).is_err());
+        assert!(strict(vec!["trace", "--pln", "row-d8-fused-hs-s7-dma"]).is_err());
         assert!(strict(vec!["characterize", "--waht", "dil"]).is_err());
         assert!(strict(vec!["figures", "--outdir", "r"]).is_err());
         assert!(strict(vec!["synth", "--cout", "4"]).is_err());
@@ -399,6 +412,9 @@ mod tests {
         assert!(strict(vec!["simulate", "--scenario", "g5", "--mech", "dma"]).is_ok());
         assert!(strict(vec!["sweep", "--scenarios", "g1", "--jobs", "2", "--csv"]).is_ok());
         assert!(strict(vec!["tune", "--beam", "4", "--pieces", "1,8", "--verbose"]).is_ok());
+        assert!(strict(vec!["tune", "--trace-out", "t.json", "--stats", "--quiet"]).is_ok());
+        assert!(strict(vec!["trace", "--scenario", "g6", "--machine", "mi300x-8"]).is_ok());
+        assert!(strict(vec!["trace", "--plan", "row-d8-fused-hs-s7-dma", "--stats"]).is_ok());
         assert!(strict(vec!["heuristic", "--all", "--threshold", "2"]).is_ok());
         assert!(strict(vec!["characterize", "--what", "cil"]).is_ok());
         assert!(strict(vec!["figures", "--out-dir", "r", "--csv"]).is_ok());
@@ -414,6 +430,8 @@ mod tests {
         assert!(strict(vec!["simulate", "--all"]).is_err());
         assert!(strict(vec!["figures", "--verbose"]).is_err());
         assert!(strict(vec!["heuristic", "--csv"]).is_err());
+        assert!(strict(vec!["workloads", "--quiet"]).is_err());
+        assert!(strict(vec!["trace", "--verbose"]).is_err());
         // Stray positionals (e.g. a value after a switch) are errors.
         let e = strict(vec!["sweep", "stray"]).unwrap_err();
         assert!(e.0.contains("stray"), "{}", e.0);

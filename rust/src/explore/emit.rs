@@ -2,18 +2,21 @@
 //!
 //! [`CsvEmitter`] and [`JsonEmitter`] stream [`CellResult`]s as they
 //! are delivered (the sweep runner already reorders completions into
-//! cell order), producing byte-identical artifacts for any `--jobs`
-//! value: per-cell wall times are deliberately not emitted, and every
-//! number is formatted with Rust's deterministic shortest-round-trip
-//! `Display`. [`summary`] condenses a finished sweep into a
-//! [`metrics::Exhibit`] (geomean speedup per machine × schedule kind)
-//! so sweep output plugs into the same table/CSV tooling as the paper
-//! figures.
+//! cell order), producing a byte-identical `"results"` body for any
+//! `--jobs` value: every number is formatted with Rust's
+//! deterministic shortest-round-trip `Display`, and the
+//! jobs-dependent wall-clock timings ride in a trailing `"telemetry"`
+//! object that byte-compares strip via
+//! [`crate::obs::canonical_artifact_view`]. [`summary`] condenses a
+//! finished sweep into a [`metrics::Exhibit`] (geomean speedup per
+//! machine × schedule kind) so sweep output plugs into the same
+//! table/CSV tooling as the paper figures.
 
 use std::io::{self, Write};
 
 use super::CellResult;
 use crate::metrics::Exhibit;
+use crate::obs::Telemetry;
 use crate::schedule::Kind;
 use crate::util::stats;
 use crate::util::table::{f, Align, Table};
@@ -173,7 +176,10 @@ impl<W: Write> CsvEmitter<W> {
     }
 }
 
-/// Streams a JSON array of cell objects, one per delivered cell.
+/// Streams `{"results":[...],"telemetry":{...}}`: a deterministic
+/// array of cell objects plus the run's [`Telemetry`] tail (supplied
+/// at [`finish`](JsonEmitter::finish) time, after the pool has
+/// joined).
 pub struct JsonEmitter<W: Write> {
     w: W,
     count: usize,
@@ -181,7 +187,7 @@ pub struct JsonEmitter<W: Write> {
 
 impl<W: Write> JsonEmitter<W> {
     pub fn new(mut w: W) -> io::Result<JsonEmitter<W>> {
-        w.write_all(b"[")?;
+        w.write_all(b"{\"results\":[")?;
         Ok(JsonEmitter { w, count: 0 })
     }
 
@@ -195,8 +201,10 @@ impl<W: Write> JsonEmitter<W> {
         Ok(())
     }
 
-    pub fn finish(mut self) -> io::Result<W> {
-        self.w.write_all(b"\n]\n")?;
+    pub fn finish(mut self, telemetry: &Telemetry) -> io::Result<W> {
+        self.w.write_all(b"\n],\n\"telemetry\":")?;
+        self.w.write_all(telemetry.to_json().as_bytes())?;
+        self.w.write_all(b"\n}\n")?;
         self.w.flush()?;
         Ok(self.w)
     }
@@ -326,12 +334,16 @@ mod tests {
             json.cell(c).unwrap();
         }
         let csv = String::from_utf8(csv.finish().unwrap()).unwrap();
-        let json = String::from_utf8(json.finish().unwrap()).unwrap();
+        let json = String::from_utf8(json.finish(&Telemetry::default()).unwrap()).unwrap();
         assert!(csv.starts_with("scenario,machine"));
         assert_eq!(csv.lines().count(), 1 + rs[0].rows.len());
-        assert!(json.starts_with('['));
-        assert!(json.trim_end().ends_with(']'));
+        assert!(json.starts_with("{\"results\":["));
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.contains("\n],\n\"telemetry\":"));
         assert!(json.contains("\"heuristic_pick\""));
+        let canon = crate::obs::canonical_artifact_view(&json);
+        assert!(canon.ends_with("\n]"));
+        assert!(!canon.contains("telemetry"));
     }
 
     #[test]

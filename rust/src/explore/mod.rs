@@ -24,15 +24,20 @@
 //!   the parameterized plan space ([`crate::search`]) and reports the
 //!   best-found plan next to the fixed-kind rows.
 //!
-//! Per-cell wall time is measured ([`CellResult::eval_seconds`]) but
-//! deliberately excluded from the emitted artifacts so output files
-//! are reproducible.
+//! Per-cell wall time is measured ([`CellResult::eval_seconds`]) and
+//! surfaced — together with the merged per-worker pipeline counters
+//! ([`crate::obs::Counters`]) — in the report's `telemetry` block,
+//! which the emitters append *outside* the byte-compared artifact
+//! body (see [`crate::obs::canonical_artifact_view`]), so output
+//! files stay reproducible while the timings stay inspectable.
 
 pub mod emit;
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::hw::Machine;
+use crate::obs::{Counters, Telemetry};
 use crate::schedule::exec::{Evaluator, ScenarioEval};
 use crate::schedule::{Kind, Scenario};
 use crate::sim::CommMech;
@@ -466,6 +471,7 @@ pub fn eval_cell(cell: &Cell) -> CellResult {
 /// skeleton and its warmed scratch buffers).
 pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
     let t0 = Instant::now();
+    ev.counters.cells += 1;
     let machine = &cell.machine;
     let sc = &cell.scenario;
     // Static pick: the calibrated model's full-plan prediction when
@@ -544,6 +550,10 @@ pub struct SweepReport {
     /// Cell results in deterministic cell order.
     pub cells: Vec<CellResult>,
     pub wall_seconds: f64,
+    /// Merged per-worker counters + timings (jobs-dependent; excluded
+    /// from the byte-compared artifact body). Sweep cells use
+    /// per-cell caches, so the shared-cache fields stay zero here.
+    pub telemetry: Telemetry,
 }
 
 impl SweepReport {
@@ -576,21 +586,35 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
     mut on_cell: F,
 ) -> SweepReport {
     let cells = spec.cells();
+    let merged = Mutex::new(Counters::default());
     let t0 = Instant::now();
     // One reusable evaluator arena per worker: cells on a worker
     // share the simulator skeleton and scratch (speed only — every
-    // cell's numbers are a pure function of the cell).
-    let pool_run = crate::util::pool::run_ordered_stateful(
+    // cell's numbers are a pure function of the cell). Each worker's
+    // telemetry counters merge once, at join.
+    let pool_run = crate::util::pool::run_ordered_with(
         &cells,
         jobs,
         Evaluator::new,
         |ev, _, cell| eval_cell_in(ev, cell),
+        |ev: Evaluator| merged.lock().unwrap().merge(&ev.counters),
         |_, result| on_cell(result),
     );
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let telemetry = Telemetry {
+        jobs: pool_run.jobs,
+        wall_seconds,
+        counters: *merged.lock().unwrap(),
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_shards: Vec::new(),
+        cell_seconds: pool_run.results.iter().map(|c| c.eval_seconds).collect(),
+    };
     SweepReport {
         jobs: pool_run.jobs,
         cells: pool_run.results,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds,
+        telemetry,
     }
 }
 

@@ -59,6 +59,7 @@ pub mod explore;
 pub mod heuristics;
 pub mod hw;
 pub mod metrics;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod schedule;

@@ -26,7 +26,22 @@
 //!                                   --scenarios --machines --mechs
 //!                                   --gpus --skew; space: --pieces
 //!                                   --slots; --jobs, --out-dir
-//!                                   results/tune, --verbose, --csv)
+//!                                   results/tune, --verbose, --csv;
+//!                                   --trace-out FILE writes a Perfetto
+//!                                   trace of the first cell's best
+//!                                   plan; --stats prints the search
+//!                                   telemetry table)
+//!   trace      --scenario g6 ...    flight-recorder export of one
+//!                                   simulated cell: Chrome/Perfetto
+//!                                   trace.json (loadable in
+//!                                   ui.perfetto.dev) + timeline.csv
+//!                                   under --out-dir results/trace
+//!                                   (--machine preset, --mech --skew
+//!                                   --skew-seed; --plan ID traces
+//!                                   that exact plan, otherwise the
+//!                                   plan space is searched first:
+//!                                   --beam --pieces --slots --jobs;
+//!                                   --stats prints search telemetry)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
 //!                                   (--threshold S scales the Fig-12a
 //!                                   threshold; --model FILE predicts
@@ -55,6 +70,11 @@
 //! preset), --gpus N, --mech dma|rccl. `sweep`/`tune` instead take the
 //! list filters above (--machines/--mechs/--gpus accept comma lists).
 //! Machine presets for sweeps: mi300x-8, h100-dgx-8, pcie-gen4-4, switch-8.
+//! Progress and diagnostics go to stderr; stdout carries the
+//! machine-readable output (tables, --stats telemetry), and --quiet
+//! silences the stderr chatter (sweep/tune/trace/figures/simulate).
+//! `simulate --trace-out FILE` writes a Perfetto trace of the
+//! heuristic pick's preset plan.
 //! Every subcommand is strict: unknown options, inapplicable switches
 //! and stray positionals are errors, not silently ignored
 //! (see `cli::subcommand_spec`).
@@ -65,6 +85,16 @@ use ficco::schedule::{exec::ScenarioEval, Kind, Scenario};
 use ficco::sim::CommMech;
 use ficco::util::table::{f, x, Align, Table};
 use ficco::workloads;
+
+/// Progress/diagnostic line: stderr (stdout stays machine-readable),
+/// suppressed by `--quiet`.
+macro_rules! progress {
+    ($($arg:tt)*) => {
+        if !ficco::util::quiet() {
+            eprintln!($($arg)*);
+        }
+    };
+}
 
 fn main() {
     let args = match Args::from_env(ficco::cli::KNOWN_SWITCHES) {
@@ -133,11 +163,13 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     // Strict CLI contract: a typo'd flag must fail loudly on every
     // subcommand instead of silently running with defaults.
     ficco::cli::validate_strict(args)?;
+    ficco::util::set_quiet(args.has("quiet"));
     match args.subcommand.as_deref() {
         Some("workloads") => cmd_workloads(),
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
         Some("tune") => cmd_tune(args),
+        Some("trace") => cmd_trace(args),
         Some("heuristic") => cmd_heuristic(args),
         Some("characterize") => cmd_characterize(args),
         Some("figures") => cmd_figures(args),
@@ -265,6 +297,12 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             x(worst.1)
         );
     }
+    // `--trace-out FILE`: flight-recorder export of the heuristic
+    // pick's preset plan for this scenario.
+    if let Some(path) = args.get("trace-out") {
+        let plan = ficco::plan::Plan::preset(d.pick, &sc);
+        write_trace(&machine, args.get_or("config", "mi300x-8"), &sc, &plan, path)?;
+    }
     Ok(())
 }
 
@@ -293,7 +331,7 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let csv_path = format!("{out_dir}/sweep.csv");
     let json_path = format!("{out_dir}/sweep.json");
 
-    println!(
+    progress!(
         "sweep: {} cells / {} schedule points on {} worker thread{}",
         spec.n_cells(),
         spec.n_points(),
@@ -323,7 +361,7 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 .iter()
                 .map(|r| r.speedup)
                 .fold(f64::NEG_INFINITY, f64::max);
-            println!(
+            progress!(
                 "  [{:>4}] {:<8} {:<12} {:<5} {}g: best {} pick {} ({})",
                 c.index,
                 c.scenario,
@@ -341,16 +379,20 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         return Err(format!("writing sweep artifacts under {out_dir}: {e}").into());
     }
     csv.finish()?;
-    json.finish()?;
+    json.finish(&report.telemetry)?;
 
     let exhibit = ficco::explore::emit::summary(&report.cells);
     exhibit.print();
     if args.has("csv") {
         let summary_path = format!("{out_dir}/summary.csv");
         exhibit.write_csv(&summary_path)?;
-        println!("  -> {summary_path}");
+        progress!("  -> {summary_path}");
     }
-    println!(
+    if args.has("stats") {
+        println!("== telemetry ==");
+        print!("{}", report.telemetry.table().render());
+    }
+    progress!(
         "{} points in {:.2}s wall ({:.2}s of evaluation across {} workers, {:.1} points/s)",
         report.n_points(),
         report.wall_seconds,
@@ -358,8 +400,8 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         report.jobs,
         report.n_points() as f64 / report.wall_seconds.max(1e-9),
     );
-    println!("  -> {csv_path}");
-    println!("  -> {json_path}");
+    progress!("  -> {csv_path}");
+    progress!("  -> {json_path}");
     Ok(())
 }
 
@@ -483,7 +525,7 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let csv_path = format!("{out_dir}/tune.csv");
     let json_path = format!("{out_dir}/tune.json");
 
-    println!(
+    progress!(
         "tune: {} cells ({}) on {} worker thread{}",
         spec.n_cells(),
         if cfg.beam == 0 {
@@ -509,7 +551,7 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             return false;
         }
         if verbose {
-            println!(
+            progress!(
                 "  [{:>4}] {:<8} {:<12} {:<5} best {} ({}) gain {} over {} ({})",
                 r.index,
                 r.scenario,
@@ -528,16 +570,32 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         return Err(format!("writing tune artifacts under {out_dir}: {e}").into());
     }
     csv.finish()?;
-    json.finish()?;
+    json.finish(&report.telemetry)?;
 
     let exhibit = ficco::search::emit::summary(&report.results);
     exhibit.print();
     if args.has("csv") {
         let summary_path = format!("{out_dir}/summary.csv");
         exhibit.write_csv(&summary_path)?;
-        println!("  -> {summary_path}");
+        progress!("  -> {summary_path}");
     }
-    println!(
+    if args.has("stats") {
+        println!("== telemetry ==");
+        print!("{}", report.telemetry.table().render());
+    }
+    // `--trace-out FILE`: flight-recorder export of the first cell's
+    // searched-best plan (the same plan tune just reported).
+    if let Some(path) = args.get("trace-out") {
+        match (spec.cells().first(), report.results.first()) {
+            (Some(cell), Some(best)) => {
+                let plan = ficco::plan::Plan::parse_id(&best.best_plan)
+                    .ok_or_else(|| format!("searched plan id '{}' did not parse", best.best_plan))?;
+                write_trace(&cell.machine, &cell.machine_name, &cell.scenario, &plan, path)?;
+            }
+            _ => return Err("--trace-out: tune produced no cells to trace".into()),
+        }
+    }
+    progress!(
         "{} plan evaluations ({} pruned) across {} cells in {:.2}s wall ({:.2}s of search on {} workers)",
         report.evaluations(),
         report.pruned(),
@@ -546,8 +604,147 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         report.cpu_seconds(),
         report.jobs,
     );
-    println!("  -> {csv_path}");
-    println!("  -> {json_path}");
+    progress!("  -> {csv_path}");
+    progress!("  -> {json_path}");
+    Ok(())
+}
+
+/// Trace header metadata: run identity plus plan axes and scenario
+/// shape, rendered into the `ficco` header object and the `plan`
+/// instant event's args.
+fn trace_meta(
+    machine_name: &str,
+    sc: &Scenario,
+    plan: &ficco::plan::Plan,
+) -> ficco::obs::TraceMeta {
+    ficco::obs::TraceMeta {
+        scenario: sc.name.clone(),
+        machine: machine_name.to_string(),
+        mech: plan.mech.name().to_string(),
+        plan: plan.id(),
+        args: vec![
+            ("m".into(), sc.gemm.m.to_string()),
+            ("n".into(), sc.gemm.n.to_string()),
+            ("k".into(), sc.gemm.k.to_string()),
+            ("ngpus".into(), sc.ngpus.to_string()),
+            ("skew".into(), sc.skew.to_string()),
+            ("pieces".into(), plan.pieces.to_string()),
+            ("shape".into(), plan.shape.name().to_string()),
+            ("fused".into(), plan.fused.to_string()),
+            ("head_start".into(), plan.head_start.to_string()),
+            ("slots".into(), plan.slots.to_string()),
+        ],
+    }
+}
+
+/// Simulate (machine, scenario, plan) under the timeline recorder and
+/// write the Perfetto trace to `path` (used by `--trace-out`; `ficco
+/// trace` writes the CSV sibling too).
+fn write_trace(
+    machine: &Machine,
+    machine_name: &str,
+    sc: &Scenario,
+    plan: &ficco::plan::Plan,
+    path: &str,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let mut ev = ficco::schedule::exec::Evaluator::new();
+    let (report, rec, tracks) = ev.capture_plan(machine, sc, plan);
+    let meta = trace_meta(machine_name, sc, plan);
+    std::fs::write(path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
+    progress!(
+        "trace: {} on {} plan {} makespan {}",
+        sc.name,
+        machine_name,
+        plan.id(),
+        ficco::util::human_time(report.makespan),
+    );
+    progress!("  -> {path}");
+    Ok(())
+}
+
+/// `ficco trace`: flight-recorder export of one simulated cell. With
+/// `--plan ID` the exact plan is traced; otherwise the plan space is
+/// searched first (same machinery as `tune`, so the traced plan is
+/// the searched best) and `--stats` reports the search telemetry.
+/// Emits `trace.json` (Chrome/Perfetto, loadable in ui.perfetto.dev)
+/// and `timeline.csv` under `--out-dir`.
+fn cmd_trace(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let machine_name = args.get_or("machine", "mi300x-8");
+    let machine = Machine::preset(machine_name).ok_or_else(|| {
+        format!(
+            "unknown --machine '{machine_name}' (presets: {})",
+            Machine::preset_names().join(", ")
+        )
+    })?;
+    let sc = scenario_from(args, &machine)?;
+    let (plan, telemetry) = match args.get("plan") {
+        Some(id) => {
+            let plan = ficco::plan::Plan::parse_id(id).ok_or_else(|| {
+                format!("bad --plan '{id}' (expected e.g. row-d8-fused-hs-s7-dma)")
+            })?;
+            plan.check(sc.ngpus).map_err(|e| format!("--plan '{id}': {e}"))?;
+            (plan, None)
+        }
+        None => {
+            // Search the plan space for this one cell, exactly as
+            // `tune` would; the search is deterministic, so the
+            // traced plan (and the trace bytes) are identical for
+            // any --jobs value.
+            let spec = ficco::explore::SweepSpec {
+                scenarios: vec![sc.clone()],
+                kinds: Vec::new(),
+                machines: vec![(machine_name.to_string(), machine.clone())],
+                mechs: vec![sc.mech],
+                gpu_counts: Vec::new(),
+                skews: Vec::new(),
+                skew_seed: args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?,
+                search: None,
+                model: None,
+            };
+            let cfg = ficco::search::SearchCfg {
+                beam: args.get_usize("beam", 0)?,
+                prune: true,
+            };
+            let ov = space_overrides_from(args)?;
+            ensure_searchable_space(&spec, &ov)?;
+            let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
+            let report = ficco::search::tune(&spec, &ov, &cfg, jobs, |_| true);
+            let best = report.results.first().ok_or("trace: search produced no result")?;
+            progress!(
+                "trace: searched {} plans ({} pruned), best {} ({})",
+                best.evaluated,
+                best.pruned,
+                best.best_plan,
+                x(best.best_speedup),
+            );
+            let plan = ficco::plan::Plan::parse_id(&best.best_plan)
+                .ok_or_else(|| format!("searched plan id '{}' did not parse", best.best_plan))?;
+            (plan, Some(report.telemetry))
+        }
+    };
+
+    let out_dir = args.get_or("out-dir", "results/trace");
+    std::fs::create_dir_all(out_dir)?;
+    let mut ev = ficco::schedule::exec::Evaluator::new();
+    let (report, rec, tracks) = ev.capture_plan(&machine, &sc, &plan);
+    let meta = trace_meta(machine_name, &sc, &plan);
+    let trace_path = format!("{out_dir}/trace.json");
+    let csv_path = format!("{out_dir}/timeline.csv");
+    std::fs::write(&trace_path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
+    std::fs::write(&csv_path, ficco::obs::timeline_csv(ev.engine(), &rec, &tracks))?;
+    progress!(
+        "trace: {} on {} plan {} makespan {}",
+        sc.name,
+        machine_name,
+        plan.id(),
+        ficco::util::human_time(report.makespan),
+    );
+    progress!("  -> {trace_path}");
+    progress!("  -> {csv_path}");
+    if args.has("stats") {
+        println!("== telemetry ==");
+        print!("{}", telemetry.unwrap_or_default().table().render());
+    }
     Ok(())
 }
 
@@ -639,7 +836,7 @@ fn cmd_figures(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         if args.has("csv") {
             let path = format!("{out_dir}/{name}.csv");
             e.write_csv(&path)?;
-            println!("  -> {path}");
+            progress!("  -> {path}");
         }
     }
     Ok(())

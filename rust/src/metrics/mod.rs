@@ -32,13 +32,19 @@ impl Exhibit {
             .unwrap_or_else(|| panic!("no summary '{name}'"))
     }
 
+    /// Render to *stderr* — stdout is reserved for machine-readable
+    /// output (`figures --csv` pipes CSV there), and `--quiet`
+    /// suppresses exhibits entirely.
     pub fn print(&self) {
-        println!("== {} ==", self.title);
-        print!("{}", self.table.render());
-        for (n, v) in &self.summaries {
-            println!("  {n}: {v:.4}");
+        if crate::util::quiet() {
+            return;
         }
-        println!();
+        eprintln!("== {} ==", self.title);
+        eprint!("{}", self.table.render());
+        for (n, v) in &self.summaries {
+            eprintln!("  {n}: {v:.4}");
+        }
+        eprintln!();
     }
 
     /// Write the exhibit's table as CSV (used by `figures --csv` and

@@ -1,0 +1,332 @@
+//! Byte-stable trace exporters: Chrome/Perfetto `trace.json` and a
+//! flat `timeline.csv`.
+//!
+//! The JSON renderer emits one event per line in a fixed order
+//! (metadata, plan instant, task spans ascending by task id, gap and
+//! throttle windows, counter series), with all floats printed via
+//! Rust's shortest-round-trip `Display` — so the artifact is
+//! byte-identical for identical runs regardless of `--jobs`, and the
+//! determinism tests can `cmp` it directly. Timestamps are exported
+//! in microseconds (`ts = t · 1e6`) with `"displayTimeUnit": "ms"`,
+//! which is what `ui.perfetto.dev` expects of Chrome-format traces.
+
+use super::timeline::TimelineRecorder;
+use crate::explore::emit::{csv_escape, json_escape};
+use crate::sim::Engine;
+use std::fmt::Write as _;
+
+/// Where one simulation stream renders in the trace: a Perfetto
+/// process/thread pair plus a human-readable thread name.
+#[derive(Debug, Clone)]
+pub struct StreamTrack {
+    pub pid: usize,
+    pub tid: usize,
+    pub name: String,
+}
+
+/// Maps engine stream/resource indices onto Perfetto tracks.
+///
+/// Indexed by `StreamId.0` / `ResourceId.0` in engine registration
+/// order. Cluster topologies get a GPU-per-process layout from
+/// `ClusterSim::track_map`; anything else can use
+/// [`TrackMap::generic`].
+#[derive(Debug, Clone)]
+pub struct TrackMap {
+    /// Process names, indexed by pid.
+    pub processes: Vec<String>,
+    /// One track per engine stream, indexed by `StreamId.0`.
+    pub streams: Vec<StreamTrack>,
+    /// One `(pid, counter name)` per engine resource, indexed by
+    /// `ResourceId.0`.
+    pub counters: Vec<(usize, String)>,
+}
+
+impl TrackMap {
+    /// Fallback layout for engines built outside `sim::cluster`: one
+    /// process, one thread per stream, one counter per resource.
+    pub fn generic(n_streams: usize, n_resources: usize) -> Self {
+        TrackMap {
+            processes: vec!["sim".to_string()],
+            streams: (0..n_streams)
+                .map(|s| StreamTrack {
+                    pid: 0,
+                    tid: s,
+                    name: format!("stream{s}"),
+                })
+                .collect(),
+            counters: (0..n_resources).map(|r| (0, format!("res{r}"))).collect(),
+        }
+    }
+
+    /// Fully-qualified `process/name` label for a stream track.
+    pub fn stream_label(&self, s: usize) -> String {
+        format!("{}/{}", self.processes[self.streams[s].pid], self.streams[s].name)
+    }
+
+    /// Fully-qualified `process/name` label for a resource counter.
+    pub fn counter_label(&self, r: usize) -> String {
+        format!("{}/{}", self.processes[self.counters[r].0], self.counters[r].1)
+    }
+}
+
+/// Run identity carried into the trace header and the `plan` instant
+/// event: which cell was simulated and with which plan, plus
+/// free-form `(key, value)` args for plan axes and scenario shape.
+#[derive(Debug, Clone, Default)]
+pub struct TraceMeta {
+    pub scenario: String,
+    pub machine: String,
+    pub mech: String,
+    pub plan: String,
+    /// Extra args (plan axes, scenario shape), emitted in order.
+    pub args: Vec<(String, String)>,
+}
+
+fn push_kv_str(out: &mut String, key: &str, val: &str, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    write!(out, "\"{}\":\"{}\"", json_escape(key), json_escape(val)).unwrap();
+}
+
+/// Render the captured timeline as a Chrome/Perfetto JSON trace.
+pub fn perfetto_json(
+    eng: &Engine,
+    rec: &TimelineRecorder,
+    tracks: &TrackMap,
+    meta: &TraceMeta,
+) -> String {
+    let us = |t: f64| t * 1e6;
+    let mut out = String::new();
+    out.push_str("{\n\"ficco\":{");
+    let mut first = true;
+    push_kv_str(&mut out, "scenario", &meta.scenario, &mut first);
+    push_kv_str(&mut out, "machine", &meta.machine, &mut first);
+    push_kv_str(&mut out, "mech", &meta.mech, &mut first);
+    push_kv_str(&mut out, "plan", &meta.plan, &mut first);
+    for (k, v) in &meta.args {
+        push_kv_str(&mut out, k, v, &mut first);
+    }
+    write!(
+        out,
+        ",\"makespan\":{},\"gap_time\":{},\"throttled_time\":{}",
+        rec.end,
+        rec.total_gap_time(eng),
+        rec.total_throttled_time()
+    )
+    .unwrap();
+    out.push_str("},\n\"displayTimeUnit\":\"ms\",\n\"traceEvents\":[\n");
+
+    let mut events: Vec<String> = Vec::new();
+    // Track-naming metadata: one process_name per pid, one
+    // thread_name per stream track.
+    for (pid, pname) in tracks.processes.iter().enumerate() {
+        events.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(pname)
+        ));
+    }
+    for st in &tracks.streams {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            st.pid,
+            st.tid,
+            json_escape(&st.name)
+        ));
+    }
+    // Plan instant: the run's identity, visible at t=0 in the UI.
+    {
+        let mut args = String::new();
+        let mut first = true;
+        push_kv_str(&mut args, "scenario", &meta.scenario, &mut first);
+        push_kv_str(&mut args, "machine", &meta.machine, &mut first);
+        push_kv_str(&mut args, "mech", &meta.mech, &mut first);
+        push_kv_str(&mut args, "plan", &meta.plan, &mut first);
+        for (k, v) in &meta.args {
+            push_kv_str(&mut args, k, v, &mut first);
+        }
+        events.push(format!(
+            "{{\"name\":\"plan\",\"ph\":\"I\",\"s\":\"g\",\"ts\":0,\"pid\":0,\"tid\":0,\
+             \"args\":{{{args}}}}}"
+        ));
+    }
+    // Task spans, ascending id: a "setup" complete event over
+    // [ready, start] when setup took time, and a "work" complete
+    // event over [start, finish] always ("X" rather than "B"/"E" so
+    // zero-duration sync tasks cannot unbalance begin/end pairing).
+    for tid in 0..eng.n_tasks() {
+        if rec.ready[tid].is_nan() {
+            continue;
+        }
+        let st = &tracks.streams[eng.task_stream(tid).0];
+        let label = json_escape(&eng.task_label(tid).to_string());
+        if rec.start[tid] > rec.ready[tid] {
+            events.push(format!(
+                "{{\"name\":\"{label}\",\"cat\":\"setup\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{},\"tid\":{}}}",
+                us(rec.ready[tid]),
+                us(rec.start[tid] - rec.ready[tid]),
+                st.pid,
+                st.tid
+            ));
+        }
+        let mut demands = String::new();
+        for (k, &(r, d)) in eng.task_demands(tid).iter().enumerate() {
+            if k > 0 {
+                demands.push(';');
+            }
+            write!(demands, "{}={}", tracks.counter_label(r.0), d).unwrap();
+        }
+        events.push(format!(
+            "{{\"name\":\"{label}\",\"cat\":\"work\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"work\":{},\"setup\":{},\"demands\":\"{}\"}}}}",
+            us(rec.start[tid]),
+            us(rec.finish[tid] - rec.start[tid]),
+            st.pid,
+            st.tid,
+            eng.task_work(tid),
+            eng.task_setup(tid),
+            json_escape(&demands)
+        ));
+    }
+    // Inefficiency annotations as begin/end pairs: exposed-comm gaps
+    // per stream, then contention-throttled windows per task. Windows
+    // on one track are disjoint, so pairing stays balanced.
+    let gaps = rec.stream_gaps(eng);
+    for (s, windows) in gaps.iter().enumerate() {
+        let st = &tracks.streams[s];
+        for &(t0, t1) in windows {
+            events.push(format!(
+                "{{\"name\":\"exposed-comm\",\"cat\":\"gap\",\"ph\":\"B\",\"ts\":{},\
+                 \"pid\":{},\"tid\":{}}}",
+                us(t0),
+                st.pid,
+                st.tid
+            ));
+            events.push(format!(
+                "{{\"name\":\"exposed-comm\",\"cat\":\"gap\",\"ph\":\"E\",\"ts\":{},\
+                 \"pid\":{},\"tid\":{}}}",
+                us(t1),
+                st.pid,
+                st.tid
+            ));
+        }
+    }
+    for tid in 0..eng.n_tasks() {
+        let st = &tracks.streams[eng.task_stream(tid).0];
+        let label = json_escape(&eng.task_label(tid).to_string());
+        for &(t0, t1) in &rec.throttled[tid] {
+            events.push(format!(
+                "{{\"name\":\"throttled\",\"cat\":\"contention\",\"ph\":\"B\",\"ts\":{},\
+                 \"pid\":{},\"tid\":{},\"args\":{{\"task\":\"{label}\"}}}}",
+                us(t0),
+                st.pid,
+                st.tid
+            ));
+            events.push(format!(
+                "{{\"name\":\"throttled\",\"cat\":\"contention\",\"ph\":\"E\",\"ts\":{},\
+                 \"pid\":{},\"tid\":{}}}",
+                us(t1),
+                st.pid,
+                st.tid
+            ));
+        }
+    }
+    // Resource demand-rate counters: one series per resource, a
+    // sample at each refill where the value actually changed, closed
+    // with an explicit zero at the makespan.
+    for r in 0..eng.n_resources() {
+        let (pid, name) = (&tracks.counters[r].0, &tracks.counters[r].1);
+        let name = json_escape(name);
+        let mut last_bits = 0.0f64.to_bits();
+        let mut emitted_any = false;
+        for (t, seg) in &rec.segments {
+            let v = seg[r];
+            if emitted_any && v.to_bits() == last_bits {
+                continue;
+            }
+            events.push(format!(
+                "{{\"name\":\"{name}\",\"ph\":\"C\",\"ts\":{},\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"value\":{v}}}}}",
+                us(*t)
+            ));
+            last_bits = v.to_bits();
+            emitted_any = true;
+        }
+        if emitted_any && last_bits != 0.0f64.to_bits() {
+            events.push(format!(
+                "{{\"name\":\"{name}\",\"ph\":\"C\",\"ts\":{},\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"value\":0}}}}",
+                us(rec.end)
+            ));
+        }
+    }
+
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]\n}\n");
+    out
+}
+
+/// Render the captured timeline as a flat CSV: task spans, gap and
+/// throttle windows, and per-resource busy integrals.
+pub fn timeline_csv(eng: &Engine, rec: &TimelineRecorder, tracks: &TrackMap) -> String {
+    let mut out = String::from("record,track,label,t_ready,t_start,t_end,value\n");
+    for tid in 0..eng.n_tasks() {
+        if rec.ready[tid].is_nan() {
+            continue;
+        }
+        writeln!(
+            out,
+            "task,{},{},{},{},{},{}",
+            csv_escape(&tracks.stream_label(eng.task_stream(tid).0)),
+            csv_escape(&eng.task_label(tid).to_string()),
+            rec.ready[tid],
+            rec.start[tid],
+            rec.finish[tid],
+            eng.task_work(tid)
+        )
+        .unwrap();
+    }
+    let gaps = rec.stream_gaps(eng);
+    for (s, windows) in gaps.iter().enumerate() {
+        for &(t0, t1) in windows {
+            writeln!(
+                out,
+                "gap,{},exposed-comm,,{},{},{}",
+                csv_escape(&tracks.stream_label(s)),
+                t0,
+                t1,
+                t1 - t0
+            )
+            .unwrap();
+        }
+    }
+    for tid in 0..eng.n_tasks() {
+        for &(t0, t1) in &rec.throttled[tid] {
+            writeln!(
+                out,
+                "throttled,{},{},,{},{},{}",
+                csv_escape(&tracks.stream_label(eng.task_stream(tid).0)),
+                csv_escape(&eng.task_label(tid).to_string()),
+                t0,
+                t1,
+                t1 - t0
+            )
+            .unwrap();
+        }
+    }
+    for r in 0..eng.n_resources() {
+        writeln!(
+            out,
+            "busy,{},,,,{},{}",
+            csv_escape(&tracks.counter_label(r)),
+            rec.end,
+            rec.busy[r]
+        )
+        .unwrap();
+    }
+    out
+}

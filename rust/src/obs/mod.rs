@@ -1,0 +1,125 @@
+//! Flight-recorder observability layer.
+//!
+//! The paper's methodology is reading *inefficiency signatures* off
+//! execution timelines — exposed-communication gaps, DMA-vs-SM
+//! contention windows, DIL/CIL losses (PAPER.md §4–5) — but a fluid
+//! simulation only reports a final makespan unless someone watches it
+//! run. This module is that watcher, in three parts:
+//!
+//! - [`Recorder`] — a hook trait the simulator core calls at every
+//!   structural event (task ready/start/finish, rate refill, time
+//!   advance). The default implementation of every hook is empty and
+//!   `#[inline]`, so the [`NullRecorder`] monomorphizes to *nothing*:
+//!   the recorder-off `run_lean` path stays zero-allocation and
+//!   bit-identical (enforced by `tests/zero_alloc.rs` and the frozen
+//!   goldens). [`StderrRecorder`] reproduces the legacy
+//!   `FICCO_SIM_TRACE` eprintln stream byte-for-byte.
+//! - [`timeline::TimelineRecorder`] — captures per-task spans, busy
+//!   integrals (bit-exact replay of the engine's accounting), fair-
+//!   share rate segments, and contention-throttled windows.
+//! - [`export`] — byte-stable Chrome/Perfetto `trace.json` and
+//!   `timeline.csv` renderers; [`counters`] — search/cache telemetry
+//!   merged per-worker at pool join.
+//!
+//! Contract details live in `DESIGN.md` §8.
+
+pub mod counters;
+pub mod export;
+pub mod timeline;
+
+pub use counters::{canonical_artifact_view, Counters, Telemetry};
+pub use export::{perfetto_json, timeline_csv, StreamTrack, TraceMeta, TrackMap};
+pub use timeline::TimelineRecorder;
+
+use crate::sim::Engine;
+
+/// Simulation observer: the engine core calls these hooks at each
+/// structural event. Every hook defaults to an empty `#[inline]`
+/// body, so an implementor pays only for what it overrides and
+/// [`NullRecorder`] compiles away entirely.
+///
+/// Hook order within one `run`: `on_begin` once; then per event-loop
+/// iteration any number of `on_ready` (promotion), `on_start` (setup
+/// elapsed), one `on_rates` after each fair-share refill, `on_advance`
+/// *before* the engine integrates progress over a `dt > 0` step (so
+/// `now` is the pre-advance clock), and `on_finish` per completion;
+/// finally `on_end` with the makespan.
+pub trait Recorder {
+    /// Called once at the top of a run, before any task is promoted.
+    /// `eng` exposes the full task/resource inventory for buffer
+    /// sizing.
+    #[inline]
+    fn on_begin(&mut self, _eng: &Engine) {}
+
+    /// Task `tid` became ready (deps + stream predecessor satisfied)
+    /// and entered its setup phase at time `now`.
+    #[inline]
+    fn on_ready(&mut self, _eng: &Engine, _now: f64, _tid: usize) {}
+
+    /// Task `tid` finished setup and started running at time `now`.
+    #[inline]
+    fn on_start(&mut self, _eng: &Engine, _now: f64, _tid: usize) {}
+
+    /// Fair-share rates were recomputed at time `now`: `rates[j]` is
+    /// the rate of task `running[j]`.
+    #[inline]
+    fn on_rates(&mut self, _eng: &Engine, _now: f64, _running: &[usize], _rates: &[f64]) {}
+
+    /// The clock is about to advance from `now` to `now + dt`
+    /// (`dt > 0`) with the given running set and rates, *before* the
+    /// engine's own integration loop runs.
+    #[inline]
+    fn on_advance(
+        &mut self,
+        _eng: &Engine,
+        _now: f64,
+        _dt: f64,
+        _running: &[usize],
+        _rates: &[f64],
+    ) {
+    }
+
+    /// Task `tid` completed at time `now`.
+    #[inline]
+    fn on_finish(&mut self, _eng: &Engine, _now: f64, _tid: usize) {}
+
+    /// The run completed at makespan `now`.
+    #[inline]
+    fn on_end(&mut self, _eng: &Engine, _now: f64) {}
+}
+
+/// The zero-overhead default: every hook inherits the empty inline
+/// body, so `run_core::<NullRecorder>` is the exact pre-recorder hot
+/// loop after monomorphization.
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {}
+
+/// Reproduces the legacy `FICCO_SIM_TRACE` stderr stream: one line
+/// per task-ready and task-done event, in the engine's event order.
+/// Installed automatically when the env var is set, so the alias
+/// keeps working with the bespoke `trace` branches gone from the hot
+/// loop.
+pub struct StderrRecorder;
+
+impl Recorder for StderrRecorder {
+    fn on_ready(&mut self, eng: &Engine, now: f64, tid: usize) {
+        print_ready(now, eng.task_label(tid));
+    }
+
+    fn on_finish(&mut self, eng: &Engine, now: f64, tid: usize) {
+        print_done(now, eng.task_label(tid));
+    }
+}
+
+/// The canonical trace line for a task entering setup. Shared with
+/// the debug-only reference simulator so both streams stay
+/// byte-compatible.
+pub fn print_ready(now: f64, label: impl std::fmt::Display) {
+    eprintln!("[{now:.9}] ready  {label}");
+}
+
+/// The canonical trace line for a task completing.
+pub fn print_done(now: f64, label: impl std::fmt::Display) {
+    eprintln!("[{now:.9}] done   {label}");
+}

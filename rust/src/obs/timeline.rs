@@ -1,0 +1,192 @@
+//! Structured timeline capture from a live simulation run.
+//!
+//! [`TimelineRecorder`] subscribes to every [`super::Recorder`] hook
+//! and reconstructs the full schedule: per-task `ready → start →
+//! finish` spans, per-resource busy integrals (replayed with the
+//! *exact* accumulation expression and order the engine uses, so the
+//! integrals are bit-identical to `Report::resource_busy`), per-
+//! resource demand-rate segments at every fair-share refill, and the
+//! derived inefficiency annotations the paper reads off timelines:
+//! contention-throttled windows (fair-share rate below the task's
+//! solo rate) and exposed-communication gaps (idle time between
+//! consecutive tasks on a stream, derived at export time from the
+//! spans).
+
+use super::Recorder;
+use crate::sim::Engine;
+
+/// Matches the engine's internal epsilon so window/gap thresholds
+/// agree with its event arithmetic.
+const EPS: f64 = 1e-12;
+
+/// Captures a full structured timeline from one `run_full_recorded`
+/// call. All vectors are sized in [`Recorder::on_begin`]; a recorder
+/// can be reused across runs (each `on_begin` resets it).
+#[derive(Debug, Default)]
+pub struct TimelineRecorder {
+    /// Per-task time the task became ready (entered setup); NaN if
+    /// never promoted.
+    pub ready: Vec<f64>,
+    /// Per-task time setup completed and work started.
+    pub start: Vec<f64>,
+    /// Per-task completion time.
+    pub finish: Vec<f64>,
+    /// Per-resource busy integral, bit-identical to the engine's
+    /// `Report::resource_busy` accounting.
+    pub busy: Vec<f64>,
+    /// One entry per fair-share refill: `(time, per-resource total
+    /// demand rate Σ rate_j · d_j)` over the running set at that
+    /// instant.
+    pub segments: Vec<(f64, Vec<f64>)>,
+    /// Per-task solo rate: the rate the task would run at alone on
+    /// the machine, `min(1, min_r capacity_r / demand_r)`.
+    pub solo: Vec<f64>,
+    /// Per-task contention-throttled windows `(t0, t1)` during which
+    /// the task's fair-share rate was below its solo rate.
+    pub throttled: Vec<Vec<(f64, f64)>>,
+    /// Makespan reported by `on_end`; NaN until the run completes.
+    pub end: f64,
+    /// Open-window start per task (NaN = not currently throttled).
+    throttle_since: Vec<f64>,
+}
+
+impl TimelineRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn close_throttle(&mut self, tid: usize, now: f64) {
+        let t0 = self.throttle_since[tid];
+        self.throttle_since[tid] = f64::NAN;
+        if now - t0 > EPS {
+            self.throttled[tid].push((t0, now));
+        }
+    }
+
+    /// Exposed gaps per stream, derived from the recorded spans: idle
+    /// windows between one task's finish and the next task's ready on
+    /// the same stream. Tasks are scanned in id order, which is
+    /// execution order within a stream (streams are FIFO). The lead-in
+    /// before a stream's first task is not counted — it is pipeline
+    /// fill, not an exposed gap.
+    pub fn stream_gaps(&self, eng: &Engine) -> Vec<Vec<(f64, f64)>> {
+        let mut gaps = vec![Vec::new(); eng.n_streams()];
+        let mut last_finish = vec![f64::NAN; eng.n_streams()];
+        for tid in 0..eng.n_tasks() {
+            if self.ready[tid].is_nan() {
+                continue;
+            }
+            let s = eng.task_stream(tid).0;
+            let prev = last_finish[s];
+            if !prev.is_nan() && self.ready[tid] - prev > EPS {
+                gaps[s].push((prev, self.ready[tid]));
+            }
+            last_finish[s] = self.finish[tid];
+        }
+        gaps
+    }
+
+    /// Total exposed-gap time summed over all streams.
+    pub fn total_gap_time(&self, eng: &Engine) -> f64 {
+        self.stream_gaps(eng)
+            .iter()
+            .flatten()
+            .map(|&(t0, t1)| t1 - t0)
+            .sum()
+    }
+
+    /// Total contention-throttled window time summed over all tasks.
+    pub fn total_throttled_time(&self) -> f64 {
+        self.throttled
+            .iter()
+            .flatten()
+            .map(|&(t0, t1)| t1 - t0)
+            .sum()
+    }
+}
+
+impl Recorder for TimelineRecorder {
+    fn on_begin(&mut self, eng: &Engine) {
+        let n = eng.n_tasks();
+        self.ready.clear();
+        self.ready.resize(n, f64::NAN);
+        self.start.clear();
+        self.start.resize(n, f64::NAN);
+        self.finish.clear();
+        self.finish.resize(n, f64::NAN);
+        self.busy.clear();
+        self.busy.resize(eng.n_resources(), 0.0);
+        self.segments.clear();
+        self.throttled.clear();
+        self.throttled.resize(n, Vec::new());
+        self.throttle_since.clear();
+        self.throttle_since.resize(n, f64::NAN);
+        self.end = f64::NAN;
+        self.solo.clear();
+        self.solo.extend((0..n).map(|tid| {
+            let mut rate = 1.0f64;
+            for &(r, d) in eng.task_demands(tid) {
+                if d > EPS {
+                    rate = rate.min(eng.capacity(r) / d);
+                }
+            }
+            rate
+        }));
+    }
+
+    fn on_ready(&mut self, _eng: &Engine, now: f64, tid: usize) {
+        self.ready[tid] = now;
+    }
+
+    fn on_start(&mut self, _eng: &Engine, now: f64, tid: usize) {
+        self.start[tid] = now;
+    }
+
+    fn on_rates(&mut self, eng: &Engine, now: f64, running: &[usize], rates: &[f64]) {
+        let mut seg = vec![0.0; eng.n_resources()];
+        for (j, &tid) in running.iter().enumerate() {
+            for &(r, d) in eng.task_demands(tid) {
+                seg[r.0] += rates[j] * d;
+            }
+        }
+        self.segments.push((now, seg));
+        for (j, &tid) in running.iter().enumerate() {
+            let is_throttled = rates[j] < self.solo[tid] - EPS;
+            let is_open = !self.throttle_since[tid].is_nan();
+            if is_throttled && !is_open {
+                self.throttle_since[tid] = now;
+            } else if !is_throttled && is_open {
+                self.close_throttle(tid, now);
+            }
+        }
+    }
+
+    fn on_advance(&mut self, eng: &Engine, _now: f64, dt: f64, running: &[usize], rates: &[f64]) {
+        // Bit-exact replay of the engine's busy integration: same
+        // expression, same (running-index, demand-declaration) order,
+        // same 0.0 starting point — so `busy` matches the engine's
+        // `resource_busy` to the last bit.
+        for (j, &tid) in running.iter().enumerate() {
+            let rate = rates[j];
+            for &(r, d) in eng.task_demands(tid) {
+                self.busy[r.0] += rate * d * dt;
+            }
+        }
+    }
+
+    fn on_finish(&mut self, _eng: &Engine, now: f64, tid: usize) {
+        self.finish[tid] = now;
+        if !self.throttle_since[tid].is_nan() {
+            self.close_throttle(tid, now);
+        }
+    }
+
+    fn on_end(&mut self, _eng: &Engine, now: f64) {
+        self.end = now;
+        for tid in 0..self.throttle_since.len() {
+            if !self.throttle_since[tid].is_nan() {
+                self.close_throttle(tid, now);
+            }
+        }
+    }
+}

@@ -16,8 +16,9 @@
 use super::{Kind, OpKind, Scenario, Schedule};
 use crate::cost::gemm::GemmCost;
 use crate::hw::Machine;
+use crate::obs::{Counters, TimelineRecorder, TrackMap};
 use crate::plan::Plan;
-use crate::sim::{ClusterSim, CommMech, Label, LeanReport, SimError, TaskId};
+use crate::sim::{ClusterSim, CommMech, Label, LeanReport, Report, SimError, TaskId};
 
 /// Measured execution of one schedule.
 #[derive(Debug, Clone)]
@@ -69,6 +70,13 @@ pub struct Evaluator {
     gemm_iso_per_gpu: Vec<f64>,
     task_of: Vec<TaskId>,
     dep_scratch: Vec<TaskId>,
+    /// Keep human-readable node labels on loaded tasks even without
+    /// `FICCO_SIM_TRACE` (used by trace capture, where the labels end
+    /// up in the exported artifact).
+    keep_labels: bool,
+    /// Pipeline telemetry: incremented privately by the worker that
+    /// owns this evaluator, merged at pool join (`crate::obs`).
+    pub counters: Counters,
 }
 
 impl Evaluator {
@@ -81,7 +89,15 @@ impl Evaluator {
             gemm_iso_per_gpu: Vec::new(),
             task_of: Vec::new(),
             dep_scratch: Vec::new(),
+            keep_labels: false,
+            counters: Counters::default(),
         }
+    }
+
+    /// Force loaded tasks to carry their schedule node labels
+    /// regardless of `FICCO_SIM_TRACE` (see [`Evaluator::new`]).
+    pub fn set_keep_labels(&mut self, on: bool) {
+        self.keep_labels = on;
     }
 
     /// Build the simulator task graph for `sched` into the (reset)
@@ -111,7 +127,7 @@ impl Evaluator {
         // on (it is rendered nowhere else); the allocation-free
         // `n<index>` label otherwise — rerun with FICCO_SIM_TRACE=1
         // for named traces.
-        let trace = crate::sim::trace_enabled();
+        let trace = self.keep_labels || crate::sim::trace_enabled();
 
         for (i, node) in sched.nodes.iter().enumerate() {
             self.dep_scratch.clear();
@@ -239,6 +255,38 @@ impl Evaluator {
         self.run_loaded_lean()
             .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name))
             .makespan
+    }
+
+    /// Lower → validate → load `plan` (with human-readable node
+    /// labels regardless of `FICCO_SIM_TRACE`) and simulate it under
+    /// a [`TimelineRecorder`]: the structured timeline behind `ficco
+    /// trace` and `--trace-out`. Returns the engine report
+    /// (bit-identical to an unobserved `run_full` — the recorder only
+    /// reads), the recorder, and the machine's Perfetto track layout.
+    pub fn capture_plan(
+        &mut self,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+    ) -> (Report, TimelineRecorder, TrackMap) {
+        let keep = self.keep_labels;
+        self.keep_labels = true;
+        self.load_plan_graph(machine, sc, plan);
+        self.keep_labels = keep;
+        let mut rec = TimelineRecorder::new();
+        let sim = self.sim.as_mut().expect("graph loaded");
+        let report = sim
+            .engine
+            .run_full_recorded(&mut rec)
+            .unwrap_or_else(|e| panic!("tracing plan {} for {}: {e}", plan.id(), sc.name));
+        (report, rec, sim.track_map())
+    }
+
+    /// The currently loaded engine — exporters read task labels,
+    /// streams and demands from it (panics before any graph is
+    /// loaded).
+    pub fn engine(&self) -> &crate::sim::Engine {
+        &self.sim.as_ref().expect("graph loaded").engine
     }
 }
 

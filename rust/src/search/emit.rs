@@ -1,14 +1,17 @@
 //! Deterministic tune-result emitters, mirroring the sweep emitters
 //! ([`crate::explore::emit`]): one CSV row / JSON object per searched
-//! cell, streamed in cell order, per-cell wall times excluded, every
-//! number in Rust's shortest-round-trip `Display` — byte-identical
-//! artifacts for any `--jobs` value.
+//! cell, streamed in cell order, every number in Rust's
+//! shortest-round-trip `Display` — a byte-identical `"results"` body
+//! for any `--jobs` value, followed by a jobs-dependent `"telemetry"`
+//! tail that byte-compares strip via
+//! [`crate::obs::canonical_artifact_view`].
 
 use std::io::{self, Write};
 
 use super::TuneResult;
 use crate::explore::emit::{csv_escape, json_escape};
 use crate::metrics::Exhibit;
+use crate::obs::Telemetry;
 use crate::util::stats;
 use crate::util::table::{f, Align, Table};
 
@@ -103,7 +106,10 @@ impl<W: Write> TuneCsvEmitter<W> {
     }
 }
 
-/// Streams a JSON array of tune-result objects.
+/// Streams `{"results":[...],"telemetry":{...}}`: a deterministic
+/// array of tune-result objects plus the run's [`Telemetry`] tail
+/// (supplied at [`finish`](TuneJsonEmitter::finish) time, after the
+/// pool has joined).
 pub struct TuneJsonEmitter<W: Write> {
     w: W,
     count: usize,
@@ -111,7 +117,7 @@ pub struct TuneJsonEmitter<W: Write> {
 
 impl<W: Write> TuneJsonEmitter<W> {
     pub fn new(mut w: W) -> io::Result<TuneJsonEmitter<W>> {
-        w.write_all(b"[")?;
+        w.write_all(b"{\"results\":[")?;
         Ok(TuneJsonEmitter { w, count: 0 })
     }
 
@@ -125,8 +131,10 @@ impl<W: Write> TuneJsonEmitter<W> {
         Ok(())
     }
 
-    pub fn finish(mut self) -> io::Result<W> {
-        self.w.write_all(b"\n]\n")?;
+    pub fn finish(mut self, telemetry: &Telemetry) -> io::Result<W> {
+        self.w.write_all(b"\n],\n\"telemetry\":")?;
+        self.w.write_all(telemetry.to_json().as_bytes())?;
+        self.w.write_all(b"\n}\n")?;
         self.w.flush()?;
         Ok(self.w)
     }
@@ -242,13 +250,18 @@ mod tests {
             json.result(r).unwrap();
         }
         let csv = String::from_utf8(csv.finish().unwrap()).unwrap();
-        let json = String::from_utf8(json.finish().unwrap()).unwrap();
+        let json = String::from_utf8(json.finish(&Telemetry::default()).unwrap()).unwrap();
         assert!(csv.starts_with("scenario,machine"));
         assert_eq!(csv.lines().count(), 1 + rs.len());
-        assert!(json.starts_with('['));
-        assert!(json.trim_end().ends_with(']'));
+        assert!(json.starts_with("{\"results\":["));
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.contains("\n],\n\"telemetry\":"));
         assert!(json.contains("\"best_plan\""));
         assert!(json.contains("\"plan_gain\""));
+        // The canonical view strips exactly the telemetry tail.
+        let canon = crate::obs::canonical_artifact_view(&json);
+        assert!(canon.ends_with("\n]"));
+        assert!(!canon.contains("telemetry"));
     }
 
     #[test]

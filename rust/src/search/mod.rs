@@ -44,6 +44,7 @@ use std::time::Instant;
 
 use crate::explore::{Cell, SweepSpec};
 use crate::hw::{DType, Machine};
+use crate::obs::{Counters, Telemetry};
 use crate::plan::{CommShape, Plan};
 use crate::schedule::exec::Evaluator;
 use crate::schedule::{Kind, Scenario};
@@ -226,8 +227,11 @@ pub struct EvalCache {
     map: Vec<Mutex<HashMap<EvalKey, f64>>>,
     /// Memoized analytic lower bounds (see [`EvalCache::makespan_bounded`]).
     bounds: Vec<Mutex<HashMap<EvalKey, f64>>>,
-    hits: AtomicUsize,
-    misses: AtomicUsize,
+    /// Per-shard hit/miss counters (a hit/miss is attributed to the
+    /// shard its key hashes to, so the telemetry block can show how
+    /// the sharded locks spread).
+    hits: Vec<AtomicUsize>,
+    misses: Vec<AtomicUsize>,
 }
 
 impl EvalCache {
@@ -235,8 +239,8 @@ impl EvalCache {
         EvalCache {
             map: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             bounds: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            hits: AtomicUsize::new(0),
-            misses: AtomicUsize::new(0),
+            hits: (0..CACHE_SHARDS).map(|_| AtomicUsize::new(0)).collect(),
+            misses: (0..CACHE_SHARDS).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
 
@@ -273,14 +277,30 @@ impl EvalCache {
         self.len() == 0
     }
 
-    /// Cache-hit count (diagnostic only — not emitted into artifacts,
-    /// since hit/miss splits depend on cross-cell timing).
+    /// Cache-hit count summed over shards (telemetry only — excluded
+    /// from byte-compared artifact bodies, since hit/miss splits
+    /// depend on cross-cell timing).
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.iter().map(|h| h.load(Ordering::Relaxed)).sum()
     }
 
     pub fn misses(&self) -> usize {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.iter().map(|m| m.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-shard `(hits, misses)`, indexed by shard — the telemetry
+    /// block's view of how lookups spread over the sharded locks.
+    pub fn shard_stats(&self) -> Vec<(u64, u64)> {
+        self.hits
+            .iter()
+            .zip(&self.misses)
+            .map(|(h, m)| {
+                (
+                    h.load(Ordering::Relaxed) as u64,
+                    m.load(Ordering::Relaxed) as u64,
+                )
+            })
+            .collect()
     }
 
     fn key(&self, machine_name: &str, sc: &Scenario, plan: &Plan) -> EvalKey {
@@ -350,13 +370,13 @@ impl EvalCache {
     ) -> f64 {
         let key = self.key(machine_name, sc, plan);
         if let Some(v) = self.lookup(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
             return v;
         }
         // Evaluate outside the lock; a racing duplicate evaluation
         // computes the identical value.
         let makespan = ev.plan_makespan(machine, sc, plan);
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
         self.store(key, makespan);
         makespan
     }
@@ -393,11 +413,11 @@ impl EvalCache {
                     return Err(bound);
                 }
                 if let Some(v) = self.lookup(&key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hits[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
                     return Ok(v);
                 }
                 let makespan = ev.plan_makespan(machine, sc, plan);
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
                 self.store(key, makespan);
                 Ok(makespan)
             }
@@ -408,7 +428,7 @@ impl EvalCache {
                     return Err(bound);
                 }
                 if let Some(v) = self.lookup(&key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hits[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
                     return Ok(v);
                 }
                 // The graph is already loaded — simulate it without
@@ -417,7 +437,7 @@ impl EvalCache {
                     .run_loaded_lean()
                     .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name))
                     .makespan;
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses[Self::shard_of(&key)].fetch_add(1, Ordering::Relaxed);
                 self.store(key, makespan);
                 Ok(makespan)
             }
@@ -594,6 +614,7 @@ pub fn search_in(
 
     for kind in Kind::ALL {
         let plan = Plan::preset(kind, sc);
+        ev.counters.candidates += 1;
         let makespan = cache.makespan_in(ev, machine_name, machine, sc, &plan);
         evaluated += 1;
         seen.insert(plan);
@@ -621,6 +642,7 @@ pub fn search_in(
 
     if cfg.beam == 0 {
         for plan in space.plans(sc) {
+            ev.counters.candidates += 1;
             if !seen.insert(plan) {
                 continue;
             }
@@ -659,6 +681,7 @@ pub fn search_in(
             let mut new_any = false;
             for plan in &frontier {
                 for nb in neighbors(plan, space, n) {
+                    ev.counters.candidates += 1;
                     if !seen.insert(nb) {
                         continue;
                     }
@@ -681,9 +704,12 @@ pub fn search_in(
             if !new_any {
                 break;
             }
+            ev.counters.beam_expansions += 1;
         }
     }
 
+    ev.counters.evaluated += evaluated as u64;
+    ev.counters.pruned += pruned as u64;
     SearchOutcome {
         baseline,
         best: incumbent,
@@ -752,6 +778,7 @@ pub fn tune_cell_in(
     cache: &EvalCache,
 ) -> TuneResult {
     let t0 = Instant::now();
+    ev.counters.cells += 1;
     let sc = &cell.scenario;
     let machine = &cell.machine;
     let space = space_for(sc, ov);
@@ -808,6 +835,10 @@ pub struct TuneReport {
     /// Results in deterministic cell order.
     pub results: Vec<TuneResult>,
     pub wall_seconds: f64,
+    /// Merged per-worker counters + cache statistics + timings
+    /// (jobs-dependent; excluded from the byte-compared artifact
+    /// body — see [`crate::obs::canonical_artifact_view`]).
+    pub telemetry: Telemetry,
 }
 
 impl TuneReport {
@@ -844,18 +875,34 @@ pub fn tune<F: FnMut(&TuneResult) -> bool>(
 ) -> TuneReport {
     let cells = spec.cells();
     let cache = EvalCache::new();
+    // Per-worker counters merge under this mutex exactly once per
+    // worker, at pool join — the search hot path itself never touches
+    // a shared counter.
+    let merged = Mutex::new(Counters::default());
     let t0 = Instant::now();
-    let pool_run = crate::util::pool::run_ordered_stateful(
+    let pool_run = crate::util::pool::run_ordered_with(
         &cells,
         jobs,
         Evaluator::new,
         |ev, _, cell| tune_cell_in(ev, cell, ov, cfg, &cache),
+        |ev: Evaluator| merged.lock().unwrap().merge(&ev.counters),
         |_, result| on_result(result),
     );
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let telemetry = Telemetry {
+        jobs: pool_run.jobs,
+        wall_seconds,
+        counters: *merged.lock().unwrap(),
+        cache_hits: cache.hits() as u64,
+        cache_misses: cache.misses() as u64,
+        cache_shards: cache.shard_stats(),
+        cell_seconds: pool_run.results.iter().map(|r| r.eval_seconds).collect(),
+    };
     TuneReport {
         jobs: pool_run.jobs,
         results: pool_run.results,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds,
+        telemetry,
     }
 }
 

@@ -13,6 +13,7 @@
 
 use super::engine::{Engine, Label, Report, ResourceId, SimError, StreamId, TaskId};
 use crate::hw::Machine;
+use crate::obs::{StreamTrack, TrackMap};
 
 /// How a byte stream is moved: by a GPU-core kernel (contends for CUs
 /// and pollutes caches) or by a DMA engine (the paper's offload).
@@ -282,6 +283,62 @@ impl ClusterSim {
     pub fn run(mut self) -> Result<Report, SimError> {
         self.engine.run_full()
     }
+
+    /// Perfetto track layout for this machine: one process per GPU
+    /// (compute/copy/comm streams as threads, cu/hbm/dma counters)
+    /// plus a `fabric` process carrying the per-link counters. Track
+    /// indices follow the engine's stream/resource registration order
+    /// in [`ClusterSim::new`], which is what lets the exporter index
+    /// by `StreamId.0` / `ResourceId.0` directly.
+    pub fn track_map(&self) -> TrackMap {
+        let n = self.ngpus();
+        let mut processes: Vec<String> = (0..n).map(|g| format!("gpu{g}")).collect();
+        processes.push("fabric".to_string());
+        let mut streams = Vec::with_capacity(self.engine.n_streams());
+        for g in 0..n {
+            streams.push(StreamTrack {
+                pid: g,
+                tid: 0,
+                name: "compute".to_string(),
+            });
+        }
+        for g in 0..n {
+            streams.push(StreamTrack {
+                pid: g,
+                tid: 1,
+                name: "copy".to_string(),
+            });
+        }
+        for (g, slots) in self.comm_streams.iter().enumerate() {
+            for k in 0..slots.len() {
+                streams.push(StreamTrack {
+                    pid: g,
+                    tid: 2 + k,
+                    name: format!("comm{k}"),
+                });
+            }
+        }
+        debug_assert_eq!(streams.len(), self.engine.n_streams());
+        let mut counters = Vec::with_capacity(self.engine.n_resources());
+        for g in 0..n {
+            counters.push((g, "cu".to_string()));
+        }
+        for g in 0..n {
+            counters.push((g, "hbm".to_string()));
+        }
+        for g in 0..n {
+            counters.push((g, "dma".to_string()));
+        }
+        for l in 0..self.links.len() {
+            counters.push((n, format!("link{l}")));
+        }
+        debug_assert_eq!(counters.len(), self.engine.n_resources());
+        TrackMap {
+            processes,
+            streams,
+            counters,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -368,6 +425,20 @@ mod tests {
         let rep = c.run().unwrap();
         // read+write at 80% of HBM → ≥ 2x/0.8 the one-pass time
         assert!(rep.makespan > 0.024, "makespan={}", rep.makespan);
+    }
+
+    #[test]
+    fn track_map_covers_every_stream_and_resource() {
+        let c = ClusterSim::new(Machine::mi300x_8());
+        let tm = c.track_map();
+        assert_eq!(tm.streams.len(), c.engine.n_streams());
+        assert_eq!(tm.counters.len(), c.engine.n_resources());
+        for st in &tm.streams {
+            assert!(st.pid < tm.processes.len());
+        }
+        for &(pid, _) in &tm.counters {
+            assert!(pid < tm.processes.len());
+        }
     }
 
     #[test]

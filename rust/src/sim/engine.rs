@@ -27,6 +27,7 @@
 //! performed on the same values in the same order, so reported
 //! makespans and event counts are bit-for-bit identical.
 
+use crate::obs::{NullRecorder, Recorder, StderrRecorder};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::fmt;
@@ -487,6 +488,41 @@ impl Engine {
         self.tasks.len()
     }
 
+    pub fn n_resources(&self) -> usize {
+        self.capacities.len()
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Display label of task `tid` (flight-recorder accessor).
+    pub fn task_label(&self, tid: usize) -> &Label {
+        &self.tasks[tid].label
+    }
+
+    /// Stream task `tid` was registered on.
+    pub fn task_stream(&self, tid: usize) -> StreamId {
+        self.tasks[tid].stream
+    }
+
+    /// Work (duration at rate 1) of task `tid`.
+    pub fn task_work(&self, tid: usize) -> f64 {
+        self.tasks[tid].work
+    }
+
+    /// Fixed setup latency of task `tid`.
+    pub fn task_setup(&self, tid: usize) -> f64 {
+        self.tasks[tid].setup
+    }
+
+    /// Resource demands of task `tid`, in declaration order — the
+    /// order the engine's busy integration iterates, which is what
+    /// lets a recorder replay the accounting bit-exactly.
+    pub fn task_demands(&self, tid: usize) -> &[(ResourceId, f64)] {
+        self.demands_of(tid)
+    }
+
     /// Drop all tasks (and their stream queues) but keep the
     /// registered resources, streams, and every scratch buffer's
     /// capacity — the skeleton an evaluator reuses across candidate
@@ -593,9 +629,27 @@ impl Engine {
 
     /// Run to completion with full per-task/per-resource accounting.
     /// The engine (graph and scratch) stays usable afterwards.
+    ///
+    /// With `FICCO_SIM_TRACE` set this installs a
+    /// [`StderrRecorder`], reproducing the legacy trace stream;
+    /// otherwise the [`NullRecorder`] compiles the hooks away.
     pub fn run_full(&mut self) -> Result<Report, SimError> {
+        if self.trace {
+            self.run_full_recorded(&mut StderrRecorder)
+        } else {
+            self.run_full_recorded(&mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::run_full`], with an explicit [`Recorder`]
+    /// observing every structural event — this is how the flight
+    /// recorder (`crate::obs::TimelineRecorder`) captures a full
+    /// timeline without perturbing the simulation: the recorder only
+    /// reads, so makespans and busy integrals are bit-identical to an
+    /// unobserved run.
+    pub fn run_full_recorded<R: Recorder>(&mut self, rec: &mut R) -> Result<Report, SimError> {
         let mut s = std::mem::take(&mut self.scratch);
-        let res = self.run_core(&mut s, false);
+        let res = self.run_core(&mut s, false, rec);
         let out = res.map(|(makespan, events)| {
             let n = self.tasks.len();
             let task_spans = (0..n).map(|i| (s.start[i], s.finish[i])).collect();
@@ -629,7 +683,11 @@ impl Engine {
     /// or event times).
     pub fn run_lean(&mut self) -> Result<LeanReport, SimError> {
         let mut s = std::mem::take(&mut self.scratch);
-        let res = self.run_core(&mut s, true);
+        let res = if self.trace {
+            self.run_core(&mut s, true, &mut StderrRecorder)
+        } else {
+            self.run_core(&mut s, true, &mut NullRecorder)
+        };
         self.scratch = s;
         res.map(|(makespan, events)| LeanReport { makespan, events })
     }
@@ -638,7 +696,7 @@ impl Engine {
     /// its stream's queue. Called exactly when one of those conditions
     /// may have just become true, replacing the reference engine's
     /// all-streams rescan; the promoted set per event is identical.
-    fn try_promote(&self, s: &mut RunScratch, tid: usize, now: f64) {
+    fn try_promote<R: Recorder>(&self, s: &mut RunScratch, rec: &mut R, tid: usize, now: f64) {
         if s.phase[tid] != Phase::Blocked || s.deps_left[tid] != 0 {
             return;
         }
@@ -652,9 +710,7 @@ impl Engine {
         s.setup_until[tid] = until;
         s.phase[tid] = Phase::Setup;
         s.setup_heap.push(Reverse((until.to_bits(), tid)));
-        if self.trace {
-            eprintln!("[{now:.9}] ready  {}", self.tasks[tid].label);
-        }
+        rec.on_ready(self, now, tid);
     }
 
     /// Progressive-filling max–min fair rates for the current running
@@ -1077,8 +1133,14 @@ impl Engine {
 
     /// The event loop. Returns (makespan, events); per-task state is
     /// left in `s` for [`Engine::run_full`] to package.
-    fn run_core(&self, s: &mut RunScratch, lean: bool) -> Result<(f64, usize), SimError> {
+    fn run_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        lean: bool,
+        rec: &mut R,
+    ) -> Result<(f64, usize), SimError> {
         let n = self.tasks.len();
+        rec.on_begin(self);
 
         // Size and initialize the scratch state for this graph.
         s.phase.clear();
@@ -1145,7 +1207,7 @@ impl Engine {
         // Initial promotion: head-of-stream tasks with no deps.
         for st in 0..self.streams.len() {
             if let Some(&tid) = self.streams[st].first() {
-                self.try_promote(s, tid.0, now);
+                self.try_promote(s, rec, tid.0, now);
             }
         }
 
@@ -1176,6 +1238,7 @@ impl Engine {
                     self.flows_add(s, tid);
                 }
                 rates_dirty = true;
+                rec.on_start(self, now, tid);
             }
             // The heap pops deadline ties in ascending task order and
             // the sorted insert keeps `running` strictly ascending —
@@ -1185,6 +1248,7 @@ impl Engine {
             if rates_dirty {
                 self.fill_fair_rates(s);
                 rates_dirty = false;
+                rec.on_rates(self, now, &s.running, &s.rates);
             }
 
             // Next event: earliest of (a) a running task finishing at
@@ -1219,6 +1283,7 @@ impl Engine {
             // Integrate progress (and, in full mode, resource usage)
             // over dt.
             if dt > 0.0 {
+                rec.on_advance(self, now, dt, &s.running, &s.rates);
                 for (j, &i) in s.running.iter().enumerate() {
                     let rate = s.rates[j];
                     s.remaining[i] -= rate * dt;
@@ -1239,9 +1304,7 @@ impl Engine {
                     s.finish[i] = now;
                     s.completed.push(i);
                     done_count += 1;
-                    if self.trace {
-                        eprintln!("[{now:.9}] done   {}", self.tasks[i].label);
-                    }
+                    rec.on_finish(self, now, i);
                 }
             }
             if !s.completed.is_empty() {
@@ -1272,7 +1335,7 @@ impl Engine {
                     let dep = s.dep_list[k].0;
                     s.deps_left[dep] -= 1;
                     if s.deps_left[dep] == 0 {
-                        self.try_promote(s, dep, now);
+                        self.try_promote(s, rec, dep, now);
                     }
                 }
                 // Advance the stream cursor past the completed prefix;
@@ -1283,13 +1346,14 @@ impl Engine {
                     if s.phase[head] == Phase::Done {
                         s.stream_cursor[st] += 1;
                     } else {
-                        self.try_promote(s, head, now);
+                        self.try_promote(s, rec, head, now);
                         break;
                     }
                 }
             }
         }
 
+        rec.on_end(self, now);
         Ok((now, events))
     }
 }

@@ -201,7 +201,7 @@ impl Engine {
                     t.start = now;
                     t.phase = Phase::Setup(now + t.spec.setup);
                     if trace {
-                        eprintln!("[{now:.9}] ready  {}", t.spec.label);
+                        crate::obs::print_ready(now, &t.spec.label);
                     }
                 }
             }
@@ -293,7 +293,7 @@ impl Engine {
                     completed.push(TaskId(i));
                     done_count += 1;
                     if self.trace {
-                        eprintln!("[{now:.9}] done   {}", self.tasks[i].spec.label);
+                        crate::obs::print_done(now, &self.tasks[i].spec.label);
                     }
                 }
             }

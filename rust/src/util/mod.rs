@@ -13,6 +13,23 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-global quiet switch (`--quiet`): when set, progress and
+/// exhibit printing is suppressed so machine-readable stdout (piped
+/// CSV, `--stats` tables) stays uncontaminated.
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+/// Flip the process-global quiet switch (set once by the CLI parser).
+pub fn set_quiet(on: bool) {
+    QUIET.store(on, Ordering::Relaxed);
+}
+
+/// Whether `--quiet` is in effect.
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
 /// Format a byte count with binary units (KiB/MiB/GiB).
 pub fn human_bytes(bytes: f64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];

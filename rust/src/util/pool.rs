@@ -67,6 +67,31 @@ pub fn run_ordered_stateful<T, R, S, I, F, G>(
     jobs: usize,
     init: I,
     eval: F,
+    on_result: G,
+) -> OrderedRun<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+    G: FnMut(usize, &R) -> bool,
+{
+    run_ordered_with(items, jobs, init, eval, |_| (), on_result)
+}
+
+/// As [`run_ordered_stateful`], with a `fini` callback invoked once
+/// per worker thread (on that thread) with the worker's final state
+/// as it exits its dispatch loop. This is how the sweep/tune drivers
+/// harvest per-worker telemetry counters: each worker increments
+/// plain fields privately and the merge happens exactly `jobs` times,
+/// at join — no shared counter in the evaluation hot path. `fini`
+/// must not affect results (it runs after every result is sent).
+pub fn run_ordered_with<T, R, S, I, F, X, G>(
+    items: &[T],
+    jobs: usize,
+    init: I,
+    eval: F,
+    fini: X,
     mut on_result: G,
 ) -> OrderedRun<R>
 where
@@ -74,6 +99,7 @@ where
     R: Send,
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize, &T) -> R + Sync,
+    X: Fn(S) + Sync,
     G: FnMut(usize, &R) -> bool,
 {
     let n = items.len();
@@ -92,6 +118,7 @@ where
             let stop = &stop;
             let eval = &eval;
             let init = &init;
+            let fini = &fini;
             s.spawn(move || {
                 let mut state = init();
                 loop {
@@ -107,6 +134,7 @@ where
                         break;
                     }
                 }
+                fini(state);
             });
         }
         drop(tx);
@@ -232,6 +260,35 @@ mod tests {
                 |_, _| true,
             );
             assert_eq!(run.results, (0..23).map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn fini_merges_every_worker_exactly_once() {
+        use std::sync::Mutex;
+        let items: Vec<usize> = (0..40).collect();
+        for jobs in [1, 4] {
+            // (fini invocations, items counted across workers)
+            let merged = Mutex::new((0usize, 0usize));
+            let run = run_ordered_with(
+                &items,
+                jobs,
+                || 0usize,
+                |seen: &mut usize, _, &x| {
+                    *seen += 1;
+                    x
+                },
+                |seen| {
+                    let mut m = merged.lock().unwrap();
+                    m.0 += 1;
+                    m.1 += seen;
+                },
+                |_, _| true,
+            );
+            assert_eq!(run.results, items);
+            let m = merged.lock().unwrap();
+            assert_eq!(m.0, run.jobs, "fini once per worker");
+            assert_eq!(m.1, items.len(), "every item counted exactly once");
         }
     }
 

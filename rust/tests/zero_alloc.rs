@@ -180,4 +180,34 @@ fn engine_run_steady_state_allocates_nothing() {
         );
         assert_eq!(first.makespan.to_bits(), again_a.makespan.to_bits());
     }
+
+    // ISSUE 7: a recorded run (the flight-recorder observability
+    // layer) allocates freely — but it must not poison the
+    // recorder-off contract. Run the same graph under a
+    // TimelineRecorder, check bit-equality, then re-assert the lean
+    // path is still allocation-free.
+    e.reset_tasks();
+    build(&mut e, &resources, &streams);
+    let mut rec = ficco::obs::TimelineRecorder::new();
+    let recorded = e.run_full_recorded(&mut rec).expect("recorded run");
+    assert_eq!(first.makespan.to_bits(), recorded.makespan.to_bits());
+    assert_eq!(recorded.makespan.to_bits(), rec.end.to_bits());
+    for (r, &busy) in rec.busy.iter().enumerate() {
+        assert_eq!(
+            busy.to_bits(),
+            recorded.resource_busy[r].to_bits(),
+            "recorder busy integral diverged from the engine's (resource {r})"
+        );
+    }
+
+    e.reset_tasks();
+    build(&mut e, &resources, &streams);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let after_trace = e.run_lean().expect("post-trace steady-state run");
+    let during = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        during, 0,
+        "run_lean allocated {during} times after a recorded run (recorder-off contract broken)"
+    );
+    assert_eq!(first.makespan.to_bits(), after_trace.makespan.to_bits());
 }

@@ -20,6 +20,11 @@ Rules (ISSUE 6, CI `sim-differential` job):
   throughputs are not comparable across harnesses: skip the absolute
   gates, say so, and remind the committer to refresh the baseline with
   a rust-provenance run.
+- ISSUE 7: when the fresh run carries a "recorder" section, the
+  TimelineRecorder overhead on `run_full` must stay within 1.5x of
+  the recorder-off run (committed baselines predating the section are
+  tolerated — the gate reads the fresh run only, since the ratio is
+  measured within one process).
 
 Exit 0 on pass, 1 on any gate failure.
 """
@@ -60,6 +65,22 @@ def main():
             "incremental fair sharing is slower than the from-scratch "
             f"recompute: speedup_vs_slow = {fs['speedup_vs_slow']:.3f}"
         )
+
+    # Flight-recorder overhead gate (ISSUE 7). The ratio is measured
+    # within the fresh run itself, so no committed baseline is needed;
+    # older fresh artifacts without the section skip the gate.
+    rec = fresh.get("recorder")
+    if rec is not None:
+        ratio = rec.get("overhead_ratio", 0.0)
+        if not ratio > 0.0:
+            fail(f"fresh recorder.overhead_ratio is {rec.get('overhead_ratio')}")
+        if ratio > 1.5:
+            fail(
+                "TimelineRecorder overhead on run_full exceeds the 1.5x "
+                f"budget: {ratio:.3f}x (off {rec.get('off_seconds')}s, "
+                f"on {rec.get('on_seconds')}s)"
+            )
+        print(f"recorder gate OK: run_full + TimelineRecorder at {ratio:.2f}x (budget 1.5x)")
 
     comparable = "provenance" not in committed
     if not comparable:

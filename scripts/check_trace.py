@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Validate a `ficco trace` Perfetto artifact (ISSUE 7, CI `trace-smoke` job).
+
+Usage: check_trace.py TRACE_JSON [TIMELINE_CSV]
+
+Checks, in order:
+
+- The file parses as JSON and carries the Chrome-trace skeleton
+  ui.perfetto.dev expects: a `traceEvents` array and
+  `displayTimeUnit: "ms"`.
+- The `ficco` header object names the run (scenario/machine/mech/plan)
+  and its derived totals (makespan, gap_time, throttled_time) are
+  finite and non-negative, with gap + throttled time each bounded by
+  a stream/task multiple of the makespan left to the simulator.
+- Track metadata is well formed: every referenced (pid, tid) has a
+  `process_name`, and every `X` span and `B`/`E` window sits inside
+  [0, makespan] (timestamps in microseconds).
+- Duration events balance: per (pid, tid, name), `B` and `E` events
+  pair up with no window left open and no negative-length window.
+- Complete (`X`) spans per track do not overlap.
+- If TIMELINE_CSV is given: the header matches the exporter's schema,
+  every row is a known record type, and the task-span count equals the
+  trace's work-span count.
+
+Exit 0 on pass, 1 on any failure.
+"""
+
+import json
+import math
+import sys
+from collections import defaultdict
+
+EPS_US = 1e-3  # slack on microsecond timestamps
+
+
+def fail(msg):
+    print(f"TRACE CHECK: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path):
+    with open(path) as f:
+        try:
+            trace = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path} is not valid JSON: {e}")
+
+    for key in ("ficco", "displayTimeUnit", "traceEvents"):
+        if key not in trace:
+            fail(f"missing top-level '{key}'")
+    if trace["displayTimeUnit"] != "ms":
+        fail(f"displayTimeUnit is {trace['displayTimeUnit']!r}, expected 'ms'")
+
+    hdr = trace["ficco"]
+    for key in ("scenario", "machine", "mech", "plan"):
+        if not hdr.get(key):
+            fail(f"ficco header is missing '{key}'")
+    makespan = hdr.get("makespan")
+    if not isinstance(makespan, (int, float)) or not math.isfinite(makespan) or makespan <= 0:
+        fail(f"ficco.makespan is {makespan!r}")
+    for key in ("gap_time", "throttled_time"):
+        v = hdr.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+            fail(f"ficco.{key} is {v!r}")
+
+    events = trace["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail("traceEvents is empty")
+    horizon_us = makespan * 1e6 + EPS_US
+
+    named_pids = set()
+    spans = defaultdict(list)  # (pid, tid) -> [(ts, ts+dur, name)]
+    open_windows = defaultdict(list)  # (pid, tid, name) -> [B timestamps]
+    n_work_spans = 0
+    saw_plan_instant = False
+    for ev in events:
+        ph = ev.get("ph")
+        pid, tid, name = ev.get("pid"), ev.get("tid"), ev.get("name", "")
+        if ph == "M":
+            if name == "process_name":
+                named_pids.add(pid)
+            continue
+        if ph == "I":
+            saw_plan_instant |= name == "plan"
+            continue
+        if ph == "C":
+            if not (-EPS_US <= ev["ts"] <= horizon_us):
+                fail(f"counter sample for {name!r} at ts={ev['ts']} outside the run")
+            continue
+        if ph == "X":
+            ts, dur = ev["ts"], ev["dur"]
+            if dur < 0:
+                fail(f"span {name!r} has negative duration {dur}")
+            if ts < -EPS_US or ts + dur > horizon_us:
+                fail(f"span {name!r} [{ts}, {ts + dur}] outside [0, {horizon_us}]")
+            spans[(pid, tid)].append((ts, ts + dur, name))
+            n_work_spans += ev.get("cat") == "work"
+            continue
+        if ph == "B":
+            if not (-EPS_US <= ev["ts"] <= horizon_us):
+                fail(f"window {name!r} opens at ts={ev['ts']} outside the run")
+            open_windows[(pid, tid, name)].append(ev["ts"])
+            continue
+        if ph == "E":
+            stack = open_windows[(pid, tid, name)]
+            if not stack:
+                fail(f"unbalanced E for {name!r} on (pid={pid}, tid={tid})")
+            t0 = stack.pop()
+            if ev["ts"] < t0 - EPS_US or ev["ts"] > horizon_us:
+                fail(f"window {name!r} [{t0}, {ev['ts']}] is malformed")
+            continue
+        fail(f"unknown event phase {ph!r}")
+
+    for (pid, tid, name), stack in open_windows.items():
+        if stack:
+            fail(f"{len(stack)} unclosed {name!r} window(s) on (pid={pid}, tid={tid})")
+    if not saw_plan_instant:
+        fail("no 'plan' instant event — run identity missing from the trace")
+    if n_work_spans == 0:
+        fail("no work spans in the trace")
+
+    for (pid, tid), track in spans.items():
+        if pid not in named_pids:
+            fail(f"events on pid={pid} but no process_name metadata for it")
+        # Setup [ready, start] and work [start, finish] spans on one
+        # track abut but never overlap.
+        track.sort()
+        for (a0, a1, an), (b0, b1, bn) in zip(track, track[1:]):
+            if b0 < a1 - EPS_US:
+                fail(
+                    f"overlapping spans on (pid={pid}, tid={tid}): "
+                    f"{an!r} [{a0}, {a1}] vs {bn!r} [{b0}, {b1}]"
+                )
+
+    n_tracks = len({(pid, tid) for pid, tid in spans})
+    print(
+        f"trace OK: {hdr['scenario']} on {hdr['machine']} plan {hdr['plan']} — "
+        f"{n_work_spans} work spans on {n_tracks} tracks, "
+        f"makespan {makespan:.6g}s, gap {hdr['gap_time']:.3g}s, "
+        f"throttled {hdr['throttled_time']:.3g}s"
+    )
+    return n_work_spans
+
+
+def check_csv(path, n_work_spans):
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines or lines[0] != "record,track,label,t_ready,t_start,t_end,value":
+        fail(f"{path}: unexpected header {lines[0] if lines else '<empty>'!r}")
+    known = {"task", "gap", "throttled", "busy"}
+    counts = defaultdict(int)
+    for line in lines[1:]:
+        record = line.split(",", 1)[0]
+        if record not in known:
+            fail(f"{path}: unknown record type in {line!r}")
+        counts[record] += 1
+    if counts["task"] != n_work_spans:
+        fail(
+            f"{path}: {counts['task']} task rows vs {n_work_spans} work spans "
+            "in the trace — exporters disagree"
+        )
+    if counts["busy"] == 0:
+        fail(f"{path}: no busy-integral rows")
+    print(
+        f"timeline OK: {counts['task']} tasks, {counts['gap']} gaps, "
+        f"{counts['throttled']} throttled windows, {counts['busy']} busy integrals"
+    )
+
+
+def main():
+    if len(sys.argv) not in (2, 3):
+        fail(f"usage: {sys.argv[0]} TRACE_JSON [TIMELINE_CSV]")
+    n_work_spans = check_trace(sys.argv[1])
+    if len(sys.argv) == 3:
+        check_csv(sys.argv[2], n_work_spans)
+
+
+if __name__ == "__main__":
+    main()
