@@ -107,7 +107,8 @@ fn main() {
     // The headline metric: plan evaluations/sec searching one fixed
     // tune cell with a cold cache per iteration (so every non-pruned
     // candidate is lowered, validated, loaded, and simulated) through
-    // one reusable evaluator arena — exactly the tune worker's shape.
+    // one reusable evaluator arena under an open cell scope — exactly
+    // the tune worker's shape (warm ordering + shared lowering).
     let tune_sc = ficco::workloads::by_name("g6").expect("g6 in the Table I suite");
     let tune_mech = tune_sc.mech.name();
     let space = SpaceSpec::default_for(&tune_sc);
@@ -115,8 +116,10 @@ fn main() {
     let cfg = SearchCfg {
         beam: 0,
         prune: true,
+        ..SearchCfg::default()
     };
     let mut ev = Evaluator::new();
+    ev.begin_cell(&tune_sc);
     let warm = search_in(
         &mut ev,
         "mi300x-8",
@@ -153,6 +156,70 @@ fn main() {
         warm.pruned,
         space_size,
         evals_per_sec,
+    );
+
+    // ISSUE 8: warm-started bound-first ordering vs the cold
+    // enumeration-order reference on the same cell. The cold side runs
+    // WITHOUT a cell scope — that is the pre-warm-start tune worker's
+    // exact shape — so the measured gap is the combined ordering +
+    // shared-lowering win; the bit-identity asserts prove the gap is
+    // pure speed, not a different answer.
+    let cold_cfg = SearchCfg {
+        warm: false,
+        ..cfg
+    };
+    let mut cold_ev = Evaluator::new();
+    let cold = search_in(
+        &mut cold_ev,
+        "mi300x-8",
+        &machine,
+        &tune_sc,
+        &space,
+        &cold_cfg,
+        &EvalCache::new(),
+    );
+    assert_eq!(
+        cold.best.plan, warm.best.plan,
+        "warm ordering must report the cold best plan"
+    );
+    assert_eq!(
+        cold.best.makespan.to_bits(),
+        warm.best.makespan.to_bits(),
+        "warm ordering must report the cold makespan bitwise"
+    );
+    assert!(
+        warm.evaluated < cold.evaluated,
+        "warm ordering must strictly reduce simulated candidates on g6 × mi300x-8 \
+         ({} vs {})",
+        warm.evaluated,
+        cold.evaluated
+    );
+    let mut cold_acc = Accum::new();
+    for _ in 0..tune_iters {
+        let t0 = Instant::now();
+        let out = search_in(
+            &mut cold_ev,
+            "mi300x-8",
+            &machine,
+            &tune_sc,
+            &space,
+            &cold_cfg,
+            &EvalCache::new(),
+        );
+        cold_acc.push(t0.elapsed().as_secs_f64());
+        assert_eq!(out.evaluated, cold.evaluated, "cold walk must be deterministic");
+    }
+    let cold_median = cold_acc.median();
+    let cold_evals_per_sec = cold.evaluated as f64 / cold_median.max(1e-12);
+    let warm_pruned_fraction = warm.pruned as f64 / (warm.evaluated + warm.pruned).max(1) as f64;
+    let cold_pruned_fraction = cold.pruned as f64 / (cold.evaluated + cold.pruned).max(1) as f64;
+    println!(
+        "{:<44} median {:>10}  ({} evals vs {} warm, {:.1} evals/s)",
+        "tune cell, cold enumeration order",
+        ficco::util::human_time(cold_median),
+        cold.evaluated,
+        warm.evaluated,
+        cold_evals_per_sec,
     );
 
     // ISSUE 6: old-vs-new fair sharing on the same contention-saturated
@@ -279,6 +346,16 @@ fn main() {
          \"beam\": 0,\n    \"prune\": true,\n    \"space_size\": {space_size},\n    \
          \"evaluated\": {evaluated},\n    \"pruned\": {pruned},\n    \
          \"median_seconds\": {tune_median:.6},\n    \"evals_per_sec\": {evals_per_sec:.1}\n  }},\n  \
+         \"search\": {{\n    \
+         \"machine\": \"mi300x-8\",\n    \"scenario\": \"g6\",\n    \"beam\": 0,\n    \
+         \"space_size\": {space_size},\n    \
+         \"warm_evaluated\": {warm_evaluated},\n    \"warm_pruned\": {warm_pruned},\n    \
+         \"warm_pruned_fraction\": {warm_pruned_fraction:.4},\n    \
+         \"warm_evals_per_sec\": {evals_per_sec:.1},\n    \
+         \"cold_evaluated\": {cold_evaluated},\n    \"cold_pruned\": {cold_pruned},\n    \
+         \"cold_pruned_fraction\": {cold_pruned_fraction:.4},\n    \
+         \"cold_evals_per_sec\": {cold_evals_per_sec:.1},\n    \
+         \"best_plan\": \"{best_plan}\",\n    \"best_agrees_bitwise\": true\n  }},\n  \
          \"fair_sharing\": {{\n    \
          \"slow_evals_per_sec\": {slow_evals_per_sec:.1},\n    \
          \"incremental_evals_per_sec\": {incremental_evals_per_sec:.1},\n    \
@@ -287,6 +364,11 @@ fn main() {
          \"overhead_ratio\": {recorder_overhead:.3}\n  }}\n}}\n",
         evaluated = warm.evaluated,
         pruned = warm.pruned,
+        warm_evaluated = warm.evaluated,
+        warm_pruned = warm.pruned,
+        cold_evaluated = cold.evaluated,
+        cold_pruned = cold.pruned,
+        best_plan = warm.best.plan.id(),
     );
     let mut f = std::fs::File::create(&out_path).expect("create bench artifact");
     f.write_all(json.as_bytes()).expect("write bench artifact");

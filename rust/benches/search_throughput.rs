@@ -47,6 +47,7 @@ fn main() {
     let cfg = SearchCfg {
         beam: 4,
         prune: true,
+        ..SearchCfg::default()
     };
     let ov = SpaceOverrides::default();
     println!("== perf: plan-space search ({n_cells} cells, beam 4, host parallelism {host}) ==");
@@ -91,6 +92,7 @@ fn main() {
                 SearchCfg {
                     beam: 0,
                     prune: false,
+                    ..SearchCfg::default()
                 },
             ),
             (
@@ -98,6 +100,7 @@ fn main() {
                 SearchCfg {
                     beam: 0,
                     prune: true,
+                    ..SearchCfg::default()
                 },
             ),
             (
@@ -105,6 +108,7 @@ fn main() {
                 SearchCfg {
                     beam: 4,
                     prune: true,
+                    ..SearchCfg::default()
                 },
             ),
         ] {

@@ -198,21 +198,21 @@ pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [
         "sweep" => Some((
             &[
                 "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
-                "out-dir", "search", "model",
+                "out-dir", "search", "warm", "model",
             ],
             &["verbose", "csv", "stats", "quiet"],
         )),
         "tune" => Some((
             &[
                 "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
-                "beam", "pieces", "slots", "model", "trace-out",
+                "beam", "warm", "pieces", "slots", "model", "trace-out",
             ],
             &["verbose", "csv", "stats", "quiet"],
         )),
         "trace" => Some((
             &[
                 "scenario", "machine", "m", "n", "k", "mech", "skew", "skew-seed", "plan", "beam",
-                "pieces", "slots", "jobs", "out-dir",
+                "warm", "pieces", "slots", "jobs", "out-dir",
             ],
             &["stats", "quiet"],
         )),
@@ -413,6 +413,11 @@ mod tests {
         assert!(strict(vec!["sweep", "--scenarios", "g1", "--jobs", "2", "--csv"]).is_ok());
         assert!(strict(vec!["tune", "--beam", "4", "--pieces", "1,8", "--verbose"]).is_ok());
         assert!(strict(vec!["tune", "--trace-out", "t.json", "--stats", "--quiet"]).is_ok());
+        assert!(strict(vec!["tune", "--warm", "off"]).is_ok());
+        assert!(strict(vec!["sweep", "--search", "exhaustive", "--warm", "off"]).is_ok());
+        assert!(strict(vec!["trace", "--warm", "on", "--scenario", "g6"]).is_ok());
+        assert!(strict(vec!["simulate", "--warm", "off"]).is_err(), "simulate has no search");
+        assert!(strict(vec!["calibrate", "--warm", "off"]).is_err());
         assert!(strict(vec!["trace", "--scenario", "g6", "--machine", "mi300x-8"]).is_ok());
         assert!(strict(vec!["trace", "--plan", "row-d8-fused-hs-s7-dma", "--stats"]).is_ok());
         assert!(strict(vec!["heuristic", "--all", "--threshold", "2"]).is_ok());

@@ -477,29 +477,42 @@ pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
     // Static pick: the calibrated model's full-plan prediction when
     // one is loaded, else the frozen Fig-12a rule (bit-identical to
     // the pre-model sweep artifacts).
-    let (pick, model_plan) = match &cell.model {
+    let (pick, pick_plan) = match &cell.model {
         Some(model) => {
             let d = model.predict(machine, sc);
-            (d.kind, Some(d.plan.id()))
+            (d.kind, d.plan)
         }
-        None => (crate::heuristics::pick(machine, sc).pick, None),
+        None => {
+            let pick = crate::heuristics::pick(machine, sc).pick;
+            (pick, crate::plan::Plan::preset(pick, sc))
+        }
     };
+    let model_plan = cell.model.as_ref().map(|_| pick_plan.id());
     let scev = ScenarioEval::run_in(ev, machine, sc, &cell.kinds);
     let oracle = scev.best_ficco().map(|(k, _)| k);
     // Optional plan-space search. The cache is per-cell (the emitted
     // best-plan values are cache-independent either way) but seeded
     // with the fixed-kind rows just measured: preset plans lower to
     // the exact schedules `ScenarioEval` simulated, so the search
-    // never re-simulates them.
+    // never re-simulates them. The same rows seed the cell-scope
+    // incumbent (they are true candidate makespans of this cell), and
+    // the static pick seeds the warm search order.
     let best_plan = cell.search.as_ref().map(|cfg| {
         let space = crate::search::SpaceSpec::default_for(sc);
         let cache = crate::search::EvalCache::new();
+        ev.begin_cell(sc);
         for r in &scev.results {
             let preset = crate::plan::Plan::preset(r.kind, sc);
             cache.insert(&cell.machine_name, sc, &preset, r.makespan);
+            ev.note_cell_incumbent(preset, r.makespan);
         }
+        let cfg = crate::search::SearchCfg {
+            predicted: cfg.predicted.or(Some(pick_plan)),
+            ..*cfg
+        };
         let out =
-            crate::search::search_in(ev, &cell.machine_name, machine, sc, &space, cfg, &cache);
+            crate::search::search_in(ev, &cell.machine_name, machine, sc, &space, &cfg, &cache);
+        ev.end_cell();
         BestPlan {
             id: out.best.plan.id(),
             speedup: out.best_speedup(),

@@ -524,6 +524,7 @@ mod tests {
         let cfg = crate::search::SearchCfg {
             beam: 2,
             prune: true,
+            ..Default::default()
         };
         let s = score_searched(&m, &sc, 1.0, &cfg, &crate::search::EvalCache::new());
         let searched = s.searched_speedup.expect("searched");
@@ -559,6 +560,7 @@ mod tests {
         let cfg = crate::search::SearchCfg {
             beam: 2,
             prune: true,
+            ..Default::default()
         };
         let (hit_rate, mean_loss, scored) =
             model_searched_accuracy(&m, &suite, &model::HeuristicModel::default(), &cfg);

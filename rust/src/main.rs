@@ -12,7 +12,9 @@
 //!                                   --skew-seed fixes the hot-expert
 //!                                   order; --out-dir results/sweep;
 //!                                   --search off|exhaustive|beam:N
-//!                                   fills the best-plan columns;
+//!                                   fills the best-plan columns and
+//!                                   --warm on|off picks the search
+//!                                   order;
 //!                                   switches: --verbose prints
 //!                                   per-cell progress, --csv also
 //!                                   writes <out-dir>/summary.csv)
@@ -21,7 +23,10 @@
 //!                                   count x scenario) cell: legacy
 //!                                   presets seed the search, beam or
 //!                                   exhaustive (--beam 0) expansion,
-//!                                   lower-bound pruning, deterministic
+//!                                   lower-bound pruning, warm-started
+//!                                   bound-ordered visits (--warm
+//!                                   on|off, bit-identical results
+//!                                   either way), deterministic
 //!                                   CSV/JSON artifacts (filters:
 //!                                   --scenarios --machines --mechs
 //!                                   --gpus --skew; space: --pieces
@@ -40,8 +45,9 @@
 //!                                   --skew-seed; --plan ID traces
 //!                                   that exact plan, otherwise the
 //!                                   plan space is searched first:
-//!                                   --beam --pieces --slots --jobs;
-//!                                   --stats prints search telemetry)
+//!                                   --beam --warm --pieces --slots
+//!                                   --jobs; --stats prints search
+//!                                   telemetry)
 //!   heuristic  [--all|--scenario g] show heuristic decisions
 //!                                   (--threshold S scales the Fig-12a
 //!                                   threshold; --model FILE predicts
@@ -324,6 +330,9 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     )?;
     spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
     spec.search = parse_search(args.get_or("search", "off"))?;
+    if let Some(cfg) = spec.search.as_mut() {
+        cfg.warm = parse_warm(args)?;
+    }
     spec.model = model_opt_from(args)?;
     let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/sweep");
@@ -409,10 +418,7 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 fn parse_search(s: &str) -> Result<Option<ficco::search::SearchCfg>, Box<dyn std::error::Error>> {
     match s {
         "off" => Ok(None),
-        "exhaustive" => Ok(Some(ficco::search::SearchCfg {
-            beam: 0,
-            prune: true,
-        })),
+        "exhaustive" => Ok(Some(ficco::search::SearchCfg::default())),
         other => match other.strip_prefix("beam:") {
             Some(b) => {
                 let beam: usize = b
@@ -421,10 +427,25 @@ fn parse_search(s: &str) -> Result<Option<ficco::search::SearchCfg>, Box<dyn std
                 if beam == 0 {
                     return Err("--search beam:N needs N >= 1 (use 'exhaustive' for 0)".into());
                 }
-                Ok(Some(ficco::search::SearchCfg { beam, prune: true }))
+                Ok(Some(ficco::search::SearchCfg {
+                    beam,
+                    ..Default::default()
+                }))
             }
             None => Err(format!("unknown --search '{other}' (off|exhaustive|beam:N)").into()),
         },
+    }
+}
+
+/// Parse `--warm on|off` (default on): warm-started, incumbent-
+/// ordered plan search vs the cold enumeration-order reference. Both
+/// report bit-identical plans/makespans; `off` exists for the
+/// determinism cross-check and for measuring the ordering's effect.
+fn parse_warm(args: &Args) -> Result<bool, Box<dyn std::error::Error>> {
+    match args.get_or("warm", "on") {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(format!("unknown --warm '{other}' (on|off)").into()),
     }
 }
 
@@ -499,7 +520,10 @@ fn ensure_searchable_space(
 /// mech × GPU count × scenario) cell on a worker pool, streaming
 /// deterministic CSV/JSON to `--out-dir` and printing a summary per
 /// machine. `--beam 0` (default) enumerates the space exhaustively
-/// with lower-bound pruning; `--beam N` runs a beam local search
+/// with lower-bound pruning — warm-started and best-bound-first by
+/// default, `--warm off` for the cold enumeration-order reference
+/// (bit-identical plans/makespans; only the evaluated/pruned effort
+/// split differs); `--beam N` runs a beam local search
 /// seeded by the six legacy presets. `--pieces`/`--slots` override the
 /// default space axes.
 fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
@@ -515,7 +539,8 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     spec.model = model_opt_from(args)?;
     let cfg = ficco::search::SearchCfg {
         beam: args.get_usize("beam", 0)?,
-        prune: true,
+        warm: parse_warm(args)?,
+        ..Default::default()
     };
     let ov = space_overrides_from(args)?;
     ensure_searchable_space(&spec, &ov)?;
@@ -703,7 +728,8 @@ fn cmd_trace(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             };
             let cfg = ficco::search::SearchCfg {
                 beam: args.get_usize("beam", 0)?,
-                prune: true,
+                warm: parse_warm(args)?,
+                ..Default::default()
             };
             let ov = space_overrides_from(args)?;
             ensure_searchable_space(&spec, &ov)?;
@@ -873,7 +899,7 @@ fn cmd_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         ("plans", m) => {
             let cfg = ficco::search::SearchCfg {
                 beam: args.get_usize("beam", 4)?,
-                prune: true,
+                ..Default::default()
             };
             match m {
                 None => ficco::heuristics::searched_accuracy(&machine, &suite, scale, &cfg),
@@ -989,7 +1015,7 @@ fn cmd_calibrate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     holdout_spec.skew_seed = train_spec.skew_seed;
     let cfg = ficco::search::SearchCfg {
         beam: args.get_usize("beam", 4)?,
-        prune: true,
+        ..Default::default()
     };
     let ov = space_overrides_from(args)?;
     ensure_searchable_space(&train_spec, &ov)?;

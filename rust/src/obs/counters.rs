@@ -33,6 +33,15 @@ pub struct Counters {
     pub pruned: u64,
     /// Beam-search rounds that expanded a frontier.
     pub beam_expansions: u64,
+    /// Cells whose searched optimum was already in the warm seed set
+    /// (a legacy preset or the model-predicted plan) — the whole
+    /// remaining space only confirmed the seed incumbent.
+    pub warm_hits: u64,
+    /// Candidates pruned by the bound-sorted tail cut without an
+    /// individual bound-vs-cutoff check: once the best-lower-bound-
+    /// first order meets a bound above the cutoff, every remaining
+    /// candidate's bound is at least as large (subset of `pruned`).
+    pub bound_skips_early: u64,
 }
 
 impl Counters {
@@ -42,6 +51,8 @@ impl Counters {
         self.evaluated += other.evaluated;
         self.pruned += other.pruned;
         self.beam_expansions += other.beam_expansions;
+        self.warm_hits += other.warm_hits;
+        self.bound_skips_early += other.bound_skips_early;
     }
 }
 
@@ -81,14 +92,17 @@ impl Telemetry {
         write!(
             out,
             "{{\"jobs\":{},\"wall_seconds\":{},\"cells\":{},\"candidates\":{},\
-             \"evaluated\":{},\"pruned\":{},\"beam_expansions\":{}",
+             \"evaluated\":{},\"pruned\":{},\"beam_expansions\":{},\
+             \"warm_hits\":{},\"bound_skips_early\":{}",
             self.jobs,
             self.wall_seconds,
             self.counters.cells,
             self.counters.candidates,
             self.counters.evaluated,
             self.counters.pruned,
-            self.counters.beam_expansions
+            self.counters.beam_expansions,
+            self.counters.warm_hits,
+            self.counters.bound_skips_early
         )
         .unwrap();
         write!(
@@ -141,6 +155,14 @@ impl Telemetry {
             "beam expansions".to_string(),
             format!("{}", self.counters.beam_expansions),
         ]);
+        t.row(vec![
+            "warm-seed hits".to_string(),
+            format!("{}", self.counters.warm_hits),
+        ]);
+        t.row(vec![
+            "early bound skips".to_string(),
+            format!("{}", self.counters.bound_skips_early),
+        ]);
         t.row(vec!["cache hits".to_string(), format!("{}", self.cache_hits)]);
         t.row(vec!["cache misses".to_string(), format!("{}", self.cache_misses)]);
         let lookups = self.cache_hits + self.cache_misses;
@@ -178,6 +200,8 @@ mod tests {
             evaluated: 3,
             pruned: 4,
             beam_expansions: 5,
+            warm_hits: 6,
+            bound_skips_early: 7,
         };
         let b = Counters {
             cells: 10,
@@ -185,6 +209,8 @@ mod tests {
             evaluated: 30,
             pruned: 40,
             beam_expansions: 50,
+            warm_hits: 60,
+            bound_skips_early: 70,
         };
         a.merge(&b);
         assert_eq!(
@@ -195,6 +221,8 @@ mod tests {
                 evaluated: 33,
                 pruned: 44,
                 beam_expansions: 55,
+                warm_hits: 66,
+                bound_skips_early: 77,
             }
         );
     }
@@ -210,6 +238,8 @@ mod tests {
                 evaluated: 7,
                 pruned: 2,
                 beam_expansions: 1,
+                warm_hits: 2,
+                bound_skips_early: 3,
             },
             cache_hits: 3,
             cache_misses: 4,
@@ -220,6 +250,8 @@ mod tests {
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"jobs\":4"));
         assert!(json.contains("\"candidates\":9"));
+        assert!(json.contains("\"warm_hits\":2"));
+        assert!(json.contains("\"bound_skips_early\":3"));
         assert!(json.contains("\"shards\":[[1,2],[2,2]]"));
         assert!(json.contains("\"cell_seconds\":[0.25,0.25]"));
         assert_eq!(json.matches('{').count(), json.matches('}').count());

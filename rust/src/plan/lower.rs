@@ -42,15 +42,49 @@ fn piece_region(part: &Partition, sc: &Scenario, shape: CommShape, q: usize, p: 
 /// invalid plan (see [`Plan::check`]); search-side callers enumerate
 /// only checked plans.
 pub fn lower(plan: &Plan, sc: &Scenario) -> Schedule {
+    lower_opts(plan, sc, None, true)
+}
+
+/// [`lower`] with the cell-invariant prefix split out: an optional
+/// precomputed [`Partition`] (the scenario's routing geometry at
+/// `plan.pieces` — the only lowering input that does not change from
+/// candidate to candidate within a (scenario, pieces) group, and the
+/// expensive one under skew) and a label switch (see
+/// [`Builder::new_with_labels`]). The emitted node structure is
+/// bit-identical to [`lower`] for any plan: the partition is a pure
+/// function of `(sc.gemm.m, sc.ngpus, plan.pieces, sc.skew,
+/// sc.skew_seed)`, so a cached instance substitutes exactly.
+///
+/// Panics if a supplied partition disagrees with the scenario/plan it
+/// is used for (debug builds; the cell-scoped caller keys its cache
+/// on exactly the partition inputs).
+pub fn lower_opts(
+    plan: &Plan,
+    sc: &Scenario,
+    part: Option<&Partition>,
+    labels: bool,
+) -> Schedule {
     plan.check(sc.ngpus)
         .unwrap_or_else(|e| panic!("invalid plan {} for {}: {e}", plan.id(), sc.name));
     let n = sc.ngpus;
-    let part = sc.partition(plan.pieces);
-    let mut b = Builder::new();
+    let owned;
+    let part = match part {
+        Some(p) => {
+            debug_assert_eq!(p.pieces, plan.pieces, "partition/plan pieces mismatch");
+            debug_assert_eq!(p.ngpus, sc.ngpus, "partition/scenario ngpus mismatch");
+            debug_assert_eq!(p.m, sc.gemm.m, "partition/scenario M mismatch");
+            p
+        }
+        None => {
+            owned = sc.partition(plan.pieces);
+            &owned
+        }
+    };
+    let mut b = Builder::new_with_labels(labels);
     if plan.slots >= n - 1 {
-        lower_full(plan, sc, &part, &mut b);
+        lower_full(plan, sc, part, &mut b);
     } else {
-        lower_chained(plan, sc, &part, &mut b);
+        lower_chained(plan, sc, part, &mut b);
     }
     Schedule {
         kind: plan.kind(),

@@ -31,7 +31,7 @@
 mod lower;
 pub mod partition;
 
-pub use lower::lower;
+pub use lower::{lower, lower_opts};
 pub use partition::Partition;
 
 use crate::schedule::{Kind, Scenario, Schedule};

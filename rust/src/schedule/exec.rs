@@ -17,8 +17,9 @@ use super::{Kind, OpKind, Scenario, Schedule};
 use crate::cost::gemm::GemmCost;
 use crate::hw::Machine;
 use crate::obs::{Counters, TimelineRecorder, TrackMap};
-use crate::plan::Plan;
+use crate::plan::{Partition, Plan};
 use crate::sim::{ClusterSim, CommMech, Label, LeanReport, Report, SimError, TaskId};
+use std::collections::HashMap;
 
 /// Measured execution of one schedule.
 #[derive(Debug, Clone)]
@@ -53,6 +54,44 @@ fn sched_mech(sched: &Schedule) -> CommMech {
     }
 }
 
+/// Cell-scoped lowering cache: the parts of plan lowering that are
+/// invariant across the candidates of one (machine, scenario) search
+/// cell. A [`Partition`] is a pure function of `(m, ngpus, pieces,
+/// skew, skew_seed)` — within a cell only `pieces` varies, so the
+/// scope memoizes one partition per decomposition degree and every
+/// candidate at that degree reuses it (under skew this skips the
+/// Zipf-weight + hotness-shuffle construction per candidate). The
+/// scope also carries the cell's best-so-far `(plan, makespan)`
+/// incumbent across search phases (presets → space → beam → pick
+/// evaluation): a later phase may use it to tighten its pruning
+/// cutoff, which can only skip work, never change a result (the
+/// incumbent is a true candidate makespan, hence ≥ the cell optimum).
+///
+/// Keyed on exactly the partition inputs; [`Evaluator::begin_cell`]
+/// pins them and any scenario that disagrees simply bypasses the
+/// scope (see `DESIGN.md` §9).
+struct CellScope {
+    m: u64,
+    ngpus: usize,
+    /// `Scenario::skew` bits, normalized to 0 at `skew == 0` (same
+    /// rule as [`crate::search::EvalKey`]).
+    skew_bits: u64,
+    skew_seed: u64,
+    partitions: HashMap<usize, Partition>,
+    incumbent: Option<(Plan, f64)>,
+}
+
+impl CellScope {
+    fn matches(&self, sc: &Scenario) -> bool {
+        let skew_bits = if sc.skew == 0.0 { 0 } else { sc.skew.to_bits() };
+        let skew_seed = if sc.skew == 0.0 { 0 } else { sc.skew_seed };
+        self.m == sc.gemm.m
+            && self.ngpus == sc.ngpus
+            && self.skew_bits == skew_bits
+            && self.skew_seed == skew_seed
+    }
+}
+
 /// Reusable schedule-evaluation arena. Holds a [`ClusterSim`] bound
 /// to the last machine simulated (rebuilt only when the machine
 /// changes) plus the per-load bookkeeping the metrics need — all
@@ -77,6 +116,8 @@ pub struct Evaluator {
     /// Pipeline telemetry: incremented privately by the worker that
     /// owns this evaluator, merged at pool join (`crate::obs`).
     pub counters: Counters,
+    /// Active tune-cell lowering scope, if any (see [`CellScope`]).
+    cell: Option<CellScope>,
 }
 
 impl Evaluator {
@@ -91,6 +132,52 @@ impl Evaluator {
             dep_scratch: Vec::new(),
             keep_labels: false,
             counters: Counters::default(),
+            cell: None,
+        }
+    }
+
+    /// Open a tune-cell scope for `sc`: every subsequent plan load
+    /// whose scenario shares `sc`'s partition inputs (M, ngpus, skew,
+    /// skew seed) reuses one memoized [`Partition`] per `pieces`
+    /// value and, in release builds, skips the per-candidate
+    /// structural re-validation of the lowered graph (the lowering
+    /// generator is property-tested against `validate` directly; a
+    /// debug build keeps the per-candidate check). Replaces any
+    /// previously open scope.
+    pub fn begin_cell(&mut self, sc: &Scenario) {
+        self.cell = Some(CellScope {
+            m: sc.gemm.m,
+            ngpus: sc.ngpus,
+            skew_bits: if sc.skew == 0.0 { 0 } else { sc.skew.to_bits() },
+            skew_seed: if sc.skew == 0.0 { 0 } else { sc.skew_seed },
+            partitions: HashMap::new(),
+            incumbent: None,
+        });
+    }
+
+    /// Close the tune-cell scope (drops memoized partitions and the
+    /// carried incumbent). No-op when no scope is open.
+    pub fn end_cell(&mut self) {
+        self.cell = None;
+    }
+
+    /// The best `(plan, makespan)` recorded in the open cell scope,
+    /// if any — a *true candidate makespan* from an earlier search
+    /// phase of the same cell, safe to use as an initial pruning
+    /// cutoff (never as a result).
+    pub fn cell_incumbent(&self) -> Option<(Plan, f64)> {
+        self.cell.as_ref().and_then(|c| c.incumbent)
+    }
+
+    /// Record a candidate's measured makespan in the open cell scope,
+    /// keeping the tighter of the stored and offered values. No-op
+    /// without an open scope.
+    pub fn note_cell_incumbent(&mut self, plan: Plan, makespan: f64) {
+        if let Some(cell) = self.cell.as_mut() {
+            match cell.incumbent {
+                Some((_, best)) if best <= makespan => {}
+                _ => cell.incumbent = Some((plan, makespan)),
+            }
         }
     }
 
@@ -219,12 +306,33 @@ impl Evaluator {
     }
 
     /// Lower → validate → load `plan`'s task graph without computing
-    /// anything about it.
+    /// anything about it. Inside a matching cell scope the lowering
+    /// reuses the scope's memoized partition, skips per-node label
+    /// formatting when no consumer reads labels, and (release builds
+    /// only) elides the per-candidate structural validation; all three
+    /// are observationally pure — the built task graph's topology,
+    /// shapes, and byte counts are identical either way, so every
+    /// simulated number stays bit-equal (`rust/tests/search_ordering.rs`).
     fn load_plan_graph(&mut self, machine: &Machine, sc: &Scenario, plan: &Plan) {
-        let sched = crate::plan::lower(plan, sc);
-        super::validate::validate(&sched)
-            .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
-        self.load(machine, &sched);
+        let with_labels = self.keep_labels || crate::sim::trace_enabled();
+        let in_cell = self.cell.as_ref().map_or(false, |c| c.matches(sc));
+        if in_cell {
+            let cell = self.cell.as_mut().expect("cell checked above");
+            let part = cell
+                .partitions
+                .entry(plan.pieces)
+                .or_insert_with(|| sc.partition(plan.pieces));
+            let sched = crate::plan::lower_opts(plan, sc, Some(part), with_labels);
+            #[cfg(debug_assertions)]
+            super::validate::validate(&sched)
+                .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
+            self.load(machine, &sched);
+        } else {
+            let sched = crate::plan::lower_opts(plan, sc, None, with_labels);
+            super::validate::validate(&sched)
+                .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name));
+            self.load(machine, &sched);
+        }
     }
 
     /// Lower → validate → load `plan`'s task graph; returns the
@@ -629,6 +737,62 @@ mod tests {
         let (kind, speedup) = full.best_ficco().expect("FiCCO kinds evaluated");
         assert!(kind.is_ficco());
         assert!(speedup > 0.0);
+    }
+
+    #[test]
+    fn cell_scope_is_observationally_pure() {
+        // Loading plans inside a cell scope (memoized partitions, lean
+        // labels, elided re-validation) must report bit-identical
+        // makespans and bounds to scope-free loads — including under
+        // skew, where the partition construction is the expensive
+        // part being memoized.
+        let m = machine();
+        for sc in [
+            Scenario::new("small", 4096, 512, 1024),
+            Scenario::new("small-skew", 4096, 512, 1024).with_skew(0.8, 13),
+        ] {
+            let mut cold = Evaluator::new();
+            let mut warm = Evaluator::new();
+            warm.begin_cell(&sc);
+            for kind in Kind::ALL {
+                let plan = Plan::preset(kind, &sc);
+                let cb = cold.load_plan(&m, &sc, &plan);
+                let wb = warm.load_plan(&m, &sc, &plan);
+                assert_eq!(cb.to_bits(), wb.to_bits(), "{kind:?} bound");
+                let cm = cold.run_loaded_lean().expect("cold").makespan;
+                let wm = warm.run_loaded_lean().expect("warm").makespan;
+                assert_eq!(cm.to_bits(), wm.to_bits(), "{kind:?} makespan");
+            }
+            // A scenario with different partition inputs bypasses the
+            // scope rather than reusing a stale partition.
+            let other = sc.clone().with_ngpus(4);
+            let m4 = Machine::pcie_gen4_4();
+            let plan = Plan::preset(Kind::UniformFused1D, &other);
+            let via_scope = warm.plan_makespan(&m4, &other, &plan);
+            let fresh = Evaluator::new().plan_makespan(&m4, &other, &plan);
+            assert_eq!(via_scope.to_bits(), fresh.to_bits());
+            warm.end_cell();
+            assert!(warm.cell_incumbent().is_none());
+        }
+    }
+
+    #[test]
+    fn cell_incumbent_keeps_the_tighter_makespan() {
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        // Without a scope, noting is a no-op.
+        let p = Plan::preset(Kind::UniformFused1D, &sc);
+        ev.note_cell_incumbent(p, 1.0);
+        assert!(ev.cell_incumbent().is_none());
+        ev.begin_cell(&sc);
+        assert!(ev.cell_incumbent().is_none());
+        ev.note_cell_incumbent(p, 2.0);
+        assert_eq!(ev.cell_incumbent().map(|(_, ms)| ms), Some(2.0));
+        let q = Plan::preset(Kind::HeteroFused1D, &sc);
+        ev.note_cell_incumbent(q, 3.0); // looser: ignored
+        assert_eq!(ev.cell_incumbent(), Some((p, 2.0)));
+        ev.note_cell_incumbent(q, 1.5); // tighter: replaces
+        assert_eq!(ev.cell_incumbent(), Some((q, 1.5)));
     }
 
     #[test]

@@ -70,11 +70,28 @@ pub fn legacy(kind: Kind, scenario: &Scenario) -> Schedule {
 
 pub(crate) struct Builder {
     pub(crate) nodes: Vec<Node>,
+    /// Render human-readable node labels. The search hot path lowers
+    /// hundreds of candidates per cell and never reads the labels
+    /// (the lean simulation names tasks `n<index>`), so cell-scoped
+    /// lowering builds label-free (`String::new()` allocates nothing)
+    /// — see [`crate::plan::lower_opts`]. Node structure, regions,
+    /// deps and stream assignment are identical either way.
+    labels: bool,
 }
 
 impl Builder {
     pub(crate) fn new() -> Builder {
-        Builder { nodes: Vec::new() }
+        Builder {
+            nodes: Vec::new(),
+            labels: true,
+        }
+    }
+
+    pub(crate) fn new_with_labels(labels: bool) -> Builder {
+        Builder {
+            nodes: Vec::new(),
+            labels,
+        }
     }
 
     fn push(&mut self, n: Node) -> usize {
@@ -91,13 +108,18 @@ impl Builder {
         slot: usize,
         deps: Vec<usize>,
     ) -> usize {
+        let label = if self.labels {
+            format!("xfer[s{step}] g{src}->g{dst}")
+        } else {
+            String::new()
+        };
         self.push(Node {
             gpu: dst,
             kind: OpKind::Xfer { src, region },
             deps,
             step,
             slot,
-            label: format!("xfer[s{step}] g{src}->g{dst}"),
+            label,
         })
     }
 
@@ -109,35 +131,50 @@ impl Builder {
         step: usize,
         deps: Vec<usize>,
     ) -> usize {
+        let label = if self.labels {
+            format!("gemm[s{step}] g{gpu}")
+        } else {
+            String::new()
+        };
         self.push(Node {
             gpu,
             kind: OpKind::Gemm { shape, covers },
             deps,
             step,
             slot: 0,
-            label: format!("gemm[s{step}] g{gpu}"),
+            label,
         })
     }
 
     pub(crate) fn gather(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+        let label = if self.labels {
+            format!("gather[s{step}] g{gpu}")
+        } else {
+            String::new()
+        };
         self.push(Node {
             gpu,
             kind: OpKind::Gather { bytes },
             deps,
             step,
             slot: 0,
-            label: format!("gather[s{step}] g{gpu}"),
+            label,
         })
     }
 
     pub(crate) fn scatter(&mut self, gpu: usize, bytes: f64, step: usize, deps: Vec<usize>) -> usize {
+        let label = if self.labels {
+            format!("scatter[s{step}] g{gpu}")
+        } else {
+            String::new()
+        };
         self.push(Node {
             gpu,
             kind: OpKind::Scatter { bytes },
             deps,
             step,
             slot: 0,
-            label: format!("scatter[s{step}] g{gpu}"),
+            label,
         })
     }
 }

@@ -226,6 +226,7 @@ mod tests {
         let cfg = SearchCfg {
             beam: 2,
             prune: true,
+            ..SearchCfg::default()
         };
         tune(&spec, &ov, &cfg, 1, |_| true).results
     }

@@ -58,6 +58,26 @@ pub struct SearchCfg {
     /// Skip candidates whose analytic lower bound already exceeds the
     /// incumbent makespan.
     pub prune: bool,
+    /// Warm-started, incumbent-ordered search (`--warm on`, the
+    /// default). Exhaustive mode evaluates the seed set first (the
+    /// six presets plus the model-predicted plan when it is a space
+    /// member), then visits the remaining space best-lower-bound
+    /// first instead of enumeration order, mass-pruning the sorted
+    /// tail once a bound crosses the cutoff. Beam mode additionally
+    /// seeds its frontier from the predicted plan's single-knob
+    /// neighborhood. Exhaustive results are bit-identical to the
+    /// `--warm off` enumeration-order walk (the canonical-index
+    /// tie-break pins float-equal optima to the same plan; see
+    /// `DESIGN.md` §9) — only the evaluated/pruned effort split
+    /// changes. Requires `prune`; with pruning off the order cannot
+    /// skip anything and the enumeration walk is used as-is.
+    pub warm: bool,
+    /// The heuristic/model-predicted plan seeding the warm order.
+    /// Ignored when `warm` is off, and membership-gated: a prediction
+    /// outside the presets and the candidate space never enters the
+    /// search (so a calibrated model cannot perturb search results —
+    /// its pick is still reported through the tune `pick` columns).
+    pub predicted: Option<Plan>,
 }
 
 impl Default for SearchCfg {
@@ -65,6 +85,8 @@ impl Default for SearchCfg {
         SearchCfg {
             beam: 0,
             prune: true,
+            warm: true,
+            predicted: None,
         }
     }
 }
@@ -381,6 +403,29 @@ impl EvalCache {
         makespan
     }
 
+    /// Memoized analytic lower bound of `plan` (graph build only, no
+    /// simulation). Deliberately outside the hit/miss accounting: the
+    /// warm search order reads every pending candidate's bound as
+    /// ordering metadata before deciding what to evaluate, and
+    /// counting those reads as cache traffic would drown the
+    /// evaluation-path statistics the telemetry block is for.
+    pub fn bound_in(
+        &self,
+        ev: &mut Evaluator,
+        machine_name: &str,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+    ) -> f64 {
+        let key = self.key(machine_name, sc, plan);
+        if let Some(b) = self.lookup_bound(&key) {
+            return b;
+        }
+        let bound = ev.load_plan(machine, sc, plan);
+        self.store_bound(key, bound);
+        bound
+    }
+
     /// As [`EvalCache::makespan_in`], but with lower-bound pruning:
     /// `Err(bound)` when the plan's analytic bound exceeds `cutoff`.
     ///
@@ -533,6 +578,37 @@ fn neighbors(plan: &Plan, space: &SpaceSpec, ngpus: usize) -> Vec<Plan> {
     out
 }
 
+/// Number of legacy presets seeding every search; canonical indices
+/// `0..PRESETS` name them, space candidates continue from there.
+const PRESETS: usize = Kind::ALL.len();
+
+/// Search incumbent: the lexicographic `(makespan, canonical index)`
+/// minimum over the evaluated set. The canonical index of a candidate
+/// is its position in the *enumeration* order (presets `0..6`, then
+/// the deduped space plans in first-occurrence order), independent of
+/// the order the search actually visits them in — so a warm
+/// best-bound-first walk and the cold enumeration walk resolve
+/// float-equal makespan ties to the same plan, which is what makes
+/// their artifacts bit-identical (`rust/tests/search_ordering.rs`).
+/// Cold walks visit in canonical order, where this rule degenerates
+/// to the historical first-minimum-wins.
+#[derive(Clone, Copy)]
+struct Incumbent {
+    eval: PlanEval,
+    canon: usize,
+}
+
+impl Incumbent {
+    fn offer(&mut self, plan: Plan, makespan: f64, canon: usize) {
+        if makespan < self.eval.makespan
+            || (makespan == self.eval.makespan && canon < self.canon)
+        {
+            self.eval = PlanEval { plan, makespan };
+            self.canon = canon;
+        }
+    }
+}
+
 /// Evaluate one unseen candidate against the incumbent, with optional
 /// lower-bound pruning. The strict `1 + 1e-9` margin on the cutoff
 /// absorbs ulp drift between the analytic bound and the event-driven
@@ -547,13 +623,14 @@ fn consider(
     sc: &Scenario,
     prune: bool,
     plan: Plan,
-    incumbent: &mut PlanEval,
+    canon: usize,
+    incumbent: &mut Incumbent,
     evals: &mut Vec<PlanEval>,
     evaluated: &mut usize,
     pruned: &mut usize,
 ) {
     let cutoff = if prune {
-        Some(incumbent.makespan * (1.0 + 1e-9))
+        Some(incumbent.eval.makespan * (1.0 + 1e-9))
     } else {
         None
     };
@@ -564,9 +641,7 @@ fn consider(
         Ok(makespan) => {
             *evaluated += 1;
             evals.push(PlanEval { plan, makespan });
-            if makespan < incumbent.makespan {
-                *incumbent = PlanEval { plan, makespan };
-            }
+            incumbent.offer(plan, makespan, canon);
         }
     }
 }
@@ -591,10 +666,13 @@ pub fn search(
 /// incumbent (so the result is at least as good as the best legacy
 /// kind), measure the serial baseline, and — under beam search — form
 /// the initial frontier. Exhaustive mode then walks every remaining
-/// space candidate; beam mode repeatedly expands single-knob
-/// neighborhoods of the current best `beam` plans until no unseen
-/// neighbor remains. Fully deterministic for a given input: the
-/// evaluator and cache only skip work, they never change results.
+/// space candidate — in enumeration order when `cfg.warm` is off, in
+/// best-lower-bound-first order (with the model-predicted seed and a
+/// sorted-tail mass prune) when it is on; both report bit-identical
+/// outcomes. Beam mode repeatedly expands single-knob neighborhoods of
+/// the current best `beam` plans until no unseen neighbor remains.
+/// Fully deterministic for a given input: the evaluator and cache only
+/// skip work, they never change results.
 pub fn search_in(
     ev: &mut Evaluator,
     machine_name: &str,
@@ -611,6 +689,10 @@ pub fn search_in(
     let mut evals: Vec<PlanEval> = Vec::new();
     let mut baseline = f64::NAN;
     let mut best_legacy: Option<(Kind, f64)> = None;
+    // The warm seed set: presets plus the evaluated predicted plan —
+    // a final best inside it means the whole space walk only confirmed
+    // the seed incumbent (`warm_hits` telemetry).
+    let mut seeds: Vec<Plan> = Vec::with_capacity(PRESETS + 1);
 
     for kind in Kind::ALL {
         let plan = Plan::preset(kind, sc);
@@ -618,6 +700,7 @@ pub fn search_in(
         let makespan = cache.makespan_in(ev, machine_name, machine, sc, &plan);
         evaluated += 1;
         seen.insert(plan);
+        seeds.push(plan);
         evals.push(PlanEval { plan, makespan });
         if kind == Kind::Baseline {
             baseline = makespan;
@@ -631,36 +714,149 @@ pub fn search_in(
         }
     }
     let best_legacy = best_legacy.expect("six presets evaluated");
-    // Incumbent: best preset so far (first minimum wins ties —
-    // deterministic).
-    let mut incumbent = evals[0];
-    for e in &evals[1..] {
-        if e.makespan < incumbent.makespan {
-            incumbent = *e;
-        }
+    // Incumbent: lexicographic (makespan, canonical index) minimum —
+    // over the presets alone this is the historical first-minimum.
+    let mut incumbent = Incumbent {
+        eval: evals[0],
+        canon: 0,
+    };
+    for (i, e) in evals.iter().enumerate().skip(1) {
+        incumbent.offer(e.plan, e.makespan, i);
     }
 
     if cfg.beam == 0 {
+        // Canonical numbering of the deduped space (presets occupy
+        // 0..PRESETS): assigned in enumeration order in both modes so
+        // the tie-break is order-independent.
+        let mut pending: Vec<(usize, Plan)> = Vec::new();
+        let mut canon = PRESETS;
         for plan in space.plans(sc) {
             ev.counters.candidates += 1;
             if !seen.insert(plan) {
                 continue;
             }
-            consider(
-                ev,
-                cache,
-                machine_name,
-                machine,
-                sc,
-                cfg.prune,
-                plan,
-                &mut incumbent,
-                &mut evals,
-                &mut evaluated,
-                &mut pruned,
-            );
+            pending.push((canon, plan));
+            canon += 1;
+        }
+        if cfg.warm && cfg.prune {
+            // Seed phase: the predicted plan, evaluated up front and
+            // unconditionally when it is a space member (a preset
+            // prediction is already evaluated; anything else is
+            // ignored — see `SearchCfg::predicted`).
+            if let Some(pred) = cfg.predicted {
+                if let Some(pos) = pending.iter().position(|&(_, p)| p == pred) {
+                    let (c, p) = pending.remove(pos);
+                    let makespan = cache.makespan_in(ev, machine_name, machine, sc, &p);
+                    evaluated += 1;
+                    seeds.push(p);
+                    evals.push(PlanEval { plan: p, makespan });
+                    incumbent.offer(p, makespan, c);
+                }
+            }
+            // A carried incumbent from an earlier phase of the same
+            // cell tightens the cutoff — but only when its plan is a
+            // candidate of *this* search, so every makespan that can
+            // tie the reported best is still evaluated here (the
+            // bit-identity argument of DESIGN.md §9 needs the carried
+            // makespan to be ≥ this search's optimum).
+            let mut carried = f64::INFINITY;
+            if let Some((p, ms)) = ev.cell_incumbent() {
+                if seen.contains(&p) {
+                    carried = ms;
+                }
+            }
+            // Order phase: best lower bound first, canonical index as
+            // the deterministic tie-break.
+            let mut ordered: Vec<(f64, usize, Plan)> = pending
+                .iter()
+                .map(|&(c, p)| (cache.bound_in(ev, machine_name, machine, sc, &p), c, p))
+                .collect();
+            ordered.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            // Walk phase: in ascending-bound order the first bound
+            // above the cutoff proves every remaining bound is too
+            // (the cutoff only tightens) — prune the whole tail
+            // without further per-candidate checks.
+            for (i, &(bound, c, p)) in ordered.iter().enumerate() {
+                let cutoff = incumbent.eval.makespan.min(carried) * (1.0 + 1e-9);
+                if bound > cutoff {
+                    let remaining = ordered.len() - i;
+                    pruned += remaining;
+                    ev.counters.bound_skips_early += (remaining - 1) as u64;
+                    break;
+                }
+                let makespan =
+                    match cache.makespan_bounded(ev, machine_name, machine, sc, &p, Some(cutoff)) {
+                        Ok(ms) => ms,
+                        // The memoized bound was checked against the
+                        // same cutoff above.
+                        Err(b) => unreachable!("bound {b} rechecked above {cutoff}"),
+                    };
+                evaluated += 1;
+                evals.push(PlanEval { plan: p, makespan });
+                incumbent.offer(p, makespan, c);
+            }
+        } else {
+            for (c, plan) in pending {
+                consider(
+                    ev,
+                    cache,
+                    machine_name,
+                    machine,
+                    sc,
+                    cfg.prune,
+                    plan,
+                    c,
+                    &mut incumbent,
+                    &mut evals,
+                    &mut evaluated,
+                    &mut pruned,
+                );
+            }
         }
     } else {
+        // Beam canonical indices are arrival-order (beam outcomes are
+        // a deterministic function of the frontier dynamics and are
+        // not cross-mode byte-compared).
+        let mut canon = PRESETS;
+        // Warm beam: expand the predicted plan and its single-knob
+        // neighborhood into the frontier before the first round.
+        if cfg.warm {
+            if let Some(pred) = cfg.predicted {
+                if pred.check(n).is_ok() {
+                    if seen.insert(pred) {
+                        ev.counters.candidates += 1;
+                        let makespan = cache.makespan_in(ev, machine_name, machine, sc, &pred);
+                        evaluated += 1;
+                        seeds.push(pred);
+                        evals.push(PlanEval { plan: pred, makespan });
+                        incumbent.offer(pred, makespan, canon);
+                        canon += 1;
+                    }
+                    for nb in neighbors(&pred, space, n) {
+                        ev.counters.candidates += 1;
+                        if !seen.insert(nb) {
+                            continue;
+                        }
+                        let c = canon;
+                        canon += 1;
+                        consider(
+                            ev,
+                            cache,
+                            machine_name,
+                            machine,
+                            sc,
+                            cfg.prune,
+                            nb,
+                            c,
+                            &mut incumbent,
+                            &mut evals,
+                            &mut evaluated,
+                            &mut pruned,
+                        );
+                    }
+                }
+            }
+        }
         // Beam local search: expand single-knob neighborhoods of the
         // best `beam` plans until nothing unseen remains (finite space
         // + seen-set ⇒ termination; cap as a backstop).
@@ -686,6 +882,8 @@ pub fn search_in(
                         continue;
                     }
                     new_any = true;
+                    let c = canon;
+                    canon += 1;
                     consider(
                         ev,
                         cache,
@@ -694,6 +892,7 @@ pub fn search_in(
                         sc,
                         cfg.prune,
                         nb,
+                        c,
                         &mut incumbent,
                         &mut evals,
                         &mut evaluated,
@@ -708,11 +907,17 @@ pub fn search_in(
         }
     }
 
+    if cfg.warm && seeds.contains(&incumbent.eval.plan) {
+        ev.counters.warm_hits += 1;
+    }
+    // Record the cell incumbent for later phases of the same cell
+    // (no-op without an open Evaluator cell scope).
+    ev.note_cell_incumbent(incumbent.eval.plan, incumbent.eval.makespan);
     ev.counters.evaluated += evaluated as u64;
     ev.counters.pruned += pruned as u64;
     SearchOutcome {
         baseline,
-        best: incumbent,
+        best: incumbent.eval,
         best_legacy,
         evaluated,
         pruned,
@@ -783,10 +988,12 @@ pub fn tune_cell_in(
     let machine = &cell.machine;
     let space = space_for(sc, ov);
     let space_size = space.plans(sc).len();
-    let out = search_in(ev, &cell.machine_name, machine, sc, &space, cfg, cache);
     // The static pick: a calibrated model predicts a full plan; the
     // default path keeps the frozen Fig-12a kind and its preset plan
-    // (bit-identical to the pre-model tune artifacts).
+    // (bit-identical to the pre-model tune artifacts). Evaluated
+    // *before* the search so its makespan can seed the warm order and
+    // the carried cell incumbent — every value involved is memoized
+    // and pure, so the reordering cannot change any reported number.
     let (pick, pick_plan) = match &cell.model {
         Some(model) => {
             let d = model.predict(machine, sc);
@@ -797,7 +1004,17 @@ pub fn tune_cell_in(
             (pick, Plan::preset(pick, sc))
         }
     };
+    // Cell scope: all lowering below (pick + every search candidate)
+    // shares one memoized partition per decomposition degree.
+    ev.begin_cell(sc);
     let pick_makespan = cache.makespan_in(ev, &cell.machine_name, machine, sc, &pick_plan);
+    ev.note_cell_incumbent(pick_plan, pick_makespan);
+    let cfg = SearchCfg {
+        predicted: cfg.predicted.or(Some(pick_plan)),
+        ..*cfg
+    };
+    let out = search_in(ev, &cell.machine_name, machine, sc, &space, &cfg, cache);
+    ev.end_cell();
     let pick_speedup = out.baseline / pick_makespan;
     TuneResult {
         index: cell.index,
@@ -989,7 +1206,7 @@ mod tests {
         let space = small_space(&sc);
         let cfg = SearchCfg {
             beam: 3,
-            prune: true,
+            ..SearchCfg::default()
         };
         let a = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
         let b = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
@@ -1033,10 +1250,7 @@ mod tests {
             &m,
             &sc,
             &space,
-            &SearchCfg {
-                beam: 0,
-                prune: true,
-            },
+            &SearchCfg::default(),
             &EvalCache::new(),
         );
         let full_run = search(
@@ -1045,8 +1259,8 @@ mod tests {
             &sc,
             &space,
             &SearchCfg {
-                beam: 0,
                 prune: false,
+                ..SearchCfg::default()
             },
             &EvalCache::new(),
         );
@@ -1112,6 +1326,146 @@ mod tests {
         assert!(out.best.makespan <= out.best_legacy.1);
         assert!(out.plan_gain() >= 1.0);
         assert!(out.baseline.is_finite() && out.baseline > 0.0);
+    }
+
+    /// Cold reference: enumeration-order search, as before warm
+    /// ordering existed.
+    fn cold() -> SearchCfg {
+        SearchCfg {
+            warm: false,
+            ..SearchCfg::default()
+        }
+    }
+
+    #[test]
+    fn warm_order_is_bit_identical_to_enumeration_order() {
+        let m = machine();
+        for sc in [sc(), sc().with_skew(0.8, 5)] {
+            let space = small_space(&sc);
+            let w = search("mi300x-8", &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+            let c = search("mi300x-8", &m, &sc, &space, &cold(), &EvalCache::new());
+            assert_eq!(w.best.plan, c.best.plan, "{}", sc.name);
+            assert_eq!(w.best.makespan.to_bits(), c.best.makespan.to_bits());
+            assert_eq!(w.baseline.to_bits(), c.baseline.to_bits());
+            assert_eq!(w.best_legacy.0, c.best_legacy.0);
+            assert_eq!(w.best_legacy.1.to_bits(), c.best_legacy.1.to_bits());
+            // Same candidate universe, never more simulation work.
+            assert_eq!(w.evaluated + w.pruned, c.evaluated + c.pruned);
+            assert!(
+                w.evaluated <= c.evaluated,
+                "warm evaluated {} > cold {}",
+                w.evaluated,
+                c.evaluated
+            );
+        }
+    }
+
+    #[test]
+    fn predicted_seed_costs_at_most_one_extra_evaluation() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let c = search("mi300x-8", &m, &sc, &space, &cold(), &EvalCache::new());
+        // Predict an in-space non-preset plan: it is evaluated
+        // unconditionally in the seed phase, and nothing else changes.
+        let pred = *space
+            .plans(&sc)
+            .iter()
+            .find(|p| !Plan::presets(&sc).contains(p))
+            .expect("space larger than the presets");
+        let w = search(
+            "mi300x-8",
+            &m,
+            &sc,
+            &space,
+            &SearchCfg {
+                predicted: Some(pred),
+                ..SearchCfg::default()
+            },
+            &EvalCache::new(),
+        );
+        assert_eq!(w.best.plan, c.best.plan);
+        assert_eq!(w.best.makespan.to_bits(), c.best.makespan.to_bits());
+        assert!(
+            w.evaluated <= c.evaluated + 1,
+            "seeding must cost at most the seed itself: {} vs {}",
+            w.evaluated,
+            c.evaluated
+        );
+    }
+
+    #[test]
+    fn out_of_space_prediction_never_enters_the_search() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        // pieces=2 is outside the narrowed space and not a preset.
+        let stray = Plan {
+            pieces: 2,
+            shape: CommShape::Row,
+            fused: true,
+            head_start: true,
+            mech: sc.mech,
+            slots: 7,
+        };
+        assert!(!space.plans(&sc).contains(&stray));
+        let cache = EvalCache::new();
+        let w = search(
+            "mi300x-8",
+            &m,
+            &sc,
+            &space,
+            &SearchCfg {
+                predicted: Some(stray),
+                ..SearchCfg::default()
+            },
+            &cache,
+        );
+        let c = search("mi300x-8", &m, &sc, &space, &cold(), &EvalCache::new());
+        assert_eq!(w.best.plan, c.best.plan);
+        assert_eq!(w.best.makespan.to_bits(), c.best.makespan.to_bits());
+        assert_ne!(w.best.plan, stray);
+    }
+
+    #[test]
+    fn warm_beam_never_loses_to_presets_and_is_deterministic() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let pred = *space
+            .plans(&sc)
+            .iter()
+            .find(|p| !Plan::presets(&sc).contains(p))
+            .unwrap();
+        let cfg = SearchCfg {
+            beam: 3,
+            predicted: Some(pred),
+            ..SearchCfg::default()
+        };
+        let a = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        let b = search("mi300x-8", &m, &sc, &space, &cfg, &EvalCache::new());
+        assert!(a.best.makespan <= a.best_legacy.1);
+        assert_eq!(a.best.plan, b.best.plan);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.pruned, b.pruned);
+    }
+
+    #[test]
+    fn bound_in_is_memoized_and_off_the_books() {
+        let m = machine();
+        let sc = sc();
+        let cache = EvalCache::new();
+        let mut ev = Evaluator::new();
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let b1 = cache.bound_in(&mut ev, "mi300x-8", &m, &sc, &plan);
+        let b2 = cache.bound_in(&mut ev, "mi300x-8", &m, &sc, &plan);
+        assert_eq!(b1.to_bits(), b2.to_bits());
+        assert_eq!(b1.to_bits(), plan_lower_bound(&m, &sc, &plan).to_bits());
+        assert_eq!(cache.hits(), 0, "bound reads are ordering metadata");
+        assert_eq!(cache.misses(), 0);
+        // The bound stays a true lower bound of the simulation.
+        let ms = cache.makespan_in(&mut ev, "mi300x-8", &m, &sc, &plan);
+        assert!(b1 <= ms * (1.0 + 1e-9));
     }
 
     #[test]

@@ -103,6 +103,7 @@ mod tests {
         let cfg = SearchCfg {
             beam: 2,
             prune: true,
+            ..SearchCfg::default()
         };
         let examples = calibration_examples(&spec, &ov, &cfg, 2).unwrap();
         assert_eq!(examples.len(), 1);

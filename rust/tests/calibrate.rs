@@ -42,6 +42,7 @@ fn cfg() -> SearchCfg {
     SearchCfg {
         beam: 2,
         prune: true,
+        ..SearchCfg::default()
     }
 }
 

@@ -1,0 +1,290 @@
+//! Integration: the warm-started, best-bound-first search order is an
+//! *ordering* change only — every reported artifact of the search
+//! (best plan, makespan bits, baseline bits, best legacy kind) is
+//! bit-identical to the cold enumeration-order reference, while the
+//! warm walk never simulates more candidates than the cold one.
+//! Differentials run with the strict rate-conservation checker armed.
+
+use ficco::hw::Machine;
+use ficco::plan::Plan;
+use ficco::schedule::exec::Evaluator;
+use ficco::schedule::Scenario;
+use ficco::search::{search, search_in, EvalCache, SearchCfg, SpaceOverrides, SpaceSpec};
+
+/// Arm the incremental-rates differential checker for every simulated
+/// tick in this process — ordering bugs that corrupt evaluator reuse
+/// would surface here as rate-conservation panics.
+fn strict() {
+    std::env::set_var("FICCO_SIM_CHECK_RATES", "1");
+}
+
+fn cold_cfg() -> SearchCfg {
+    SearchCfg {
+        warm: false,
+        ..SearchCfg::default()
+    }
+}
+
+/// The differential grid: both Table-I-style machines, a compute-bound
+/// and a comm-bound scenario, uniform and expert-imbalanced routing.
+fn cells() -> Vec<(String, Machine, Scenario)> {
+    let scenarios = |ngpus: usize| {
+        vec![
+            Scenario::new("ord-g6-like", 262144, 2048, 8192).with_ngpus(ngpus),
+            Scenario::new("ord-small", 8192, 512, 1024).with_ngpus(ngpus),
+        ]
+    };
+    let mut out = Vec::new();
+    for sc in scenarios(8) {
+        out.push(("mi300x-8".to_string(), Machine::mi300x_8(), sc.clone()));
+        out.push((
+            "mi300x-8".to_string(),
+            Machine::mi300x_8(),
+            sc.with_skew(0.8, ficco::explore::DEFAULT_SKEW_SEED),
+        ));
+    }
+    for sc in scenarios(4) {
+        out.push(("pcie-gen4-4".to_string(), Machine::pcie_gen4_4(), sc.clone()));
+        out.push((
+            "pcie-gen4-4".to_string(),
+            Machine::pcie_gen4_4(),
+            sc.with_skew(0.8, ficco::explore::DEFAULT_SKEW_SEED),
+        ));
+    }
+    out
+}
+
+fn small_space(sc: &Scenario) -> SpaceSpec {
+    ficco::search::space_for(
+        sc,
+        &SpaceOverrides {
+            pieces: Some(vec![1, 4, 8]),
+            slots: Some(vec![1, 3, 7]),
+            mechs: None,
+        },
+    )
+}
+
+#[test]
+fn warm_search_is_bit_identical_to_cold_on_every_cell() {
+    strict();
+    for (name, m, sc) in cells() {
+        let space = small_space(&sc);
+        let warm = search(&name, &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+        let cold = search(&name, &m, &sc, &space, &cold_cfg(), &EvalCache::new());
+        let cell = format!("{name} × {}", sc.name);
+        assert_eq!(warm.best.plan, cold.best.plan, "{cell}: best plan diverged");
+        assert_eq!(
+            warm.best.makespan.to_bits(),
+            cold.best.makespan.to_bits(),
+            "{cell}: best makespan bits diverged"
+        );
+        assert_eq!(
+            warm.baseline.to_bits(),
+            cold.baseline.to_bits(),
+            "{cell}: baseline bits diverged"
+        );
+        assert_eq!(warm.best_legacy.0, cold.best_legacy.0, "{cell}: legacy kind");
+        assert_eq!(
+            warm.best_legacy.1.to_bits(),
+            cold.best_legacy.1.to_bits(),
+            "{cell}: legacy makespan bits"
+        );
+        // Same candidate universe: evaluated + pruned partitions it in
+        // both modes (no predicted seed outside the space here).
+        assert_eq!(
+            warm.evaluated + warm.pruned,
+            cold.evaluated + cold.pruned,
+            "{cell}: candidate totals diverged"
+        );
+        // The ordering theorem: warm's evaluated set is exactly the
+        // candidates whose bound fits under the final best's margin —
+        // a subset of what any enumeration-order walk simulates.
+        assert!(
+            warm.evaluated <= cold.evaluated,
+            "{cell}: warm simulated more ({} > {})",
+            warm.evaluated,
+            cold.evaluated
+        );
+    }
+}
+
+#[test]
+fn warm_search_with_the_right_prediction_records_a_warm_hit() {
+    strict();
+    let (name, m, sc) = ("mi300x-8".to_string(), Machine::mi300x_8(), Scenario::new("ord-hit", 262144, 2048, 8192));
+    let space = small_space(&sc);
+    let reference = search(&name, &m, &sc, &space, &cold_cfg(), &EvalCache::new());
+    let mut ev = Evaluator::new();
+    let out = search_in(
+        &mut ev,
+        &name,
+        &m,
+        &sc,
+        &space,
+        &SearchCfg {
+            predicted: Some(reference.best.plan),
+            ..SearchCfg::default()
+        },
+        &EvalCache::new(),
+    );
+    assert_eq!(out.best.plan, reference.best.plan);
+    assert_eq!(out.best.makespan.to_bits(), reference.best.makespan.to_bits());
+    assert!(
+        ev.counters.warm_hits >= 1,
+        "a correct prediction must count as a warm-seed hit"
+    );
+}
+
+#[test]
+fn out_of_space_prediction_changes_nothing() {
+    strict();
+    let (name, m, sc) = ("mi300x-8".to_string(), Machine::mi300x_8(), Scenario::new("ord-stray", 8192, 512, 1024));
+    let space = small_space(&sc);
+    // A valid plan that the narrowed space cannot produce.
+    let stray = Plan {
+        pieces: 2,
+        ..Plan::preset(ficco::schedule::Kind::ALL[0], &sc)
+    };
+    assert!(!space.plans(&sc).contains(&stray), "stray must be out of space");
+    let with = search(
+        &name,
+        &m,
+        &sc,
+        &space,
+        &SearchCfg {
+            predicted: Some(stray),
+            ..SearchCfg::default()
+        },
+        &EvalCache::new(),
+    );
+    let without = search(&name, &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+    assert_eq!(with.best.plan, without.best.plan);
+    assert_eq!(with.best.makespan.to_bits(), without.best.makespan.to_bits());
+    assert_eq!(with.evaluated, without.evaluated, "stray seed must not be simulated");
+    assert_eq!(with.pruned, without.pruned);
+}
+
+#[test]
+fn warm_beam_is_deterministic_and_never_loses_to_presets() {
+    strict();
+    for (name, m, sc) in cells() {
+        let space = small_space(&sc);
+        let cfg = SearchCfg {
+            beam: 3,
+            ..SearchCfg::default()
+        };
+        let a = search(&name, &m, &sc, &space, &cfg, &EvalCache::new());
+        let b = search(&name, &m, &sc, &space, &cfg, &EvalCache::new());
+        assert_eq!(a.best.plan, b.best.plan, "{}: beam nondeterminism", sc.name);
+        assert_eq!(a.best.makespan.to_bits(), b.best.makespan.to_bits());
+        assert!(
+            a.best.makespan <= a.best_legacy.1 * (1.0 + 1e-12),
+            "{}: beam best lost to the legacy presets",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn reused_evaluator_cell_scope_matches_fresh_evaluators() {
+    strict();
+    // One evaluator reused across the whole grid under begin_cell /
+    // end_cell must report the same bits as a throwaway per cell —
+    // the shared-lowering cache is observationally pure.
+    let mut ev = Evaluator::new();
+    for (name, m, sc) in cells() {
+        let space = small_space(&sc);
+        ev.begin_cell(&sc);
+        let reused = search_in(
+            &mut ev,
+            &name,
+            &m,
+            &sc,
+            &space,
+            &SearchCfg::default(),
+            &EvalCache::new(),
+        );
+        ev.end_cell();
+        let fresh = search(&name, &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+        let cell = format!("{name} × {}", sc.name);
+        assert_eq!(reused.best.plan, fresh.best.plan, "{cell}: plan");
+        assert_eq!(
+            reused.best.makespan.to_bits(),
+            fresh.best.makespan.to_bits(),
+            "{cell}: makespan bits"
+        );
+        assert_eq!(
+            reused.baseline.to_bits(),
+            fresh.baseline.to_bits(),
+            "{cell}: baseline bits"
+        );
+        assert_eq!(reused.evaluated, fresh.evaluated, "{cell}: evaluated");
+        assert_eq!(reused.pruned, fresh.pruned, "{cell}: pruned");
+    }
+}
+
+#[test]
+fn tune_results_agree_warm_vs_cold_and_across_jobs() {
+    strict();
+    use ficco::explore::SweepSpec;
+    use ficco::schedule::Kind;
+    use ficco::sim::CommMech;
+
+    let spec = SweepSpec {
+        scenarios: vec![
+            Scenario::new("ord-a", 8192, 512, 1024),
+            Scenario::new("ord-b", 4096, 256, 2048),
+        ],
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![
+            ("mi300x-8".into(), Machine::mi300x_8()),
+            ("pcie-gen4-4".into(), Machine::pcie_gen4_4()),
+        ],
+        mechs: vec![CommMech::Dma],
+        gpu_counts: Vec::new(),
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
+        search: None,
+        model: None,
+    };
+    let ov = SpaceOverrides {
+        pieces: Some(vec![1, 4, 8]),
+        slots: Some(vec![1, 3]),
+        mechs: None,
+    };
+    let run = |cfg: &SearchCfg, jobs: usize| ficco::search::tune(&spec, &ov, cfg, jobs, |_| true);
+    let warm1 = run(&SearchCfg::default(), 1);
+    let warm4 = run(&SearchCfg::default(), 4);
+    let cold1 = run(&cold_cfg(), 1);
+    assert_eq!(warm1.results.len(), cold1.results.len());
+    for ((w, w4), c) in warm1.results.iter().zip(&warm4.results).zip(&cold1.results) {
+        let cell = format!("{} × {} (skew {})", w.machine_name, w.scenario, w.skew);
+        // Warm vs cold: every *result* field agrees bit-for-bit; only
+        // the evaluated/pruned effort split may differ.
+        assert_eq!(w.best_plan, c.best_plan, "{cell}: best plan");
+        assert_eq!(
+            w.best_makespan.to_bits(),
+            c.best_makespan.to_bits(),
+            "{cell}: best makespan"
+        );
+        assert_eq!(
+            w.baseline_makespan.to_bits(),
+            c.baseline_makespan.to_bits(),
+            "{cell}: baseline"
+        );
+        assert_eq!(w.evaluated + w.pruned, c.evaluated + c.pruned, "{cell}: totals");
+        assert!(w.evaluated <= c.evaluated, "{cell}: warm evaluated more");
+        // Jobs 1 vs 4 under the same mode: everything agrees,
+        // including the effort split (the search itself is serial per
+        // cell; the pool only reorders cell completion).
+        assert_eq!(w.best_plan, w4.best_plan, "{cell}: jobs best plan");
+        assert_eq!(
+            w.best_makespan.to_bits(),
+            w4.best_makespan.to_bits(),
+            "{cell}: jobs makespan"
+        );
+        assert_eq!(w.evaluated, w4.evaluated, "{cell}: jobs evaluated");
+        assert_eq!(w.pruned, w4.pruned, "{cell}: jobs pruned");
+    }
+}

@@ -54,6 +54,7 @@ fn skewed_search_explores_a_genuinely_new_region() {
     let cfg = SearchCfg {
         beam: 0,
         prune: true,
+        ..SearchCfg::default()
     };
     let uniform = base_scenario();
     let skewed = base_scenario().with_skew(1.2, DEFAULT_SKEW_SEED);

@@ -121,6 +121,7 @@ fn sweep_with_plan_search_fills_best_plan_deterministically() {
     spec.search = Some(ficco::search::SearchCfg {
         beam: 2,
         prune: true,
+        ..Default::default()
     });
     let render = |jobs: usize| {
         let mut csv = CsvEmitter::new(Vec::new()).unwrap();

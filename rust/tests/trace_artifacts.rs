@@ -57,7 +57,11 @@ fn meta_for(sc: &Scenario, plan: &Plan) -> TraceMeta {
 /// best plan's timeline and render both artifacts.
 fn searched_artifacts(jobs: usize) -> (String, String) {
     let spec = single_cell_spec();
-    let cfg = SearchCfg { beam: 0, prune: true };
+    let cfg = SearchCfg {
+        beam: 0,
+        prune: true,
+        ..SearchCfg::default()
+    };
     let report = tune(&spec, &small_space(), &cfg, jobs, |_| true);
     let best = &report.results[0];
     let plan = Plan::parse_id(&best.best_plan).expect("searched plan id parses");

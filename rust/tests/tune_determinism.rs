@@ -47,7 +47,11 @@ fn small_space() -> SpaceOverrides {
 
 fn render(jobs: usize, beam: usize) -> (String, String, Vec<usize>) {
     let spec = small_spec();
-    let cfg = SearchCfg { beam, prune: true };
+    let cfg = SearchCfg {
+        beam,
+        prune: true,
+        ..SearchCfg::default()
+    };
     let mut csv = TuneCsvEmitter::new(Vec::new()).unwrap();
     let mut json = TuneJsonEmitter::new(Vec::new()).unwrap();
     let mut order = Vec::new();
@@ -106,7 +110,11 @@ fn tune_never_loses_to_the_best_legacy_kind() {
     // both exhaustive and beam strategies.
     let spec = small_spec();
     for beam in [0usize, 3] {
-        let cfg = SearchCfg { beam, prune: true };
+        let cfg = SearchCfg {
+            beam,
+            prune: true,
+            ..SearchCfg::default()
+        };
         let report = tune(&spec, &small_space(), &cfg, 2, |_| true);
         for r in &report.results {
             assert!(

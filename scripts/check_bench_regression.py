@@ -3,28 +3,35 @@
 
 Usage: check_bench_regression.py COMMITTED_JSON FRESH_JSON
 
-Rules (ISSUE 6, CI `sim-differential` job):
+Rules (ISSUE 6/7/8, CI `sim-differential` job):
 
+- Every measurement section present in the committed baseline must
+  also be present in the fresh run — a candidate that silently drops a
+  gated block (e.g. a bench refactor losing the `search` section) is a
+  loud failure, not a skipped gate.
 - The fresh run must be structurally sound: the tune-cell and
   fair-sharing sections present, evaluations/sec positive, and the
   incremental fair-sharing path not slower than the kept-verbatim
   from-scratch recompute measured in the same run (small noise
   allowance for --quick CI boxes).
+- ISSUE 8: when the fresh run carries a `search` section, the
+  relational gates are always on (they compare numbers measured within
+  one process, so no baseline is needed): the warm-started walk must
+  simulate strictly fewer candidates than the cold enumeration-order
+  walk, prune at least as large a fraction, and report the bitwise
+  identical best plan.
 - If the committed snapshot is a real rust-bench measurement (no
   "provenance" marker; positive throughput numbers), apply the 20%
   regression rule: fresh evaluations/sec must be at least 0.8x the
-  committed value, for both the tune cell and the incremental
-  fair-sharing figure.
-- If the committed snapshot is marked with a "provenance" note (the
-  authoring-time python-port work-ratio snapshot), absolute
-  throughputs are not comparable across harnesses: skip the absolute
-  gates, say so, and remind the committer to refresh the baseline with
-  a rust-provenance run.
+  committed value, for the tune cell, the incremental fair-sharing
+  figure, and the warm-search figure.
+- If the committed snapshot is marked with a "provenance" note,
+  absolute throughputs are not comparable across harnesses: skip the
+  absolute gates, say so, and remind the committer to refresh the
+  baseline with a rust-provenance run.
 - ISSUE 7: when the fresh run carries a "recorder" section, the
   TimelineRecorder overhead on `run_full` must stay within 1.5x of
-  the recorder-off run (committed baselines predating the section are
-  tolerated — the gate reads the fresh run only, since the ratio is
-  measured within one process).
+  the recorder-off run.
 
 Exit 0 on pass, 1 on any gate failure.
 """
@@ -46,6 +53,16 @@ def main():
     with open(sys.argv[2]) as f:
         fresh = json.load(f)
 
+    # A gated block committed in the baseline must not vanish from the
+    # candidate: dropping a section would otherwise read as "gate
+    # skipped" instead of "metric lost".
+    for key, value in committed.items():
+        if isinstance(value, dict) and key not in fresh:
+            fail(
+                f"committed baseline has a '{key}' section but the fresh "
+                "run does not — the bench lost a gated metric"
+            )
+
     # Structural soundness of the fresh run.
     for section in ("tune_cell", "fair_sharing"):
         if section not in fresh:
@@ -64,6 +81,35 @@ def main():
         fail(
             "incremental fair sharing is slower than the from-scratch "
             f"recompute: speedup_vs_slow = {fs['speedup_vs_slow']:.3f}"
+        )
+
+    # Warm-search ordering gates (ISSUE 8). All relational: measured
+    # within the fresh run, so they arm with no baseline at all.
+    search = fresh.get("search")
+    if search is not None:
+        for key in ("warm_evals_per_sec", "cold_evals_per_sec"):
+            if not search.get(key, 0.0) > 0.0:
+                fail(f"fresh search.{key} is {search.get(key)}")
+        warm_ev = search.get("warm_evaluated", 0)
+        cold_ev = search.get("cold_evaluated", 0)
+        if not (0 < warm_ev < cold_ev):
+            fail(
+                "warm ordering must simulate strictly fewer candidates than "
+                f"the cold enumeration walk: warm {warm_ev} vs cold {cold_ev}"
+            )
+        if search.get("warm_pruned_fraction", 0.0) < search.get("cold_pruned_fraction", 0.0):
+            fail(
+                "warm ordering pruned a smaller fraction than cold: "
+                f"{search.get('warm_pruned_fraction')} vs "
+                f"{search.get('cold_pruned_fraction')}"
+            )
+        if search.get("best_agrees_bitwise") is not True:
+            fail("warm and cold searches disagree on the best plan (bitwise)")
+        print(
+            f"search gate OK: warm {warm_ev} evals vs cold {cold_ev} "
+            f"(pruned fraction {search.get('warm_pruned_fraction')} vs "
+            f"{search.get('cold_pruned_fraction')}), best plan "
+            f"{search.get('best_plan')} identical"
         )
 
     # Flight-recorder overhead gate (ISSUE 7). The ratio is measured
@@ -85,10 +131,10 @@ def main():
     comparable = "provenance" not in committed
     if not comparable:
         print(
-            "baseline is the authoring-time python-port snapshot "
-            f"(fill work ratio {committed['fair_sharing']['speedup_vs_slow']}); "
-            "absolute throughput gates skipped — refresh BENCH_hotpath.json "
-            "from a rust-bench run to arm the 20% regression rule."
+            "baseline carries a provenance note (authoring-time snapshot, "
+            "not a rust-bench measurement); absolute throughput gates "
+            "skipped — refresh BENCH_hotpath.json from a rust-bench run "
+            "to arm the 20% regression rule."
         )
         print(
             f"fresh: tune cell {fresh_eps:.1f} evals/s, incremental fair sharing "
@@ -109,6 +155,13 @@ def main():
             "incremental fair-sharing evals/sec regressed >20%: "
             f"{fs['incremental_evals_per_sec']:.1f} vs committed {committed_inc:.1f}"
         )
+    committed_warm = committed.get("search", {}).get("warm_evals_per_sec", 0.0)
+    if search is not None and committed_warm > 0.0:
+        if search["warm_evals_per_sec"] < 0.8 * committed_warm:
+            fail(
+                "warm-search evals/sec regressed >20%: "
+                f"{search['warm_evals_per_sec']:.1f} vs committed {committed_warm:.1f}"
+            )
     print(
         f"bench gate OK: tune cell {fresh_eps:.1f} evals/s "
         f"(committed {committed_eps:.1f}), incremental fair sharing "

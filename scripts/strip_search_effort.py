@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Canonicalize a `ficco tune` artifact for warm-vs-cold comparison.
+
+Usage: strip_search_effort.py ARTIFACT [> canonical]
+
+The warm-started search order is bit-identical to the cold
+enumeration-order reference in every *result* field (best plan,
+makespans, speedups, picks), but legitimately differs in search
+*effort*: the `evaluated`/`pruned` split (warm prunes more) and the
+jobs/run-dependent `telemetry` tail. This tool strips exactly those
+fields so `ficco tune --warm on` and `--warm off` artifacts can be
+compared byte-for-byte in CI:
+
+- JSON (`{"results":[...],"telemetry":{...}}`): keep only `results`,
+  drop each row's `evaluated` and `pruned`, re-emit with sorted keys
+  and a fixed separator so the output is canonical.
+- CSV (tune header): drop the `evaluated` and `pruned` columns by
+  header name, keep row order and every other column byte-verbatim.
+
+Any other shape is an error — this is a comparison gate, so a file we
+do not recognize must fail loudly rather than canonicalize to ''.
+"""
+
+import json
+import sys
+
+EFFORT_FIELDS = ("evaluated", "pruned")
+
+
+def fail(msg):
+    print(f"strip_search_effort: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def strip_json(text):
+    doc = json.loads(text)
+    if not isinstance(doc, dict) or "results" not in doc:
+        fail("JSON artifact has no 'results' array")
+    rows = doc["results"]
+    if not isinstance(rows, list):
+        fail("'results' is not an array")
+    out = []
+    for row in rows:
+        if not isinstance(row, dict):
+            fail("non-object row in 'results'")
+        out.append({k: v for k, v in row.items() if k not in EFFORT_FIELDS})
+    return json.dumps({"results": out}, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+def strip_csv(text):
+    lines = text.splitlines()
+    if not lines:
+        fail("empty CSV artifact")
+    header = lines[0].split(",")
+    keep = [i for i, name in enumerate(header) if name not in EFFORT_FIELDS]
+    if len(keep) != len(header) - len(EFFORT_FIELDS):
+        fail(f"CSV header lacks the effort columns {EFFORT_FIELDS}: {lines[0]!r}")
+    out = []
+    for line in lines:
+        cols = line.split(",")
+        if len(cols) != len(header):
+            fail(f"ragged CSV row ({len(cols)} cols, header has {len(header)}): {line!r}")
+        out.append(",".join(cols[i] for i in keep))
+    return "\n".join(out) + "\n"
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} ARTIFACT")
+    with open(sys.argv[1]) as f:
+        text = f.read()
+    stripped = text.lstrip()
+    if stripped.startswith("{") or stripped.startswith("["):
+        sys.stdout.write(strip_json(text))
+    else:
+        sys.stdout.write(strip_csv(text))
+
+
+if __name__ == "__main__":
+    main()

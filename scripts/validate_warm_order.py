@@ -1,0 +1,206 @@
+#!/usr/bin/env python3
+"""Property-validate the warm-started search ordering (ISSUE 8).
+
+A faithful python port of `search_in`'s exhaustive branch
+(rust/src/search/mod.rs) — cold enumeration-order walk vs the
+warm-started best-bound-first walk with seed phase, carried cell
+incumbent, and sorted-tail mass prune — exercised over thousands of
+randomized synthetic plan spaces with heavy float-equal makespan ties.
+
+Synthetic evaluator: each "plan" is an integer; its makespan is a
+deterministic quantized hash (quantization manufactures exact-tie
+collisions, the adversarial case for ordering changes) and its bound a
+deterministic fraction of the makespan (sometimes exactly tight,
+another adversarial case for the 1+1e-9 margin).
+
+Checked on every trial:
+
+ 1. warm and cold report the bitwise-identical best (plan id and
+    makespan), for every predicted-seed shape (none / preset /
+    in-space / out-of-space);
+ 2. evaluated + pruned partition the same deduped candidate universe;
+ 3. warm never simulates more candidates than cold (plus at most the
+    one unconditional predicted seed);
+ 4. warm's evaluated set is contained in cold's (plus the seed) — the
+    ordering-theorem set inclusion, not just the count;
+ 5. every warm-pruned candidate is strictly worse than the final best
+    (the tail cut never discards a potential tie);
+ 6. a carried cell incumbent (any candidate's makespan, as
+    `tune_cell_in` carries) changes neither the result bits nor the
+    evaluated set.
+
+Exit 0 with a summary line on success; assertion failure otherwise.
+"""
+
+import hashlib
+import random
+import struct
+import sys
+
+MARGIN = 1.0 + 1e-9
+PRESETS = 6
+
+
+def bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def h(plan, salt, space_seed):
+    d = hashlib.sha256(f"{space_seed}:{salt}:{plan}".encode()).digest()
+    return int.from_bytes(d[:8], "little")
+
+
+def makespan(plan, space_seed, tie_quantum):
+    # Quantized so distinct plans collide on exact float equality.
+    return 1.0 + (h(plan, "ms", space_seed) % tie_quantum) / 8.0
+
+
+def bound(plan, space_seed, tie_quantum):
+    ms = makespan(plan, space_seed, tie_quantum)
+    r = h(plan, "lb", space_seed) % 100
+    if r < 20:
+        return ms  # exactly tight bound
+    return ms * (0.3 + 0.7 * (r / 100.0))
+
+
+class Walk:
+    """One search over (presets, space): mirrors search_in exactly."""
+
+    def __init__(self, presets, space, space_seed, tie_quantum):
+        self.space_seed = space_seed
+        self.tie_quantum = tie_quantum
+        self.presets = presets
+        self.space = space
+        self.evaluated = []  # plan ids, in visit order
+        self.pruned = []
+        # Preset phase (both modes identical).
+        self.seen = []
+        self.inc_ms = None
+        self.inc_plan = None
+        self.inc_canon = None
+        for i, p in enumerate(presets):
+            self.seen.append(p)
+            self._eval(p, i)
+        # Deduped space with canonical enumeration indices.
+        self.pending = []
+        canon = PRESETS
+        for p in space:
+            if p in self.seen:
+                continue
+            self.seen.append(p)
+            self.pending.append((canon, p))
+            canon += 1
+
+    def _eval(self, plan, canon):
+        ms = makespan(plan, self.space_seed, self.tie_quantum)
+        self.evaluated.append(plan)
+        self._offer(plan, ms, canon)
+        return ms
+
+    def _offer(self, plan, ms, canon):
+        if self.inc_ms is None or ms < self.inc_ms or (ms == self.inc_ms and canon < self.inc_canon):
+            self.inc_ms, self.inc_plan, self.inc_canon = ms, plan, canon
+
+    def cold(self):
+        for canon, p in self.pending:
+            cutoff = self.inc_ms * MARGIN
+            if bound(p, self.space_seed, self.tie_quantum) > cutoff:
+                self.pruned.append(p)
+            else:
+                self._eval(p, canon)
+        return self
+
+    def warm(self, predicted=None, carried=None):
+        # Seed phase: the predicted plan, iff it is a pending space
+        # member (presets are already evaluated; anything else ignored).
+        pos = next((i for i, (_, p) in enumerate(self.pending) if p == predicted), None)
+        if pos is not None:
+            canon, p = self.pending.pop(pos)
+            self._eval(p, canon)
+        # Carried incumbent: only when its plan is a candidate here.
+        carried_ms = float("inf")
+        if carried is not None and carried in self.seen:
+            carried_ms = makespan(carried, self.space_seed, self.tie_quantum)
+        # Order phase: ascending (bound, canon).
+        ordered = sorted(
+            ((bound(p, self.space_seed, self.tie_quantum), canon, p) for canon, p in self.pending),
+            key=lambda t: (t[0], t[1]),
+        )
+        # Walk phase with the sorted-tail mass prune.
+        for i, (b, canon, p) in enumerate(ordered):
+            cutoff = min(self.inc_ms, carried_ms) * MARGIN
+            if b > cutoff:
+                self.pruned.extend(p for _, _, p in ordered[i:])
+                break
+            self._eval(p, canon)
+        return self
+
+
+def random_trial(rng, trial):
+    space_seed = trial
+    tie_quantum = rng.choice([4, 8, 16, 64])  # smaller = more exact ties
+    universe = rng.randrange(1_000_000)
+    presets = [universe * 1000 + i for i in range(PRESETS)]
+    n_space = rng.randrange(0, 60)
+    space = []
+    for _ in range(n_space):
+        roll = rng.random()
+        if roll < 0.1 and space:
+            space.append(rng.choice(space))  # duplicate
+        elif roll < 0.2:
+            space.append(rng.choice(presets))  # preset re-enumerated
+        else:
+            space.append(universe * 1000 + 100 + rng.randrange(200))
+    mk = lambda: Walk(presets, list(space), space_seed, tie_quantum)
+
+    cold = mk().cold()
+    total = len(cold.evaluated) + len(cold.pruned)
+    best = (cold.inc_plan, bits(cold.inc_ms))
+
+    # Predicted-seed shapes: none, a preset, an in-space member, a
+    # stranger; carried shapes: none, the optimum, a random candidate.
+    preds = [None, rng.choice(presets), universe * 1000 + 999_999]
+    if space:
+        preds.append(rng.choice(space))
+    carrieds = [None, cold.inc_plan] + ([rng.choice(space)] if space else [])
+    for pred in preds:
+        for carried in carrieds:
+            w = mk().warm(predicted=pred, carried=carried)
+            name = f"trial {trial} pred={pred} carried={carried}"
+            assert (w.inc_plan, bits(w.inc_ms)) == best, f"{name}: best diverged"
+            assert len(w.evaluated) + len(w.pruned) == total, f"{name}: universe split"
+            seeded = pred is not None and pred in w.evaluated[PRESETS : PRESETS + 1]
+            slack = 1 if seeded else 0
+            assert len(w.evaluated) <= len(cold.evaluated) + slack, (
+                f"{name}: warm simulated more ({len(w.evaluated)} vs {len(cold.evaluated)})"
+            )
+            extra = set(w.evaluated) - set(cold.evaluated)
+            assert extra <= ({pred} if pred is not None else set()), (
+                f"{name}: warm evaluated outside cold's set: {extra}"
+            )
+            for p in w.pruned:
+                ms = makespan(p, space_seed, tie_quantum)
+                assert ms > w.inc_ms, f"{name}: pruned a potential tie/best ({p}: {ms})"
+            if carried is not None and pred is None:
+                plain = mk().warm()
+                assert set(plain.evaluated) == set(w.evaluated), (
+                    f"{name}: carried incumbent changed the evaluated set"
+                )
+    return total
+
+
+def main():
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+    rng = random.Random(20260808)
+    candidates = 0
+    for trial in range(trials):
+        candidates += random_trial(rng, trial)
+    print(
+        f"validate_warm_order: OK — {trials} randomized spaces "
+        f"({candidates} candidates), warm bitwise-identical to cold, "
+        "never more simulations, ties never pruned"
+    )
+
+
+if __name__ == "__main__":
+    main()
