@@ -163,7 +163,7 @@ impl Args {
 /// (switch names are global: parsing must know them before the
 /// subcommand is dispatched).
 pub const KNOWN_SWITCHES: &[&str] =
-    &["all", "verbose", "csv", "no-overlap-report", "stats", "quiet"];
+    &["all", "verbose", "csv", "no-overlap-report", "stats", "quiet", "resume"];
 
 /// Every `ficco` subcommand, in help order.
 pub const SUBCOMMANDS: &[&str] = &[
@@ -198,16 +198,17 @@ pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [
         "sweep" => Some((
             &[
                 "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
-                "out-dir", "search", "warm", "model",
+                "out-dir", "search", "warm", "model", "robust", "robust-seed", "robust-mag",
             ],
-            &["verbose", "csv", "stats", "quiet"],
+            &["verbose", "csv", "stats", "quiet", "resume"],
         )),
         "tune" => Some((
             &[
                 "scenarios", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs", "out-dir",
-                "beam", "warm", "pieces", "slots", "model", "trace-out",
+                "beam", "warm", "pieces", "slots", "model", "trace-out", "robust", "robust-seed",
+                "robust-mag",
             ],
-            &["verbose", "csv", "stats", "quiet"],
+            &["verbose", "csv", "stats", "quiet", "resume"],
         )),
         "trace" => Some((
             &[
@@ -427,6 +428,22 @@ mod tests {
         assert!(strict(vec!["validate", "--artifacts", "a", "--m", "64"]).is_ok());
         assert!(strict(vec!["train", "--preset", "tiny", "--no-overlap-report"]).is_ok());
         assert!(strict(vec!["calibrate", "--holdout", "holdout:4:7", "--out", "m.ficco"]).is_ok());
+    }
+
+    #[test]
+    fn strict_knows_the_robustness_flags() {
+        assert!(strict(vec!["tune", "--robust", "p95:8", "--robust-seed", "7"]).is_ok());
+        assert!(strict(vec!["tune", "--robust", "worst:4", "--robust-mag", "0.1,0.2,0.5"]).is_ok());
+        assert!(strict(vec!["tune", "--resume", "--out-dir", "r"]).is_ok());
+        assert!(strict(vec!["sweep", "--search", "beam", "--robust", "p95:8"]).is_ok());
+        assert!(strict(vec!["sweep", "--resume", "--out-dir", "r"]).is_ok());
+        // Only sweep/tune honor them.
+        assert!(strict(vec!["simulate", "--robust", "p95:8"]).is_err());
+        assert!(strict(vec!["trace", "--robust", "p95:8"]).is_err());
+        assert!(strict(vec!["calibrate", "--resume"]).is_err());
+        assert!(strict(vec!["simulate", "--resume"]).is_err());
+        // --resume is a switch: a value form must be rejected.
+        assert!(Args::parse(vec!["tune", "--resume=1"], KNOWN_SWITCHES).is_err());
     }
 
     #[test]

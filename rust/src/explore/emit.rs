@@ -14,12 +14,164 @@
 
 use std::io::{self, Write};
 
-use super::CellResult;
+use super::{BestPlan, CellResult, KindRow};
 use crate::metrics::Exhibit;
 use crate::obs::Telemetry;
 use crate::schedule::Kind;
 use crate::util::stats;
 use crate::util::table::{f, Align, Table};
+
+/// Bit-exact f64 serialization for the resume journal: the hex of
+/// `to_bits`, parsed back with `from_bits` — round-trips every value
+/// (negative zero, subnormals) exactly, which is what makes resumed
+/// artifacts byte-identical to straight-through runs.
+pub(crate) fn fbits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+pub(crate) fn parse_fbits(s: &str) -> Option<f64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// Serialize one [`CellResult`] as a resume-journal record: one field
+/// per line in struct order, floats as [`fbits`] hex so a resumed run
+/// reproduces the original artifact byte-for-byte. The `-` sentinel
+/// marks absent optionals (plan ids and kind names never equal `-`).
+pub fn cell_record(c: &CellResult) -> String {
+    let mut out = String::from("ficco-cell-v1\n");
+    out.push_str(&format!("{}\n", c.index));
+    out.push_str(&format!("{}\n", c.machine_name));
+    out.push_str(&format!("{}\n", c.topology));
+    out.push_str(&format!("{}\n", c.ngpus));
+    out.push_str(&format!("{}\n", c.scenario));
+    out.push_str(&format!("{}\n", c.collective));
+    out.push_str(&format!("{}\n", c.mech));
+    out.push_str(&format!("{}\n", fbits(c.skew)));
+    out.push_str(&format!("{}\n{}\n{}\n", c.m, c.n, c.k));
+    out.push_str(&format!("{}\n", c.pick.name()));
+    out.push_str(&format!(
+        "{}\n",
+        c.oracle.map(Kind::name).unwrap_or("-")
+    ));
+    out.push_str(&format!("{}\n", fbits(c.ideal_speedup)));
+    out.push_str(&format!("{}\n", fbits(c.eval_seconds)));
+    match &c.best_plan {
+        Some(b) => out.push_str(&format!("{} {}\n", b.id, fbits(b.speedup))),
+        None => out.push_str("-\n"),
+    }
+    match &c.model_plan {
+        Some(p) => out.push_str(&format!("{p}\n")),
+        None => out.push_str("-\n"),
+    }
+    out.push_str(&format!("rows {}\n", c.rows.len()));
+    for r in &c.rows {
+        out.push_str(&format!(
+            "{} {} {} {} {} {} {} {} {} {}\n",
+            r.kind.name(),
+            fbits(r.makespan),
+            fbits(r.speedup),
+            fbits(r.gemm_leg),
+            fbits(r.comm_leg),
+            fbits(r.gemm_cil),
+            fbits(r.comm_cil),
+            r.n_tasks,
+            r.is_pick,
+            r.is_oracle,
+        ));
+    }
+    out.pop();
+    out
+}
+
+/// Parse a [`cell_record`] payload. Any malformed/truncated/
+/// version-mismatched record yields `None`, which resume treats as
+/// "cell not done" — the fail-safe is re-running a cell, never
+/// emitting corrupt data.
+pub fn parse_cell_record(s: &str) -> Option<CellResult> {
+    let mut lines = s.lines();
+    if lines.next()? != "ficco-cell-v1" {
+        return None;
+    }
+    let index = lines.next()?.parse().ok()?;
+    let machine_name = lines.next()?.to_string();
+    let topology = lines.next()?.to_string();
+    let ngpus = lines.next()?.parse().ok()?;
+    let scenario = lines.next()?.to_string();
+    let collective = lines.next()?.to_string();
+    let mech = lines.next()?.to_string();
+    let skew = parse_fbits(lines.next()?)?;
+    let m = lines.next()?.parse().ok()?;
+    let n = lines.next()?.parse().ok()?;
+    let k = lines.next()?.parse().ok()?;
+    let pick = Kind::parse(lines.next()?)?;
+    let oracle = match lines.next()? {
+        "-" => None,
+        name => Some(Kind::parse(name)?),
+    };
+    let ideal_speedup = parse_fbits(lines.next()?)?;
+    let eval_seconds = parse_fbits(lines.next()?)?;
+    let best_plan = match lines.next()? {
+        "-" => None,
+        line => {
+            let (id, sp) = line.rsplit_once(' ')?;
+            Some(BestPlan {
+                id: id.to_string(),
+                speedup: parse_fbits(sp)?,
+            })
+        }
+    };
+    let model_plan = match lines.next()? {
+        "-" => None,
+        p => Some(p.to_string()),
+    };
+    let nrows: usize = lines.next()?.strip_prefix("rows ")?.parse().ok()?;
+    let mut rows = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        let mut f = lines.next()?.split(' ');
+        let row = KindRow {
+            kind: Kind::parse(f.next()?)?,
+            makespan: parse_fbits(f.next()?)?,
+            speedup: parse_fbits(f.next()?)?,
+            gemm_leg: parse_fbits(f.next()?)?,
+            comm_leg: parse_fbits(f.next()?)?,
+            gemm_cil: parse_fbits(f.next()?)?,
+            comm_cil: parse_fbits(f.next()?)?,
+            n_tasks: f.next()?.parse().ok()?,
+            is_pick: f.next()?.parse().ok()?,
+            is_oracle: f.next()?.parse().ok()?,
+        };
+        if f.next().is_some() {
+            return None;
+        }
+        rows.push(row);
+    }
+    if lines.next().is_some() {
+        return None;
+    }
+    Some(CellResult {
+        index,
+        machine_name,
+        topology,
+        ngpus,
+        scenario,
+        collective,
+        mech,
+        skew,
+        m,
+        n,
+        k,
+        pick,
+        oracle,
+        ideal_speedup,
+        rows,
+        best_plan,
+        model_plan,
+        eval_seconds,
+    })
+}
 
 /// Column header shared by the CSV emitter and its tests. The
 /// best-plan columns are filled only when the sweep ran with a
@@ -385,6 +537,54 @@ mod tests {
             }
             assert_eq!(cols, ncols, "{line}");
         }
+    }
+
+    #[test]
+    fn every_kind_name_round_trips_through_parse() {
+        for k in Kind::ALL {
+            assert_eq!(Kind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn cell_record_round_trips_to_identical_emitter_bytes() {
+        let mut c = results().remove(0);
+        // Exercise the optional fields too.
+        c.best_plan = Some(BestPlan {
+            id: "row-d8-fused-hs-s7-dma".to_string(),
+            speedup: 1.2345678901234567,
+        });
+        c.model_plan = Some("col-d4-fused-hs-s3-p2p".to_string());
+        c.oracle = Some(Kind::UniformFused1D);
+        for cell in [&results()[0], &c] {
+            let rec = cell_record(cell);
+            let back = parse_cell_record(&rec).expect("record parses");
+            assert_eq!(csv_rows(&back), csv_rows(cell));
+            assert_eq!(json_cell(&back), json_cell(cell));
+            assert_eq!(back.index, cell.index);
+            assert_eq!(fbits(back.eval_seconds), fbits(cell.eval_seconds));
+        }
+    }
+
+    #[test]
+    fn malformed_cell_records_parse_to_none() {
+        let rec = cell_record(&results()[0]);
+        assert!(parse_cell_record("").is_none());
+        assert!(parse_cell_record("garbage").is_none());
+        assert!(parse_cell_record(&rec[..rec.len() / 2]).is_none());
+        assert!(parse_cell_record(&format!("{rec}\nextra")).is_none());
+        let wrong_version = rec.replacen("ficco-cell-v1", "ficco-cell-v0", 1);
+        assert!(parse_cell_record(&wrong_version).is_none());
+    }
+
+    #[test]
+    fn fbits_round_trips_awkward_floats() {
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE / 2.0, 1e300, f64::INFINITY] {
+            let back = parse_fbits(&fbits(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        assert!(parse_fbits("shorty").is_none());
+        assert!(parse_fbits("zzzzzzzzzzzzzzzz").is_none());
     }
 
     #[test]

@@ -512,11 +512,27 @@ pub fn eval_cell_in(ev: &mut Evaluator, cell: &Cell) -> CellResult {
         };
         let out =
             crate::search::search_in(ev, &cell.machine_name, machine, sc, &space, &cfg, &cache);
+        // Robust selection (`--robust`): re-rank the nominal
+        // survivors under the perturbation ensemble (inside the cell
+        // scope, so perturbed lowering reuses the memoized
+        // partitions) and report the robust winner as the cell's
+        // best plan. With robust off the nominal arm below keeps the
+        // artifact bytes unchanged.
+        let best = match &cfg.robust {
+            Some(rc) => {
+                let rp = crate::search::robust_rerank(ev, machine, sc, &out, rc);
+                BestPlan {
+                    id: rp.plan.id(),
+                    speedup: out.baseline / rp.nominal,
+                }
+            }
+            None => BestPlan {
+                id: out.best.plan.id(),
+                speedup: out.best_speedup(),
+            },
+        };
         ev.end_cell();
-        BestPlan {
-            id: out.best.plan.id(),
-            speedup: out.best_speedup(),
-        }
+        best
     });
     let rows = scev
         .results
@@ -562,6 +578,10 @@ pub struct SweepReport {
     pub jobs: usize,
     /// Cell results in deterministic cell order.
     pub cells: Vec<CellResult>,
+    /// Cells whose worker panicked, by original cell index: the rest
+    /// of the sweep completed, the driver reports these and exits
+    /// nonzero instead of tearing the whole run down.
+    pub failures: Vec<crate::util::pool::ItemPanic>,
     pub wall_seconds: f64,
     /// Merged per-worker counters + timings (jobs-dependent; excluded
     /// from the byte-compared artifact body). Sweep cells use
@@ -596,9 +616,20 @@ impl SweepReport {
 pub fn run<F: FnMut(&CellResult) -> bool>(
     spec: &SweepSpec,
     jobs: usize,
+    on_cell: F,
+) -> SweepReport {
+    run_cells(&spec.cells(), jobs, on_cell)
+}
+
+/// [`run`] over an explicit cell subset — the `--resume` path skips
+/// journaled cells and sweeps only the remainder. `failures` (and the
+/// journal records written by the caller) carry each cell's original
+/// `Cell::index`, not its position in the subset.
+pub fn run_cells<F: FnMut(&CellResult) -> bool>(
+    cells: &[Cell],
+    jobs: usize,
     mut on_cell: F,
 ) -> SweepReport {
-    let cells = spec.cells();
     let merged = Mutex::new(Counters::default());
     let t0 = Instant::now();
     // One reusable evaluator arena per worker: cells on a worker
@@ -606,7 +637,7 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
     // cell's numbers are a pure function of the cell). Each worker's
     // telemetry counters merge once, at join.
     let pool_run = crate::util::pool::run_ordered_with(
-        &cells,
+        cells,
         jobs,
         Evaluator::new,
         |ev, _, cell| eval_cell_in(ev, cell),
@@ -614,6 +645,14 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
         |_, result| on_cell(result),
     );
     let wall_seconds = t0.elapsed().as_secs_f64();
+    let failures = pool_run
+        .failures
+        .iter()
+        .map(|f| crate::util::pool::ItemPanic {
+            index: cells[f.index].index,
+            message: f.message.clone(),
+        })
+        .collect();
     let telemetry = Telemetry {
         jobs: pool_run.jobs,
         wall_seconds,
@@ -626,6 +665,7 @@ pub fn run<F: FnMut(&CellResult) -> bool>(
     SweepReport {
         jobs: pool_run.jobs,
         cells: pool_run.results,
+        failures,
         wall_seconds,
         telemetry,
     }
@@ -753,6 +793,60 @@ mod tests {
         // the report would depend on worker timing.
         assert_eq!(report.cells.len(), 1);
         assert_eq!(report.cells[0].index, 0);
+    }
+
+    #[test]
+    fn run_cells_subset_keeps_original_indices() {
+        let spec = tiny_spec();
+        let cells = spec.cells();
+        let full = run(&spec, 1, |_| true);
+        assert!(full.failures.is_empty());
+        // Resume-style subset: skip the already-journaled prefix.
+        let partial = run_cells(&cells[2..], 1, |_| true);
+        assert_eq!(partial.cells.len(), 2);
+        assert_eq!(partial.cells[0].index, 2);
+        assert_eq!(partial.cells[1].index, 3);
+        for (a, b) in partial.cells.iter().zip(&full.cells[2..]) {
+            assert_eq!(emit::csv_rows(a), emit::csv_rows(b));
+        }
+    }
+
+    #[test]
+    fn robust_sweep_reranks_and_keeps_nominal_rows_bitwise() {
+        use crate::search::{RobustCfg, RobustObjective, SearchCfg};
+        let mut spec = tiny_spec();
+        spec.scenarios.truncate(1);
+        spec.mechs.truncate(1);
+        spec.search = Some(SearchCfg {
+            beam: 2,
+            prune: true,
+            ..SearchCfg::default()
+        });
+        let nominal = run(&spec, 1, |_| true);
+        spec.search = Some(SearchCfg {
+            robust: Some(RobustCfg {
+                objective: RobustObjective::Worst,
+                top_k: 4,
+                ensemble: crate::hw::Perturbation::defaults(3, 42),
+            }),
+            ..spec.search.unwrap()
+        });
+        let robust1 = run(&spec, 1, |_| true);
+        let robust4 = run(&spec, 4, |_| true);
+        // Robust selection is jobs-invariant to the byte.
+        for (a, b) in robust1.cells.iter().zip(&robust4.cells) {
+            assert_eq!(emit::csv_rows(a), emit::csv_rows(b));
+            assert_eq!(emit::json_cell(a), emit::json_cell(b));
+        }
+        // The per-kind rows never depend on the robust re-rank; only
+        // the best_plan column may move.
+        for (n, r) in nominal.cells.iter().zip(&robust1.cells) {
+            for (nr, rr) in n.rows.iter().zip(&r.rows) {
+                assert_eq!(nr.makespan.to_bits(), rr.makespan.to_bits());
+            }
+            assert!(r.best_plan.is_some());
+        }
+        assert!(robust1.telemetry.counters.robust_reranks > 0);
     }
 
     #[test]

@@ -118,6 +118,9 @@ fn cutoffs(feature: Feature) -> &'static [f64] {
         Feature::Combined => &[0.5, 1.0, 2.0, 5.0, 10.0],
         Feature::Imbalance => &[1.05, 1.25, 1.5, 2.0],
         Feature::HotShare => &[0.2, 0.3, 0.5],
+        // Comm share of the critical path (fragility proxy) lives in
+        // (0, 1); the interesting boundary is the comm-bound half.
+        Feature::CommShare => &[0.1, 0.25, 0.5, 0.75],
     }
 }
 

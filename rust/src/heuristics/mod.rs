@@ -56,6 +56,16 @@ pub struct StaticMetrics {
     /// The hot (largest) shard's rows as a fraction of M — `1/ngpus`
     /// under balanced routing.
     pub hot_share: f64,
+    /// Static fragility proxy: estimated communication share of the
+    /// unoverlapped critical path, `comm_t / (comm_t + compute_t)`
+    /// with `compute_t = FLOPs / peak` and `comm_t = output bytes /
+    /// link BW` (the ngpus factor cancels). Near 0 the plan is
+    /// compute-bound and bandwidth jitter is hidden; near 1 it is
+    /// comm-bound and any link degradation lands on the critical path
+    /// — exactly the regime where the ensemble's fragility signature
+    /// (p95/nominal) grows. Calibrated models may threshold on it;
+    /// the frozen Fig-12a rule ignores it.
+    pub comm_share: f64,
 }
 
 pub fn static_metrics(machine: &Machine, sc: &Scenario) -> StaticMetrics {
@@ -68,6 +78,8 @@ pub fn static_metrics(machine: &Machine, sc: &Scenario) -> StaticMetrics {
     let norm_otb = otb / balance;
     let norm_mt = mt / machine.gpu.llc_bytes as f64;
     let part = sc.partition(1);
+    let compute_t = g.flops() / machine.gpu.peak_flops(g.dtype);
+    let comm_t = g.m as f64 * g.n as f64 * g.dtype.bytes() as f64 / machine.topo.link_bw;
     StaticMetrics {
         otb,
         mt,
@@ -79,6 +91,11 @@ pub fn static_metrics(machine: &Machine, sc: &Scenario) -> StaticMetrics {
             0.0
         } else {
             part.max_shard() as f64 / g.m as f64
+        },
+        comm_share: if compute_t + comm_t > 0.0 {
+            comm_t / (compute_t + comm_t)
+        } else {
+            0.0
         },
     }
 }
@@ -464,6 +481,30 @@ mod tests {
             "static pick is shape-driven"
         );
         assert_eq!(ms.combined, mu.combined);
+    }
+
+    #[test]
+    fn comm_share_is_a_bandwidth_sensitive_fragility_proxy() {
+        let sc = Scenario::new("t", 65536, 1024, 4096);
+        // Same GPU, different fabric: the mesh's 64 GB/s links leave a
+        // larger comm share than the 450 GB/s switch — the mesh run is
+        // the more perturbation-fragile one.
+        let mesh = static_metrics(&Machine::mi300x_8(), &sc);
+        let fat = static_metrics(&Machine::switch_8(), &sc);
+        assert!(mesh.comm_share > 0.0 && mesh.comm_share < 1.0);
+        assert!(fat.comm_share > 0.0 && fat.comm_share < 1.0);
+        assert!(
+            mesh.comm_share > fat.comm_share,
+            "slower links must raise the comm share ({} vs {})",
+            mesh.comm_share,
+            fat.comm_share
+        );
+        // The frozen Fig-12a rule reads only the shape metrics, so the
+        // new proxy must not move legacy picks.
+        assert_eq!(
+            pick(&Machine::mi300x_8(), &sc).pick,
+            pick(&Machine::switch_8(), &sc).pick
+        );
     }
 
     #[test]

@@ -43,15 +43,20 @@ pub enum Feature {
     Imbalance,
     /// Hot shard's rows as a fraction of M.
     HotShare,
+    /// Static fragility proxy: estimated comm share of the critical
+    /// path (see [`StaticMetrics::comm_share`]). High values flag
+    /// perturbation-fragile, comm-bound scenarios.
+    CommShare,
 }
 
 impl Feature {
-    pub const ALL: [Feature; 5] = [
+    pub const ALL: [Feature; 6] = [
         Feature::NormOtb,
         Feature::NormMt,
         Feature::Combined,
         Feature::Imbalance,
         Feature::HotShare,
+        Feature::CommShare,
     ];
 
     pub fn name(self) -> &'static str {
@@ -61,6 +66,7 @@ impl Feature {
             Feature::Combined => "combined",
             Feature::Imbalance => "imbalance",
             Feature::HotShare => "hot-share",
+            Feature::CommShare => "comm-share",
         }
     }
 
@@ -76,6 +82,7 @@ impl Feature {
             Feature::Combined => m.combined,
             Feature::Imbalance => m.imbalance,
             Feature::HotShare => m.hot_share,
+            Feature::CommShare => m.comm_share,
         }
     }
 }
@@ -456,9 +463,10 @@ impl HeuristicModel {
         Ok(model)
     }
 
-    /// Write the artifact to `path`.
+    /// Write the artifact to `path` (write-temp-then-rename, so an
+    /// interrupted calibrate never leaves a truncated model).
     pub fn save(&self, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, self.to_text())
+        crate::util::atomic::write(path, self.to_text())
     }
 
     /// Load and parse an artifact from `path`.

@@ -17,9 +17,11 @@
 //! threshold from.
 
 mod gpu;
+mod perturb;
 mod topology;
 
 pub use gpu::{DType, GpuSpec};
+pub use perturb::{PerturbSample, Perturbation};
 pub use topology::{Topology, TopologyKind};
 
 use crate::config::Doc;

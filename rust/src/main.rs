@@ -329,38 +329,83 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         args.get_or("skew", "0"),
     )?;
     spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
+    let robust = parse_robust(args)?;
     spec.search = parse_search(args.get_or("search", "off"))?;
-    if let Some(cfg) = spec.search.as_mut() {
-        cfg.warm = parse_warm(args)?;
+    match spec.search.as_mut() {
+        Some(cfg) => {
+            cfg.warm = parse_warm(args)?;
+            cfg.robust = robust;
+        }
+        None if robust.is_some() => {
+            return Err(
+                "--robust requires --search (robust selection re-ranks searched plans)".into(),
+            )
+        }
+        None => {}
     }
     spec.model = model_opt_from(args)?;
-    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/sweep");
     std::fs::create_dir_all(out_dir)?;
     let csv_path = format!("{out_dir}/sweep.csv");
     let json_path = format!("{out_dir}/sweep.json");
+    let journal_path = format!("{out_dir}/sweep.journal");
+
+    // `--resume`: replay the journal's complete prefix, keeping only
+    // records that still match the spec's cell identity (a changed
+    // filter re-runs the mismatched cells instead of trusting stale
+    // results).
+    let cells = spec.cells();
+    let mut done: Vec<ficco::explore::CellResult> = Vec::new();
+    if args.has("resume") {
+        for e in ficco::util::journal::read(&journal_path) {
+            let Some(r) = ficco::explore::emit::parse_cell_record(&e.payload) else {
+                continue;
+            };
+            let Some(cell) = cells.get(r.index) else { continue };
+            if r.index != e.index
+                || r.scenario != cell.scenario.name
+                || r.machine_name != cell.machine_name
+                || r.mech != cell.scenario.mech.name()
+                || r.ngpus != cell.scenario.ngpus
+                || done.iter().any(|d| d.index == r.index)
+            {
+                continue;
+            }
+            done.push(r);
+        }
+    }
+    let done_idx: std::collections::HashSet<usize> = done.iter().map(|r| r.index).collect();
+    let todo: Vec<ficco::explore::Cell> = cells
+        .into_iter()
+        .filter(|c| !done_idx.contains(&c.index))
+        .collect();
+    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, todo.len());
 
     progress!(
-        "sweep: {} cells / {} schedule points on {} worker thread{}",
+        "sweep: {} cells / {} schedule points on {} worker thread{}{}",
         spec.n_cells(),
         spec.n_points(),
         jobs,
         if jobs == 1 { "" } else { "s" },
+        if done.is_empty() {
+            String::new()
+        } else {
+            format!(" ({} journaled cells resumed)", done.len())
+        },
     );
 
-    let mut csv = ficco::explore::emit::CsvEmitter::new(std::io::BufWriter::new(
-        std::fs::File::create(&csv_path)?,
-    ))?;
-    let mut json = ficco::explore::emit::JsonEmitter::new(std::io::BufWriter::new(
-        std::fs::File::create(&json_path)?,
-    ))?;
+    let mut journal = if args.has("resume") {
+        ficco::util::journal::Journal::append(&journal_path)?
+    } else {
+        ficco::util::journal::Journal::create(&journal_path)?
+    };
     let verbose = args.has("verbose");
-    // Emitter I/O failures (e.g. ENOSPC) cancel the sweep — no point
-    // evaluating cells whose results cannot be written — and are
+    // Journal I/O failures (e.g. ENOSPC) cancel the sweep — no point
+    // evaluating cells whose results cannot be recorded — and are
     // reported through the normal CLI error path.
     let mut write_err: Option<std::io::Error> = None;
-    let report = ficco::explore::run(&spec, jobs, |c| {
-        if let Err(e) = csv.cell(c).and_then(|()| json.cell(c)) {
+    let report = ficco::explore::run_cells(&todo, jobs, |c| {
+        if let Err(e) = journal.record(c.index, &ficco::explore::emit::cell_record(c)) {
             write_err = Some(e);
             return false;
         }
@@ -385,12 +430,45 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         true
     });
     if let Some(e) = write_err {
-        return Err(format!("writing sweep artifacts under {out_dir}: {e}").into());
+        return Err(format!("writing sweep journal under {out_dir}: {e}").into());
     }
-    csv.finish()?;
-    json.finish(&report.telemetry)?;
+    // A panicked cell is a per-cell failure, not a wasted run: the
+    // other cells finished and are journaled, so a `--resume` after
+    // the fix re-evaluates only the failed ones. No artifact is
+    // emitted (it would silently miss rows) and the exit is nonzero.
+    if !report.failures.is_empty() {
+        for f in &report.failures {
+            eprintln!("sweep: cell {} failed: {}", f.index, f.message);
+        }
+        return Err(format!(
+            "{} of {} cells failed; completed cells are journaled — rerun with --resume",
+            report.failures.len(),
+            spec.n_cells(),
+        )
+        .into());
+    }
 
-    let exhibit = ficco::explore::emit::summary(&report.cells);
+    let mut all = done;
+    all.extend(report.cells);
+    all.sort_by_key(|c| c.index);
+
+    // Artifacts are written whole, write-temp-then-rename: a kill
+    // mid-emit leaves the previous complete artifact (or none), never
+    // a truncated one.
+    let mut csv = ficco::explore::emit::CsvEmitter::new(ficco::util::atomic::AtomicFile::create(
+        &csv_path,
+    )?)?;
+    let mut json = ficco::explore::emit::JsonEmitter::new(
+        ficco::util::atomic::AtomicFile::create(&json_path)?,
+    )?;
+    for c in &all {
+        csv.cell(c)?;
+        json.cell(c)?;
+    }
+    csv.finish()?.commit()?;
+    json.finish(&report.telemetry)?.commit()?;
+
+    let exhibit = ficco::explore::emit::summary(&all);
     exhibit.print();
     if args.has("csv") {
         let summary_path = format!("{out_dir}/summary.csv");
@@ -401,13 +479,15 @@ fn cmd_sweep(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         println!("== telemetry ==");
         print!("{}", report.telemetry.table().render());
     }
+    let n_points: usize = all.iter().map(|c| c.rows.len()).sum();
+    let cpu_seconds: f64 = all.iter().map(|c| c.eval_seconds).sum();
     progress!(
         "{} points in {:.2}s wall ({:.2}s of evaluation across {} workers, {:.1} points/s)",
-        report.n_points(),
+        n_points,
         report.wall_seconds,
-        report.cpu_seconds(),
+        cpu_seconds,
         report.jobs,
-        report.n_points() as f64 / report.wall_seconds.max(1e-9),
+        n_points as f64 / report.wall_seconds.max(1e-9),
     );
     progress!("  -> {csv_path}");
     progress!("  -> {json_path}");
@@ -447,6 +527,79 @@ fn parse_warm(args: &Args) -> Result<bool, Box<dyn std::error::Error>> {
         "off" => Ok(false),
         other => Err(format!("unknown --warm '{other}' (on|off)").into()),
     }
+}
+
+/// Parse `--robust off|p95:N|worst:N` plus its companions
+/// `--robust-seed SEED` and `--robust-mag M` / `--robust-mag C,B,S`
+/// (compute straggler, bandwidth degradation, setup inflation
+/// fractions) into a robust-selection config. `off` (the default)
+/// returns `None` and keeps every artifact byte-identical to the
+/// nominal path.
+fn parse_robust(
+    args: &Args,
+) -> Result<Option<ficco::search::RobustCfg>, Box<dyn std::error::Error>> {
+    let spec = args.get_or("robust", "off");
+    if spec == "off" {
+        if args.get("robust-seed").is_some() || args.get("robust-mag").is_some() {
+            return Err("--robust-seed/--robust-mag require --robust p95:N or worst:N".into());
+        }
+        return Ok(None);
+    }
+    let (obj, n) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("unknown --robust '{spec}' (off|p95:N|worst:N)"))?;
+    let objective = ficco::search::RobustObjective::parse(obj)
+        .ok_or_else(|| format!("unknown --robust objective '{obj}' (p95|worst)"))?;
+    let samples: usize = n
+        .parse()
+        .map_err(|_| format!("bad ensemble size in --robust '{spec}'"))?;
+    if samples == 0 {
+        return Err("--robust needs an ensemble of at least 1 sample".into());
+    }
+    let seed = args.get_u64("robust-seed", ficco::hw::Perturbation::DEFAULT_SEED)?;
+    let mut ensemble = ficco::hw::Perturbation::defaults(samples, seed);
+    if let Some(mag) = args.get("robust-mag") {
+        let parts = parse_f64_list("robust-mag", mag)?;
+        match parts[..] {
+            [all] => {
+                ensemble.compute = all;
+                ensemble.bandwidth = all;
+                ensemble.setup = all;
+            }
+            [compute, bandwidth, setup] => {
+                ensemble.compute = compute;
+                ensemble.bandwidth = bandwidth;
+                ensemble.setup = setup;
+            }
+            _ => {
+                return Err(
+                    "--robust-mag takes one fraction or three (compute,bandwidth,setup)".into(),
+                )
+            }
+        }
+    }
+    ensemble.check()?;
+    Ok(Some(ficco::search::RobustCfg {
+        objective,
+        top_k: ficco::search::RobustCfg::DEFAULT_TOP_K,
+        ensemble,
+    }))
+}
+
+/// Parse a comma-separated list of numbers (e.g. `--robust-mag
+/// 0.1,0.2,0.5`).
+fn parse_f64_list(name: &str, s: &str) -> Result<Vec<f64>, Box<dyn std::error::Error>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        out.push(
+            part.parse::<f64>()
+                .map_err(|_| format!("--{name}: expected number, got '{part}'"))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(format!("--{name}: empty list").into());
+    }
+    Ok(out)
 }
 
 /// Parse a comma-separated list of positive integers (e.g. `--pieces
@@ -540,18 +693,52 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let cfg = ficco::search::SearchCfg {
         beam: args.get_usize("beam", 0)?,
         warm: parse_warm(args)?,
+        robust: parse_robust(args)?,
         ..Default::default()
     };
     let ov = space_overrides_from(args)?;
     ensure_searchable_space(&spec, &ov)?;
-    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, spec.n_cells());
     let out_dir = args.get_or("out-dir", "results/tune");
     std::fs::create_dir_all(out_dir)?;
     let csv_path = format!("{out_dir}/tune.csv");
     let json_path = format!("{out_dir}/tune.json");
+    let journal_path = format!("{out_dir}/tune.journal");
+
+    // `--resume`: replay the journal's complete prefix. A record is
+    // trusted only if its cell identity still matches the spec AND its
+    // robust block's presence matches this run's `--robust` — resuming
+    // a nominal journal under `--robust` (or vice versa) re-runs the
+    // cells instead of mixing artifact shapes.
+    let cells = spec.cells();
+    let mut done: Vec<ficco::search::TuneResult> = Vec::new();
+    if args.has("resume") {
+        for e in ficco::util::journal::read(&journal_path) {
+            let Some(r) = ficco::search::emit::parse_tune_record(&e.payload) else {
+                continue;
+            };
+            let Some(cell) = cells.get(r.index) else { continue };
+            if r.index != e.index
+                || r.scenario != cell.scenario.name
+                || r.machine_name != cell.machine_name
+                || r.mech != cell.scenario.mech.name()
+                || r.ngpus != cell.scenario.ngpus
+                || r.robust.is_some() != cfg.robust.is_some()
+                || done.iter().any(|d| d.index == r.index)
+            {
+                continue;
+            }
+            done.push(r);
+        }
+    }
+    let done_idx: std::collections::HashSet<usize> = done.iter().map(|r| r.index).collect();
+    let todo: Vec<ficco::explore::Cell> = cells
+        .into_iter()
+        .filter(|c| !done_idx.contains(&c.index))
+        .collect();
+    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, todo.len());
 
     progress!(
-        "tune: {} cells ({}) on {} worker thread{}",
+        "tune: {} cells ({}) on {} worker thread{}{}",
         spec.n_cells(),
         if cfg.beam == 0 {
             "exhaustive + pruning".to_string()
@@ -560,18 +747,22 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         },
         jobs,
         if jobs == 1 { "" } else { "s" },
+        if done.is_empty() {
+            String::new()
+        } else {
+            format!(" ({} journaled cells resumed)", done.len())
+        },
     );
 
-    let mut csv = ficco::search::emit::TuneCsvEmitter::new(std::io::BufWriter::new(
-        std::fs::File::create(&csv_path)?,
-    ))?;
-    let mut json = ficco::search::emit::TuneJsonEmitter::new(std::io::BufWriter::new(
-        std::fs::File::create(&json_path)?,
-    ))?;
+    let mut journal = if args.has("resume") {
+        ficco::util::journal::Journal::append(&journal_path)?
+    } else {
+        ficco::util::journal::Journal::create(&journal_path)?
+    };
     let verbose = args.has("verbose");
     let mut write_err: Option<std::io::Error> = None;
-    let report = ficco::search::tune(&spec, &ov, &cfg, jobs, |r| {
-        if let Err(e) = csv.result(r).and_then(|()| json.result(r)) {
+    let report = ficco::search::tune_cells(&todo, &ov, &cfg, jobs, |r| {
+        if let Err(e) = journal.record(r.index, &ficco::search::emit::tune_record(r)) {
             write_err = Some(e);
             return false;
         }
@@ -592,12 +783,43 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         true
     });
     if let Some(e) = write_err {
-        return Err(format!("writing tune artifacts under {out_dir}: {e}").into());
+        return Err(format!("writing tune journal under {out_dir}: {e}").into());
     }
-    csv.finish()?;
-    json.finish(&report.telemetry)?;
+    // Panicked cells: report each, keep the journal (a `--resume`
+    // re-runs only the failures), emit no artifact, exit nonzero.
+    if !report.failures.is_empty() {
+        for f in &report.failures {
+            eprintln!("tune: cell {} failed: {}", f.index, f.message);
+        }
+        return Err(format!(
+            "{} of {} cells failed; completed cells are journaled — rerun with --resume",
+            report.failures.len(),
+            spec.n_cells(),
+        )
+        .into());
+    }
 
-    let exhibit = ficco::search::emit::summary(&report.results);
+    let mut all = done;
+    all.extend(report.results);
+    all.sort_by_key(|r| r.index);
+
+    // Whole-file, write-temp-then-rename artifacts: a kill mid-emit
+    // never leaves a truncated tune.csv/tune.json.
+    let mut csv = ficco::search::emit::TuneCsvEmitter::with_robust(
+        ficco::util::atomic::AtomicFile::create(&csv_path)?,
+        cfg.robust.is_some(),
+    )?;
+    let mut json = ficco::search::emit::TuneJsonEmitter::new(
+        ficco::util::atomic::AtomicFile::create(&json_path)?,
+    )?;
+    for r in &all {
+        csv.result(r)?;
+        json.result(r)?;
+    }
+    csv.finish()?.commit()?;
+    json.finish(&report.telemetry)?.commit()?;
+
+    let exhibit = ficco::search::emit::summary(&all);
     exhibit.print();
     if args.has("csv") {
         let summary_path = format!("{out_dir}/summary.csv");
@@ -611,7 +833,7 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     // `--trace-out FILE`: flight-recorder export of the first cell's
     // searched-best plan (the same plan tune just reported).
     if let Some(path) = args.get("trace-out") {
-        match (spec.cells().first(), report.results.first()) {
+        match (spec.cells().first(), all.first()) {
             (Some(cell), Some(best)) => {
                 let plan = ficco::plan::Plan::parse_id(&best.best_plan)
                     .ok_or_else(|| format!("searched plan id '{}' did not parse", best.best_plan))?;
@@ -620,13 +842,16 @@ fn cmd_tune(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             _ => return Err("--trace-out: tune produced no cells to trace".into()),
         }
     }
+    let evaluations: usize = all.iter().map(|r| r.evaluated).sum();
+    let pruned: usize = all.iter().map(|r| r.pruned).sum();
+    let cpu_seconds: f64 = all.iter().map(|r| r.eval_seconds).sum();
     progress!(
         "{} plan evaluations ({} pruned) across {} cells in {:.2}s wall ({:.2}s of search on {} workers)",
-        report.evaluations(),
-        report.pruned(),
-        report.results.len(),
+        evaluations,
+        pruned,
+        all.len(),
         report.wall_seconds,
-        report.cpu_seconds(),
+        cpu_seconds,
         report.jobs,
     );
     progress!("  -> {csv_path}");
@@ -675,7 +900,7 @@ fn write_trace(
     let mut ev = ficco::schedule::exec::Evaluator::new();
     let (report, rec, tracks) = ev.capture_plan(machine, sc, plan);
     let meta = trace_meta(machine_name, sc, plan);
-    std::fs::write(path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
+    ficco::util::atomic::write(path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
     progress!(
         "trace: {} on {} plan {} makespan {}",
         sc.name,
@@ -756,8 +981,8 @@ fn cmd_trace(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let meta = trace_meta(machine_name, &sc, &plan);
     let trace_path = format!("{out_dir}/trace.json");
     let csv_path = format!("{out_dir}/timeline.csv");
-    std::fs::write(&trace_path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
-    std::fs::write(&csv_path, ficco::obs::timeline_csv(ev.engine(), &rec, &tracks))?;
+    ficco::util::atomic::write(&trace_path, ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta))?;
+    ficco::util::atomic::write(&csv_path, ficco::obs::timeline_csv(ev.engine(), &rec, &tracks))?;
     progress!(
         "trace: {} on {} plan {} makespan {}",
         sc.name,

@@ -42,6 +42,13 @@ pub struct Counters {
     /// first order meets a bound above the cutoff, every remaining
     /// candidate's bound is at least as large (subset of `pruned`).
     pub bound_skips_early: u64,
+    /// Candidates re-evaluated under a perturbation ensemble by
+    /// robust selection (`--robust`); each costs `samples` extra
+    /// simulations.
+    pub robust_reranks: u64,
+    /// Cells whose robust pick diverged from the nominal best plan —
+    /// the headline robustness telemetry.
+    pub pick_flips: u64,
 }
 
 impl Counters {
@@ -53,6 +60,8 @@ impl Counters {
         self.beam_expansions += other.beam_expansions;
         self.warm_hits += other.warm_hits;
         self.bound_skips_early += other.bound_skips_early;
+        self.robust_reranks += other.robust_reranks;
+        self.pick_flips += other.pick_flips;
     }
 }
 
@@ -93,7 +102,8 @@ impl Telemetry {
             out,
             "{{\"jobs\":{},\"wall_seconds\":{},\"cells\":{},\"candidates\":{},\
              \"evaluated\":{},\"pruned\":{},\"beam_expansions\":{},\
-             \"warm_hits\":{},\"bound_skips_early\":{}",
+             \"warm_hits\":{},\"bound_skips_early\":{},\
+             \"robust_reranks\":{},\"pick_flips\":{}",
             self.jobs,
             self.wall_seconds,
             self.counters.cells,
@@ -102,7 +112,9 @@ impl Telemetry {
             self.counters.pruned,
             self.counters.beam_expansions,
             self.counters.warm_hits,
-            self.counters.bound_skips_early
+            self.counters.bound_skips_early,
+            self.counters.robust_reranks,
+            self.counters.pick_flips
         )
         .unwrap();
         write!(
@@ -163,6 +175,14 @@ impl Telemetry {
             "early bound skips".to_string(),
             format!("{}", self.counters.bound_skips_early),
         ]);
+        t.row(vec![
+            "robust re-ranks".to_string(),
+            format!("{}", self.counters.robust_reranks),
+        ]);
+        t.row(vec![
+            "robust pick flips".to_string(),
+            format!("{}", self.counters.pick_flips),
+        ]);
         t.row(vec!["cache hits".to_string(), format!("{}", self.cache_hits)]);
         t.row(vec!["cache misses".to_string(), format!("{}", self.cache_misses)]);
         let lookups = self.cache_hits + self.cache_misses;
@@ -202,6 +222,8 @@ mod tests {
             beam_expansions: 5,
             warm_hits: 6,
             bound_skips_early: 7,
+            robust_reranks: 8,
+            pick_flips: 9,
         };
         let b = Counters {
             cells: 10,
@@ -211,6 +233,8 @@ mod tests {
             beam_expansions: 50,
             warm_hits: 60,
             bound_skips_early: 70,
+            robust_reranks: 80,
+            pick_flips: 90,
         };
         a.merge(&b);
         assert_eq!(
@@ -223,6 +247,8 @@ mod tests {
                 beam_expansions: 55,
                 warm_hits: 66,
                 bound_skips_early: 77,
+                robust_reranks: 88,
+                pick_flips: 99,
             }
         );
     }
@@ -240,6 +266,8 @@ mod tests {
                 beam_expansions: 1,
                 warm_hits: 2,
                 bound_skips_early: 3,
+                robust_reranks: 5,
+                pick_flips: 1,
             },
             cache_hits: 3,
             cache_misses: 4,
@@ -252,6 +280,8 @@ mod tests {
         assert!(json.contains("\"candidates\":9"));
         assert!(json.contains("\"warm_hits\":2"));
         assert!(json.contains("\"bound_skips_early\":3"));
+        assert!(json.contains("\"robust_reranks\":5"));
+        assert!(json.contains("\"pick_flips\":1"));
         assert!(json.contains("\"shards\":[[1,2],[2,2]]"));
         assert!(json.contains("\"cell_seconds\":[0.25,0.25]"));
         assert_eq!(json.matches('{').count(), json.matches('}').count());

@@ -15,11 +15,46 @@
 
 use super::{Kind, OpKind, Scenario, Schedule};
 use crate::cost::gemm::GemmCost;
-use crate::hw::Machine;
+use crate::hw::{Machine, PerturbSample, Perturbation};
 use crate::obs::{Counters, TimelineRecorder, TrackMap};
 use crate::plan::{Partition, Plan};
 use crate::sim::{ClusterSim, CommMech, Label, LeanReport, Report, SimError, TaskId};
 use std::collections::HashMap;
+
+/// Per-plan robustness statistics under a [`Perturbation`] ensemble
+/// (ISSUE 9): the nominal makespan plus order statistics of the
+/// ensemble's makespans. The fragility signature `p95 / nominal`
+/// echoes the paper's inefficiency signatures — a plan whose p95
+/// barely moves is robust; one whose tail blows up is fragile even if
+/// it wins nominally.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustStats {
+    /// Unperturbed makespan (bit-identical to the nominal search's).
+    pub nominal: f64,
+    /// Ensemble median makespan.
+    pub p50: f64,
+    /// Ensemble 95th-percentile makespan.
+    pub p95: f64,
+    /// Worst ensemble makespan.
+    pub worst: f64,
+}
+
+impl RobustStats {
+    /// Fragility signature: how far the tail (p95) sits above the
+    /// nominal makespan the search optimized for.
+    pub fn fragility(&self) -> f64 {
+        self.p95 / self.nominal
+    }
+}
+
+/// Order statistic of an ascending-sorted sample at quantile `q`
+/// (nearest-rank on the closed index range — deterministic, no
+/// interpolation, so the result is always one of the measured bits).
+fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
 
 /// Measured execution of one schedule.
 #[derive(Debug, Clone)]
@@ -187,9 +222,10 @@ impl Evaluator {
         self.keep_labels = on;
     }
 
-    /// Build the simulator task graph for `sched` into the (reset)
-    /// arena without running it.
-    fn load(&mut self, machine: &Machine, sched: &Schedule) {
+    /// Bind the sim arena to `machine`, rebuilding only on a machine
+    /// change (a rebuild clears any installed perturbation — fresh
+    /// [`ClusterSim`]s are nominal).
+    fn ensure_sim(&mut self, machine: &Machine) {
         let rebuild = match &self.sim {
             Some(s) => s.machine != *machine,
             None => true,
@@ -197,6 +233,12 @@ impl Evaluator {
         if rebuild {
             self.sim = Some(ClusterSim::new(machine.clone()));
         }
+    }
+
+    /// Build the simulator task graph for `sched` into the (reset)
+    /// arena without running it.
+    fn load(&mut self, machine: &Machine, sched: &Schedule) {
+        self.ensure_sim(machine);
         let sim = self.sim.as_mut().expect("sim bound above");
         sim.reset();
 
@@ -363,6 +405,78 @@ impl Evaluator {
         self.run_loaded_lean()
             .unwrap_or_else(|e| panic!("plan {} for {}: {e}", plan.id(), sc.name))
             .makespan
+    }
+
+    /// Simulated makespan of `plan` on one *perturbed* machine
+    /// (ISSUE 9): the sample's multipliers are installed on the sim
+    /// arena for exactly this build+run and cleared before returning,
+    /// so later nominal evaluations are untouched. Perturbed
+    /// makespans must never enter the nominal `EvalCache` — its keys
+    /// do not encode samples — which is why this lives beside, not
+    /// inside, [`Evaluator::plan_makespan`].
+    pub fn plan_makespan_perturbed(
+        &mut self,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+        sample: &PerturbSample,
+    ) -> f64 {
+        // Bind (possibly rebuild) the arena first: a rebuild inside
+        // `load` would discard a perturbation installed before it.
+        self.ensure_sim(machine);
+        self.sim
+            .as_mut()
+            .expect("sim bound above")
+            .set_perturb(Some(sample.clone()));
+        self.load_plan_graph(machine, sc, plan);
+        let out = self.run_loaded_lean();
+        self.sim
+            .as_mut()
+            .expect("sim bound above")
+            .set_perturb(None);
+        out.unwrap_or_else(|e| panic!("perturbed plan {} for {}: {e}", plan.id(), sc.name))
+            .makespan
+    }
+
+    /// Robustness statistics of `plan` under ensemble `ens`, given its
+    /// (already measured) nominal makespan. Ensemble members are
+    /// generated by index — pure functions of `(seed, i)` — and the
+    /// order statistics come from a sort, so the result is independent
+    /// of evaluation order and of which worker runs it. A nominal
+    /// (zero-magnitude or zero-sample) ensemble short-circuits to the
+    /// nominal makespan without touching the simulator at all: bit
+    /// identity with the nominal run holds by construction.
+    pub fn plan_robust_stats(
+        &mut self,
+        machine: &Machine,
+        sc: &Scenario,
+        plan: &Plan,
+        ens: &Perturbation,
+        nominal: f64,
+    ) -> RobustStats {
+        if ens.is_nominal() {
+            return RobustStats {
+                nominal,
+                p50: nominal,
+                p95: nominal,
+                worst: nominal,
+            };
+        }
+        let ngpus = machine.ngpus();
+        let nlinks = machine.topo.num_links();
+        let mut spans: Vec<f64> = (0..ens.samples)
+            .map(|i| {
+                let sample = ens.sample(i, ngpus, nlinks);
+                self.plan_makespan_perturbed(machine, sc, plan, &sample)
+            })
+            .collect();
+        spans.sort_by(f64::total_cmp);
+        RobustStats {
+            nominal,
+            p50: percentile_sorted(&spans, 0.50),
+            p95: percentile_sorted(&spans, 0.95),
+            worst: *spans.last().expect("samples >= 1"),
+        }
     }
 
     /// Lower → validate → load `plan` (with human-readable node
@@ -793,6 +907,49 @@ mod tests {
         assert_eq!(ev.cell_incumbent(), Some((p, 2.0)));
         ev.note_cell_incumbent(q, 1.5); // tighter: replaces
         assert_eq!(ev.cell_incumbent(), Some((q, 1.5)));
+    }
+
+    #[test]
+    fn robust_stats_of_a_nominal_ensemble_are_the_nominal_bits() {
+        // Zero-magnitude ensembles must not even touch the simulator:
+        // every statistic is the nominal makespan, bit for bit.
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let mut ev = Evaluator::new();
+        let nominal = ev.plan_makespan(&m, &sc, &plan);
+        let ens = Perturbation {
+            compute: 0.0,
+            bandwidth: 0.0,
+            setup: 0.0,
+            samples: 8,
+            seed: 3,
+        };
+        let st = ev.plan_robust_stats(&m, &sc, &plan, &ens, nominal);
+        for v in [st.nominal, st.p50, st.p95, st.worst] {
+            assert_eq!(v.to_bits(), nominal.to_bits());
+        }
+        assert_eq!(st.fragility().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn robust_stats_are_ordered_and_leave_nominal_runs_untouched() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let mut ev = Evaluator::new();
+        let nominal = ev.plan_makespan(&m, &sc, &plan);
+        let ens = Perturbation::defaults(6, 17);
+        let st = ev.plan_robust_stats(&m, &sc, &plan, &ens, nominal);
+        assert!(st.p50 <= st.p95 && st.p95 <= st.worst, "{st:?}");
+        assert!(st.worst > nominal, "perturbation should cost something: {st:?}");
+        // The ensemble evaluation must clear its sample: a nominal
+        // makespan measured right after is bit-identical.
+        let after = ev.plan_makespan(&m, &sc, &plan);
+        assert_eq!(after.to_bits(), nominal.to_bits());
+        // Determinism: a fresh evaluator reproduces the stats bitwise.
+        let again = Evaluator::new().plan_robust_stats(&m, &sc, &plan, &ens, nominal);
+        assert_eq!(st, again);
     }
 
     #[test]

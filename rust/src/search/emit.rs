@@ -8,10 +8,11 @@
 
 use std::io::{self, Write};
 
-use super::TuneResult;
-use crate::explore::emit::{csv_escape, json_escape};
+use super::{RobustObjective, RobustReport, TuneResult};
+use crate::explore::emit::{csv_escape, fbits, json_escape, parse_fbits};
 use crate::metrics::Exhibit;
 use crate::obs::Telemetry;
+use crate::schedule::Kind;
 use crate::util::stats;
 use crate::util::table::{f, Align, Table};
 
@@ -20,10 +21,16 @@ pub const TUNE_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collecti
 space,evaluated,pruned,baseline_makespan,best_plan,best_makespan,best_speedup,\
 best_legacy_kind,best_legacy_speedup,plan_gain,heuristic_pick,heuristic_speedup,heuristic_loss";
 
+/// Extra columns appended (header and rows) only when the tune ran
+/// with `--robust`; a `--robust off` run keeps the legacy 23-column
+/// shape byte-for-byte.
+pub const TUNE_ROBUST_COLS: &str = "robust_plan,robust_objective,robust_nominal,robust_p50,\
+robust_p95,robust_worst,robust_fragility,robust_flip";
+
 /// One tune result as a CSV row.
 pub fn tune_csv_row(r: &TuneResult) -> String {
-    format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+    let mut out = format!(
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
         csv_escape(&r.scenario),
         csv_escape(&r.machine_name),
         r.topology,
@@ -47,18 +54,33 @@ pub fn tune_csv_row(r: &TuneResult) -> String {
         r.pick.name(),
         r.pick_speedup,
         r.pick_loss,
-    )
+    );
+    if let Some(rb) = &r.robust {
+        out.push_str(&format!(
+            ",{},{},{},{},{},{},{},{}",
+            csv_escape(&rb.plan),
+            rb.objective.name(),
+            rb.nominal,
+            rb.p50,
+            rb.p95,
+            rb.worst,
+            rb.fragility,
+            rb.flipped,
+        ));
+    }
+    out.push('\n');
+    out
 }
 
 /// One tune result as a JSON object.
 pub fn tune_json(r: &TuneResult) -> String {
-    format!(
+    let mut out = format!(
         "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
          \"mech\":\"{}\",\"collective\":\"{}\",\"skew\":{},\"m\":{},\"n\":{},\"k\":{},\
          \"space\":{},\"evaluated\":{},\"pruned\":{},\"baseline_makespan\":{},\
          \"best_plan\":\"{}\",\"best_makespan\":{},\"best_speedup\":{},\
          \"best_legacy_kind\":\"{}\",\"best_legacy_speedup\":{},\"plan_gain\":{},\
-         \"heuristic_pick\":\"{}\",\"heuristic_speedup\":{},\"heuristic_loss\":{}}}",
+         \"heuristic_pick\":\"{}\",\"heuristic_speedup\":{},\"heuristic_loss\":{}",
         json_escape(&r.scenario),
         json_escape(&r.machine_name),
         r.topology,
@@ -82,7 +104,155 @@ pub fn tune_json(r: &TuneResult) -> String {
         r.pick.name(),
         r.pick_speedup,
         r.pick_loss,
-    )
+    );
+    if let Some(rb) = &r.robust {
+        out.push_str(&format!(
+            ",\"robust\":{{\"plan\":\"{}\",\"objective\":\"{}\",\"nominal\":{},\
+             \"p50\":{},\"p95\":{},\"worst\":{},\"fragility\":{},\"flipped\":{}}}",
+            json_escape(&rb.plan),
+            rb.objective.name(),
+            rb.nominal,
+            rb.p50,
+            rb.p95,
+            rb.worst,
+            rb.fragility,
+            rb.flipped,
+        ));
+    }
+    out.push('}');
+    out
+}
+
+/// Serialize one [`TuneResult`] as a resume-journal record: one field
+/// per line in struct order, floats as bit-exact hex (see
+/// [`crate::explore::emit::fbits`]) so a `--resume`d tune reproduces
+/// the original artifact byte-for-byte. The final line is `-` for a
+/// `--robust off` result, else the space-joined robust block.
+pub fn tune_record(r: &TuneResult) -> String {
+    let mut out = String::from("ficco-tune-v1\n");
+    out.push_str(&format!("{}\n", r.index));
+    out.push_str(&format!("{}\n", r.machine_name));
+    out.push_str(&format!("{}\n", r.topology));
+    out.push_str(&format!("{}\n", r.ngpus));
+    out.push_str(&format!("{}\n", r.scenario));
+    out.push_str(&format!("{}\n", r.collective));
+    out.push_str(&format!("{}\n", r.mech));
+    out.push_str(&format!("{}\n", fbits(r.skew)));
+    out.push_str(&format!("{}\n{}\n{}\n", r.m, r.n, r.k));
+    out.push_str(&format!("{}\n", r.space_size));
+    out.push_str(&format!("{}\n", r.evaluated));
+    out.push_str(&format!("{}\n", r.pruned));
+    out.push_str(&format!("{}\n", fbits(r.baseline_makespan)));
+    out.push_str(&format!("{}\n", r.best_plan));
+    out.push_str(&format!("{}\n", fbits(r.best_makespan)));
+    out.push_str(&format!("{}\n", fbits(r.best_speedup)));
+    out.push_str(&format!("{}\n", r.best_legacy_kind.name()));
+    out.push_str(&format!("{}\n", fbits(r.best_legacy_speedup)));
+    out.push_str(&format!("{}\n", fbits(r.plan_gain)));
+    out.push_str(&format!("{}\n", r.pick.name()));
+    out.push_str(&format!("{}\n", fbits(r.pick_speedup)));
+    out.push_str(&format!("{}\n", fbits(r.pick_loss)));
+    out.push_str(&format!("{}\n", fbits(r.eval_seconds)));
+    match &r.robust {
+        Some(rb) => out.push_str(&format!(
+            "{} {} {} {} {} {} {} {}",
+            rb.plan,
+            rb.objective.name(),
+            fbits(rb.nominal),
+            fbits(rb.p50),
+            fbits(rb.p95),
+            fbits(rb.worst),
+            fbits(rb.fragility),
+            rb.flipped,
+        )),
+        None => out.push('-'),
+    }
+    out
+}
+
+/// Parse a [`tune_record`] payload. Malformed/truncated records yield
+/// `None` — resume re-runs such cells rather than trusting them.
+pub fn parse_tune_record(s: &str) -> Option<TuneResult> {
+    let mut lines = s.lines();
+    if lines.next()? != "ficco-tune-v1" {
+        return None;
+    }
+    let index = lines.next()?.parse().ok()?;
+    let machine_name = lines.next()?.to_string();
+    let topology = lines.next()?.to_string();
+    let ngpus = lines.next()?.parse().ok()?;
+    let scenario = lines.next()?.to_string();
+    let collective = lines.next()?.to_string();
+    let mech = lines.next()?.to_string();
+    let skew = parse_fbits(lines.next()?)?;
+    let m = lines.next()?.parse().ok()?;
+    let n = lines.next()?.parse().ok()?;
+    let k = lines.next()?.parse().ok()?;
+    let space_size = lines.next()?.parse().ok()?;
+    let evaluated = lines.next()?.parse().ok()?;
+    let pruned = lines.next()?.parse().ok()?;
+    let baseline_makespan = parse_fbits(lines.next()?)?;
+    let best_plan = lines.next()?.to_string();
+    let best_makespan = parse_fbits(lines.next()?)?;
+    let best_speedup = parse_fbits(lines.next()?)?;
+    let best_legacy_kind = Kind::parse(lines.next()?)?;
+    let best_legacy_speedup = parse_fbits(lines.next()?)?;
+    let plan_gain = parse_fbits(lines.next()?)?;
+    let pick = Kind::parse(lines.next()?)?;
+    let pick_speedup = parse_fbits(lines.next()?)?;
+    let pick_loss = parse_fbits(lines.next()?)?;
+    let eval_seconds = parse_fbits(lines.next()?)?;
+    let robust = match lines.next()? {
+        "-" => None,
+        line => {
+            let mut fld = line.split(' ');
+            let rb = RobustReport {
+                plan: fld.next()?.to_string(),
+                objective: RobustObjective::parse(fld.next()?)?,
+                nominal: parse_fbits(fld.next()?)?,
+                p50: parse_fbits(fld.next()?)?,
+                p95: parse_fbits(fld.next()?)?,
+                worst: parse_fbits(fld.next()?)?,
+                fragility: parse_fbits(fld.next()?)?,
+                flipped: fld.next()?.parse().ok()?,
+            };
+            if fld.next().is_some() {
+                return None;
+            }
+            Some(rb)
+        }
+    };
+    if lines.next().is_some() {
+        return None;
+    }
+    Some(TuneResult {
+        index,
+        machine_name,
+        topology,
+        ngpus,
+        scenario,
+        collective,
+        mech,
+        skew,
+        m,
+        n,
+        k,
+        space_size,
+        evaluated,
+        pruned,
+        baseline_makespan,
+        best_plan,
+        best_makespan,
+        best_speedup,
+        best_legacy_kind,
+        best_legacy_speedup,
+        plan_gain,
+        pick,
+        pick_speedup,
+        pick_loss,
+        robust,
+        eval_seconds,
+    })
 }
 
 /// Streams tune CSV rows cell by cell (header on construction).
@@ -91,8 +261,21 @@ pub struct TuneCsvEmitter<W: Write> {
 }
 
 impl<W: Write> TuneCsvEmitter<W> {
-    pub fn new(mut w: W) -> io::Result<TuneCsvEmitter<W>> {
-        writeln!(w, "{TUNE_CSV_HEADER}")?;
+    /// Legacy 23-column emitter — byte-identical to pre-robust
+    /// artifacts; use for `--robust off` runs.
+    pub fn new(w: W) -> io::Result<TuneCsvEmitter<W>> {
+        TuneCsvEmitter::with_robust(w, false)
+    }
+
+    /// Emitter whose header matches the rows `tune_csv_row` will
+    /// produce: pass `robust = true` iff the run attaches
+    /// [`RobustReport`]s to its results.
+    pub fn with_robust(mut w: W, robust: bool) -> io::Result<TuneCsvEmitter<W>> {
+        if robust {
+            writeln!(w, "{TUNE_CSV_HEADER},{TUNE_ROBUST_COLS}")?;
+        } else {
+            writeln!(w, "{TUNE_CSV_HEADER}")?;
+        }
         Ok(TuneCsvEmitter { w })
     }
 
@@ -263,6 +446,73 @@ mod tests {
         let canon = crate::obs::canonical_artifact_view(&json);
         assert!(canon.ends_with("\n]"));
         assert!(!canon.contains("telemetry"));
+    }
+
+    fn with_robust_block(mut r: TuneResult) -> TuneResult {
+        r.robust = Some(RobustReport {
+            plan: "row-d8-fused-hs-s7-dma".to_string(),
+            objective: RobustObjective::P95,
+            nominal: 1.25e-3,
+            p50: 1.30e-3,
+            p95: 1.45e-3,
+            worst: 1.50e-3,
+            fragility: 1.16,
+            flipped: true,
+        });
+        r
+    }
+
+    #[test]
+    fn robust_rows_extend_the_header_by_exactly_the_robust_cols() {
+        let r = with_robust_block(tiny_results().remove(0));
+        let header = format!("{TUNE_CSV_HEADER},{TUNE_ROBUST_COLS}");
+        let ncols = header.split(',').count();
+        assert_eq!(
+            ncols,
+            TUNE_CSV_HEADER.split(',').count() + TUNE_ROBUST_COLS.split(',').count()
+        );
+        for line in tune_csv_row(&r).lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+        let mut csv = TuneCsvEmitter::with_robust(Vec::new(), true).unwrap();
+        csv.result(&r).unwrap();
+        let text = String::from_utf8(csv.finish().unwrap()).unwrap();
+        assert!(text.starts_with(&header));
+        let json = tune_json(&r);
+        assert!(json.contains("\"robust\":{\"plan\":\"row-d8-fused-hs-s7-dma\""));
+        assert!(json.contains("\"objective\":\"p95\""));
+        assert!(json.contains("\"flipped\":true"));
+        assert!(json.ends_with("}}"));
+        // A robust-off result keeps the legacy bytes exactly.
+        let off = tiny_results().remove(0);
+        assert!(!tune_csv_row(&off).contains("row-d8"));
+        assert!(!tune_json(&off).contains("robust"));
+    }
+
+    #[test]
+    fn tune_record_round_trips_to_identical_emitter_bytes() {
+        let plain = tiny_results().remove(0);
+        let robust = with_robust_block(tiny_results().remove(0));
+        for r in [&plain, &robust] {
+            let rec = tune_record(r);
+            let back = parse_tune_record(&rec).expect("record parses");
+            assert_eq!(tune_csv_row(&back), tune_csv_row(r));
+            assert_eq!(tune_json(&back), tune_json(r));
+            assert_eq!(back.index, r.index);
+            assert_eq!(back.eval_seconds.to_bits(), r.eval_seconds.to_bits());
+            assert_eq!(back.robust, r.robust);
+        }
+    }
+
+    #[test]
+    fn malformed_tune_records_parse_to_none() {
+        let rec = tune_record(&tiny_results().remove(0));
+        assert!(parse_tune_record("").is_none());
+        assert!(parse_tune_record("nonsense").is_none());
+        assert!(parse_tune_record(&rec[..rec.len() / 2]).is_none());
+        assert!(parse_tune_record(&format!("{rec}\nextra")).is_none());
+        let wrong = rec.replacen("ficco-tune-v1", "ficco-tune-v9", 1);
+        assert!(parse_tune_record(&wrong).is_none());
     }
 
     #[test]

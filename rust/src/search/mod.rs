@@ -43,10 +43,10 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::explore::{Cell, SweepSpec};
-use crate::hw::{DType, Machine};
+use crate::hw::{DType, Machine, Perturbation};
 use crate::obs::{Counters, Telemetry};
 use crate::plan::{CommShape, Plan};
-use crate::schedule::exec::Evaluator;
+use crate::schedule::exec::{Evaluator, RobustStats};
 use crate::schedule::{Kind, Scenario};
 use crate::sim::CommMech;
 
@@ -78,6 +78,13 @@ pub struct SearchCfg {
     /// search (so a calibrated model cannot perturb search results —
     /// its pick is still reported through the tune `pick` columns).
     pub predicted: Option<Plan>,
+    /// Robust plan selection (`--robust p95:N` / `--robust worst:N`):
+    /// after the nominal search, its top candidates are re-ranked
+    /// under a perturbation ensemble and the robust winner is
+    /// reported next to the nominal best. `None` (`--robust off`,
+    /// the default) leaves every artifact byte-identical to a
+    /// robust-unaware build.
+    pub robust: Option<RobustCfg>,
 }
 
 impl Default for SearchCfg {
@@ -87,8 +94,55 @@ impl Default for SearchCfg {
             prune: true,
             warm: true,
             predicted: None,
+            robust: None,
         }
     }
+}
+
+/// Which ensemble statistic robust selection minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RobustObjective {
+    /// 95th-percentile makespan over the ensemble.
+    P95,
+    /// Worst-case makespan over the ensemble.
+    Worst,
+}
+
+impl RobustObjective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RobustObjective::P95 => "p95",
+            RobustObjective::Worst => "worst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RobustObjective> {
+        match s {
+            "p95" => Some(RobustObjective::P95),
+            "worst" => Some(RobustObjective::Worst),
+            _ => None,
+        }
+    }
+}
+
+/// Robust-selection configuration: the nominal search stays the
+/// prefilter (only its evaluated survivors — presets, the predicted
+/// plan, and every space candidate that escaped pruning — are
+/// re-ranked; see `DESIGN.md` §10 for why that is sound), and the
+/// `top_k` best of them by nominal makespan are re-evaluated under
+/// the ensemble.
+#[derive(Debug, Clone, Copy)]
+pub struct RobustCfg {
+    pub objective: RobustObjective,
+    /// Nominal-best candidates re-evaluated under the ensemble.
+    pub top_k: usize,
+    /// The seeded perturbation ensemble.
+    pub ensemble: Perturbation,
+}
+
+impl RobustCfg {
+    /// Candidates re-ranked per cell unless overridden.
+    pub const DEFAULT_TOP_K: usize = 8;
 }
 
 /// Candidate axes of one search. The per-scenario valid product is
@@ -522,6 +576,12 @@ pub struct SearchOutcome {
     pub evaluated: usize,
     /// Candidates skipped by lower-bound pruning.
     pub pruned: usize,
+    /// Every evaluated candidate with its canonical index, in
+    /// evaluation order. The canonical index is the enumeration-order
+    /// position (presets `0..6`, then space plans), so downstream
+    /// re-rankings (robust selection) can break float ties exactly
+    /// like the incumbent did, independent of visit order.
+    pub evals: Vec<(usize, PlanEval)>,
 }
 
 impl SearchOutcome {
@@ -625,7 +685,7 @@ fn consider(
     plan: Plan,
     canon: usize,
     incumbent: &mut Incumbent,
-    evals: &mut Vec<PlanEval>,
+    evals: &mut Vec<(usize, PlanEval)>,
     evaluated: &mut usize,
     pruned: &mut usize,
 ) {
@@ -640,7 +700,7 @@ fn consider(
         }
         Ok(makespan) => {
             *evaluated += 1;
-            evals.push(PlanEval { plan, makespan });
+            evals.push((canon, PlanEval { plan, makespan }));
             incumbent.offer(plan, makespan, canon);
         }
     }
@@ -686,7 +746,7 @@ pub fn search_in(
     let mut evaluated = 0usize;
     let mut pruned = 0usize;
     let mut seen: HashSet<Plan> = HashSet::new();
-    let mut evals: Vec<PlanEval> = Vec::new();
+    let mut evals: Vec<(usize, PlanEval)> = Vec::new();
     let mut baseline = f64::NAN;
     let mut best_legacy: Option<(Kind, f64)> = None;
     // The warm seed set: presets plus the evaluated predicted plan —
@@ -694,14 +754,14 @@ pub fn search_in(
     // the seed incumbent (`warm_hits` telemetry).
     let mut seeds: Vec<Plan> = Vec::with_capacity(PRESETS + 1);
 
-    for kind in Kind::ALL {
+    for (ci, kind) in Kind::ALL.into_iter().enumerate() {
         let plan = Plan::preset(kind, sc);
         ev.counters.candidates += 1;
         let makespan = cache.makespan_in(ev, machine_name, machine, sc, &plan);
         evaluated += 1;
         seen.insert(plan);
         seeds.push(plan);
-        evals.push(PlanEval { plan, makespan });
+        evals.push((ci, PlanEval { plan, makespan }));
         if kind == Kind::Baseline {
             baseline = makespan;
         }
@@ -717,11 +777,11 @@ pub fn search_in(
     // Incumbent: lexicographic (makespan, canonical index) minimum —
     // over the presets alone this is the historical first-minimum.
     let mut incumbent = Incumbent {
-        eval: evals[0],
-        canon: 0,
+        eval: evals[0].1,
+        canon: evals[0].0,
     };
-    for (i, e) in evals.iter().enumerate().skip(1) {
-        incumbent.offer(e.plan, e.makespan, i);
+    for &(c, e) in evals.iter().skip(1) {
+        incumbent.offer(e.plan, e.makespan, c);
     }
 
     if cfg.beam == 0 {
@@ -749,7 +809,7 @@ pub fn search_in(
                     let makespan = cache.makespan_in(ev, machine_name, machine, sc, &p);
                     evaluated += 1;
                     seeds.push(p);
-                    evals.push(PlanEval { plan: p, makespan });
+                    evals.push((c, PlanEval { plan: p, makespan }));
                     incumbent.offer(p, makespan, c);
                 }
             }
@@ -792,7 +852,7 @@ pub fn search_in(
                         Err(b) => unreachable!("bound {b} rechecked above {cutoff}"),
                     };
                 evaluated += 1;
-                evals.push(PlanEval { plan: p, makespan });
+                evals.push((c, PlanEval { plan: p, makespan }));
                 incumbent.offer(p, makespan, c);
             }
         } else {
@@ -828,7 +888,7 @@ pub fn search_in(
                         let makespan = cache.makespan_in(ev, machine_name, machine, sc, &pred);
                         evaluated += 1;
                         seeds.push(pred);
-                        evals.push(PlanEval { plan: pred, makespan });
+                        evals.push((canon, PlanEval { plan: pred, makespan }));
                         incumbent.offer(pred, makespan, canon);
                         canon += 1;
                     }
@@ -864,15 +924,16 @@ pub fn search_in(
             let mut order: Vec<usize> = (0..evals.len()).collect();
             order.sort_by(|&a, &b| {
                 evals[a]
+                    .1
                     .makespan
-                    .partial_cmp(&evals[b].makespan)
+                    .partial_cmp(&evals[b].1.makespan)
                     .expect("finite makespans")
                     .then(a.cmp(&b))
             });
             let frontier: Vec<Plan> = order
                 .iter()
                 .take(cfg.beam)
-                .map(|&i| evals[i].plan)
+                .map(|&i| evals[i].1.plan)
                 .collect();
             let mut new_any = false;
             for plan in &frontier {
@@ -921,6 +982,96 @@ pub fn search_in(
         best_legacy,
         evaluated,
         pruned,
+        evals,
+    }
+}
+
+/// Outcome of robust re-ranking one searched cell (see
+/// [`robust_rerank`]).
+#[derive(Debug, Clone)]
+pub struct RobustPick {
+    /// The robust winner.
+    pub plan: Plan,
+    /// Its *nominal* makespan (reported speedups stay relative to the
+    /// nominal serial baseline).
+    pub nominal: f64,
+    /// Its ensemble statistics.
+    pub stats: RobustStats,
+    /// The robust pick differs from the nominal best.
+    pub flipped: bool,
+    /// Candidates re-evaluated under the ensemble.
+    pub reranked: usize,
+}
+
+/// Re-rank the nominal search's best candidates under a perturbation
+/// ensemble and pick the lexicographic `(objective, nominal makespan,
+/// canonical index)` minimum.
+///
+/// The candidate universe is exactly [`SearchOutcome::evals`] — the
+/// nominal-search survivors. That prefilter is deliberate (ensemble
+/// evaluation costs `samples` simulations per candidate; the full
+/// space would multiply search cost by the ensemble size) and sound
+/// in the sense documented in `DESIGN.md` §10: the presets, the
+/// predicted plan, and every candidate that escaped lower-bound
+/// pruning are all in the universe, so the robust pick can never be
+/// worse *nominally* than a plan the nominal search itself would have
+/// discarded unseen.
+///
+/// Candidates are ranked by nominal `(makespan, canon)` before the
+/// cut, and each candidate's ensemble statistics are a pure function
+/// of `(machine, scenario, plan, ensemble)` — so the robust pick is
+/// independent of evaluation order, worker count, and cache state.
+pub fn robust_rerank(
+    ev: &mut Evaluator,
+    machine: &Machine,
+    sc: &Scenario,
+    out: &SearchOutcome,
+    rc: &RobustCfg,
+) -> RobustPick {
+    let mut ranked: Vec<(usize, PlanEval)> = out.evals.clone();
+    ranked.sort_by(|a, b| a.1.makespan.total_cmp(&b.1.makespan).then(a.0.cmp(&b.0)));
+    let top_k = rc.top_k.max(1);
+    let mut seen: HashSet<Plan> = HashSet::new();
+    let mut best: Option<(f64, f64, usize, Plan, RobustStats)> = None;
+    let mut reranked = 0usize;
+    for &(canon, e) in &ranked {
+        if !seen.insert(e.plan) {
+            continue;
+        }
+        if reranked == top_k {
+            break;
+        }
+        reranked += 1;
+        let stats = ev.plan_robust_stats(machine, sc, &e.plan, &rc.ensemble, e.makespan);
+        let objective = match rc.objective {
+            RobustObjective::P95 => stats.p95,
+            RobustObjective::Worst => stats.worst,
+        };
+        let better = match &best {
+            None => true,
+            Some((o, nom, c, _, _)) => {
+                objective < *o
+                    || (objective == *o
+                        && (e.makespan < *nom || (e.makespan == *nom && canon < *c)))
+            }
+        };
+        if better {
+            best = Some((objective, e.makespan, canon, e.plan, stats));
+        }
+    }
+    let (_, nominal, _, plan, stats) =
+        best.expect("search evaluated at least the presets");
+    let flipped = plan != out.best.plan;
+    ev.counters.robust_reranks += reranked as u64;
+    if flipped {
+        ev.counters.pick_flips += 1;
+    }
+    RobustPick {
+        plan,
+        nominal,
+        stats,
+        flipped,
+        reranked,
     }
 }
 
@@ -958,7 +1109,32 @@ pub struct TuneResult {
     pub pick_speedup: f64,
     /// Fraction of the searched-best speedup the static pick loses.
     pub pick_loss: f64,
+    /// Robust selection of this cell (`None` when the tune ran with
+    /// `--robust off`, keeping the artifact bytes unchanged).
+    pub robust: Option<RobustReport>,
     pub eval_seconds: f64,
+}
+
+/// Per-cell robust-selection block of a [`TuneResult`]: the robust
+/// winner's id, its ensemble statistics, and whether it diverged from
+/// the nominal best.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustReport {
+    /// Robust winner's plan id ([`crate::plan::Plan::id`]).
+    pub plan: String,
+    /// The statistic robust selection minimized.
+    pub objective: RobustObjective,
+    /// Nominal makespan of the robust winner.
+    pub nominal: f64,
+    /// Ensemble percentiles / worst case of the robust winner.
+    pub p50: f64,
+    pub p95: f64,
+    pub worst: f64,
+    /// `p95 / nominal` (≥ 1 in practice; 1 = insensitive to the
+    /// ensemble).
+    pub fragility: f64,
+    /// The robust pick differs from the nominal best plan.
+    pub flipped: bool,
 }
 
 /// Search one sweep cell of the plan space (one-shot wrapper over
@@ -1014,6 +1190,21 @@ pub fn tune_cell_in(
         ..*cfg
     };
     let out = search_in(ev, &cell.machine_name, machine, sc, &space, &cfg, cache);
+    // Robust re-rank inside the cell scope, so ensemble evaluations
+    // reuse the memoized partitions of the nominal search.
+    let robust = cfg.robust.as_ref().map(|rc| {
+        let rp = robust_rerank(ev, machine, sc, &out, rc);
+        RobustReport {
+            plan: rp.plan.id(),
+            objective: rc.objective,
+            nominal: rp.stats.nominal,
+            p50: rp.stats.p50,
+            p95: rp.stats.p95,
+            worst: rp.stats.worst,
+            fragility: rp.stats.fragility(),
+            flipped: rp.flipped,
+        }
+    });
     ev.end_cell();
     let pick_speedup = out.baseline / pick_makespan;
     TuneResult {
@@ -1041,6 +1232,7 @@ pub fn tune_cell_in(
         pick,
         pick_speedup,
         pick_loss: (1.0 - out.best.makespan / pick_makespan).max(0.0),
+        robust,
         eval_seconds: t0.elapsed().as_secs_f64(),
     }
 }
@@ -1051,6 +1243,10 @@ pub struct TuneReport {
     pub jobs: usize,
     /// Results in deterministic cell order.
     pub results: Vec<TuneResult>,
+    /// Cells whose worker panicked, by original cell index (empty on
+    /// a clean run). Healthy cells still deliver; the driver reports
+    /// these and exits nonzero instead of silently dropping rows.
+    pub failures: Vec<crate::util::pool::ItemPanic>,
     pub wall_seconds: f64,
     /// Merged per-worker counters + cache statistics + timings
     /// (jobs-dependent; excluded from the byte-compared artifact
@@ -1088,9 +1284,22 @@ pub fn tune<F: FnMut(&TuneResult) -> bool>(
     ov: &SpaceOverrides,
     cfg: &SearchCfg,
     jobs: usize,
+    on_result: F,
+) -> TuneReport {
+    tune_cells(&spec.cells(), ov, cfg, jobs, on_result)
+}
+
+/// As [`tune`], over an explicit cell list. The `--resume` driver
+/// passes the not-yet-journaled subset of [`SweepSpec::cells`]; each
+/// [`Cell`] carries its original index, so resumed results merge back
+/// into the full deterministic order.
+pub fn tune_cells<F: FnMut(&TuneResult) -> bool>(
+    cells: &[Cell],
+    ov: &SpaceOverrides,
+    cfg: &SearchCfg,
+    jobs: usize,
     mut on_result: F,
 ) -> TuneReport {
-    let cells = spec.cells();
     let cache = EvalCache::new();
     // Per-worker counters merge under this mutex exactly once per
     // worker, at pool join — the search hot path itself never touches
@@ -1098,7 +1307,7 @@ pub fn tune<F: FnMut(&TuneResult) -> bool>(
     let merged = Mutex::new(Counters::default());
     let t0 = Instant::now();
     let pool_run = crate::util::pool::run_ordered_with(
-        &cells,
+        cells,
         jobs,
         Evaluator::new,
         |ev, _, cell| tune_cell_in(ev, cell, ov, cfg, &cache),
@@ -1115,9 +1324,20 @@ pub fn tune<F: FnMut(&TuneResult) -> bool>(
         cache_shards: cache.shard_stats(),
         cell_seconds: pool_run.results.iter().map(|r| r.eval_seconds).collect(),
     };
+    // Pool failure indices are positions in the submitted slice;
+    // translate to original cell indices for the driver's summary.
+    let failures = pool_run
+        .failures
+        .iter()
+        .map(|f| crate::util::pool::ItemPanic {
+            index: cells[f.index].index,
+            message: f.message.clone(),
+        })
+        .collect();
     TuneReport {
         jobs: pool_run.jobs,
         results: pool_run.results,
+        failures,
         wall_seconds,
         telemetry,
     }
@@ -1482,5 +1702,144 @@ mod tests {
         let plans = space.plans(&sc);
         assert!(plans.iter().all(|p| p.slots == 7));
         assert!(plans.iter().all(|p| p.pieces == 1 || p.pieces == 8));
+    }
+
+    #[test]
+    fn outcome_exposes_every_evaluated_candidate_with_its_canon() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let out = search("mi300x-8", &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+        assert_eq!(out.evals.len(), out.evaluated);
+        // Presets occupy canonical indices 0..6, space plans follow.
+        assert!(out.evals.iter().take(PRESETS).enumerate().all(|(i, &(c, _))| c == i));
+        // The incumbent is the lexicographic (makespan, canon) min of
+        // the exposed set.
+        let min = out
+            .evals
+            .iter()
+            .min_by(|a, b| a.1.makespan.total_cmp(&b.1.makespan).then(a.0.cmp(&b.0)))
+            .unwrap();
+        assert_eq!(min.1.plan, out.best.plan);
+        assert_eq!(min.1.makespan.to_bits(), out.best.makespan.to_bits());
+    }
+
+    #[test]
+    fn zero_magnitude_robust_rerank_keeps_the_nominal_best_bitwise() {
+        let m = machine();
+        let sc = sc();
+        let space = small_space(&sc);
+        let mut ev = Evaluator::new();
+        let out = search_in(&mut ev, "mi300x-8", &m, &sc, &space, &SearchCfg::default(), &EvalCache::new());
+        let rc = RobustCfg {
+            objective: RobustObjective::Worst,
+            top_k: RobustCfg::DEFAULT_TOP_K,
+            ensemble: Perturbation {
+                compute: 0.0,
+                bandwidth: 0.0,
+                setup: 0.0,
+                samples: 4,
+                seed: 1,
+            },
+        };
+        let rp = robust_rerank(&mut ev, &m, &sc, &out, &rc);
+        assert_eq!(rp.plan, out.best.plan);
+        assert!(!rp.flipped);
+        assert_eq!(rp.nominal.to_bits(), out.best.makespan.to_bits());
+        assert_eq!(rp.stats.p95.to_bits(), out.best.makespan.to_bits());
+        assert_eq!(rp.stats.worst.to_bits(), out.best.makespan.to_bits());
+        assert_eq!(ev.counters.pick_flips, 0);
+        assert_eq!(ev.counters.robust_reranks, rp.reranked as u64);
+        assert!(rp.reranked >= 1 && rp.reranked <= RobustCfg::DEFAULT_TOP_K);
+    }
+
+    fn two_cell_spec() -> SweepSpec {
+        SweepSpec {
+            scenarios: vec![
+                Scenario::new("ra", 8192, 512, 1024),
+                Scenario::new("rb", 4096, 256, 8192),
+            ],
+            kinds: vec![Kind::UniformFused1D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
+            search: None,
+            model: None,
+        }
+    }
+
+    fn small_ov() -> SpaceOverrides {
+        SpaceOverrides {
+            pieces: Some(vec![1, 4, 8]),
+            slots: Some(vec![1, 7]),
+            mechs: None,
+        }
+    }
+
+    #[test]
+    fn robust_tune_is_jobs_invariant_and_leaves_nominal_columns_untouched() {
+        let spec = two_cell_spec();
+        let ov = small_ov();
+        let plain = SearchCfg::default();
+        let robust = SearchCfg {
+            robust: Some(RobustCfg {
+                objective: RobustObjective::P95,
+                top_k: 4,
+                ensemble: Perturbation::defaults(3, 42),
+            }),
+            ..SearchCfg::default()
+        };
+        let base = tune(&spec, &ov, &plain, 1, |_| true);
+        let r1 = tune(&spec, &ov, &robust, 1, |_| true);
+        let r4 = tune(&spec, &ov, &robust, 4, |_| true);
+        assert!(base.failures.is_empty());
+        assert_eq!(base.results.len(), r1.results.len());
+        for ((b, a), c) in base.results.iter().zip(&r1.results).zip(&r4.results) {
+            // Robust mode must not change any nominal number.
+            assert!(b.robust.is_none());
+            assert_eq!(a.best_plan, b.best_plan);
+            assert_eq!(a.best_makespan.to_bits(), b.best_makespan.to_bits());
+            assert_eq!(a.baseline_makespan.to_bits(), b.baseline_makespan.to_bits());
+            assert_eq!(a.evaluated, b.evaluated);
+            assert_eq!(a.pruned, b.pruned);
+            // And the robust block is jobs-invariant, bit for bit.
+            let x = a.robust.as_ref().expect("robust block present");
+            let y = c.robust.as_ref().expect("robust block present");
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.nominal.to_bits(), y.nominal.to_bits());
+            assert_eq!(x.p50.to_bits(), y.p50.to_bits());
+            assert_eq!(x.p95.to_bits(), y.p95.to_bits());
+            assert_eq!(x.worst.to_bits(), y.worst.to_bits());
+            assert_eq!(x.fragility.to_bits(), y.fragility.to_bits());
+            assert_eq!(x.flipped, y.flipped);
+            // Ensemble stats are ordered and anchored at the nominal.
+            assert!(x.p50 <= x.p95 && x.p95 <= x.worst);
+            assert!(x.worst > x.nominal, "perturbed ensemble must degrade");
+        }
+        assert_eq!(
+            r1.telemetry.counters.robust_reranks,
+            r4.telemetry.counters.robust_reranks
+        );
+        assert_eq!(r1.telemetry.counters.pick_flips, r4.telemetry.counters.pick_flips);
+        assert!(r1.telemetry.counters.robust_reranks > 0);
+    }
+
+    #[test]
+    fn tune_cells_subset_keeps_original_indices() {
+        let spec = two_cell_spec();
+        let ov = small_ov();
+        let cfg = SearchCfg::default();
+        let full = tune(&spec, &ov, &cfg, 1, |_| true);
+        let cells = spec.cells();
+        let tail = tune_cells(&cells[1..], &ov, &cfg, 1, |_| true);
+        assert_eq!(tail.results.len(), 1);
+        assert_eq!(tail.results[0].index, 1, "original cell index survives");
+        assert_eq!(
+            tail.results[0].best_makespan.to_bits(),
+            full.results[1].best_makespan.to_bits()
+        );
+        assert_eq!(tail.results[0].best_plan, full.results[1].best_plan);
     }
 }

@@ -12,7 +12,7 @@
 //! schedules without re-registering resources or reallocating.
 
 use super::engine::{Engine, Label, Report, ResourceId, SimError, StreamId, TaskId};
-use crate::hw::Machine;
+use crate::hw::{Machine, PerturbSample};
 use crate::obs::{StreamTrack, TrackMap};
 
 /// How a byte stream is moved: by a GPU-core kernel (contends for CUs
@@ -59,6 +59,11 @@ pub struct ClusterSim {
     /// comm_streams[gpu][slot] — one stream per peer slot so a GPU can
     /// drive all its links concurrently (FiCCO's all-to-all pattern).
     comm_streams: Vec<Vec<StreamId>>,
+    /// Active hardware perturbation (ISSUE 9): multipliers applied at
+    /// task-build time. `None` is the nominal machine and takes the
+    /// exact pre-perturbation code path, so nominal runs stay
+    /// bit-identical by construction.
+    perturb: Option<PerturbSample>,
 }
 
 impl ClusterSim {
@@ -90,6 +95,7 @@ impl ClusterSim {
             compute_streams,
             copy_streams,
             comm_streams,
+            perturb: None,
         }
     }
 
@@ -97,6 +103,17 @@ impl ClusterSim {
     /// skeleton and the engine's scratch capacity.
     pub fn reset(&mut self) {
         self.engine.reset_tasks();
+    }
+
+    /// Install (or clear) the hardware perturbation applied to tasks
+    /// built *after* this call. The sample must match the machine's
+    /// shape; `None` restores the nominal machine.
+    pub fn set_perturb(&mut self, sample: Option<PerturbSample>) {
+        if let Some(s) = &sample {
+            debug_assert_eq!(s.gpu_work.len(), self.machine.ngpus());
+            debug_assert_eq!(s.link_rate.len(), self.machine.topo.num_links());
+        }
+        self.perturb = sample;
     }
 
     pub fn ngpus(&self) -> usize {
@@ -139,7 +156,12 @@ impl ClusterSim {
         cus: usize,
         deps: &[TaskId],
     ) -> TaskId {
-        let t = time_iso.max(1e-9);
+        // A straggler GPU runs its kernels proportionally slower (the
+        // nominal path leaves `time_iso` untouched, bit for bit).
+        let t = match &self.perturb {
+            Some(p) => (time_iso * p.gpu_work[gpu]).max(1e-9),
+            None => time_iso.max(1e-9),
+        };
         // HBM demand carries the burstiness factor: GEMM memory phases
         // hit the memory subsystem far above the kernel's average rate.
         let burst = self.machine.gpu.hbm_burst;
@@ -189,6 +211,21 @@ impl ClusterSim {
                 1.0,
                 1.0,
             ),
+        };
+        // Perturbed fabric: a degraded link serves this transfer at a
+        // reduced rate (min over the links the route crosses) and the
+        // comm-setup latency inflates. Nominal keeps the exact values
+        // computed above.
+        let (rate, setup) = match &self.perturb {
+            Some(p) => {
+                let (la, lb) = topo.link_pair(src, dst);
+                let mut mult = p.link_rate[la];
+                if let Some(lb) = lb {
+                    mult = mult.min(p.link_rate[lb]);
+                }
+                (rate * mult, setup * p.setup_mult)
+            }
+            None => (rate, setup),
         };
         let work = bytes / rate;
         // Fabric traffic is amplified at the memory subsystem
@@ -247,7 +284,13 @@ impl ClusterSim {
             ),
             CommMech::Dma => (g.dma_engine_bw, 0.0, 1.0, 0.25 * g.kernel_launch),
         };
-        let work = bytes / bw;
+        // A straggler's local copies slow with its compute (kernel and
+        // DMA local engines share the slowed clock domain); setup
+        // inflates with the comm-setup multiplier.
+        let (work, setup) = match &self.perturb {
+            Some(p) => (bytes / bw * p.gpu_work[gpu], setup * p.setup_mult),
+            None => (bytes / bw, setup),
+        };
         let stream = self.copy_streams[gpu];
         let hbm = self.hbm[gpu];
         let cu = self.cu[gpu];
@@ -439,6 +482,34 @@ mod tests {
         for &(pid, _) in &tm.counters {
             assert!(pid < tm.processes.len());
         }
+    }
+
+    #[test]
+    fn perturbed_build_slows_and_clearing_restores_bitwise() {
+        use crate::hw::Perturbation;
+        let m = Machine::mi300x_8();
+        let bytes = 64e9 * 0.01;
+        let graph = |c: &mut ClusterSim| {
+            let g = c.gemm_task(0, "g", 0.01, 1e6, 304, &[]);
+            c.transfer_task(0, 1, 0, "x", bytes, CommMech::Dma, &[g]);
+        };
+        let mut c = ClusterSim::new(m);
+        graph(&mut c);
+        let nominal = c.engine.run_lean().unwrap().makespan;
+        let ens = Perturbation::defaults(1, 11);
+        let sample = ens.sample(0, c.ngpus(), c.machine.topo.num_links());
+        c.reset();
+        c.set_perturb(Some(sample));
+        graph(&mut c);
+        let perturbed = c.engine.run_lean().unwrap().makespan;
+        // Work multipliers ≥ 1 and rate multipliers ≤ 1: never faster.
+        assert!(perturbed > nominal, "perturbed={perturbed} nominal={nominal}");
+        // Clearing the sample restores the nominal bits exactly.
+        c.reset();
+        c.set_perturb(None);
+        graph(&mut c);
+        let back = c.engine.run_lean().unwrap().makespan;
+        assert_eq!(nominal.to_bits(), back.to_bits());
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Crash-safe file writes: write-to-temp-then-rename (ISSUE 9).
+//!
+//! Every artifact emitter (sweep/tune CSV+JSON, trace/timeline
+//! exports, the calibrated model, summary CSVs) routes through here so
+//! a killed run can never leave a truncated artifact: readers either
+//! see the previous complete file or the new complete file, never a
+//! prefix. The temp file lives next to the target (`<path>.tmp`) so
+//! the final `rename` stays within one filesystem and is atomic on
+//! POSIX.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Sibling temp path for `path` (`<path>.tmp`).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// A buffered writer that only materializes the target on
+/// [`AtomicFile::commit`]. Dropping without committing removes the
+/// temp file and leaves any pre-existing target untouched.
+pub struct AtomicFile {
+    tmp: PathBuf,
+    target: PathBuf,
+    // `None` after commit/abort so Drop knows nothing is pending.
+    writer: Option<BufWriter<File>>,
+}
+
+impl AtomicFile {
+    /// Start writing `<path>.tmp`; the target appears only on commit.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<AtomicFile> {
+        let target = path.as_ref().to_path_buf();
+        let tmp = tmp_path(&target);
+        let writer = Some(BufWriter::new(File::create(&tmp)?));
+        Ok(AtomicFile { tmp, target, writer })
+    }
+
+    /// Flush, sync, and atomically rename the temp file over the
+    /// target. Consumes the writer; after this the target holds the
+    /// complete contents.
+    pub fn commit(mut self) -> io::Result<()> {
+        let writer = self.writer.take().expect("commit called once");
+        let file = writer
+            .into_inner()
+            .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
+        // Durability before visibility: the rename must not expose a
+        // file whose bytes are still in the page cache of a dying box.
+        file.sync_all()?;
+        drop(file);
+        std::fs::rename(&self.tmp, &self.target)
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.writer
+            .as_mut()
+            .expect("write before commit")
+            .write(buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        self.writer.as_mut().expect("flush before commit").flush()
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        if self.writer.take().is_some() {
+            // Abort path (error or interrupted run): discard the
+            // partial temp file; the target was never touched.
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// One-shot crash-safe replacement for `std::fs::write`.
+pub fn write(path: impl AsRef<Path>, contents: impl AsRef<[u8]>) -> io::Result<()> {
+    let mut f = AtomicFile::create(&path)?;
+    f.write_all(contents.as_ref())?;
+    f.commit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficco-atomic-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn commit_materializes_full_contents() {
+        let d = tdir("commit");
+        let p = d.join("out.csv");
+        let mut f = AtomicFile::create(&p).unwrap();
+        f.write_all(b"header\nrow\n").unwrap();
+        assert!(!p.exists(), "target must not exist before commit");
+        f.commit().unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"header\nrow\n");
+        assert!(!tmp_path(&p).exists(), "temp cleaned after commit");
+    }
+
+    #[test]
+    fn interrupted_write_leaves_previous_artifact_intact() {
+        // Simulates a kill mid-write: the writer is dropped without
+        // commit. The pre-existing artifact must survive unchanged and
+        // no temp debris may remain.
+        let d = tdir("interrupt");
+        let p = d.join("out.json");
+        std::fs::write(&p, b"{\"complete\": true}\n").unwrap();
+        {
+            let mut f = AtomicFile::create(&p).unwrap();
+            f.write_all(b"{\"partial\":").unwrap();
+            // dropped here, uncommitted
+        }
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"complete\": true}\n");
+        assert!(!tmp_path(&p).exists(), "temp cleaned after abort");
+    }
+
+    #[test]
+    fn one_shot_write_replaces_atomically() {
+        let d = tdir("oneshot");
+        let p = d.join("model.ficco");
+        write(&p, b"v1").unwrap();
+        write(&p, b"v2-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"v2-longer");
+    }
+}

@@ -1,0 +1,190 @@
+//! Cell-completion journal for resumable sweep/tune runs (ISSUE 9).
+//!
+//! The artifact files themselves are written atomically at the end of
+//! a run (see [`crate::util::atomic`]), so a killed run leaves no
+//! truncated artifact — but it also leaves no artifact at all. The
+//! journal is the incremental side-channel: one length-prefixed record
+//! per *completed* cell, flushed as the cell finishes, holding a
+//! byte-exact serialization of the cell's result. `--resume` replays
+//! the journal's complete prefix, re-evaluates only the missing
+//! cells, and emits artifacts that are byte-identical to a
+//! straight-through run.
+//!
+//! Record framing:
+//!
+//! ```text
+//! cell <index> <payload_len>\n
+//! <payload bytes>\n
+//! ```
+//!
+//! The length prefix makes truncation detection exact: a record whose
+//! header or payload is cut short (the kill arrived mid-write) is
+//! dropped along with everything after it, and the reader returns the
+//! longest complete prefix. Payload contents are owned by the drivers
+//! (`search::emit::tune_record` / `explore::emit::cell_record`).
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Append-only journal writer. Each [`Journal::record`] is flushed to
+/// the OS before returning, so a killed process loses at most the
+/// record it was writing — which the reader's framing check drops.
+pub struct Journal {
+    w: BufWriter<File>,
+}
+
+impl Journal {
+    /// Start a fresh journal, truncating any previous one.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<Journal> {
+        Ok(Journal {
+            w: BufWriter::new(File::create(path)?),
+        })
+    }
+
+    /// Open an existing journal for appending (the `--resume` path);
+    /// creates it if missing.
+    pub fn append(path: impl AsRef<Path>) -> io::Result<Journal> {
+        Ok(Journal {
+            w: BufWriter::new(OpenOptions::new().create(true).append(true).open(path)?),
+        })
+    }
+
+    /// Record one completed cell.
+    pub fn record(&mut self, index: usize, payload: &str) -> io::Result<()> {
+        write!(self.w, "cell {} {}\n{}\n", index, payload.len(), payload)?;
+        self.w.flush()
+    }
+}
+
+/// One journaled cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub index: usize,
+    pub payload: String,
+}
+
+/// Read the longest complete prefix of a journal. A missing file, a
+/// malformed header, a cut-short payload, or non-UTF-8 payload bytes
+/// all end the prefix there — nothing after the first damage is
+/// trusted, so a mid-run kill can never smuggle a half-written record
+/// into the resumed run.
+pub fn read(path: impl AsRef<Path>) -> Vec<Entry> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(_) => return Vec::new(),
+    };
+    let mut entries = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let nl = match bytes[pos..].iter().position(|&b| b == b'\n') {
+            Some(k) => pos + k,
+            None => break, // header cut short
+        };
+        let header = match std::str::from_utf8(&bytes[pos..nl]) {
+            Ok(h) => h,
+            Err(_) => break,
+        };
+        let mut fields = header.split(' ');
+        let (index, len) = match (fields.next(), fields.next(), fields.next(), fields.next()) {
+            (Some("cell"), Some(i), Some(l), None) => {
+                match (i.parse::<usize>(), l.parse::<usize>()) {
+                    (Ok(i), Ok(l)) => (i, l),
+                    _ => break,
+                }
+            }
+            _ => break,
+        };
+        let start = nl + 1;
+        // Payload plus its trailing newline must be fully present.
+        if bytes.len() < start + len + 1 || bytes[start + len] != b'\n' {
+            break;
+        }
+        let payload = match std::str::from_utf8(&bytes[start..start + len]) {
+            Ok(p) => p.to_string(),
+            Err(_) => break,
+        };
+        entries.push(Entry { index, payload });
+        pos = start + len + 1;
+    }
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tpath(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficco-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_record() {
+        let p = tpath("roundtrip.journal");
+        let mut j = Journal::create(&p).unwrap();
+        j.record(0, "alpha,1,2\n{\"a\":1}").unwrap();
+        j.record(3, "").unwrap();
+        j.record(5, "multi\nline\npayload").unwrap();
+        drop(j);
+        let got = read(&p);
+        assert_eq!(
+            got,
+            vec![
+                Entry { index: 0, payload: "alpha,1,2\n{\"a\":1}".into() },
+                Entry { index: 3, payload: "".into() },
+                Entry { index: 5, payload: "multi\nline\npayload".into() },
+            ]
+        );
+    }
+
+    #[test]
+    fn truncation_at_any_byte_keeps_only_the_complete_prefix() {
+        let p = tpath("truncate.journal");
+        let mut j = Journal::create(&p).unwrap();
+        j.record(0, "first").unwrap();
+        j.record(1, "second-record").unwrap();
+        drop(j);
+        let full = std::fs::read(&p).unwrap();
+        let whole = read(&p);
+        assert_eq!(whole.len(), 2);
+        for cut in 0..full.len() {
+            let q = tpath("truncate-cut.journal");
+            std::fs::write(&q, &full[..cut]).unwrap();
+            let got = read(&q);
+            // Every cut yields a complete prefix of the full read —
+            // never a damaged or invented record.
+            assert!(got.len() <= whole.len());
+            assert_eq!(got[..], whole[..got.len()], "cut at byte {cut}");
+            // Cutting inside record 1 must still keep record 0.
+            let rec0_len = full.iter().position(|&b| b == b'\n').unwrap() + "first".len() + 2;
+            if cut >= rec0_len {
+                assert!(!got.is_empty(), "cut at byte {cut} lost the complete record 0");
+            }
+        }
+    }
+
+    #[test]
+    fn append_resumes_after_the_existing_records() {
+        let p = tpath("append.journal");
+        let mut j = Journal::create(&p).unwrap();
+        j.record(0, "a").unwrap();
+        drop(j);
+        let mut j = Journal::append(&p).unwrap();
+        j.record(1, "b").unwrap();
+        drop(j);
+        let got = read(&p);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1], Entry { index: 1, payload: "b".into() });
+    }
+
+    #[test]
+    fn missing_or_garbage_file_reads_as_empty() {
+        assert!(read(tpath("never-written.journal")).is_empty());
+        let p = tpath("garbage.journal");
+        std::fs::write(&p, b"not a journal at all\n\xff\xfe").unwrap();
+        assert!(read(&p).is_empty());
+    }
+}

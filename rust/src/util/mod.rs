@@ -7,6 +7,8 @@
 //! testing driver ([`prop`]), and the deterministic ordered worker
 //! pool ([`pool`]) behind the parallel sweep/tune drivers.
 
+pub mod atomic;
+pub mod journal;
 pub mod pool;
 pub mod prop;
 pub mod rng;

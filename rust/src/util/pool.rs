@@ -11,8 +11,44 @@
 //! to mean anything; wall-clock measurements belong outside the
 //! emitted artifacts.
 
+//! Worker panics (ISSUE 9): a panicking `eval` used to unwind the
+//! worker thread with its claimed item unsent, so the ordered join
+//! either hung on the missing slot or lost results silently. Workers
+//! now wrap each evaluation in `catch_unwind`; a panic becomes a
+//! structured [`ItemPanic`] recorded on the run (delivery of the
+//! healthy items continues in order), and the worker rebuilds its
+//! scratch state before taking the next item, since a mid-panic state
+//! may be arbitrarily poisoned.
+
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
+
+/// One item whose evaluation panicked: which item, and the panic
+/// payload rendered to text (the usual `panic!`/`assert!` message).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ItemPanic {
+    pub index: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ItemPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "item {}: {}", self.index, self.message)
+    }
+}
+
+/// Render a `catch_unwind` payload as text (`&str` and `String`
+/// payloads cover `panic!`, `assert!`, `unwrap`, and friends).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
 
 /// Hard ceiling on worker threads: far above any useful host
 /// parallelism, low enough that a huge `--jobs` cannot exhaust OS
@@ -32,6 +68,10 @@ pub struct OrderedRun<R> {
     pub jobs: usize,
     pub results: Vec<R>,
     pub cancelled: bool,
+    /// Items whose evaluation panicked, in item order. `results`
+    /// carries the healthy items only; drivers surface these and exit
+    /// nonzero instead of pretending the run was complete.
+    pub failures: Vec<ItemPanic>,
 }
 
 /// Evaluate `items` on `jobs` workers, invoking `on_result` once per
@@ -107,11 +147,11 @@ where
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
 
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
     let mut cancelled = false;
     let mut next = 0usize;
     std::thread::scope(|s| {
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
         for _ in 0..jobs {
             let tx = tx.clone();
             let cursor = &cursor;
@@ -129,7 +169,21 @@ where
                     if i >= n {
                         break;
                     }
-                    if tx.send((i, eval(&mut state, i, &items[i]))).is_err() {
+                    // A panicking evaluation must not take the worker
+                    // (and its claimed item) down with it: catch it,
+                    // report the item as failed, and rebuild the
+                    // worker scratch state, which the unwind may have
+                    // left half-mutated.
+                    let outcome =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| eval(&mut state, i, &items[i])));
+                    let payload = match outcome {
+                        Ok(r) => Ok(r),
+                        Err(p) => {
+                            state = init();
+                            Err(panic_message(p.as_ref()))
+                        }
+                    };
+                    if tx.send((i, payload)).is_err() {
                         // Receiver bailed: the run was cancelled.
                         break;
                     }
@@ -145,7 +199,7 @@ where
                 // Borrow rather than take: the slot stays filled for
                 // the final ordered collection below.
                 match &slots[next] {
-                    Some(ready) => {
+                    Some(Ok(ready)) => {
                         let keep_going = on_result(next, ready);
                         next += 1;
                         if !keep_going {
@@ -158,6 +212,10 @@ where
                             break 'recv;
                         }
                     }
+                    // A failed item completes its slot (the ordered
+                    // prefix advances past it) but is not delivered;
+                    // it surfaces in `failures` below.
+                    Some(Err(_)) => next += 1,
                     None => break,
                 }
             }
@@ -166,27 +224,39 @@ where
         // new items on their next send. The scope joins them.
     });
 
-    let results: Vec<R> = if cancelled {
-        // Exactly the delivered prefix: completed-but-undelivered
-        // stragglers are discarded so the cancelled run does not
-        // depend on worker timing.
-        slots.into_iter().take(next).flatten().collect()
-    } else {
-        slots
-            .into_iter()
-            .map(|s| s.expect("every pool item completes"))
-            .collect()
-    };
+    let mut results = Vec::new();
+    let mut failures = Vec::new();
+    // Cancelled runs keep exactly the delivered prefix (completed-but-
+    // undelivered stragglers are discarded so a cancelled run does not
+    // depend on worker timing); completed runs must have filled every
+    // slot — the panic path above keeps that invariant even when an
+    // evaluation blows up.
+    let keep = if cancelled { next } else { n };
+    for (index, slot) in slots.into_iter().take(keep).enumerate() {
+        match slot {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(message)) => failures.push(ItemPanic { index, message }),
+            None => {
+                if !cancelled {
+                    unreachable!("every pool item completes");
+                }
+            }
+        }
+    }
     OrderedRun {
         jobs,
         results,
         cancelled,
+        failures,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serializes the tests that swap the process-global panic hook.
+    static HOOK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn delivers_in_order_at_any_parallelism() {
@@ -298,5 +368,79 @@ mod tests {
         let run = run_ordered(&items, 4, |_, &x| x, |_, _| true);
         assert!(run.results.is_empty());
         assert!(!run.cancelled);
+        assert!(run.failures.is_empty());
+    }
+
+    /// Regression (ISSUE 9): a panicking worker used to disconnect the
+    /// channel with its claimed item unsent, so the ordered join lost
+    /// results silently (or died on the "every pool item completes"
+    /// expect). Panics must now surface as per-item failures while
+    /// every healthy item is still delivered, in order.
+    #[test]
+    fn panicking_item_reports_a_failure_and_healthy_items_survive() {
+        // Quiet the default panic hook's per-panic backtrace chatter
+        // for this test; restore it afterwards. (HOOK serializes the
+        // two hook-swapping tests so they cannot interleave.)
+        let _guard = HOOK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| ()));
+        let items: Vec<usize> = (0..20).collect();
+        for jobs in [1, 2, 4] {
+            let mut seen = Vec::new();
+            let run = run_ordered(
+                &items,
+                jobs,
+                |_, &x| {
+                    if x == 7 || x == 13 {
+                        panic!("poisoned cell {x}");
+                    }
+                    x * 2
+                },
+                |_, &r| {
+                    seen.push(r);
+                    true
+                },
+            );
+            assert!(!run.cancelled);
+            let expect: Vec<usize> = (0..20).filter(|&x| x != 7 && x != 13).map(|x| x * 2).collect();
+            assert_eq!(run.results, expect, "jobs={jobs}");
+            assert_eq!(seen, expect, "delivery skips failed items in order (jobs={jobs})");
+            assert_eq!(
+                run.failures,
+                vec![
+                    ItemPanic { index: 7, message: "poisoned cell 7".into() },
+                    ItemPanic { index: 13, message: "poisoned cell 13".into() },
+                ],
+                "jobs={jobs}"
+            );
+        }
+        std::panic::set_hook(prev);
+    }
+
+    /// After a panic the worker's scratch state may be half-mutated;
+    /// the pool must rebuild it via `init` before the next item.
+    #[test]
+    fn worker_state_is_rebuilt_after_a_panic() {
+        let _guard = HOOK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| ()));
+        let items: Vec<usize> = (0..10).collect();
+        let run = run_ordered_stateful(
+            &items,
+            1,
+            || 0usize,
+            |poisoned: &mut usize, _, &x| {
+                assert_eq!(*poisoned, 0, "state from a panicked evaluation leaked");
+                if x == 4 {
+                    *poisoned = 1; // half-mutated state, then the panic
+                    panic!("boom");
+                }
+                x
+            },
+            |_, _| true,
+        );
+        assert_eq!(run.failures.len(), 1);
+        assert_eq!(run.results.len(), 9);
+        std::panic::set_hook(prev);
     }
 }

@@ -116,11 +116,12 @@ impl Table {
     }
 
     /// Write the CSV rendering to `path` (creating parent dirs).
+    /// Crash-safe: the file appears whole or not at all.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         if let Some(parent) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, self.to_csv())
+        crate::util::atomic::write(path, self.to_csv())
     }
 }
 

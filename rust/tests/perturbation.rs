@@ -1,0 +1,254 @@
+//! Integration: perturbation-ensemble determinism (ISSUE 9).
+//!
+//! The robustness contract, end to end: zero-magnitude ensembles are
+//! bit-for-bit identical to nominal runs on the frozen goldens, an
+//! identity perturbation sample pushed through the *perturbed* sim
+//! path reproduces the nominal makespan bits, robust statistics are
+//! independent of evaluation order, and a robust `tune` produces
+//! byte-identical artifacts across `--jobs` values while leaving
+//! every nominal column frozen.
+
+use ficco::explore::SweepSpec;
+use ficco::hw::{Machine, Perturbation};
+use ficco::plan::Plan;
+use ficco::schedule::exec::Evaluator;
+use ficco::schedule::{Kind, Scenario};
+use ficco::search::emit::{TuneCsvEmitter, TuneJsonEmitter};
+use ficco::search::{tune, RobustCfg, RobustObjective, SearchCfg, SpaceOverrides};
+use ficco::sim::CommMech;
+use ficco::workloads::table1;
+
+fn zero_mag(samples: usize) -> Perturbation {
+    Perturbation {
+        compute: 0.0,
+        bandwidth: 0.0,
+        setup: 0.0,
+        samples,
+        seed: 7,
+    }
+}
+
+/// Table I scenarios × FiCCO presets: the frozen-golden surface.
+fn golden_points() -> Vec<(Scenario, Plan)> {
+    let mut out = Vec::new();
+    for row in table1::m_gt_k().into_iter().chain(table1::m_le_k()) {
+        let sc = row.scenario();
+        for kind in Kind::FICCO {
+            out.push((sc.clone(), Plan::preset(kind, &sc)));
+        }
+    }
+    out
+}
+
+#[test]
+fn zero_magnitude_ensemble_is_bitwise_nominal_on_table1_goldens() {
+    let machine = Machine::mi300x_8();
+    let mut ev = Evaluator::new();
+    let ens = zero_mag(5);
+    assert!(ens.is_nominal());
+    for (sc, plan) in golden_points() {
+        let nominal = ev.plan_makespan(&machine, &sc, &plan);
+        let stats = ev.plan_robust_stats(&machine, &sc, &plan, &ens, nominal);
+        for (name, v) in [
+            ("nominal", stats.nominal),
+            ("p50", stats.p50),
+            ("p95", stats.p95),
+            ("worst", stats.worst),
+        ] {
+            assert_eq!(
+                v.to_bits(),
+                nominal.to_bits(),
+                "{name} of {} on {} drifted from nominal",
+                plan.id(),
+                sc.name
+            );
+        }
+        assert_eq!(stats.fragility(), 1.0);
+    }
+}
+
+#[test]
+fn identity_sample_through_the_perturbed_path_is_bitwise_nominal() {
+    // Stronger than the zero-magnitude short-circuit: force the
+    // perturbed task-build path with all-ones multipliers and demand
+    // the exact nominal bits. This is what licenses `--robust` to
+    // claim bit identity "by construction".
+    let machine = Machine::mi300x_8();
+    let sample = zero_mag(1).sample(0, machine.ngpus(), machine.topo.num_links());
+    let mut ev = Evaluator::new();
+    for (sc, plan) in golden_points() {
+        let nominal = ev.plan_makespan(&machine, &sc, &plan);
+        let perturbed = ev.plan_makespan_perturbed(&machine, &sc, &plan, &sample);
+        assert_eq!(
+            perturbed.to_bits(),
+            nominal.to_bits(),
+            "identity sample moved {} on {}",
+            plan.id(),
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn robust_stats_are_independent_of_evaluation_order() {
+    let machine = Machine::pcie_gen4_4();
+    let sc = Scenario::new("order", 16384, 1024, 2048);
+    let a = Plan::preset(Kind::UniformFused1D, &sc);
+    let b = Plan::preset(Kind::HeteroUnfused1D, &sc);
+    let ens = Perturbation::defaults(6, 99);
+
+    let mut ev1 = Evaluator::new();
+    let na = ev1.plan_makespan(&machine, &sc, &a);
+    let nb = ev1.plan_makespan(&machine, &sc, &b);
+    let sa_first = ev1.plan_robust_stats(&machine, &sc, &a, &ens, na);
+    let sb_after = ev1.plan_robust_stats(&machine, &sc, &b, &ens, nb);
+
+    // Opposite order, fresh arena: identical bits.
+    let mut ev2 = Evaluator::new();
+    let sb_first = ev2.plan_robust_stats(&machine, &sc, &b, &ens, nb);
+    let sa_after = ev2.plan_robust_stats(&machine, &sc, &a, &ens, na);
+    assert_eq!(sa_first, sa_after, "plan A stats depend on order");
+    assert_eq!(sb_first, sb_after, "plan B stats depend on order");
+
+    // Slow-only perturbations: the whole ensemble sits at or above
+    // nominal and the order statistics are ordered.
+    for s in [sa_first, sb_first] {
+        assert!(s.p50 >= s.nominal * (1.0 - 1e-12));
+        assert!(s.p95 >= s.p50);
+        assert!(s.worst >= s.p95);
+        assert!(s.fragility() >= 1.0 - 1e-12);
+    }
+    // A nonzero ensemble on a comm-heavy box must actually move the
+    // tail — otherwise the ensemble is vacuous.
+    assert!(sa_first.worst > na, "ensemble never perturbed anything");
+}
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: vec![
+            Scenario::new("tiny-a", 8192, 512, 1024),
+            Scenario::new("tiny-b", 4096, 256, 2048),
+        ],
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+        mechs: vec![CommMech::Dma],
+        gpu_counts: Vec::new(),
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
+        search: None,
+        model: None,
+    }
+}
+
+fn small_space() -> SpaceOverrides {
+    SpaceOverrides {
+        pieces: Some(vec![1, 4, 8]),
+        slots: Some(vec![1, 3, 7]),
+        mechs: None,
+    }
+}
+
+fn robust_cfg(ens: Perturbation) -> SearchCfg {
+    SearchCfg {
+        beam: 2,
+        prune: true,
+        robust: Some(RobustCfg {
+            objective: RobustObjective::P95,
+            top_k: 4,
+            ensemble: ens,
+        }),
+        ..SearchCfg::default()
+    }
+}
+
+fn render(cfg: &SearchCfg, jobs: usize) -> (String, String, Vec<ficco::search::TuneResult>) {
+    let spec = small_spec();
+    let mut csv = TuneCsvEmitter::with_robust(Vec::new(), cfg.robust.is_some()).unwrap();
+    let mut json = TuneJsonEmitter::new(Vec::new()).unwrap();
+    let mut results = Vec::new();
+    let report = tune(&spec, &small_space(), cfg, jobs, |r| {
+        csv.result(r).unwrap();
+        json.result(r).unwrap();
+        results.push(r.clone());
+        true
+    });
+    assert!(report.failures.is_empty());
+    (
+        String::from_utf8(csv.finish().unwrap()).unwrap(),
+        String::from_utf8(json.finish(&report.telemetry).unwrap()).unwrap(),
+        results,
+    )
+}
+
+#[test]
+fn robust_tune_is_byte_stable_across_jobs() {
+    let cfg = robust_cfg(Perturbation::defaults(5, 17));
+    let (csv1, json1, _) = render(&cfg, 1);
+    let (csv4, json4, _) = render(&cfg, 4);
+    assert_eq!(csv1, csv4, "robust tune CSV must be byte-identical across --jobs");
+    assert_eq!(
+        ficco::obs::canonical_artifact_view(&json1),
+        ficco::obs::canonical_artifact_view(&json4),
+        "robust tune JSON body must be byte-identical across --jobs"
+    );
+    assert!(csv1.lines().next().unwrap().ends_with("robust_flip"));
+    assert!(json1.contains("\"robust\":{"));
+}
+
+#[test]
+fn zero_magnitude_robust_tune_keeps_every_nominal_column_frozen() {
+    let nominal_cfg = SearchCfg {
+        beam: 2,
+        prune: true,
+        ..SearchCfg::default()
+    };
+    let (_, _, plain) = render(&nominal_cfg, 2);
+    let (_, _, robust) = render(&robust_cfg(zero_mag(4)), 2);
+    assert_eq!(plain.len(), robust.len());
+    for (p, r) in plain.iter().zip(&robust) {
+        // Every nominal column bitwise frozen.
+        assert_eq!(p.index, r.index);
+        assert_eq!(p.best_plan, r.best_plan, "cell {}", p.index);
+        assert_eq!(p.best_makespan.to_bits(), r.best_makespan.to_bits());
+        assert_eq!(p.best_speedup.to_bits(), r.best_speedup.to_bits());
+        assert_eq!(p.baseline_makespan.to_bits(), r.baseline_makespan.to_bits());
+        assert_eq!(p.plan_gain.to_bits(), r.plan_gain.to_bits());
+        assert_eq!(p.pick, r.pick);
+        assert_eq!(p.pick_speedup.to_bits(), r.pick_speedup.to_bits());
+        assert_eq!((p.evaluated, p.pruned), (r.evaluated, r.pruned));
+        // The robust block degenerates to the nominal best: same plan,
+        // flat statistics, unit fragility, no flip.
+        let rb = r.robust.as_ref().expect("robust block present");
+        assert!(p.robust.is_none(), "--robust off must not grow a block");
+        assert_eq!(rb.plan, r.best_plan, "zero-magnitude pick must not flip");
+        assert!(!rb.flipped);
+        assert_eq!(rb.nominal.to_bits(), r.best_makespan.to_bits());
+        assert_eq!(rb.p50.to_bits(), rb.nominal.to_bits());
+        assert_eq!(rb.p95.to_bits(), rb.nominal.to_bits());
+        assert_eq!(rb.worst.to_bits(), rb.nominal.to_bits());
+        assert_eq!(rb.fragility, 1.0);
+    }
+}
+
+#[test]
+fn robust_reranks_use_nominal_survivors_and_report_sane_stats() {
+    // A genuinely perturbed ensemble on every cell: stats are ordered,
+    // fragility >= 1, and the robust winner always comes from the
+    // evaluated nominal universe (prefilter soundness: its nominal
+    // makespan can never beat the nominal best's).
+    let (_, _, results) = render(&robust_cfg(Perturbation::defaults(5, 17)), 2);
+    assert!(!results.is_empty());
+    for r in &results {
+        let rb = r.robust.as_ref().expect("robust block present");
+        assert!(rb.p50 >= rb.nominal * (1.0 - 1e-12), "cell {}", r.index);
+        assert!(rb.p95 >= rb.p50 && rb.worst >= rb.p95, "cell {}", r.index);
+        assert!(rb.fragility >= 1.0 - 1e-12);
+        assert!(
+            rb.nominal >= r.best_makespan * (1.0 - 1e-12),
+            "cell {}: robust pick beat the nominal best nominally",
+            r.index
+        );
+        assert_eq!(rb.flipped, rb.plan != r.best_plan, "cell {}", r.index);
+        assert!(Plan::parse_id(&rb.plan).is_some(), "robust plan id parses");
+    }
+}

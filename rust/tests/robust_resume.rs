@@ -1,0 +1,169 @@
+//! Integration: crash-safe journaling and `--resume` (ISSUE 9).
+//!
+//! A killed sweep/tune leaves a journal whose complete prefix replays
+//! into exactly the rows it already computed; re-running only the
+//! missing cells and merging must reproduce the straight-through
+//! artifacts byte for byte. The tests drive the same library entry
+//! points the CLI uses (`search::tune_cells` / `explore::run_cells` +
+//! the record codecs + `util::journal`), truncate the journal at every
+//! byte, and byte-compare the merged emission.
+
+use ficco::explore::{run_cells, SweepSpec};
+use ficco::hw::{Machine, Perturbation};
+use ficco::schedule::{Kind, Scenario};
+use ficco::search::emit::{
+    parse_tune_record, tune_csv_row, tune_json, tune_record, TuneCsvEmitter,
+};
+use ficco::search::{tune_cells, RobustCfg, RobustObjective, SearchCfg, SpaceOverrides};
+use ficco::sim::CommMech;
+use ficco::util::journal::{self, Journal};
+use std::path::PathBuf;
+
+fn tpath(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ficco-robust-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+fn spec(robust: bool) -> SweepSpec {
+    SweepSpec {
+        scenarios: vec![
+            Scenario::new("tiny-a", 8192, 512, 1024),
+            Scenario::new("tiny-b", 4096, 256, 2048),
+        ],
+        kinds: Kind::ALL.to_vec(),
+        machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+        mechs: vec![CommMech::Dma, CommMech::Kernel],
+        gpu_counts: Vec::new(),
+        skews: vec![0.0, 0.8],
+        skew_seed: ficco::explore::DEFAULT_SKEW_SEED,
+        search: if robust { Some(cfg(robust)) } else { None },
+        model: None,
+    }
+}
+
+fn cfg(robust: bool) -> SearchCfg {
+    SearchCfg {
+        beam: 2,
+        prune: true,
+        robust: if robust {
+            Some(RobustCfg {
+                objective: RobustObjective::Worst,
+                top_k: 3,
+                ensemble: Perturbation::defaults(4, 11),
+            })
+        } else {
+            None
+        },
+        ..SearchCfg::default()
+    }
+}
+
+fn space() -> SpaceOverrides {
+    SpaceOverrides {
+        pieces: Some(vec![1, 4]),
+        slots: Some(vec![1, 3]),
+        mechs: None,
+    }
+}
+
+#[test]
+fn tune_records_round_trip_through_the_journal_codec() {
+    // Real TuneResults (robust block included) must survive
+    // serialize → parse with every emitted byte intact — the property
+    // `--resume` leans on for byte-identical artifacts.
+    let cells = spec(true).cells();
+    let report = tune_cells(&cells, &space(), &cfg(true), 2, |_| true);
+    assert!(report.failures.is_empty());
+    assert!(!report.results.is_empty());
+    for r in &report.results {
+        let rec = tune_record(r);
+        let back = parse_tune_record(&rec).expect("record parses");
+        assert_eq!(tune_csv_row(r), tune_csv_row(&back), "cell {}", r.index);
+        assert_eq!(tune_json(r), tune_json(&back), "cell {}", r.index);
+        assert_eq!(r.robust, back.robust, "cell {}", r.index);
+    }
+}
+
+#[test]
+fn resume_after_truncation_reproduces_identical_artifacts() {
+    // Straight-through reference run, journaled.
+    let cells = spec(true).cells();
+    let jpath = tpath("tune.journal");
+    let mut j = Journal::create(&jpath).unwrap();
+    let full = tune_cells(&cells, &space(), &cfg(true), 2, |r| {
+        j.record(r.index, &tune_record(r)).unwrap();
+        true
+    });
+    drop(j);
+    assert!(full.failures.is_empty());
+    let render = |results: &[ficco::search::TuneResult]| {
+        let mut csv = TuneCsvEmitter::with_robust(Vec::new(), true).unwrap();
+        for r in results {
+            csv.result(r).unwrap();
+        }
+        String::from_utf8(csv.finish().unwrap()).unwrap()
+    };
+    let reference = render(&full.results);
+    let journal_bytes = std::fs::read(&jpath).unwrap();
+
+    // Kill the run at a spread of byte offsets (every offset is
+    // covered by the journal unit suite; sampling keeps the sim work
+    // bounded while still crossing header/payload boundaries).
+    for cut in (0..journal_bytes.len()).step_by(journal_bytes.len() / 13 + 1) {
+        let cpath = tpath(&format!("tune-cut-{cut}.journal"));
+        std::fs::write(&cpath, &journal_bytes[..cut]).unwrap();
+        // Replay exactly as the driver does: parse, validate identity,
+        // mark done, re-run the rest.
+        let mut done = Vec::new();
+        for e in journal::read(&cpath) {
+            let r = parse_tune_record(&e.payload).expect("complete prefix parses");
+            let cell = &cells[r.index];
+            assert_eq!(r.index, e.index);
+            assert_eq!(r.scenario, cell.scenario.name);
+            assert_eq!(r.machine_name, cell.machine_name);
+            done.push(r);
+        }
+        let done_idx: Vec<usize> = done.iter().map(|r| r.index).collect();
+        let todo: Vec<ficco::explore::Cell> = cells
+            .iter()
+            .filter(|c| !done_idx.contains(&c.index))
+            .cloned()
+            .collect();
+        let rerun = tune_cells(&todo, &space(), &cfg(true), 3, |_| true);
+        assert!(rerun.failures.is_empty());
+        let mut all = done;
+        all.extend(rerun.results);
+        all.sort_by_key(|r| r.index);
+        assert_eq!(
+            render(&all),
+            reference,
+            "resume after cut at byte {cut} must be byte-identical"
+        );
+    }
+}
+
+#[test]
+fn sweep_resume_merges_to_identical_rows() {
+    // The sweep-side analogue, through explore::run_cells and the
+    // cell-record codec: journal half the cells, "resume" the rest.
+    use ficco::explore::emit::{cell_record, csv_rows, parse_cell_record};
+    let cells = spec(false).cells();
+    let full = run_cells(&cells, 2, |_| true);
+    assert!(full.failures.is_empty());
+    let reference: String = full.cells.iter().map(csv_rows).collect();
+
+    let half = cells.len() / 2;
+    let done: Vec<_> = full.cells[..half]
+        .iter()
+        .map(|c| parse_cell_record(&cell_record(c)).expect("cell record parses"))
+        .collect();
+    let todo: Vec<_> = cells[half..].to_vec();
+    let rerun = run_cells(&todo, 4, |_| true);
+    assert!(rerun.failures.is_empty());
+    let mut all = done;
+    all.extend(rerun.cells);
+    all.sort_by_key(|c| c.index);
+    let merged: String = all.iter().map(csv_rows).collect();
+    assert_eq!(merged, reference, "sweep resume must reproduce identical rows");
+}

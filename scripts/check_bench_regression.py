@@ -32,6 +32,14 @@ Rules (ISSUE 6/7/8, CI `sim-differential` job):
 - ISSUE 7: when the fresh run carries a "recorder" section, the
   TimelineRecorder overhead on `run_full` must stay within 1.5x of
   the recorder-off run.
+- ISSUE 9: when the fresh run carries a "robust" section (and the
+  committed baseline has one, so a bench refactor dropping it fails
+  loudly via the section-presence rule above), the relational gates
+  arm: ensemble-eval throughput must be positive, the robust pick
+  deterministic in-process, and the per-ensemble-evaluation cost must
+  stay within 3x the nominal search's per-candidate cost measured in
+  the same run (ensemble members re-lower the same plan, so a member
+  eval should cost about one nominal eval, not a fresh search).
 
 Exit 0 on pass, 1 on any gate failure.
 """
@@ -127,6 +135,38 @@ def main():
                 f"on {rec.get('on_seconds')}s)"
             )
         print(f"recorder gate OK: run_full + TimelineRecorder at {ratio:.2f}x (budget 1.5x)")
+
+    # Robust re-rank gates (ISSUE 9). Relational like the search gates:
+    # every number compared is measured within the fresh run.
+    rob = fresh.get("robust")
+    if rob is not None:
+        for key in ("reranked", "ensemble_evals"):
+            if not rob.get(key, 0) > 0:
+                fail(f"fresh robust.{key} is {rob.get(key)}")
+        if not rob.get("ensemble_evals_per_sec", 0.0) > 0.0:
+            fail(
+                f"fresh robust.ensemble_evals_per_sec is "
+                f"{rob.get('ensemble_evals_per_sec')}"
+            )
+        if rob.get("pick_stable") is not True:
+            fail("robust re-rank pick was not deterministic in-process")
+        per_ens = rob.get("seconds_per_ensemble_eval", 0.0)
+        tune = fresh["tune_cell"]
+        evaluated = tune.get("evaluated", 0)
+        per_nominal = (
+            tune.get("median_seconds", 0.0) / evaluated if evaluated > 0 else 0.0
+        )
+        if per_nominal > 0.0 and per_ens > 3.0 * per_nominal:
+            fail(
+                "robust ensemble evaluation cost exceeds the 3x-per-candidate "
+                f"budget: {per_ens:.9f}s/ensemble-eval vs {per_nominal:.9f}s/"
+                "nominal-eval"
+            )
+        print(
+            f"robust gate OK: {rob['reranked']} plans x {rob.get('samples')} samples "
+            f"at {rob['ensemble_evals_per_sec']:.1f} ensemble-evals/s "
+            f"({rob.get('rerank_overhead_vs_search')}x of the nominal search)"
+        )
 
     comparable = "provenance" not in committed
     if not comparable:
