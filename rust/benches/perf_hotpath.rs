@@ -385,6 +385,69 @@ fn main() {
         recorder_overhead,
     );
 
+    // ISSUE 10: resumable-stepper overhead. Driving the same contended
+    // graph one `step()` per event must land close to the one-shot
+    // `run_lean` (both are thin drivers over the same core; the stepper
+    // adds one scratch hand-off per event), and the stepped replay must
+    // be bit-identical. The perf gate (scripts/check_bench_regression.py)
+    // holds the ratio to <= 1.5x and the replay flag to true.
+    let mut seng = Engine::new();
+    let sres = seng.add_resource(100.0);
+    let sstreams: Vec<_> = (0..16).map(|_| seng.add_stream()).collect();
+    let srebuild = |e: &mut Engine| {
+        e.reset_tasks();
+        for i in 0..engine_tasks {
+            e.add_task(
+                TaskSpec::new("t", sstreams[i % 16])
+                    .work(1e-4)
+                    .demand(sres, 10.0),
+            );
+        }
+    };
+    srebuild(&mut seng);
+    seng.run_lean().expect("stepper warm-up run");
+    let mut shot_acc = Accum::new();
+    let mut step_acc = Accum::new();
+    let mut replay_matches = true;
+    let mut stepper_steps = 0usize;
+    for _ in 0..engine_iters {
+        srebuild(&mut seng);
+        let t0 = Instant::now();
+        let shot = seng.run_lean().expect("stepper one-shot run");
+        shot_acc.push(t0.elapsed().as_secs_f64());
+        srebuild(&mut seng);
+        let t0 = Instant::now();
+        seng.begin_run_lean();
+        let mut steps = 0usize;
+        loop {
+            let rep = seng.step().expect("stepped run");
+            steps += 1;
+            if rep.finished {
+                break;
+            }
+        }
+        let stepped = seng.finish_lean().expect("stepped finish");
+        step_acc.push(t0.elapsed().as_secs_f64());
+        stepper_steps = steps;
+        replay_matches &= stepped.makespan.to_bits() == shot.makespan.to_bits()
+            && stepped.events == shot.events
+            && steps == shot.events;
+    }
+    assert!(replay_matches, "stepped replay diverged from run_lean");
+    let stepper_one_shot = shot_acc.median();
+    let stepper_median = step_acc.median();
+    let steps_per_sec = stepper_steps as f64 / stepper_median.max(1e-12);
+    let stepper_overhead = stepper_median / stepper_one_shot.max(1e-12);
+    println!(
+        "{:<44} median {:>10}  (one-shot {}, {} steps, {:.0} steps/s, {:.2}x overhead)",
+        format!("stepper: {engine_tasks} tasks, step-per-event"),
+        ficco::util::human_time(stepper_median),
+        ficco::util::human_time(stepper_one_shot),
+        stepper_steps,
+        steps_per_sec,
+        stepper_overhead,
+    );
+
     // Machine-readable trajectory record.
     let json = format!(
         "{{\n  \"bench\": \"perf_hotpath\",\n  \"quick\": {quick},\n  \"engine\": {{\n    \
@@ -415,7 +478,13 @@ fn main() {
          \"ensemble_evals_per_sec\": {ensemble_evals_per_sec:.1},\n    \
          \"seconds_per_ensemble_eval\": {seconds_per_ensemble_eval:.9},\n    \
          \"rerank_overhead_vs_search\": {rerank_overhead_vs_search:.3},\n    \
-         \"pick_stable\": true\n  }},\n  \"recorder\": {{\n    \
+         \"pick_stable\": true\n  }},\n  \"stepper\": {{\n    \
+         \"tasks\": {engine_tasks},\n    \"steps\": {stepper_steps},\n    \
+         \"one_shot_seconds\": {stepper_one_shot:.6},\n    \
+         \"median_seconds\": {stepper_median:.6},\n    \
+         \"steps_per_sec\": {steps_per_sec:.1},\n    \
+         \"overhead_vs_one_shot\": {stepper_overhead:.3},\n    \
+         \"replay_matches_one_shot\": true\n  }},\n  \"recorder\": {{\n    \
          \"off_seconds\": {recorder_off:.6},\n    \"on_seconds\": {recorder_on:.6},\n    \
          \"overhead_ratio\": {recorder_overhead:.3}\n  }}\n}}\n",
         evaluated = warm.evaluated,

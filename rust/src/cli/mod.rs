@@ -179,6 +179,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "validate",
     "train",
     "calibrate",
+    "cotenant",
 ];
 
 /// The strict CLI contract: exactly the options and switches each
@@ -241,6 +242,14 @@ pub fn subcommand_spec(sub: &str) -> Option<(&'static [&'static str], &'static [
                 "beam", "pieces", "slots", "out",
             ],
             &["verbose"],
+        )),
+        "cotenant" => Some((
+            &[
+                "scenarios", "kinds", "machines", "mechs", "gpus", "skew", "skew-seed", "jobs",
+                "out-dir", "tenants", "stagger", "model", "trace-out", "robust", "robust-seed",
+                "robust-mag",
+            ],
+            &["verbose", "csv", "stats", "quiet"],
         )),
         _ => None,
     }
@@ -405,6 +414,8 @@ mod tests {
         assert!(strict(vec!["sweep", "--scenario", "g5"]).is_err(), "sweep takes --scenarios");
         assert!(strict(vec!["tune", "--kinds", "all"]).is_err(), "tune has no kinds filter");
         assert!(strict(vec!["calibrate", "--houldout", "x"]).is_err());
+        assert!(strict(vec!["cotenant", "--tenant", "2"]).is_err(), "it is --tenants");
+        assert!(strict(vec!["cotenant", "--stager", "0.5"]).is_err());
     }
 
     #[test]
@@ -428,6 +439,10 @@ mod tests {
         assert!(strict(vec!["validate", "--artifacts", "a", "--m", "64"]).is_ok());
         assert!(strict(vec!["train", "--preset", "tiny", "--no-overlap-report"]).is_ok());
         assert!(strict(vec!["calibrate", "--holdout", "holdout:4:7", "--out", "m.ficco"]).is_ok());
+        assert!(strict(vec!["cotenant", "--tenants", "3", "--stagger", "0.5", "--csv"]).is_ok());
+        assert!(strict(vec!["cotenant", "--scenarios", "g5", "--trace-out", "t.json"]).is_ok());
+        assert!(strict(vec!["cotenant", "--resume"]).is_err(), "cotenant has no journal");
+        assert!(strict(vec!["cotenant", "--search", "beam"]).is_err(), "cotenant has no search");
     }
 
     #[test]
@@ -437,7 +452,8 @@ mod tests {
         assert!(strict(vec!["tune", "--resume", "--out-dir", "r"]).is_ok());
         assert!(strict(vec!["sweep", "--search", "beam", "--robust", "p95:8"]).is_ok());
         assert!(strict(vec!["sweep", "--resume", "--out-dir", "r"]).is_ok());
-        // Only sweep/tune honor them.
+        assert!(strict(vec!["cotenant", "--robust", "p95:8", "--robust-seed", "7"]).is_ok());
+        // Only sweep/tune/cotenant honor them.
         assert!(strict(vec!["simulate", "--robust", "p95:8"]).is_err());
         assert!(strict(vec!["trace", "--robust", "p95:8"]).is_err());
         assert!(strict(vec!["calibrate", "--resume"]).is_err());

@@ -14,7 +14,7 @@
 
 use std::io::{self, Write};
 
-use super::{BestPlan, CellResult, KindRow};
+use super::{BestPlan, CellResult, CotenantCellResult, KindRow};
 use crate::metrics::Exhibit;
 use crate::obs::Telemetry;
 use crate::schedule::Kind;
@@ -444,6 +444,214 @@ pub fn summary(cells: &[CellResult]) -> Exhibit {
     }
 }
 
+/// Column header for the co-tenant CSV (one row per tenant). The
+/// robust columns are filled only under `--robust`; they stay empty
+/// otherwise so the artifact shape is stable.
+pub const COTENANT_CSV_HEADER: &str = "scenario,machine,topology,ngpus,mech,collective,skew,\
+m,n,k,tenants,stagger,job,kind,plan,offset,isolated,makespan,slowdown,n_tasks,span,events,\
+robust_p50,robust_p95,robust_worst";
+
+/// CSV rows (one per tenant) for a single co-tenant cell.
+pub fn cotenant_csv_rows(c: &CotenantCellResult) -> String {
+    let (p50, p95, worst) = match &c.robust {
+        Some(r) => (r.p50.to_string(), r.p95.to_string(), r.worst.to_string()),
+        None => (String::new(), String::new(), String::new()),
+    };
+    let mut out = String::new();
+    for j in &c.jobs {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            csv_escape(&c.scenario),
+            csv_escape(&c.machine_name),
+            c.topology,
+            c.ngpus,
+            c.mech,
+            c.collective,
+            c.skew,
+            c.m,
+            c.n,
+            c.k,
+            c.tenants,
+            c.stagger,
+            j.job,
+            j.kind.name(),
+            j.plan_id,
+            j.offset,
+            j.isolated,
+            j.makespan,
+            j.slowdown,
+            j.n_tasks,
+            c.span,
+            c.events,
+            p50,
+            p95,
+            worst,
+        ));
+    }
+    out
+}
+
+/// One co-tenant cell as a JSON object (tenants nested under `"jobs"`).
+pub fn cotenant_json_cell(c: &CotenantCellResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"topology\":\"{}\",\"ngpus\":{},\
+         \"mech\":\"{}\",\"collective\":\"{}\",\"skew\":{},\"m\":{},\"n\":{},\"k\":{},\
+         \"tenants\":{},\"stagger\":{},\"span\":{},\"events\":{},\"robust\":{},\"jobs\":[",
+        json_escape(&c.scenario),
+        json_escape(&c.machine_name),
+        c.topology,
+        c.ngpus,
+        c.mech,
+        c.collective,
+        c.skew,
+        c.m,
+        c.n,
+        c.k,
+        c.tenants,
+        c.stagger,
+        c.span,
+        c.events,
+        match &c.robust {
+            Some(r) => format!(
+                "{{\"nominal\":{},\"p50\":{},\"p95\":{},\"worst\":{}}}",
+                r.nominal, r.p50, r.p95, r.worst
+            ),
+            None => "null".to_string(),
+        },
+    ));
+    for (i, j) in c.jobs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"job\":{},\"kind\":\"{}\",\"plan\":\"{}\",\"offset\":{},\"isolated\":{},\
+             \"makespan\":{},\"slowdown\":{},\"n_tasks\":{}}}",
+            j.job,
+            j.kind.name(),
+            json_escape(&j.plan_id),
+            j.offset,
+            j.isolated,
+            j.makespan,
+            j.slowdown,
+            j.n_tasks,
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Streams co-tenant CSV rows cell by cell.
+pub struct CotenantCsvEmitter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> CotenantCsvEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<CotenantCsvEmitter<W>> {
+        writeln!(w, "{COTENANT_CSV_HEADER}")?;
+        Ok(CotenantCsvEmitter { w })
+    }
+
+    pub fn cell(&mut self, c: &CotenantCellResult) -> io::Result<()> {
+        self.w.write_all(cotenant_csv_rows(c).as_bytes())
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Streams `{"results":[...],"telemetry":{...}}` for co-tenant cells
+/// — same canonical-view split as [`JsonEmitter`], so the byte-compare
+/// tooling works unchanged.
+pub struct CotenantJsonEmitter<W: Write> {
+    w: W,
+    count: usize,
+}
+
+impl<W: Write> CotenantJsonEmitter<W> {
+    pub fn new(mut w: W) -> io::Result<CotenantJsonEmitter<W>> {
+        w.write_all(b"{\"results\":[")?;
+        Ok(CotenantJsonEmitter { w, count: 0 })
+    }
+
+    pub fn cell(&mut self, c: &CotenantCellResult) -> io::Result<()> {
+        if self.count > 0 {
+            self.w.write_all(b",")?;
+        }
+        self.w.write_all(b"\n")?;
+        self.w.write_all(cotenant_json_cell(c).as_bytes())?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self, telemetry: &Telemetry) -> io::Result<W> {
+        self.w.write_all(b"\n],\n\"telemetry\":")?;
+        self.w.write_all(telemetry.to_json().as_bytes())?;
+        self.w.write_all(b"\n}\n")?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Condense a finished co-tenant run into an exhibit: geomean
+/// slowdown-vs-isolated per machine × tenant position, plus the
+/// geomean joint-span stretch over tenant 0's isolated makespan.
+pub fn cotenant_summary(cells: &[CotenantCellResult]) -> Exhibit {
+    let mut machines: Vec<String> = Vec::new();
+    for c in cells {
+        if !machines.contains(&c.machine_name) {
+            machines.push(c.machine_name.clone());
+        }
+    }
+    let npos = cells.first().map(|c| c.jobs.len()).unwrap_or(0);
+    let mut table = {
+        let mut headers = vec!["machine".to_string(), "cells".to_string()];
+        headers.extend((0..npos).map(|k| format!("job{k} slowdown")));
+        headers.push("span stretch".to_string());
+        Table::new(headers).align(0, Align::Left)
+    };
+    let mut summaries = Vec::new();
+    for mach in &machines {
+        let group: Vec<&CotenantCellResult> =
+            cells.iter().filter(|c| &c.machine_name == mach).collect();
+        let mut row = vec![mach.clone(), group.len().to_string()];
+        for k in 0..npos {
+            let slowdowns: Vec<f64> = group
+                .iter()
+                .filter_map(|c| c.jobs.get(k))
+                .map(|j| j.slowdown)
+                .collect();
+            let (g, skipped, cell) = stats::geomean_summary(&slowdowns);
+            row.push(cell);
+            summaries.push((format!("geomean_slowdown_{mach}_job{k}"), g));
+            if skipped > 0 {
+                summaries.push((
+                    format!("geomean_skipped_{mach}_job{k}"),
+                    skipped as f64,
+                ));
+            }
+        }
+        // Joint-span stretch: how much longer the shared machine takes
+        // to drain all tenants than tenant 0 alone would run.
+        let stretches: Vec<f64> = group
+            .iter()
+            .filter(|c| !c.jobs.is_empty())
+            .map(|c| c.span / c.jobs[0].isolated)
+            .collect();
+        let (g, _, cell) = stats::geomean_summary(&stretches);
+        row.push(cell);
+        summaries.push((format!("geomean_span_stretch_{mach}"), g));
+        table.row(row);
+    }
+    Exhibit {
+        title: "Co-tenant summary: geomean slowdown vs isolated, per tenant",
+        table,
+        summaries,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +793,74 @@ mod tests {
         }
         assert!(parse_fbits("shorty").is_none());
         assert!(parse_fbits("zzzzzzzzzzzzzzzz").is_none());
+    }
+
+    fn cotenant_results() -> Vec<CotenantCellResult> {
+        let spec = SweepSpec {
+            scenarios: vec![Scenario::new("t", 8192, 512, 1024)],
+            kinds: vec![Kind::UniformFused1D],
+            machines: vec![("mi300x-8".into(), Machine::mi300x_8())],
+            mechs: vec![CommMech::Dma],
+            gpu_counts: Vec::new(),
+            skews: Vec::new(),
+            skew_seed: crate::explore::DEFAULT_SKEW_SEED,
+            search: None,
+            model: None,
+        };
+        crate::explore::run_cotenant_cells(&spec.cells(), 2, 0.25, None, 1, |_| true).cells
+    }
+
+    #[test]
+    fn cotenant_csv_shape_matches_header() {
+        let rs = cotenant_results();
+        let ncols = COTENANT_CSV_HEADER.split(',').count();
+        for line in cotenant_csv_rows(&rs[0]).lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+        // Robust columns fill without changing the column count.
+        let mut c = rs[0].clone();
+        c.robust = Some(crate::schedule::exec::RobustStats {
+            nominal: c.span,
+            p50: c.span,
+            p95: c.span * 1.1,
+            worst: c.span * 1.2,
+        });
+        for line in cotenant_csv_rows(&c).lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+        assert!(cotenant_json_cell(&c).contains("\"robust\":{\"nominal\":"));
+        assert!(cotenant_json_cell(&rs[0]).contains("\"robust\":null"));
+    }
+
+    #[test]
+    fn cotenant_emitters_stream_and_terminate() {
+        let rs = cotenant_results();
+        let mut csv = CotenantCsvEmitter::new(Vec::new()).unwrap();
+        let mut json = CotenantJsonEmitter::new(Vec::new()).unwrap();
+        for c in &rs {
+            csv.cell(c).unwrap();
+            json.cell(c).unwrap();
+        }
+        let csv = String::from_utf8(csv.finish().unwrap()).unwrap();
+        let json = String::from_utf8(json.finish(&Telemetry::default()).unwrap()).unwrap();
+        assert!(csv.starts_with("scenario,machine"));
+        assert_eq!(csv.lines().count(), 1 + rs[0].jobs.len());
+        assert!(json.starts_with("{\"results\":["));
+        assert!(json.contains("\n],\n\"telemetry\":"));
+        assert!(json.contains("\"tenants\":2"));
+        let canon = crate::obs::canonical_artifact_view(&json);
+        assert!(canon.ends_with("\n]"));
+        assert!(!canon.contains("telemetry"));
+    }
+
+    #[test]
+    fn cotenant_summary_has_per_job_geomeans() {
+        let rs = cotenant_results();
+        let e = cotenant_summary(&rs);
+        assert_eq!(e.table.n_rows(), 1);
+        assert!(e.summary("geomean_slowdown_mi300x-8_job0") >= 1.0 - 1e-9);
+        assert!(e.summary("geomean_slowdown_mi300x-8_job1") >= 1.0 - 1e-9);
+        assert!(e.summary("geomean_span_stretch_mi300x-8") >= 1.0 - 1e-9);
     }
 
     #[test]

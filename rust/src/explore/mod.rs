@@ -671,6 +671,230 @@ pub fn run_cells<F: FnMut(&CellResult) -> bool>(
     }
 }
 
+/// One tenant's measurements within a co-tenant cell (ISSUE 10).
+#[derive(Debug, Clone)]
+pub struct CotenantJobRow {
+    /// Tenant index (admission order).
+    pub job: usize,
+    pub kind: Kind,
+    pub plan_id: String,
+    /// Virtual time the tenant was admitted at.
+    pub offset: f64,
+    /// Isolated (solo) makespan of the tenant's plan.
+    pub isolated: f64,
+    /// Co-tenant makespan (admission to last task finish).
+    pub makespan: f64,
+    /// Interference slowdown, `makespan / isolated`.
+    pub slowdown: f64,
+    pub n_tasks: usize,
+}
+
+/// Deterministic result of one co-tenant cell: N tenants of the same
+/// scenario admitted at staggered offsets into one shared-machine
+/// simulation, each measured against its isolated run.
+#[derive(Debug, Clone)]
+pub struct CotenantCellResult {
+    pub index: usize,
+    pub machine_name: String,
+    pub topology: String,
+    pub ngpus: usize,
+    pub scenario: String,
+    pub collective: String,
+    pub mech: String,
+    pub skew: f64,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub tenants: usize,
+    /// Admission stagger as a fraction of tenant 0's isolated
+    /// makespan (tenant k is admitted at `k * stagger * isolated_0`).
+    pub stagger: f64,
+    /// Joint span: virtual time the last tenant finished.
+    pub span: f64,
+    /// Events processed by the joint simulation.
+    pub events: usize,
+    pub jobs: Vec<CotenantJobRow>,
+    /// Joint-span statistics under the perturbation ensemble
+    /// (None when the run was nominal-only).
+    pub robust: Option<crate::schedule::exec::RobustStats>,
+    pub eval_seconds: f64,
+}
+
+/// The co-tenant job list one cell evaluates: per-tenant plans with
+/// their schedule kinds, admitted at `k * stagger * isolated_0`.
+/// The cell's requested kinds (baseline excluded — it is the speedup
+/// reference, not a tenant) cycle across the `tenants` jobs; with a
+/// calibrated model loaded, every tenant runs the model's predicted
+/// plan instead. `stagger = 0` admits every tenant at t = 0 and
+/// `stagger >= 1` serializes them.
+pub fn cotenant_jobs_for(
+    ev: &mut Evaluator,
+    cell: &Cell,
+    tenants: usize,
+    stagger: f64,
+) -> Vec<(Kind, crate::schedule::exec::CotenantJob)> {
+    use crate::schedule::exec::CotenantJob;
+    assert!(tenants >= 1, "co-tenant evaluation needs >= 1 tenant");
+    assert!(
+        stagger.is_finite() && stagger >= 0.0,
+        "stagger must be finite and >= 0"
+    );
+    let machine = &cell.machine;
+    let sc = &cell.scenario;
+    let assigned: Vec<(Kind, crate::plan::Plan)> = match &cell.model {
+        Some(model) => {
+            let d = model.predict(machine, sc);
+            (0..tenants).map(|_| (d.kind, d.plan.clone())).collect()
+        }
+        None => {
+            let mut kinds: Vec<Kind> = cell
+                .kinds
+                .iter()
+                .copied()
+                .filter(|&k| k != Kind::Baseline)
+                .collect();
+            if kinds.is_empty() {
+                kinds.push(Kind::Baseline);
+            }
+            (0..tenants)
+                .map(|t| {
+                    let k = kinds[t % kinds.len()];
+                    (k, crate::plan::Plan::preset(k, sc))
+                })
+                .collect()
+        }
+    };
+    let iso0 = ev.plan_makespan(machine, sc, &assigned[0].1);
+    assigned
+        .into_iter()
+        .enumerate()
+        .map(|(t, (kind, plan))| {
+            (
+                kind,
+                CotenantJob {
+                    scenario: sc.clone(),
+                    plan,
+                    offset: t as f64 * stagger * iso0,
+                },
+            )
+        })
+        .collect()
+}
+
+/// Evaluate one co-tenant cell through a reusable [`Evaluator`]
+/// arena (see [`cotenant_jobs_for`] for how tenants get their plans
+/// and admission offsets).
+pub fn eval_cotenant_cell_in(
+    ev: &mut Evaluator,
+    cell: &Cell,
+    tenants: usize,
+    stagger: f64,
+    robust: Option<&crate::hw::Perturbation>,
+) -> CotenantCellResult {
+    use crate::schedule::exec::CotenantJob;
+    let t0 = Instant::now();
+    ev.counters.cells += 1;
+    let machine = &cell.machine;
+    let tagged = cotenant_jobs_for(ev, cell, tenants, stagger);
+    let jobs: Vec<CotenantJob> = tagged.iter().map(|(_, j)| j.clone()).collect();
+    let co = ev.cotenant(machine, &jobs);
+    let robust = robust.map(|ens| ev.cotenant_robust_span(machine, &jobs, ens, co.span));
+    let sc = &cell.scenario;
+    let rows = tagged
+        .iter()
+        .zip(&co.jobs)
+        .enumerate()
+        .map(|(t, ((kind, job), j))| CotenantJobRow {
+            job: t,
+            kind: *kind,
+            plan_id: job.plan.id(),
+            offset: j.offset,
+            isolated: j.isolated,
+            makespan: j.makespan,
+            slowdown: j.slowdown,
+            n_tasks: j.n_tasks,
+        })
+        .collect();
+    CotenantCellResult {
+        index: cell.index,
+        machine_name: cell.machine_name.clone(),
+        topology: machine.topo.kind.name().to_string(),
+        ngpus: sc.ngpus,
+        scenario: sc.name.clone(),
+        collective: sc.collective.name().to_string(),
+        mech: sc.mech.name().to_string(),
+        skew: sc.skew,
+        m: sc.gemm.m,
+        n: sc.gemm.n,
+        k: sc.gemm.k,
+        tenants,
+        stagger,
+        span: co.span,
+        events: co.events,
+        jobs: rows,
+        robust,
+        eval_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Timing and results of one co-tenant run.
+#[derive(Debug)]
+pub struct CotenantReport {
+    pub jobs: usize,
+    pub cells: Vec<CotenantCellResult>,
+    pub failures: Vec<crate::util::pool::ItemPanic>,
+    pub wall_seconds: f64,
+    pub telemetry: Telemetry,
+}
+
+/// Run co-tenant cells on the deterministic ordered worker pool —
+/// same delivery/cancellation contract as [`run_cells`], so the
+/// emitters produce identical bytes for any `jobs` value.
+pub fn run_cotenant_cells<F: FnMut(&CotenantCellResult) -> bool>(
+    cells: &[Cell],
+    tenants: usize,
+    stagger: f64,
+    robust: Option<&crate::hw::Perturbation>,
+    jobs: usize,
+    mut on_cell: F,
+) -> CotenantReport {
+    let merged = Mutex::new(Counters::default());
+    let t0 = Instant::now();
+    let pool_run = crate::util::pool::run_ordered_with(
+        cells,
+        jobs,
+        Evaluator::new,
+        |ev, _, cell| eval_cotenant_cell_in(ev, cell, tenants, stagger, robust),
+        |ev: Evaluator| merged.lock().unwrap().merge(&ev.counters),
+        |_, result| on_cell(result),
+    );
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let failures = pool_run
+        .failures
+        .iter()
+        .map(|f| crate::util::pool::ItemPanic {
+            index: cells[f.index].index,
+            message: f.message.clone(),
+        })
+        .collect();
+    let telemetry = Telemetry {
+        jobs: pool_run.jobs,
+        wall_seconds,
+        counters: *merged.lock().unwrap(),
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_shards: Vec::new(),
+        cell_seconds: pool_run.results.iter().map(|c| c.eval_seconds).collect(),
+    };
+    CotenantReport {
+        jobs: pool_run.jobs,
+        cells: pool_run.results,
+        failures,
+        wall_seconds,
+        telemetry,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -960,6 +1184,74 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cotenant_cells_are_jobs_invariant_and_slowdowns_sane() {
+        let mut spec = tiny_spec();
+        spec.mechs.truncate(1);
+        let cells = spec.cells();
+        let r1 = run_cotenant_cells(&cells, 2, 0.25, None, 1, |_| true);
+        let r4 = run_cotenant_cells(&cells, 2, 0.25, None, 4, |_| true);
+        assert!(r1.failures.is_empty());
+        assert_eq!(r1.cells.len(), cells.len());
+        for (a, b) in r1.cells.iter().zip(&r4.cells) {
+            assert_eq!(a.span.to_bits(), b.span.to_bits());
+            assert_eq!(a.events, b.events);
+            for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(ja.makespan.to_bits(), jb.makespan.to_bits());
+                assert_eq!(ja.slowdown.to_bits(), jb.slowdown.to_bits());
+            }
+        }
+        for c in &r1.cells {
+            assert_eq!(c.jobs.len(), 2);
+            // Kinds cycle over the requested (non-baseline) kinds.
+            assert_eq!(c.jobs[0].kind, Kind::UniformFused1D);
+            assert_eq!(c.jobs[1].kind, Kind::UniformFused2D);
+            for j in &c.jobs {
+                assert!(j.isolated > 0.0 && j.makespan > 0.0);
+                assert!(j.slowdown >= 1.0 - 1e-9, "co-tenancy cannot speed a job up");
+                assert!(c.span >= j.offset + j.makespan - 1e-9 * c.span);
+            }
+            assert_eq!(c.jobs[0].offset, 0.0);
+            assert!(c.jobs[1].offset > 0.0);
+        }
+    }
+
+    #[test]
+    fn cotenant_robust_column_fills_and_nominal_stays_bitwise() {
+        let mut spec = tiny_spec();
+        spec.scenarios.truncate(1);
+        spec.mechs.truncate(1);
+        let cells = spec.cells();
+        let nominal = run_cotenant_cells(&cells, 2, 0.0, None, 1, |_| true);
+        let ens = crate::hw::Perturbation::defaults(3, 42);
+        let robust = run_cotenant_cells(&cells, 2, 0.0, Some(&ens), 1, |_| true);
+        for (n, r) in nominal.cells.iter().zip(&robust.cells) {
+            assert!(n.robust.is_none());
+            let stats = r.robust.as_ref().expect("robust stats recorded");
+            assert_eq!(n.span.to_bits(), r.span.to_bits());
+            assert_eq!(stats.nominal.to_bits(), r.span.to_bits());
+            assert!(stats.p50 <= stats.p95 && stats.p95 <= stats.worst);
+            for (ja, jb) in n.jobs.iter().zip(&r.jobs) {
+                assert_eq!(ja.makespan.to_bits(), jb.makespan.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cotenant_model_assigns_the_predicted_plan_to_every_tenant() {
+        let mut spec = tiny_spec();
+        spec.scenarios.truncate(1);
+        spec.mechs.truncate(1);
+        spec.model = Some(crate::heuristics::model::HeuristicModel::default());
+        let cells = spec.cells();
+        let r = run_cotenant_cells(&cells, 3, 0.5, None, 1, |_| true);
+        let c = &r.cells[0];
+        assert_eq!(c.jobs.len(), 3);
+        let first = &c.jobs[0].plan_id;
+        assert!(c.jobs.iter().all(|j| &j.plan_id == first));
+        assert!(c.jobs.iter().all(|j| j.kind == c.jobs[0].kind));
     }
 
     #[test]

@@ -33,6 +33,16 @@
 //!   an ordered worker pool ([`util::pool`]) with deterministic,
 //!   byte-stable CSV/JSON output (the `ficco sweep` subcommand).
 //!
+//! The simulator core is *resumable* (`DESIGN.md` §11): [`sim::Engine`]
+//! exposes a stepper (`begin_run` / `step` / `advance_until` /
+//! `admit_tasks` / `finish_run`) with a caller-owned virtual clock and
+//! mid-run task admission, the one-shot runs being thin bit-identical
+//! drivers over the same core. Multiple schedule instances co-tenant
+//! one machine through per-tenant stream banks in [`sim::ClusterSim`],
+//! surfaced as `Evaluator::cotenant` ([`schedule::exec`]), the
+//! co-tenant sweep runner in [`explore`], and the `ficco cotenant`
+//! subcommand with per-job slowdown-vs-isolated exhibits.
+//!
 //! The selection side is closed by [`heuristics`]: the frozen Fig-12a
 //! static rule, plus the calibrated plan-space model
 //! ([`heuristics::model`]) that `ficco calibrate` fits against

@@ -65,6 +65,26 @@
 //!                                   optima (--holdout suite gates the
 //!                                   fit; byte-stable artifact via
 //!                                   --out results/model.ficco)
+//!   cotenant   [--tenants N] ...    multi-job co-tenancy study: admit
+//!                                   N schedule instances of each cell
+//!                                   at staggered offsets into ONE
+//!                                   shared simulated machine and
+//!                                   report per-job makespan and
+//!                                   slowdown vs isolated (filters as
+//!                                   sweep: --scenarios --kinds
+//!                                   --machines --mechs --gpus --skew
+//!                                   --skew-seed; --stagger F spaces
+//!                                   admissions at F x tenant 0's
+//!                                   isolated makespan; --model runs
+//!                                   the calibrated pick per tenant;
+//!                                   --robust p95:N|worst:N adds
+//!                                   perturbation-ensemble span
+//!                                   statistics; --trace-out FILE
+//!                                   writes a Perfetto trace of the
+//!                                   first cell's co-tenant timeline;
+//!                                   --jobs, --out-dir
+//!                                   results/cotenant, --verbose,
+//!                                   --csv, --stats, --quiet)
 //!   validate   [--artifacts DIR]    numeric equivalence of all schedules
 //!                                   (real data through PJRT)
 //!   train      [--preset NAME]      end-to-end training driver
@@ -183,6 +203,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         Some("calibrate") => cmd_calibrate(args),
         Some("validate") => cmd_validate(args),
         Some("train") => cmd_train(args),
+        Some("cotenant") => cmd_cotenant(args),
         Some(other) => Err(format!("unknown subcommand '{other}'").into()),
         None => {
             println!("ficco {} — FiCCO: finer-grain compute-communication overlap", ficco::version());
@@ -1335,6 +1356,158 @@ fn cmd_calibrate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     }
     out.model.save(out_path)?;
     println!("model -> {out_path}");
+    Ok(())
+}
+
+/// `ficco cotenant`: the multi-job co-tenancy study riding the
+/// resumable sim core (ISSUE 10). Per cell, `--tenants` schedule
+/// instances are admitted at staggered virtual times into one shared
+/// `ClusterSim` (each tenant on its own stream bank, contending only
+/// through max–min fair sharing), and each tenant's makespan is
+/// reported against its isolated run. Output is byte-identical for
+/// any `--jobs` value (deterministic ordered pool + shortest-round-
+/// trip float formatting), which the CI co-tenant smoke job verifies.
+fn cmd_cotenant(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let mut spec = ficco::explore::SweepSpec::from_filters(
+        args.get_or("scenarios", "table1"),
+        args.get_or("kinds", "ficco"),
+        args.get_or("machines", "mi300x-8"),
+        args.get_or("mechs", "dma"),
+        args.get_or("gpus", "native"),
+        args.get_or("skew", "0"),
+    )?;
+    spec.skew_seed = args.get_u64("skew-seed", ficco::explore::DEFAULT_SKEW_SEED)?;
+    spec.model = model_opt_from(args)?;
+    let tenants = args.get_usize("tenants", 2)?;
+    if tenants == 0 {
+        return Err("--tenants must be >= 1".into());
+    }
+    let stagger = args.get_f64("stagger", 0.25)?;
+    if !(stagger.is_finite() && stagger >= 0.0) {
+        return Err(format!("--stagger must be finite and >= 0, got {stagger}").into());
+    }
+    let robust = parse_robust(args)?;
+    let ensemble = robust.as_ref().map(|rc| rc.ensemble.clone());
+
+    let out_dir = args.get_or("out-dir", "results/cotenant");
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = format!("{out_dir}/cotenant.csv");
+    let json_path = format!("{out_dir}/cotenant.json");
+
+    let cells = spec.cells();
+    let jobs = ficco::explore::clamp_jobs(args.get_jobs("jobs")?, cells.len());
+    progress!(
+        "cotenant: {} cells x {} tenants (stagger {}) on {} worker thread{}",
+        cells.len(),
+        tenants,
+        stagger,
+        jobs,
+        if jobs == 1 { "" } else { "s" },
+    );
+
+    let verbose = args.has("verbose");
+    let report = ficco::explore::run_cotenant_cells(
+        &cells,
+        tenants,
+        stagger,
+        ensemble.as_ref(),
+        jobs,
+        |c| {
+            if verbose {
+                let worst = c
+                    .jobs
+                    .iter()
+                    .map(|j| j.slowdown)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                progress!(
+                    "  [{:>4}] {:<8} {:<12} {:<5} {}g: span {} worst slowdown {}",
+                    c.index,
+                    c.scenario,
+                    c.machine_name,
+                    c.mech,
+                    c.ngpus,
+                    ficco::util::human_time(c.span),
+                    x(worst),
+                );
+            }
+            true
+        },
+    );
+    if !report.failures.is_empty() {
+        for f in &report.failures {
+            eprintln!("cotenant: cell {} failed: {}", f.index, f.message);
+        }
+        return Err(format!(
+            "{} of {} cells failed; no artifact emitted",
+            report.failures.len(),
+            cells.len(),
+        )
+        .into());
+    }
+
+    // Whole-file, write-temp-then-rename artifacts, like sweep/tune.
+    let mut csv = ficco::explore::emit::CotenantCsvEmitter::new(
+        ficco::util::atomic::AtomicFile::create(&csv_path)?,
+    )?;
+    let mut json = ficco::explore::emit::CotenantJsonEmitter::new(
+        ficco::util::atomic::AtomicFile::create(&json_path)?,
+    )?;
+    for c in &report.cells {
+        csv.cell(c)?;
+        json.cell(c)?;
+    }
+    csv.finish()?.commit()?;
+    json.finish(&report.telemetry)?.commit()?;
+
+    let exhibit = ficco::explore::emit::cotenant_summary(&report.cells);
+    exhibit.print();
+    if args.has("csv") {
+        let summary_path = format!("{out_dir}/summary.csv");
+        exhibit.write_csv(&summary_path)?;
+        progress!("  -> {summary_path}");
+    }
+    if args.has("stats") {
+        println!("== telemetry ==");
+        print!("{}", report.telemetry.table().render());
+    }
+
+    // `--trace-out FILE`: Perfetto trace of the first cell's joint
+    // co-tenant timeline — every tenant's tasks on its own stream
+    // bank (track names prefixed j1:, j2:, ... past tenant 0).
+    if let Some(path) = args.get("trace-out") {
+        let cell = cells.first().ok_or("--trace-out: no cells to trace")?;
+        let mut ev = ficco::schedule::exec::Evaluator::new();
+        let tagged = ficco::explore::cotenant_jobs_for(&mut ev, cell, tenants, stagger);
+        let jobs: Vec<ficco::schedule::exec::CotenantJob> =
+            tagged.into_iter().map(|(_, j)| j).collect();
+        let (co, _report, rec, tracks) = ev.capture_cotenant(&cell.machine, &jobs);
+        let meta = trace_meta(&cell.machine_name, &cell.scenario, &jobs[0].plan);
+        ficco::util::atomic::write(
+            path,
+            ficco::obs::perfetto_json(ev.engine(), &rec, &tracks, &meta),
+        )?;
+        progress!(
+            "trace: {} on {} x{} tenants span {}",
+            cell.scenario.name,
+            cell.machine_name,
+            tenants,
+            ficco::util::human_time(co.span),
+        );
+        progress!("  -> {path}");
+    }
+
+    let n_rows: usize = report.cells.iter().map(|c| c.jobs.len()).sum();
+    let cpu_seconds: f64 = report.cells.iter().map(|c| c.eval_seconds).sum();
+    progress!(
+        "{} tenant rows across {} cells in {:.2}s wall ({:.2}s of evaluation on {} workers)",
+        n_rows,
+        report.cells.len(),
+        report.wall_seconds,
+        cpu_seconds,
+        report.jobs,
+    );
+    progress!("  -> {csv_path}");
+    progress!("  -> {json_path}");
     Ok(())
 }
 

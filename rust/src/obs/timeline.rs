@@ -55,6 +55,33 @@ impl TimelineRecorder {
         Self::default()
     }
 
+    /// Grow the per-task buffers to the engine's current inventory.
+    /// Mid-run admission (`Engine::admit_tasks`) appends tasks after
+    /// `on_begin` sized everything; the first hook a new task fires is
+    /// `on_ready`, which lands here. One-shot runs never take this
+    /// path, so their capture is untouched bit for bit.
+    fn ensure_tasks(&mut self, eng: &Engine, tid: usize) {
+        if tid < self.ready.len() {
+            return;
+        }
+        let n = eng.n_tasks();
+        self.ready.resize(n, f64::NAN);
+        self.start.resize(n, f64::NAN);
+        self.finish.resize(n, f64::NAN);
+        self.throttled.resize(n, Vec::new());
+        self.throttle_since.resize(n, f64::NAN);
+        let from = self.solo.len();
+        self.solo.extend((from..n).map(|t| {
+            let mut rate = 1.0f64;
+            for &(r, d) in eng.task_demands(t) {
+                if d > EPS {
+                    rate = rate.min(eng.capacity(r) / d);
+                }
+            }
+            rate
+        }));
+    }
+
     fn close_throttle(&mut self, tid: usize, now: f64) {
         let t0 = self.throttle_since[tid];
         self.throttle_since[tid] = f64::NAN;
@@ -73,7 +100,9 @@ impl TimelineRecorder {
         let mut gaps = vec![Vec::new(); eng.n_streams()];
         let mut last_finish = vec![f64::NAN; eng.n_streams()];
         for tid in 0..eng.n_tasks() {
-            if self.ready[tid].is_nan() {
+            // Admitted-but-never-promoted tasks may lie past the
+            // captured range.
+            if tid >= self.ready.len() || self.ready[tid].is_nan() {
                 continue;
             }
             let s = eng.task_stream(tid).0;
@@ -134,7 +163,8 @@ impl Recorder for TimelineRecorder {
         }));
     }
 
-    fn on_ready(&mut self, _eng: &Engine, now: f64, tid: usize) {
+    fn on_ready(&mut self, eng: &Engine, now: f64, tid: usize) {
+        self.ensure_tasks(eng, tid);
         self.ready[tid] = now;
     }
 

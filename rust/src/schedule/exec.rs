@@ -56,6 +56,44 @@ fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// One co-tenant job (ISSUE 10): `plan` lowered for `scenario` and
+/// admitted into the shared machine's live simulation at virtual time
+/// `offset`. Jobs must be listed in nondecreasing-offset order (the
+/// admission clock only moves forward).
+#[derive(Debug, Clone)]
+pub struct CotenantJob {
+    pub scenario: Scenario,
+    pub plan: Plan,
+    pub offset: f64,
+}
+
+/// Per-job measurements of one co-tenant evaluation.
+#[derive(Debug, Clone)]
+pub struct CotenantJobEval {
+    /// Isolated (solo) makespan of the job's plan on the same machine
+    /// — bit-identical to [`Evaluator::plan_makespan`].
+    pub isolated: f64,
+    /// Co-tenant makespan: the job's admission to its last task
+    /// finishing, while sharing every resource with the other jobs.
+    pub makespan: f64,
+    /// Cross-job interference slowdown, `makespan / isolated`.
+    pub slowdown: f64,
+    /// Virtual time the job was admitted at.
+    pub offset: f64,
+    pub n_tasks: usize,
+}
+
+/// Joint co-tenant evaluation: per-job results plus the joint span.
+#[derive(Debug, Clone)]
+pub struct CotenantEval {
+    pub jobs: Vec<CotenantJobEval>,
+    /// Virtual time the last job finished (the joint makespan,
+    /// measured from t = 0).
+    pub span: f64,
+    /// Events processed by the joint simulation.
+    pub events: usize,
+}
+
 /// Measured execution of one schedule.
 #[derive(Debug, Clone)]
 pub struct ExecResult {
@@ -239,14 +277,24 @@ impl Evaluator {
     /// arena without running it.
     fn load(&mut self, machine: &Machine, sched: &Schedule) {
         self.ensure_sim(machine);
-        let sim = self.sim.as_mut().expect("sim bound above");
-        sim.reset();
+        self.sim.as_mut().expect("sim bound above").reset();
 
         let ngpus = machine.ngpus();
         self.gemm_tasks.clear();
         self.xfer_tasks.clear();
         self.gemm_iso_per_gpu.clear();
         self.gemm_iso_per_gpu.resize(ngpus, 0.0);
+        self.append_graph(machine, sched, None);
+    }
+
+    /// Append `sched`'s task graph onto the bound sim *without*
+    /// resetting it — the building block [`Evaluator::load`] (reset +
+    /// one graph) and the co-tenant joint run (one graph per admitted
+    /// job) share. `job` tags trace labels with a `j<k>:` prefix so
+    /// co-tenant timelines distinguish tenants; `None` is the one-shot
+    /// path, byte-identical to the pre-factor loader.
+    fn append_graph(&mut self, machine: &Machine, sched: &Schedule, job: Option<usize>) {
+        let sim = self.sim.as_mut().expect("sim bound above");
         self.task_of.clear();
 
         let gcost = GemmCost::new(&machine.gpu);
@@ -264,7 +312,10 @@ impl Evaluator {
                 self.dep_scratch.push(self.task_of[d]);
             }
             let label = if trace {
-                Label::Owned(node.label.clone())
+                match job {
+                    Some(k) => Label::Owned(format!("j{k}:{}", node.label)),
+                    None => Label::Owned(node.label.clone()),
+                }
             } else {
                 Label::indexed("n", i)
             };
@@ -502,6 +553,260 @@ impl Evaluator {
             .run_full_recorded(&mut rec)
             .unwrap_or_else(|e| panic!("tracing plan {} for {}: {e}", plan.id(), sc.name));
         (report, rec, sim.track_map())
+    }
+
+    /// Lower → validate each co-tenant job's plan. Co-tenant lowering
+    /// is not on the search hot path, so it runs outside any cell
+    /// scope (no memoized partitions, full validation).
+    fn lower_cotenant(&mut self, jobs: &[CotenantJob]) -> Vec<Schedule> {
+        let with_labels = self.keep_labels || crate::sim::trace_enabled();
+        jobs.iter()
+            .map(|j| {
+                let sched = crate::plan::lower_opts(&j.plan, &j.scenario, None, with_labels);
+                super::validate::validate(&sched).unwrap_or_else(|e| {
+                    panic!("co-tenant plan {} for {}: {e}", j.plan.id(), j.scenario.name)
+                });
+                sched
+            })
+            .collect()
+    }
+
+    /// Drive the joint co-tenant simulation over pre-lowered
+    /// schedules: begin an empty resumable run, then for each job
+    /// advance the virtual clock to its offset, build its graph onto a
+    /// private stream bank, and admit it as a new engine instance —
+    /// fair sharing against the already-running jobs falls out of the
+    /// per-resource flow lists. Returns (per-job makespans, joint
+    /// span, events).
+    fn run_cotenant_joint(
+        &mut self,
+        machine: &Machine,
+        jobs: &[CotenantJob],
+        scheds: &[Schedule],
+    ) -> (Vec<f64>, f64, usize) {
+        self.ensure_sim(machine);
+        self.gemm_tasks.clear();
+        self.xfer_tasks.clear();
+        self.gemm_iso_per_gpu.clear();
+        self.gemm_iso_per_gpu.resize(machine.ngpus(), 0.0);
+        {
+            let sim = self.sim.as_mut().expect("sim bound above");
+            sim.reset();
+            sim.engine.begin_run_lean();
+        }
+        for (k, sched) in scheds.iter().enumerate() {
+            {
+                let sim = self.sim.as_mut().expect("sim bound above");
+                sim.select_stream_bank(k);
+                sim.engine
+                    .advance_until(jobs[k].offset)
+                    .unwrap_or_else(|e| panic!("co-tenant advance to t={}: {e}", jobs[k].offset));
+            }
+            self.append_graph(machine, sched, Some(k));
+            self.sim
+                .as_mut()
+                .expect("sim bound above")
+                .engine
+                .admit_appended()
+                .unwrap_or_else(|e| panic!("co-tenant admission at t={}: {e}", jobs[k].offset));
+        }
+        let sim = self.sim.as_mut().expect("sim bound above");
+        let lean = sim
+            .engine
+            .finish_lean()
+            .unwrap_or_else(|e| panic!("co-tenant joint run: {e}"));
+        let spans = (0..scheds.len())
+            .map(|k| sim.engine.instance_makespan(k))
+            .collect();
+        sim.select_stream_bank(0);
+        (spans, lean.makespan, lean.events)
+    }
+
+    /// Evaluate `jobs` as co-tenants of one machine (ISSUE 10): every
+    /// job's plan is lowered and admitted into a single shared live
+    /// simulation at its offset, on a private stream bank, so jobs
+    /// contend for CUs / HBM / links / DMA engines through max–min
+    /// fair sharing exactly like the paper's intra-job kernels do.
+    /// Reports each job's co-tenant makespan next to its isolated one
+    /// (the slowdown-vs-isolated interference signature) plus the
+    /// joint span. Deterministic: the result is a pure function of
+    /// (machine, jobs), independent of evaluator history.
+    pub fn cotenant(&mut self, machine: &Machine, jobs: &[CotenantJob]) -> CotenantEval {
+        assert!(!jobs.is_empty(), "co-tenant evaluation needs >= 1 job");
+        assert!(
+            jobs.iter().all(|j| j.offset.is_finite() && j.offset >= 0.0),
+            "co-tenant offsets must be finite and >= 0"
+        );
+        for w in jobs.windows(2) {
+            assert!(
+                w[1].offset >= w[0].offset,
+                "co-tenant offsets must be nondecreasing (the admission clock only moves forward)"
+            );
+        }
+        let isolated: Vec<f64> = jobs
+            .iter()
+            .map(|j| self.plan_makespan(machine, &j.scenario, &j.plan))
+            .collect();
+        let scheds = self.lower_cotenant(jobs);
+        let (spans, span, events) = self.run_cotenant_joint(machine, jobs, &scheds);
+        let jobs_out = jobs
+            .iter()
+            .enumerate()
+            .map(|(k, j)| CotenantJobEval {
+                isolated: isolated[k],
+                makespan: spans[k],
+                slowdown: spans[k] / isolated[k],
+                offset: j.offset,
+                n_tasks: scheds[k].nodes.len(),
+            })
+            .collect();
+        CotenantEval {
+            jobs: jobs_out,
+            span,
+            events,
+        }
+    }
+
+    /// As [`Evaluator::cotenant`], additionally capturing the joint
+    /// timeline under a [`TimelineRecorder`] (with human-readable,
+    /// `j<k>:`-prefixed node labels) for co-tenant Perfetto traces —
+    /// cross-job contention shows up as throttled windows on one job's
+    /// spans while another job's are live. Returns the evaluation, the
+    /// full engine report of the joint run, the recorder, and the
+    /// track map covering every tenant stream bank.
+    pub fn capture_cotenant(
+        &mut self,
+        machine: &Machine,
+        jobs: &[CotenantJob],
+    ) -> (CotenantEval, Report, TimelineRecorder, TrackMap) {
+        assert!(!jobs.is_empty(), "co-tenant evaluation needs >= 1 job");
+        let keep = self.keep_labels;
+        self.keep_labels = true;
+        let isolated: Vec<f64> = jobs
+            .iter()
+            .map(|j| self.plan_makespan(machine, &j.scenario, &j.plan))
+            .collect();
+        let scheds = self.lower_cotenant(jobs);
+        let mut rec = TimelineRecorder::new();
+        let (spans, report, track_map) =
+            self.run_cotenant_joint_captured(machine, jobs, &scheds, &mut rec);
+        self.keep_labels = keep;
+        let jobs_out = jobs
+            .iter()
+            .enumerate()
+            .map(|(k, j)| CotenantJobEval {
+                isolated: isolated[k],
+                makespan: spans[k],
+                slowdown: spans[k] / isolated[k],
+                offset: j.offset,
+                n_tasks: scheds[k].nodes.len(),
+            })
+            .collect();
+        let eval = CotenantEval {
+            jobs: jobs_out,
+            span: report.makespan,
+            events: report.events,
+        };
+        (eval, report, rec, track_map)
+    }
+
+    /// The full-accounting, recorded companion of
+    /// [`Evaluator::run_cotenant_joint`] — same admission sequence,
+    /// driven through the `*_recorded` stepper calls so the recorder
+    /// observes every structural event of the joint run.
+    fn run_cotenant_joint_captured(
+        &mut self,
+        machine: &Machine,
+        jobs: &[CotenantJob],
+        scheds: &[Schedule],
+        rec: &mut TimelineRecorder,
+    ) -> (Vec<f64>, Report, TrackMap) {
+        self.ensure_sim(machine);
+        self.gemm_tasks.clear();
+        self.xfer_tasks.clear();
+        self.gemm_iso_per_gpu.clear();
+        self.gemm_iso_per_gpu.resize(machine.ngpus(), 0.0);
+        {
+            let sim = self.sim.as_mut().expect("sim bound above");
+            sim.reset();
+            sim.engine.begin_run_recorded(rec);
+        }
+        for (k, sched) in scheds.iter().enumerate() {
+            {
+                let sim = self.sim.as_mut().expect("sim bound above");
+                sim.select_stream_bank(k);
+                sim.engine
+                    .advance_until_recorded(jobs[k].offset, rec)
+                    .unwrap_or_else(|e| panic!("co-tenant advance to t={}: {e}", jobs[k].offset));
+            }
+            self.append_graph(machine, sched, Some(k));
+            self.sim
+                .as_mut()
+                .expect("sim bound above")
+                .engine
+                .admit_appended_recorded(rec)
+                .unwrap_or_else(|e| panic!("co-tenant admission at t={}: {e}", jobs[k].offset));
+        }
+        let sim = self.sim.as_mut().expect("sim bound above");
+        let report = sim
+            .engine
+            .finish_run_recorded(rec)
+            .unwrap_or_else(|e| panic!("co-tenant joint run: {e}"));
+        let spans = (0..scheds.len())
+            .map(|k| sim.engine.instance_makespan(k))
+            .collect();
+        let track_map = sim.track_map();
+        sim.select_stream_bank(0);
+        (spans, report, track_map)
+    }
+
+    /// Robustness of the joint co-tenant span under a perturbation
+    /// ensemble (`--robust` composing with `ficco cotenant`): the
+    /// joint simulation re-runs per ensemble sample with the sample's
+    /// multipliers installed at task-build time, mirroring
+    /// [`Evaluator::plan_robust_stats`]. A nominal ensemble
+    /// short-circuits to the nominal span without touching the sim.
+    pub fn cotenant_robust_span(
+        &mut self,
+        machine: &Machine,
+        jobs: &[CotenantJob],
+        ens: &Perturbation,
+        nominal_span: f64,
+    ) -> RobustStats {
+        if ens.is_nominal() {
+            return RobustStats {
+                nominal: nominal_span,
+                p50: nominal_span,
+                p95: nominal_span,
+                worst: nominal_span,
+            };
+        }
+        let scheds = self.lower_cotenant(jobs);
+        let ngpus = machine.ngpus();
+        let nlinks = machine.topo.num_links();
+        self.ensure_sim(machine);
+        let mut spans: Vec<f64> = (0..ens.samples)
+            .map(|i| {
+                let sample = ens.sample(i, ngpus, nlinks);
+                self.sim
+                    .as_mut()
+                    .expect("sim bound above")
+                    .set_perturb(Some(sample));
+                let (_, span, _) = self.run_cotenant_joint(machine, jobs, &scheds);
+                span
+            })
+            .collect();
+        self.sim
+            .as_mut()
+            .expect("sim bound above")
+            .set_perturb(None);
+        spans.sort_by(f64::total_cmp);
+        RobustStats {
+            nominal: nominal_span,
+            p50: percentile_sorted(&spans, 0.50),
+            p95: percentile_sorted(&spans, 0.95),
+            worst: *spans.last().expect("samples >= 1"),
+        }
     }
 
     /// The currently loaded engine — exporters read task labels,
@@ -950,6 +1255,173 @@ mod tests {
         // Determinism: a fresh evaluator reproduces the stats bitwise.
         let again = Evaluator::new().plan_robust_stats(&m, &sc, &plan, &ens, nominal);
         assert_eq!(st, again);
+    }
+
+    fn jobs_of(sc: &Scenario, kinds: &[Kind], offsets: &[f64]) -> Vec<CotenantJob> {
+        kinds
+            .iter()
+            .zip(offsets)
+            .map(|(&k, &off)| CotenantJob {
+                scenario: sc.clone(),
+                plan: Plan::preset(k, sc),
+                offset: off,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cotenant_single_job_matches_isolated_bitwise() {
+        // One tenant admitted at t=0 takes the admission path through
+        // bank 0's streams — the makespan must be bit-identical to the
+        // one-shot lean run (and the slowdown exactly 1).
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        for kind in [Kind::Baseline, Kind::UniformFused1D] {
+            let jobs = jobs_of(&sc, &[kind], &[0.0]);
+            let co = ev.cotenant(&m, &jobs);
+            assert_eq!(co.jobs.len(), 1);
+            assert_eq!(co.jobs[0].makespan.to_bits(), co.jobs[0].isolated.to_bits());
+            assert_eq!(co.span.to_bits(), co.jobs[0].isolated.to_bits());
+            assert_eq!(co.jobs[0].slowdown.to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn cotenant_jobs_interfere_and_finish_later() {
+        let m = machine();
+        let sc = sc_comm_heavy();
+        let mut ev = Evaluator::new();
+        let jobs = jobs_of(
+            &sc,
+            &[Kind::UniformFused1D, Kind::UniformFused1D],
+            &[0.0, 0.0],
+        );
+        let co = ev.cotenant(&m, &jobs);
+        assert_eq!(co.jobs.len(), 2);
+        for j in &co.jobs {
+            assert!(j.isolated > 0.0 && j.makespan.is_finite());
+            assert!(j.slowdown >= 1.0 - 1e-9, "slowdown {}", j.slowdown);
+        }
+        // Two copies of the same comm-heavy job on one machine must
+        // contend somewhere (links/HBM): at least one slows down.
+        assert!(
+            co.jobs.iter().any(|j| j.slowdown > 1.01),
+            "no interference visible: {co:?}"
+        );
+        // The joint span covers every job's absolute finish.
+        for j in &co.jobs {
+            assert!(co.span >= j.offset + j.makespan - 1e-12);
+        }
+        // Determinism: a fresh evaluator reproduces the bits.
+        let again = Evaluator::new().cotenant(&m, &jobs);
+        assert_eq!(co.span.to_bits(), again.span.to_bits());
+        assert_eq!(co.events, again.events);
+        for (a, b) in co.jobs.iter().zip(&again.jobs) {
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.slowdown.to_bits(), b.slowdown.to_bits());
+        }
+    }
+
+    #[test]
+    fn staggered_admission_orders_and_bounds_the_span() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        let iso = ev.plan_makespan(&m, &sc, &Plan::preset(Kind::UniformFused1D, &sc));
+        // Admit job 1 after job 0 completes: zero overlap, so both run
+        // at isolated speed and the span is offset + isolated.
+        let offset = 2.0 * iso;
+        let jobs = jobs_of(
+            &sc,
+            &[Kind::UniformFused1D, Kind::UniformFused1D],
+            &[0.0, offset],
+        );
+        let co = ev.cotenant(&m, &jobs);
+        // Job 0 ran its entire life alone from t=0: the exact one-shot
+        // event sequence, so its makespan is bit-identical to iso.
+        assert_eq!(co.jobs[0].makespan.to_bits(), iso.to_bits());
+        // Job 1 also runs alone but at a shifted absolute clock, where
+        // time additions round differently — equal to tolerance only.
+        assert!(
+            (co.jobs[1].slowdown - 1.0).abs() < 1e-9,
+            "late job slowed: {}",
+            co.jobs[1].slowdown
+        );
+        assert!((co.span - (offset + iso)).abs() < 1e-9, "span {}", co.span);
+    }
+
+    #[test]
+    fn cotenant_leaves_one_shot_evaluations_untouched() {
+        // The joint run registers tenant stream banks on the shared
+        // arena; a one-shot evaluation right after must still be
+        // bit-identical to a fresh evaluator's.
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let plan = Plan::preset(Kind::UniformFused1D, &sc);
+        let mut ev = Evaluator::new();
+        let before = ev.plan_makespan(&m, &sc, &plan);
+        let jobs = jobs_of(&sc, &[Kind::UniformFused1D, Kind::HeteroFused1D], &[0.0, 0.0]);
+        let _ = ev.cotenant(&m, &jobs);
+        let after = ev.plan_makespan(&m, &sc, &plan);
+        assert_eq!(before.to_bits(), after.to_bits());
+    }
+
+    #[test]
+    fn captured_cotenant_matches_lean_bitwise_and_covers_tracks() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        let jobs = jobs_of(
+            &sc,
+            &[Kind::UniformFused1D, Kind::UniformFused1D],
+            &[0.0, 0.001],
+        );
+        let lean = ev.cotenant(&m, &jobs);
+        let (cap, report, rec, tm) = ev.capture_cotenant(&m, &jobs);
+        assert_eq!(cap.span.to_bits(), lean.span.to_bits());
+        assert_eq!(cap.events, lean.events);
+        for (a, b) in cap.jobs.iter().zip(&lean.jobs) {
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.isolated.to_bits(), b.isolated.to_bits());
+        }
+        assert_eq!(report.makespan.to_bits(), lean.span.to_bits());
+        assert_eq!(rec.end.to_bits(), lean.span.to_bits());
+        // The track map covers every registered stream, including both
+        // tenant banks, and the engine carries job-prefixed labels.
+        assert_eq!(tm.streams.len(), ev.engine().n_streams());
+        let eng = ev.engine();
+        assert!((0..eng.n_tasks())
+            .any(|t| eng.task_label(t).to_string().starts_with("j1:")));
+        assert!(tm.streams.iter().any(|s| s.name.starts_with("j1:")));
+    }
+
+    #[test]
+    fn cotenant_nominal_ensemble_is_the_nominal_bits() {
+        let m = machine();
+        let sc = Scenario::new("small", 4096, 512, 1024);
+        let mut ev = Evaluator::new();
+        let jobs = jobs_of(&sc, &[Kind::UniformFused1D, Kind::UniformFused1D], &[0.0, 0.0]);
+        let co = ev.cotenant(&m, &jobs);
+        let ens = Perturbation {
+            compute: 0.0,
+            bandwidth: 0.0,
+            setup: 0.0,
+            samples: 4,
+            seed: 9,
+        };
+        let st = ev.cotenant_robust_span(&m, &jobs, &ens, co.span);
+        for v in [st.nominal, st.p50, st.p95, st.worst] {
+            assert_eq!(v.to_bits(), co.span.to_bits());
+        }
+        // A live ensemble orders its statistics and costs something.
+        let ens = Perturbation::defaults(4, 21);
+        let st = ev.cotenant_robust_span(&m, &jobs, &ens, co.span);
+        assert!(st.p50 <= st.p95 && st.p95 <= st.worst, "{st:?}");
+        assert!(st.worst > co.span, "{st:?}");
+        // And it clears the sample: the nominal joint run reproduces.
+        let back = ev.cotenant(&m, &jobs);
+        assert_eq!(back.span.to_bits(), co.span.to_bits());
     }
 
     #[test]

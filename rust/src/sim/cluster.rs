@@ -44,6 +44,17 @@ impl CommMech {
     }
 }
 
+/// One tenant's private FIFO issue queues: compute/copy/comm streams
+/// per GPU, mirroring the construction-time layout. Co-tenant jobs
+/// each own a bank so they contend on *resources* (fair sharing)
+/// instead of serializing behind one another's stream queues.
+#[derive(Debug, Clone)]
+struct StreamBank {
+    compute: Vec<StreamId>,
+    copy: Vec<StreamId>,
+    comm: Vec<Vec<StreamId>>,
+}
+
 /// Simulator instantiated over a machine: resource ids, stream ids,
 /// and task builders. Wraps an [`Engine`]; call [`ClusterSim::run`]
 /// (or run the engine in place) when the task graph is complete.
@@ -59,6 +70,15 @@ pub struct ClusterSim {
     /// comm_streams[gpu][slot] — one stream per peer slot so a GPU can
     /// drive all its links concurrently (FiCCO's all-to-all pattern).
     comm_streams: Vec<Vec<StreamId>>,
+    /// Registered tenant stream banks; bank 0 is the construction-time
+    /// default every one-shot evaluation uses. Extra banks are
+    /// registered lazily by [`ClusterSim::select_stream_bank`] and
+    /// persist across [`ClusterSim::reset`] (stream registrations are
+    /// part of the engine skeleton), so co-tenant evaluations reuse
+    /// them without re-registering.
+    banks: Vec<StreamBank>,
+    /// Index of the bank the task builders currently enqueue onto.
+    active_bank: usize,
     /// Active hardware perturbation (ISSUE 9): multipliers applied at
     /// task-build time. `None` is the nominal machine and takes the
     /// exact pre-perturbation code path, so nominal runs stay
@@ -85,6 +105,11 @@ impl ClusterSim {
         let comm_streams = (0..n)
             .map(|_| (0..n.max(2) - 1).map(|_| engine.add_stream()).collect())
             .collect();
+        let banks = vec![StreamBank {
+            compute: compute_streams.clone(),
+            copy: copy_streams.clone(),
+            comm: comm_streams.clone(),
+        }];
         ClusterSim {
             machine,
             engine,
@@ -95,14 +120,55 @@ impl ClusterSim {
             compute_streams,
             copy_streams,
             comm_streams,
+            banks,
+            active_bank: 0,
             perturb: None,
         }
     }
 
     /// Drop the task graph, keeping the machine's resource/stream
-    /// skeleton and the engine's scratch capacity.
+    /// skeleton and the engine's scratch capacity. Also restores the
+    /// default stream bank, so a one-shot load after a co-tenant
+    /// evaluation builds onto the exact streams it always did.
     pub fn reset(&mut self) {
         self.engine.reset_tasks();
+        self.select_stream_bank(0);
+    }
+
+    /// Switch the task builders onto tenant `k`'s private stream bank,
+    /// registering its streams on the engine the first time bank `k`
+    /// is requested. Bank 0 is the construction-time default; the
+    /// co-tenant driver gives each admitted job its own bank so jobs
+    /// contend through max–min fair sharing on the machine's resources
+    /// rather than serializing behind one another's FIFO queues. Banks
+    /// survive [`ClusterSim::reset`] and are reused bit-identically.
+    pub fn select_stream_bank(&mut self, k: usize) {
+        let n = self.ngpus();
+        while self.banks.len() <= k {
+            let compute: Vec<StreamId> = (0..n).map(|_| self.engine.add_stream()).collect();
+            let copy: Vec<StreamId> = (0..n).map(|_| self.engine.add_stream()).collect();
+            let comm: Vec<Vec<StreamId>> = (0..n)
+                .map(|_| (0..n.max(2) - 1).map(|_| self.engine.add_stream()).collect())
+                .collect();
+            self.banks.push(StreamBank {
+                compute,
+                copy,
+                comm,
+            });
+        }
+        if self.active_bank != k {
+            let b = &self.banks[k];
+            self.compute_streams.clone_from(&b.compute);
+            self.copy_streams.clone_from(&b.copy);
+            self.comm_streams.clone_from(&b.comm);
+            self.active_bank = k;
+        }
+    }
+
+    /// Number of registered tenant stream banks (≥ 1; bank 0 is the
+    /// default).
+    pub fn n_stream_banks(&self) -> usize {
+        self.banks.len()
     }
 
     /// Install (or clear) the hardware perturbation applied to tasks
@@ -332,33 +398,51 @@ impl ClusterSim {
     /// plus a `fabric` process carrying the per-link counters. Track
     /// indices follow the engine's stream/resource registration order
     /// in [`ClusterSim::new`], which is what lets the exporter index
-    /// by `StreamId.0` / `ResourceId.0` directly.
+    /// by `StreamId.0` / `ResourceId.0` directly. Tenant stream banks
+    /// registered by [`ClusterSim::select_stream_bank`] append their
+    /// threads after bank 0's, named `j<bank>:compute` / `j<bank>:copy`
+    /// / `j<bank>:comm<slot>` — bank 0 keeps the unprefixed legacy
+    /// names, so single-job traces are byte-identical to before.
     pub fn track_map(&self) -> TrackMap {
         let n = self.ngpus();
         let mut processes: Vec<String> = (0..n).map(|g| format!("gpu{g}")).collect();
         processes.push("fabric".to_string());
         let mut streams = Vec::with_capacity(self.engine.n_streams());
-        for g in 0..n {
-            streams.push(StreamTrack {
-                pid: g,
-                tid: 0,
-                name: "compute".to_string(),
-            });
-        }
-        for g in 0..n {
-            streams.push(StreamTrack {
-                pid: g,
-                tid: 1,
-                name: "copy".to_string(),
-            });
-        }
-        for (g, slots) in self.comm_streams.iter().enumerate() {
-            for k in 0..slots.len() {
+        let threads_per_gpu = 2 + self.banks[0].comm[0].len();
+        for (b, bank) in self.banks.iter().enumerate() {
+            let base = b * threads_per_gpu;
+            let prefix = |name: String| {
+                if b == 0 {
+                    name
+                } else {
+                    format!("j{b}:{name}")
+                }
+            };
+            for g in 0..n {
+                debug_assert_eq!(streams.len(), bank.compute[g].0);
                 streams.push(StreamTrack {
                     pid: g,
-                    tid: 2 + k,
-                    name: format!("comm{k}"),
+                    tid: base,
+                    name: prefix("compute".to_string()),
                 });
+            }
+            for g in 0..n {
+                debug_assert_eq!(streams.len(), bank.copy[g].0);
+                streams.push(StreamTrack {
+                    pid: g,
+                    tid: base + 1,
+                    name: prefix("copy".to_string()),
+                });
+            }
+            for (g, slots) in bank.comm.iter().enumerate() {
+                for k in 0..slots.len() {
+                    debug_assert_eq!(streams.len(), slots[k].0);
+                    streams.push(StreamTrack {
+                        pid: g,
+                        tid: base + 2 + k,
+                        name: prefix(format!("comm{k}")),
+                    });
+                }
             }
         }
         debug_assert_eq!(streams.len(), self.engine.n_streams());

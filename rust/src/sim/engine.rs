@@ -26,6 +26,15 @@
 //! differential testing — and every floating-point operation is
 //! performed on the same values in the same order, so reported
 //! makespans and event counts are bit-for-bit identical.
+//!
+//! The loop is exposed as a **resumable stepper** (DESIGN.md §11):
+//! [`Engine::begin_run`] / [`Engine::step`] /
+//! [`Engine::advance_until`] / [`Engine::finish_run`] process the same
+//! event sequence one event at a time with the virtual clock owned by
+//! the caller, [`Engine::admit_tasks`] injects new work mid-run as a
+//! new *instance* (per-instance id namespace and makespan, fair
+//! sharing against running instances via the ordinary flow lists), and
+//! `run_full`/`run_lean` are thin run-to-completion drivers over it.
 
 use crate::obs::{NullRecorder, Recorder, StderrRecorder};
 use std::cmp::Reverse;
@@ -280,6 +289,33 @@ pub struct LeanReport {
     pub events: usize,
 }
 
+/// One admitted batch of tasks: a contiguous id range plus the
+/// virtual time it entered the run. Instance 0 is the graph present at
+/// [`Engine::begin_run`]; later instances come from
+/// [`Engine::admit_tasks`] / [`Engine::admit_appended`].
+#[derive(Debug, Clone, Copy)]
+struct Instance {
+    first: usize,
+    end: usize,
+    admitted_at: f64,
+}
+
+/// What one [`Engine::step`] (or a bounded [`Engine::advance_until`])
+/// did: the virtual time afterwards, how many tasks entered `Running`,
+/// how many completed, and whether every admitted task is now done.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    /// Virtual time after the step.
+    pub now: f64,
+    /// Tasks that transitioned Setup → Running.
+    pub started: usize,
+    /// Tasks that completed.
+    pub completed: usize,
+    /// True once every admitted task is `Done` — further steps are
+    /// no-ops until more tasks are admitted.
+    pub finished: bool,
+}
+
 /// Persistent per-run working state. Every buffer is sized (not
 /// reallocated) at the start of a run, so a reused engine's steady
 /// state performs no heap allocation inside the event loop.
@@ -344,6 +380,24 @@ struct RunScratch {
     check_frozen: Vec<bool>,
     check_rem: Vec<f64>,
     check_sum: Vec<f64>,
+
+    // --- resumable-stepper state (DESIGN.md §11) ---
+    /// Virtual clock; owned by the caller between stepper calls.
+    now: f64,
+    events: usize,
+    done_count: usize,
+    /// Rates are a pure function of the running set (demands and
+    /// capacities are fixed per run), so they are recomputed only
+    /// when that set changes.
+    rates_dirty: bool,
+    /// Tasks covered by the run so far (== `tasks.len()` after every
+    /// begin/admission; guards against stepping a graph that grew
+    /// without being admitted).
+    n_admitted: usize,
+    lean: bool,
+    /// True between `begin_run*` and `finish_*` (or a run error).
+    active: bool,
+    instances: Vec<Instance>,
 }
 
 /// The engine. Build tasks, then [`Engine::run_full`] /
@@ -534,6 +588,8 @@ impl Engine {
         for s in &mut self.streams {
             s.clear();
         }
+        // A paused run cannot survive its graph being dropped.
+        self.scratch.active = false;
     }
 
     /// Start building a task in place (no intermediate allocation);
@@ -650,30 +706,33 @@ impl Engine {
     pub fn run_full_recorded<R: Recorder>(&mut self, rec: &mut R) -> Result<Report, SimError> {
         let mut s = std::mem::take(&mut self.scratch);
         let res = self.run_core(&mut s, false, rec);
-        let out = res.map(|(makespan, events)| {
-            let n = self.tasks.len();
-            let task_spans = (0..n).map(|i| (s.start[i], s.finish[i])).collect();
-            let task_run_time = (0..n)
-                .map(|i| {
-                    if s.run_start[i].is_nan() {
-                        0.0
-                    } else {
-                        s.finish[i] - s.run_start[i]
-                    }
-                })
-                .collect();
-            let ideal_work = self.tasks.iter().map(|t| t.work).collect();
-            Report {
-                makespan,
-                task_spans,
-                task_run_time,
-                resource_busy: s.resource_busy.clone(),
-                events,
-                ideal_work,
-            }
-        });
+        let out = res.map(|(makespan, events)| self.package_report(&s, makespan, events));
         self.scratch = s;
         out
+    }
+
+    /// Package the post-run scratch into a full [`Report`].
+    fn package_report(&self, s: &RunScratch, makespan: f64, events: usize) -> Report {
+        let n = self.tasks.len();
+        let task_spans = (0..n).map(|i| (s.start[i], s.finish[i])).collect();
+        let task_run_time = (0..n)
+            .map(|i| {
+                if s.run_start[i].is_nan() {
+                    0.0
+                } else {
+                    s.finish[i] - s.run_start[i]
+                }
+            })
+            .collect();
+        let ideal_work = self.tasks.iter().map(|t| t.work).collect();
+        Report {
+            makespan,
+            task_spans,
+            task_run_time,
+            resource_busy: s.resource_busy.clone(),
+            events,
+            ideal_work,
+        }
     }
 
     /// Run to completion reporting only the makespan and event count:
@@ -690,6 +749,280 @@ impl Engine {
         };
         self.scratch = s;
         res.map(|(makespan, events)| LeanReport { makespan, events })
+    }
+
+    // --- resumable stepper API (DESIGN.md §11) ---
+    //
+    // `begin_run*` / `step` / `advance_until` / `admit_*` / `finish_*`
+    // expose the event loop one event at a time with the virtual clock
+    // owned by the caller. Driving `begin_run` + `step`-to-completion
+    // + `finish_run` is bit-identical to `run_full` (the one-shot
+    // paths are thin drivers over the same core), and steady-state
+    // stepping allocates nothing once scratch is warm — arenas grow
+    // only at admission.
+
+    /// Begin a resumable full-accounting run over the currently built
+    /// graph (the counterpart of [`Engine::run_full`]). Follow with
+    /// [`Engine::step`] / [`Engine::advance_until`] /
+    /// [`Engine::admit_tasks`], then [`Engine::finish_run`].
+    pub fn begin_run(&mut self) {
+        if self.trace {
+            self.begin_run_recorded(&mut StderrRecorder)
+        } else {
+            self.begin_run_recorded(&mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::begin_run`] with an explicit [`Recorder`]. The
+    /// recorder is passed per stepper call (not stored), so pass the
+    /// same one to every call of this run for a coherent timeline.
+    pub fn begin_run_recorded<R: Recorder>(&mut self, rec: &mut R) {
+        let mut s = std::mem::take(&mut self.scratch);
+        self.begin_core(&mut s, false, rec);
+        self.scratch = s;
+    }
+
+    /// Begin a resumable makespan-only run (the counterpart of
+    /// [`Engine::run_lean`]): busy integrals are not accumulated, and
+    /// the run must end with [`Engine::finish_lean`].
+    pub fn begin_run_lean(&mut self) {
+        let mut s = std::mem::take(&mut self.scratch);
+        if self.trace {
+            self.begin_core(&mut s, true, &mut StderrRecorder);
+        } else {
+            self.begin_core(&mut s, true, &mut NullRecorder);
+        }
+        self.scratch = s;
+    }
+
+    /// Process exactly one event of the active run. A step on a run
+    /// whose admitted tasks are all done is a no-op reporting
+    /// `finished`. The event sequence (and every float) is identical
+    /// to the one the one-shot paths process.
+    pub fn step(&mut self) -> Result<StepReport, SimError> {
+        if self.trace {
+            self.step_recorded(&mut StderrRecorder)
+        } else {
+            self.step_recorded(&mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::step`] with an explicit [`Recorder`].
+    pub fn step_recorded<R: Recorder>(&mut self, rec: &mut R) -> Result<StepReport, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        assert!(s.active, "step: no active run (call begin_run first)");
+        if s.done_count >= s.n_admitted {
+            let rep = StepReport {
+                now: s.now,
+                started: 0,
+                completed: 0,
+                finished: true,
+            };
+            self.scratch = s;
+            return Ok(rep);
+        }
+        let res = self.step_core(&mut s, rec);
+        if res.is_err() {
+            s.active = false;
+        }
+        let rep = res.map(|(started, completed)| StepReport {
+            now: s.now,
+            started,
+            completed,
+            finished: s.done_count >= s.n_admitted,
+        });
+        self.scratch = s;
+        rep
+    }
+
+    /// Process events until the virtual clock reaches `t`. If the next
+    /// event lies beyond `t`, running tasks advance over the exact
+    /// partial interval (exact under the fluid model) and the event
+    /// stays pending; if the run finishes before `t`, the idle clock
+    /// jumps to `t` (the parking spot for the next admission).
+    pub fn advance_until(&mut self, t: f64) -> Result<StepReport, SimError> {
+        if self.trace {
+            self.advance_until_recorded(t, &mut StderrRecorder)
+        } else {
+            self.advance_until_recorded(t, &mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::advance_until`] with an explicit [`Recorder`].
+    pub fn advance_until_recorded<R: Recorder>(
+        &mut self,
+        t: f64,
+        rec: &mut R,
+    ) -> Result<StepReport, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        assert!(s.active, "advance_until: no active run");
+        let res = self.advance_until_core(&mut s, t, rec);
+        let rep = res.map(|(started, completed)| StepReport {
+            now: s.now,
+            started,
+            completed,
+            finished: s.done_count >= s.n_admitted,
+        });
+        self.scratch = s;
+        rep
+    }
+
+    /// Admit every task appended since the last begin/admission into
+    /// the active run at the current virtual time, as a new
+    /// *instance*: the tasks re-enter the ready/fair-rate machinery
+    /// through the same promotion path the one-shot run uses, and fair
+    /// sharing against already-running instances falls out of the
+    /// per-resource flow lists. This is the allocation-lean admission
+    /// path: build tasks with [`Engine::task`], then call this.
+    pub fn admit_appended(&mut self) -> Result<(), SimError> {
+        if self.trace {
+            self.admit_appended_recorded(&mut StderrRecorder)
+        } else {
+            self.admit_appended_recorded(&mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::admit_appended`] with an explicit [`Recorder`].
+    pub fn admit_appended_recorded<R: Recorder>(&mut self, rec: &mut R) -> Result<(), SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        assert!(s.active, "admit: no active run (call begin_run first)");
+        let res = self.admit_appended_core(&mut s, rec);
+        if res.is_err() {
+            s.active = false;
+        }
+        self.scratch = s;
+        res
+    }
+
+    /// Advance the clock to `at`, add `tasks`, and admit them as one
+    /// instance. Convenience over [`Engine::advance_until`] +
+    /// [`Engine::add_task`] + [`Engine::admit_appended`]; returns the
+    /// new task ids. `at` must not be behind the virtual clock.
+    pub fn admit_tasks(
+        &mut self,
+        at: f64,
+        tasks: impl IntoIterator<Item = TaskSpec>,
+    ) -> Result<Vec<TaskId>, SimError> {
+        assert!(
+            at >= self.scratch.now,
+            "admit_tasks: admission time {at} behind virtual clock {}",
+            self.scratch.now
+        );
+        self.advance_until(at)?;
+        let ids: Vec<TaskId> = tasks.into_iter().map(|t| self.add_task(t)).collect();
+        self.admit_appended()?;
+        Ok(ids)
+    }
+
+    /// Drive the active full-accounting run to completion and package
+    /// the [`Report`] (the stepper counterpart of
+    /// [`Engine::run_full`]'s return).
+    pub fn finish_run(&mut self) -> Result<Report, SimError> {
+        if self.trace {
+            self.finish_run_recorded(&mut StderrRecorder)
+        } else {
+            self.finish_run_recorded(&mut NullRecorder)
+        }
+    }
+
+    /// As [`Engine::finish_run`] with an explicit [`Recorder`].
+    pub fn finish_run_recorded<R: Recorder>(&mut self, rec: &mut R) -> Result<Report, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        assert!(s.active, "finish_run: no active run");
+        assert!(
+            !s.lean,
+            "finish_run on a lean run (begin_run_lean): use finish_lean"
+        );
+        let res = self.finish_core(&mut s, rec);
+        let out = res.map(|(makespan, events)| self.package_report(&s, makespan, events));
+        self.scratch = s;
+        out
+    }
+
+    /// Drive the active run to completion reporting only makespan and
+    /// event count. Works for both lean and full runs.
+    pub fn finish_lean(&mut self) -> Result<LeanReport, SimError> {
+        let mut s = std::mem::take(&mut self.scratch);
+        assert!(s.active, "finish_lean: no active run");
+        let res = if self.trace {
+            self.finish_core(&mut s, &mut StderrRecorder)
+        } else {
+            self.finish_core(&mut s, &mut NullRecorder)
+        };
+        self.scratch = s;
+        res.map(|(makespan, events)| LeanReport { makespan, events })
+    }
+
+    /// Virtual time of the active (or just-finished) run.
+    pub fn virtual_now(&self) -> f64 {
+        self.scratch.now
+    }
+
+    /// True between `begin_run*` and `finish_*` (or a run error).
+    pub fn run_active(&self) -> bool {
+        self.scratch.active
+    }
+
+    /// Tasks completed so far in the current run.
+    pub fn tasks_done(&self) -> usize {
+        self.scratch.done_count
+    }
+
+    /// Events processed so far in the current run.
+    pub fn events_so_far(&self) -> usize {
+        self.scratch.events
+    }
+
+    /// Number of admitted instances (task batches) in the current run.
+    /// Instance 0 is the graph present at `begin_run`; each admission
+    /// appends one.
+    pub fn n_instances(&self) -> usize {
+        self.scratch.instances.len()
+    }
+
+    /// Virtual time instance `k` was admitted at.
+    pub fn instance_admitted_at(&self, k: usize) -> f64 {
+        self.scratch.instances[k].admitted_at
+    }
+
+    /// Task-id range of instance `k` — instances own contiguous,
+    /// disjoint id namespaces in admission order.
+    pub fn instance_tasks(&self, k: usize) -> std::ops::Range<usize> {
+        let ins = self.scratch.instances[k];
+        ins.first..ins.end
+    }
+
+    /// Which instance task `tid` belongs to.
+    pub fn instance_of_task(&self, tid: usize) -> usize {
+        let ins = &self.scratch.instances;
+        ins.partition_point(|i| i.end <= tid)
+    }
+
+    /// Completion span of instance `k`: time from its admission to its
+    /// last task finishing. NaN while any of its tasks is unfinished.
+    pub fn instance_makespan(&self, k: usize) -> f64 {
+        let ins = self.scratch.instances[k];
+        let mut last = f64::NEG_INFINITY;
+        for i in ins.first..ins.end {
+            let f = self.scratch.finish[i];
+            if f.is_nan() {
+                return f64::NAN;
+            }
+            if f > last {
+                last = f;
+            }
+        }
+        if last == f64::NEG_INFINITY {
+            0.0
+        } else {
+            last - ins.admitted_at
+        }
+    }
+
+    /// (start, finish) of task `tid` in the current/last run (NaN
+    /// until the respective transition happened).
+    pub fn task_span(&self, tid: usize) -> (f64, f64) {
+        (self.scratch.start[tid], self.scratch.finish[tid])
     }
 
     /// Promote `tid` Blocked → Setup if its deps are met and it heads
@@ -1088,6 +1421,10 @@ impl Engine {
     /// through. Returns rates parallel to `running` (which may be in
     /// any order; duplicates are not allowed).
     pub fn probe_fair_rates(&mut self, running: &[TaskId], mode: FairMode) -> Vec<f64> {
+        assert!(
+            !self.scratch.active,
+            "probe_fair_rates would clobber an active run's state"
+        );
         let mut s = std::mem::take(&mut self.scratch);
         s.running.clear();
         for t in running {
@@ -1131,14 +1468,13 @@ impl Engine {
         out
     }
 
-    /// The event loop. Returns (makespan, events); per-task state is
-    /// left in `s` for [`Engine::run_full`] to package.
-    fn run_core<R: Recorder>(
-        &self,
-        s: &mut RunScratch,
-        lean: bool,
-        rec: &mut R,
-    ) -> Result<(f64, usize), SimError> {
+    /// Initialize a resumable run over the currently built graph: size
+    /// the scratch state, build the dependents CSR, reset the virtual
+    /// clock, and promote head-of-stream tasks with no deps. The loop
+    /// locals of the old run-to-completion core (`now`, `events`,
+    /// `done_count`, `rates_dirty`) live in the scratch so the run can
+    /// pause between events.
+    fn begin_core<R: Recorder>(&self, s: &mut RunScratch, lean: bool, rec: &mut R) {
         let n = self.tasks.len();
         rec.on_begin(self);
 
@@ -1168,12 +1504,42 @@ impl Engine {
         // Incremental fair-sharing bookkeeping is maintained only when
         // the incremental path will read it — the slow baseline must
         // not pay (or be credited for) its upkeep.
-        let inc = self.fair_mode == FairMode::Incremental;
-        if inc {
+        if self.fair_mode == FairMode::Incremental {
             self.init_fair_state(s);
         }
 
-        // Dependents in CSR form (counts → prefix offsets → fill).
+        self.build_dependents(s);
+
+        s.done_count = 0;
+        s.now = 0.0;
+        s.events = 0;
+        s.rates_dirty = true;
+        s.n_admitted = n;
+        s.lean = lean;
+        s.active = true;
+        s.instances.clear();
+        if n > 0 {
+            s.instances.push(Instance {
+                first: 0,
+                end: n,
+                admitted_at: 0.0,
+            });
+        }
+
+        // Initial promotion: head-of-stream tasks with no deps.
+        let now = s.now;
+        for st in 0..self.streams.len() {
+            if let Some(&tid) = self.streams[st].first() {
+                self.try_promote(s, rec, tid.0, now);
+            }
+        }
+    }
+
+    /// (Re)build the dependents CSR over the whole graph
+    /// (counts → prefix offsets → fill). Admission rebuilds it so new
+    /// tasks' edges land in the arrays; buffers only grow then.
+    fn build_dependents(&self, s: &mut RunScratch) {
+        let n = self.tasks.len();
         s.dep_heads.clear();
         s.dep_heads.resize(n + 1, 0);
         for t in &self.tasks {
@@ -1195,166 +1561,346 @@ impl Engine {
                 s.dep_cursor[d.0] = c + 1;
             }
         }
+    }
 
-        let mut done_count = 0usize;
-        let mut now = 0.0f64;
-        let mut events = 0usize;
-        // Rates are a pure function of the running set (demands and
-        // capacities are fixed per run), so they are recomputed only
-        // when that set changes.
-        let mut rates_dirty = true;
+    /// Move Setup tasks whose latency elapsed into Running. The heap
+    /// holds exactly the Setup-phase tasks, so popping every deadline
+    /// ≤ now + EPS transitions the same set the reference engine finds
+    /// by scanning all tasks.
+    #[inline]
+    fn pop_due_setups<R: Recorder>(&self, s: &mut RunScratch, rec: &mut R) {
+        let inc = self.fair_mode == FairMode::Incremental;
+        let threshold = s.now + EPS;
+        while let Some(&Reverse((bits, tid))) = s.setup_heap.peek() {
+            if f64::from_bits(bits) > threshold {
+                break;
+            }
+            s.setup_heap.pop();
+            s.phase[tid] = Phase::Running;
+            s.run_start[tid] = s.now;
+            let pos = s.running.partition_point(|&x| x < tid);
+            s.running.insert(pos, tid);
+            if inc {
+                self.flows_add(s, tid);
+            }
+            s.rates_dirty = true;
+            rec.on_start(self, s.now, tid);
+        }
+        // The heap pops deadline ties in ascending task order and the
+        // sorted insert keeps `running` strictly ascending — the order
+        // every float reduction in the loop depends on.
+        debug_assert!(s.running.windows(2).all(|w| w[0] < w[1]));
+    }
 
-        // Initial promotion: head-of-stream tasks with no deps.
-        for st in 0..self.streams.len() {
-            if let Some(&tid) = self.streams[st].first() {
-                self.try_promote(s, rec, tid.0, now);
+    #[inline]
+    fn refill_rates_if_dirty<R: Recorder>(&self, s: &mut RunScratch, rec: &mut R) {
+        if s.rates_dirty {
+            self.fill_fair_rates(s);
+            s.rates_dirty = false;
+            rec.on_rates(self, s.now, &s.running, &s.rates);
+        }
+    }
+
+    /// Time to the next event: earliest of (a) a running task
+    /// finishing at its current rate, (b) a setup deadline expiring.
+    #[inline]
+    fn next_dt(&self, s: &RunScratch) -> f64 {
+        let mut dt = f64::INFINITY;
+        for (j, &i) in s.running.iter().enumerate() {
+            if s.remaining[i] <= EPS {
+                dt = 0.0;
+                break;
+            }
+            if s.rates[j] > EPS {
+                dt = dt.min(s.remaining[i] / s.rates[j]);
             }
         }
+        if let Some(&Reverse((bits, _))) = s.setup_heap.peek() {
+            // min over Setup tasks of (until - now).max(0) equals the
+            // same expression at the smallest `until` — subtraction by
+            // a common `now` is monotone.
+            dt = dt.min((f64::from_bits(bits) - s.now).max(0.0));
+        }
+        dt
+    }
 
-        while done_count < n {
-            events += 1;
-            if events > 200 * n + 1000 {
+    fn stuck_error(&self, s: &RunScratch) -> SimError {
+        let now = s.now;
+        let stuck: Vec<String> = (0..self.tasks.len())
+            .filter(|&i| s.phase[i] != Phase::Done)
+            .map(|i| self.tasks[i].label.to_string())
+            .take(8)
+            .collect();
+        SimError(format!(
+            "no runnable progress at t={now}; blocked tasks (cycle or zero-rate): {stuck:?}"
+        ))
+    }
+
+    /// Integrate progress (and, in full mode, resource usage) over dt.
+    #[inline]
+    fn integrate<R: Recorder>(&self, s: &mut RunScratch, dt: f64, rec: &mut R) {
+        rec.on_advance(self, s.now, dt, &s.running, &s.rates);
+        let lean = s.lean;
+        for (j, &i) in s.running.iter().enumerate() {
+            let rate = s.rates[j];
+            s.remaining[i] -= rate * dt;
+            if !lean {
+                for &(r, d) in self.demands_of(i) {
+                    s.resource_busy[r.0] += rate * d * dt;
+                }
+            }
+        }
+        s.now += dt;
+    }
+
+    /// Complete tasks that hit zero remaining, then do the dependency
+    /// and stream bookkeeping for the completed set, promoting newly
+    /// eligible tasks at the same `now` the reference engine's
+    /// end-of-event rescan would. Returns the completion count.
+    #[inline]
+    fn complete_and_promote<R: Recorder>(&self, s: &mut RunScratch, rec: &mut R) -> usize {
+        let inc = self.fair_mode == FairMode::Incremental;
+        let now = s.now;
+        s.completed.clear();
+        for &i in &s.running {
+            if s.remaining[i] <= EPS {
+                s.phase[i] = Phase::Done;
+                s.finish[i] = now;
+                s.completed.push(i);
+                s.done_count += 1;
+                rec.on_finish(self, now, i);
+            }
+        }
+        if !s.completed.is_empty() {
+            s.rates_dirty = true;
+            let phase = &s.phase;
+            s.running.retain(|&i| phase[i] == Phase::Running);
+            // `completed` was collected by scanning the ascending
+            // running set, so same-instant (float-equal) finishes are
+            // processed in deterministic ascending task order — on
+            // ties the incremental update order can never diverge from
+            // the reference engine's rescan.
+            debug_assert!(s.completed.windows(2).all(|w| w[0] < w[1]));
+            if inc {
+                for ci in 0..s.completed.len() {
+                    let c = s.completed[ci];
+                    self.flows_remove(s, c);
+                }
+            }
+        }
+        for ci in 0..s.completed.len() {
+            let c = s.completed[ci];
+            let (a, b) = (s.dep_heads[c], s.dep_heads[c + 1]);
+            for k in a..b {
+                let dep = s.dep_list[k].0;
+                s.deps_left[dep] -= 1;
+                if s.deps_left[dep] == 0 {
+                    self.try_promote(s, rec, dep, now);
+                }
+            }
+            // Advance the stream cursor past the completed prefix;
+            // the newly exposed head may have become eligible.
+            let st = self.tasks[c].stream.0;
+            while s.stream_cursor[st] < self.streams[st].len() {
+                let head = self.streams[st][s.stream_cursor[st]].0;
+                if s.phase[head] == Phase::Done {
+                    s.stream_cursor[st] += 1;
+                } else {
+                    self.try_promote(s, rec, head, now);
+                    break;
+                }
+            }
+        }
+        s.completed.len()
+    }
+
+    /// Process exactly one event — one iteration of the old
+    /// run-to-completion loop, same floating-point operations in the
+    /// same order. Returns (started, completed) counts.
+    fn step_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        rec: &mut R,
+    ) -> Result<(usize, usize), SimError> {
+        s.events += 1;
+        if s.events > 200 * s.n_admitted + 1000 {
+            return Err(SimError(format!(
+                "event budget exceeded ({} events for {} tasks) — livelock?",
+                s.events, s.n_admitted
+            )));
+        }
+
+        let running_before = s.running.len();
+        self.pop_due_setups(s, rec);
+        let started = s.running.len() - running_before;
+
+        self.refill_rates_if_dirty(s, rec);
+
+        let dt = self.next_dt(s);
+        if !dt.is_finite() {
+            return Err(self.stuck_error(s));
+        }
+
+        if dt > 0.0 {
+            self.integrate(s, dt, rec);
+        }
+
+        let completed = self.complete_and_promote(s, rec);
+        Ok((started, completed))
+    }
+
+    /// Drive the stepper until every admitted task is done, fire
+    /// `on_end`, and deactivate the run. Returns (makespan, events).
+    fn finish_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        rec: &mut R,
+    ) -> Result<(f64, usize), SimError> {
+        while s.done_count < s.n_admitted {
+            if let Err(e) = self.step_core(s, rec) {
+                s.active = false;
+                return Err(e);
+            }
+        }
+        rec.on_end(self, s.now);
+        s.active = false;
+        Ok((s.now, s.events))
+    }
+
+    /// Process events until the virtual clock reaches `t` (or the run
+    /// finishes first, in which case the clock jumps idle to `t`). If
+    /// the next event lies beyond `t`, running tasks are integrated
+    /// over the partial interval up to exactly `t` — exact under the
+    /// fluid model — and the event itself stays pending; zero-dt
+    /// cascades due exactly at `t` may also stay pending until the
+    /// next stepper call at the same virtual time. Returns
+    /// (started, completed) totals.
+    fn advance_until_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        t: f64,
+        rec: &mut R,
+    ) -> Result<(usize, usize), SimError> {
+        let mut started = 0usize;
+        let mut completed = 0usize;
+        loop {
+            if s.done_count >= s.n_admitted {
+                // Idle engine: the caller owns the clock and may park
+                // it at `t` (e.g. to admit the next job there).
+                if t > s.now {
+                    s.now = t;
+                }
+                return Ok((started, completed));
+            }
+            if s.now >= t {
+                return Ok((started, completed));
+            }
+            s.events += 1;
+            if s.events > 200 * s.n_admitted + 1000 {
+                s.active = false;
                 return Err(SimError(format!(
                     "event budget exceeded ({} events for {} tasks) — livelock?",
-                    events, n
+                    s.events, s.n_admitted
                 )));
             }
-
-            // Move Setup tasks whose latency elapsed into Running. The
-            // heap holds exactly the Setup-phase tasks, so popping
-            // every deadline ≤ now + EPS transitions the same set the
-            // reference engine finds by scanning all tasks.
-            let threshold = now + EPS;
-            while let Some(&Reverse((bits, tid))) = s.setup_heap.peek() {
-                if f64::from_bits(bits) > threshold {
-                    break;
-                }
-                s.setup_heap.pop();
-                s.phase[tid] = Phase::Running;
-                s.run_start[tid] = now;
-                let pos = s.running.partition_point(|&x| x < tid);
-                s.running.insert(pos, tid);
-                if inc {
-                    self.flows_add(s, tid);
-                }
-                rates_dirty = true;
-                rec.on_start(self, now, tid);
-            }
-            // The heap pops deadline ties in ascending task order and
-            // the sorted insert keeps `running` strictly ascending —
-            // the order every float reduction below depends on.
-            debug_assert!(s.running.windows(2).all(|w| w[0] < w[1]));
-
-            if rates_dirty {
-                self.fill_fair_rates(s);
-                rates_dirty = false;
-                rec.on_rates(self, now, &s.running, &s.rates);
-            }
-
-            // Next event: earliest of (a) a running task finishing at
-            // its current rate, (b) a setup deadline expiring.
-            let mut dt = f64::INFINITY;
-            for (j, &i) in s.running.iter().enumerate() {
-                if s.remaining[i] <= EPS {
-                    dt = 0.0;
-                    break;
-                }
-                if s.rates[j] > EPS {
-                    dt = dt.min(s.remaining[i] / s.rates[j]);
-                }
-            }
-            if let Some(&Reverse((bits, _))) = s.setup_heap.peek() {
-                // min over Setup tasks of (until - now).max(0) equals
-                // the same expression at the smallest `until` —
-                // subtraction by a common `now` is monotone.
-                dt = dt.min((f64::from_bits(bits) - now).max(0.0));
-            }
+            let running_before = s.running.len();
+            self.pop_due_setups(s, rec);
+            started += s.running.len() - running_before;
+            self.refill_rates_if_dirty(s, rec);
+            let dt = self.next_dt(s);
             if !dt.is_finite() {
-                let stuck: Vec<String> = (0..n)
-                    .filter(|&i| s.phase[i] != Phase::Done)
-                    .map(|i| self.tasks[i].label.to_string())
-                    .take(8)
-                    .collect();
-                return Err(SimError(format!(
-                    "no runnable progress at t={now}; blocked tasks (cycle or zero-rate): {stuck:?}"
-                )));
+                s.active = false;
+                return Err(self.stuck_error(s));
             }
-
-            // Integrate progress (and, in full mode, resource usage)
-            // over dt.
+            if s.now + dt > t {
+                // Next event is beyond the horizon: advance exactly to
+                // `t` and leave the event pending for the next call.
+                let partial = t - s.now;
+                if partial > 0.0 {
+                    self.integrate(s, partial, rec);
+                }
+                s.now = t;
+                return Ok((started, completed));
+            }
             if dt > 0.0 {
-                rec.on_advance(self, now, dt, &s.running, &s.rates);
-                for (j, &i) in s.running.iter().enumerate() {
-                    let rate = s.rates[j];
-                    s.remaining[i] -= rate * dt;
-                    if !lean {
-                        for &(r, d) in self.demands_of(i) {
-                            s.resource_busy[r.0] += rate * d * dt;
-                        }
-                    }
-                }
-                now += dt;
+                self.integrate(s, dt, rec);
             }
-
-            // Complete tasks that hit zero remaining.
-            s.completed.clear();
-            for &i in &s.running {
-                if s.remaining[i] <= EPS {
-                    s.phase[i] = Phase::Done;
-                    s.finish[i] = now;
-                    s.completed.push(i);
-                    done_count += 1;
-                    rec.on_finish(self, now, i);
-                }
-            }
-            if !s.completed.is_empty() {
-                rates_dirty = true;
-                let phase = &s.phase;
-                s.running.retain(|&i| phase[i] == Phase::Running);
-                // `completed` was collected by scanning the ascending
-                // running set, so same-instant (float-equal) finishes
-                // are processed in deterministic ascending task order
-                // — on ties the incremental update order can never
-                // diverge from the reference engine's rescan.
-                debug_assert!(s.completed.windows(2).all(|w| w[0] < w[1]));
-                if inc {
-                    for ci in 0..s.completed.len() {
-                        let c = s.completed[ci];
-                        self.flows_remove(s, c);
-                    }
-                }
-            }
-
-            // Dependency and stream bookkeeping for the completed set,
-            // promoting newly eligible tasks at the same `now` the
-            // reference engine's end-of-event rescan would.
-            for ci in 0..s.completed.len() {
-                let c = s.completed[ci];
-                let (a, b) = (s.dep_heads[c], s.dep_heads[c + 1]);
-                for k in a..b {
-                    let dep = s.dep_list[k].0;
-                    s.deps_left[dep] -= 1;
-                    if s.deps_left[dep] == 0 {
-                        self.try_promote(s, rec, dep, now);
-                    }
-                }
-                // Advance the stream cursor past the completed prefix;
-                // the newly exposed head may have become eligible.
-                let st = self.tasks[c].stream.0;
-                while s.stream_cursor[st] < self.streams[st].len() {
-                    let head = self.streams[st][s.stream_cursor[st]].0;
-                    if s.phase[head] == Phase::Done {
-                        s.stream_cursor[st] += 1;
-                    } else {
-                        self.try_promote(s, rec, head, now);
-                        break;
-                    }
-                }
-            }
+            completed += self.complete_and_promote(s, rec);
         }
+    }
 
-        rec.on_end(self, now);
-        Ok((now, events))
+    /// Admit every task appended (via [`Engine::task`] /
+    /// [`Engine::add_task`]) since the last begin/admission into the
+    /// active run at the current virtual time: size the per-task
+    /// scratch for the new ids, count their unmet deps, rebuild the
+    /// dependents CSR, and re-enter the ready machinery through
+    /// [`Engine::try_promote`]. Arenas grow only here, never per step.
+    fn admit_appended_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        rec: &mut R,
+    ) -> Result<(), SimError> {
+        let n0 = s.n_admitted;
+        let n = self.tasks.len();
+        debug_assert!(n0 <= n);
+        if n == n0 {
+            return Ok(());
+        }
+        if self.capacities.len() != s.resource_busy.len() {
+            return Err(SimError(
+                "admit: resources must be registered before begin_run".to_string(),
+            ));
+        }
+        // New streams may have been registered for the new tasks.
+        if s.stream_cursor.len() < self.streams.len() {
+            s.stream_cursor.resize(self.streams.len(), 0);
+        }
+        for i in n0..n {
+            s.phase.push(Phase::Blocked);
+            s.remaining.push(self.tasks[i].work);
+            s.setup_until.push(0.0);
+            s.start.push(f64::NAN);
+            s.run_start.push(f64::NAN);
+            s.finish.push(f64::NAN);
+            // Deps on already-finished tasks are already met.
+            let mut left = 0usize;
+            for d in self.deps_of(i) {
+                if s.phase[d.0] != Phase::Done {
+                    left += 1;
+                }
+            }
+            s.deps_left.push(left);
+        }
+        self.build_dependents(s);
+        s.instances.push(Instance {
+            first: n0,
+            end: n,
+            admitted_at: s.now,
+        });
+        s.n_admitted = n;
+        // Promote eligible new tasks (dep-free stream heads). Only
+        // Setup entries are created here; they enter Running — and
+        // dirty the fair rates — when the next step pops them, exactly
+        // as the one-shot path's initial promotion does.
+        let now = s.now;
+        for i in n0..n {
+            self.try_promote(s, rec, i, now);
+        }
+        Ok(())
+    }
+
+    /// The one-shot event loop: begin, step to completion. Returns
+    /// (makespan, events); per-task state is left in `s` for
+    /// [`Engine::run_full`] to package. Bit-identical to the
+    /// pre-stepper run-to-completion core.
+    fn run_core<R: Recorder>(
+        &self,
+        s: &mut RunScratch,
+        lean: bool,
+        rec: &mut R,
+    ) -> Result<(f64, usize), SimError> {
+        self.begin_core(s, lean, rec);
+        self.finish_core(s, rec)
     }
 }
 
@@ -1657,5 +2203,120 @@ mod tests {
         assert_eq!(Label::Static("gemm").to_string(), "gemm");
         assert_eq!(Label::indexed("n", 17).to_string(), "n17");
         assert_eq!(Label::from("x".to_string()).to_string(), "x");
+    }
+
+    #[test]
+    fn stepper_replay_matches_run_full_bitwise() {
+        let mut e = Engine::new();
+        let r1 = e.add_resource(3.0);
+        let r2 = e.add_resource(7.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        let a = e.add_task(TaskSpec::new("a", s1).work(0.7).setup(0.1).demand(r1, 2.0));
+        e.add_task(
+            TaskSpec::new("b", s2)
+                .work(1.3)
+                .dep(a)
+                .demand(r1, 2.5)
+                .demand(r2, 6.0),
+        );
+        e.add_task(TaskSpec::new("c", s1).work(0.4).demand(r2, 7.0));
+        let full = e.run_full().expect("full run");
+        e.begin_run();
+        assert!(e.run_active());
+        let mut steps = 0;
+        loop {
+            let st = e.step().expect("step");
+            steps += 1;
+            assert!(steps < 10_000, "stepper failed to converge");
+            if st.finished {
+                break;
+            }
+        }
+        let rep = e.finish_run().expect("finish");
+        assert!(!e.run_active());
+        assert_eq!(full.makespan.to_bits(), rep.makespan.to_bits());
+        assert_eq!(full.events, rep.events);
+        assert_eq!(steps, rep.events);
+        assert_eq!(full.task_spans, rep.task_spans);
+        assert_eq!(full.resource_busy, rep.resource_busy);
+    }
+
+    #[test]
+    fn lean_stepper_matches_run_lean_bitwise() {
+        let mut e = Engine::new();
+        let r = e.add_resource(5.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        let a = e.add_task(TaskSpec::new("a", s1).work(0.5).setup(0.25).demand(r, 4.0));
+        e.add_task(TaskSpec::new("b", s2).work(1.0).dep(a).demand(r, 3.0));
+        let lean = e.run_lean().expect("lean run");
+        e.begin_run_lean();
+        while !e.step().expect("step").finished {}
+        let rep = e.finish_lean().expect("finish");
+        assert_eq!(lean.makespan.to_bits(), rep.makespan.to_bits());
+        assert_eq!(lean.events, rep.events);
+    }
+
+    #[test]
+    fn advance_until_pauses_mid_task() {
+        let mut e = Engine::new();
+        let r = e.add_resource(1.0);
+        let s = e.add_stream();
+        e.add_task(TaskSpec::new("t", s).work(4.0).demand(r, 1.0));
+        e.begin_run();
+        let st = e.advance_until(1.5).expect("advance");
+        assert_eq!(st.now.to_bits(), 1.5f64.to_bits());
+        assert!(!st.finished);
+        assert_eq!(e.virtual_now().to_bits(), 1.5f64.to_bits());
+        let rep = e.finish_run().expect("finish");
+        // 1.5 + 2.5 at rate 1 is exact: the pause must not move the
+        // finish time.
+        assert_eq!(rep.makespan.to_bits(), 4.0f64.to_bits());
+    }
+
+    #[test]
+    fn midrun_admission_contends_like_a_joint_run() {
+        // Instance 0 runs alone at rate 1 for 1s, then shares the
+        // resource 50/50 with the instance admitted at t=1.
+        let mut e = Engine::new();
+        let r = e.add_resource(1.0);
+        let s1 = e.add_stream();
+        let s2 = e.add_stream();
+        e.add_task(TaskSpec::new("a", s1).work(2.0).demand(r, 1.0));
+        e.begin_run();
+        e.admit_tasks(1.0, [TaskSpec::new("b", s2).work(1.0).demand(r, 1.0)])
+            .expect("admit");
+        let rep = e.finish_run().expect("finish");
+        assert!((rep.makespan - 3.0).abs() < 1e-9, "makespan={}", rep.makespan);
+        assert_eq!(e.n_instances(), 2);
+        assert_eq!(e.instance_tasks(0), 0..1);
+        assert_eq!(e.instance_tasks(1), 1..2);
+        assert_eq!(e.instance_of_task(0), 0);
+        assert_eq!(e.instance_of_task(1), 1);
+        assert_eq!(e.instance_admitted_at(1).to_bits(), 1.0f64.to_bits());
+        assert!((e.instance_makespan(0) - 3.0).abs() < 1e-9);
+        assert!((e.instance_makespan(1) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_parks_idle_clock_for_admission() {
+        // A run begun over an empty graph is the co-tenant driver's
+        // starting state: the clock parks wherever the first admission
+        // wants it.
+        let mut e = Engine::new();
+        let r = e.add_resource(1.0);
+        let s = e.add_stream();
+        e.begin_run();
+        assert_eq!(e.n_instances(), 0);
+        e.admit_tasks(5.0, [TaskSpec::new("late", s).work(1.0).demand(r, 1.0)])
+            .expect("admit");
+        assert_eq!(e.virtual_now().to_bits(), 5.0f64.to_bits());
+        let rep = e.finish_run().expect("finish");
+        assert!((rep.makespan - 6.0).abs() < 1e-9);
+        let (start, fin) = e.task_span(0);
+        assert!((start - 5.0).abs() < 1e-9);
+        assert!((fin - 6.0).abs() < 1e-9);
+        assert!((e.instance_makespan(0) - 1.0).abs() < 1e-9);
     }
 }

@@ -26,5 +26,5 @@ pub mod reference;
 pub use cluster::{ClusterSim, CommMech};
 pub use engine::{
     check_rates_enabled, default_fair_mode, set_default_fair_mode, trace_enabled, Engine, FairMode,
-    Label, LeanReport, Report, ResourceId, SimError, StreamId, TaskId, TaskSpec,
+    Label, LeanReport, Report, ResourceId, SimError, StepReport, StreamId, TaskId, TaskSpec,
 };

@@ -210,4 +210,93 @@ fn engine_run_steady_state_allocates_nothing() {
         "run_lean allocated {during} times after a recorded run (recorder-off contract broken)"
     );
     assert_eq!(first.makespan.to_bits(), after_trace.makespan.to_bits());
+
+    // ISSUE 10: the resumable stepper drives the same core, so the
+    // contract extends to it — steady-state *stepping* and same-shape
+    // *mid-run admission* are allocation-free once warm. Warm the
+    // stepper bookkeeping first (the instance table and the
+    // admission-time scratch growth are new high-water marks): an
+    // empty begin, shape A admitted mid-run, stepped to completion.
+    e.reset_tasks();
+    e.begin_run_lean();
+    build(&mut e, &resources, &streams);
+    e.admit_appended().expect("warm admission");
+    let mut warm_steps = 0usize;
+    let warm_stepped = loop {
+        let rep = e.step().expect("warm stepped run");
+        warm_steps += 1;
+        if rep.finished {
+            break e.finish_lean().expect("warm stepped finish");
+        }
+    };
+    // Admission at t = 0 is bit-identical to the one-shot build.
+    assert_eq!(first.makespan.to_bits(), warm_stepped.makespan.to_bits());
+    assert_eq!(warm_steps, warm_stepped.events);
+
+    // Warm the co-tenant shape too: shapes A and B live in one run as
+    // two instances, so the joint running set (and the per-resource
+    // flow lists) can exceed either shape's solo high-water mark.
+    e.reset_tasks();
+    e.begin_run_lean();
+    build(&mut e, &resources, &streams);
+    e.admit_appended().expect("warm joint admission A");
+    e.advance_until(first.makespan * 0.5).expect("warm joint advance");
+    build_shape_b(&mut e, &resources, &streams);
+    e.admit_appended().expect("warm joint admission B");
+    let warm_joint = e.finish_lean().expect("warm joint finish");
+
+    for round in 0..2 {
+        // Steady-state stepping: begin, admit shape A, one step per
+        // event, finish — zero allocations end to end.
+        e.reset_tasks();
+        let before = ALLOCS.load(Ordering::SeqCst);
+        e.begin_run_lean();
+        build(&mut e, &resources, &streams);
+        e.admit_appended().expect("steady-state admission");
+        loop {
+            let rep = e.step().expect("steady-state stepped run");
+            if rep.finished {
+                break;
+            }
+        }
+        let stepped = e.finish_lean().expect("steady-state stepped finish");
+        let during = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            during, 0,
+            "stepped run allocated {during} times in steady state (round {round})"
+        );
+        assert_eq!(first.makespan.to_bits(), stepped.makespan.to_bits());
+        assert_eq!(first.events, stepped.events);
+
+        // Steady-state co-tenancy: re-admitting both shapes as two
+        // staggered instances reuses every arena and scratch buffer.
+        e.reset_tasks();
+        let before = ALLOCS.load(Ordering::SeqCst);
+        e.begin_run_lean();
+        build(&mut e, &resources, &streams);
+        e.admit_appended().expect("joint admission A");
+        e.advance_until(first.makespan * 0.5).expect("joint advance");
+        build_shape_b(&mut e, &resources, &streams);
+        e.admit_appended().expect("joint admission B");
+        let joint = e.finish_lean().expect("joint finish");
+        let during = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            during, 0,
+            "co-tenant stepped run allocated {during} times in steady state (round {round})"
+        );
+        assert_eq!(warm_joint.makespan.to_bits(), joint.makespan.to_bits());
+        assert_eq!(warm_joint.events, joint.events);
+    }
+
+    // The one-shot path must still be pristine after stepper use.
+    e.reset_tasks();
+    build(&mut e, &resources, &streams);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let post_stepper = e.run_lean().expect("post-stepper one-shot run");
+    let during = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        during, 0,
+        "run_lean allocated {during} times after stepper runs"
+    );
+    assert_eq!(first.makespan.to_bits(), post_stepper.makespan.to_bits());
 }

@@ -40,6 +40,12 @@ Rules (ISSUE 6/7/8, CI `sim-differential` job):
   stay within 3x the nominal search's per-candidate cost measured in
   the same run (ensemble members re-lower the same plan, so a member
   eval should cost about one nominal eval, not a fresh search).
+- ISSUE 10: when the fresh run carries a "stepper" section, the
+  relational gates arm: the step-per-event replay must be bit-identical
+  to the one-shot run (replay_matches_one_shot), step throughput must
+  be positive, and driving one step per event must stay within 1.5x of
+  the one-shot run_lean measured in the same run (the stepper adds one
+  scratch hand-off per event, nothing more).
 
 Exit 0 on pass, 1 on any gate failure.
 """
@@ -166,6 +172,32 @@ def main():
             f"robust gate OK: {rob['reranked']} plans x {rob.get('samples')} samples "
             f"at {rob['ensemble_evals_per_sec']:.1f} ensemble-evals/s "
             f"({rob.get('rerank_overhead_vs_search')}x of the nominal search)"
+        )
+
+    # Resumable-stepper gates (ISSUE 10). Relational: the overhead
+    # ratio and the bitwise replay flag are measured within the fresh
+    # run itself.
+    stp = fresh.get("stepper")
+    if stp is not None:
+        if not stp.get("steps", 0) > 0:
+            fail(f"fresh stepper.steps is {stp.get('steps')}")
+        if not stp.get("steps_per_sec", 0.0) > 0.0:
+            fail(f"fresh stepper.steps_per_sec is {stp.get('steps_per_sec')}")
+        if stp.get("replay_matches_one_shot") is not True:
+            fail("step-per-event replay diverged from the one-shot run (bitwise)")
+        ratio = stp.get("overhead_vs_one_shot", 0.0)
+        if not ratio > 0.0:
+            fail(f"fresh stepper.overhead_vs_one_shot is {ratio}")
+        if ratio > 1.5:
+            fail(
+                "step-per-event driving exceeds the 1.5x one-shot budget: "
+                f"{ratio:.3f}x (one-shot {stp.get('one_shot_seconds')}s, "
+                f"stepped {stp.get('median_seconds')}s)"
+            )
+        print(
+            f"stepper gate OK: {stp['steps']} steps at "
+            f"{stp['steps_per_sec']:.1f} steps/s, {ratio:.2f}x of one-shot "
+            "(budget 1.5x), replay bitwise-identical"
         )
 
     comparable = "provenance" not in committed
